@@ -1,0 +1,43 @@
+"""Table 4: choice of positive actions for the pretraining losses.
+Paper: Save / +Download / +Clickthrough / All-Hide / All-Hide-Clickthrough.
+Our synthetic actions: save=1, download=2, clickthrough=3, click=4, hide=5."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import (csv_row, data_cfg, default_fcfg,
+                               finetune_and_eval, lift, pinfm_cfg, pretrain)
+from repro.data.synthetic import SyntheticActivity
+
+SETTINGS = [
+    ("save", (1,)),
+    ("save+download", (1, 2)),
+    ("save+clickthrough", (1, 3)),
+    ("all-hide", (1, 2, 3, 4)),
+    ("all-hide-clickthrough", (1, 2, 4)),
+]
+
+
+def main():
+    data = SyntheticActivity(data_cfg())
+    results = {}
+    for name, actions in SETTINGS:
+        t0 = time.perf_counter()
+        pcfg = pinfm_cfg().replace(pos_actions=actions)
+        _, pre, _ = pretrain(pcfg, data=data)
+        m, _ = finetune_and_eval(pcfg, default_fcfg(), pre, data=data)
+        results[name] = m
+        csv_row(f"table4/{name}", (time.perf_counter() - t0) * 1e6,
+                f"save_hit3={m['save_overall']:.4f};"
+                f"hide_hit3={m['hide_overall']:.4f}")
+    base = results["save"]
+    for name, _ in SETTINGS[1:]:
+        csv_row(f"table4/lift[{name}]", 0,
+                f"save={lift(results[name]['save_overall'], base['save_overall']):+.2f}%;"
+                f"hide={lift(results[name]['hide_overall'], base['hide_overall']):+.2f}%")
+
+
+if __name__ == "__main__":
+    main()

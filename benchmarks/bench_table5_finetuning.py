@@ -1,0 +1,30 @@
+"""Table 5: importance of fine-tuning.  Paper: frozen PinFM gives ~no Save
+lift (+0.10%); fine-tuned gives +3.76%."""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import (baseline_eval, csv_row, data_cfg, default_fcfg,
+                               finetune_and_eval, lift, pinfm_cfg, pretrain)
+from repro.data.synthetic import SyntheticActivity
+
+
+def main():
+    data = SyntheticActivity(data_cfg())
+    pcfg = pinfm_cfg()
+    _, pre, _ = pretrain(pcfg, data=data)
+    base = baseline_eval(data=data)
+    csv_row("table5/wo_pinfm", 0, f"save_hit3={base['save_overall']:.4f}")
+    for name, freeze in (("frozen_pinfm", True), ("finetuned_pinfm", False)):
+        t0 = time.perf_counter()
+        m, _ = finetune_and_eval(pcfg, default_fcfg(), pre, data=data,
+                                 freeze_pinfm=freeze)
+        csv_row(f"table5/{name}", (time.perf_counter() - t0) * 1e6,
+                f"save_hit3={m['save_overall']:.4f};"
+                f"lift={lift(m['save_overall'], base['save_overall']):+.1f}%")
+
+
+if __name__ == "__main__":
+    main()

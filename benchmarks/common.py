@@ -1,0 +1,203 @@
+"""Shared harness for the paper-table benchmarks: tiny-scale pretrain +
+fine-tune + HIT@3 evaluation on the synthetic latent-interest stream.
+
+Scale note: the paper's tables come from production-scale runs; here every
+table is reproduced DIRECTIONALLY at laptop scale (2-layer backbone, 32-seq,
+~10^2 steps).  Numbers are lifts vs the in-benchmark baseline, like the
+paper reports."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCATOptions
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.metrics import hit_at_k
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.data.synthetic import DataConfig, SyntheticActivity
+from repro.models.config import get_config
+from repro.nn.layers import _ACT, Linear
+from repro.nn.module import Module
+from repro.training.optim import AdamWConfig, adamw_init
+from repro.training.train import make_train_step, train_loop
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+SEQ = 32
+PRETRAIN_STEPS = 30 if QUICK else 150
+FINETUNE_STEPS = 40 if QUICK else 400
+EVAL_BATCHES = 4 if QUICK else 40
+
+
+def data_cfg(seed=0):
+    return DataConfig(n_users=400, n_items=1500, n_topics=16, seq_len=SEQ,
+                      seed=seed)
+
+
+def tiny_backbone():
+    return smoke_config(get_config("pinfm-20b")).replace(
+        n_layers=2, d_model=64, d_ff=128, n_heads=4, n_kv=4, head_dim=16)
+
+
+def pinfm_cfg(**loss_kw):
+    base = dict(window=4, downstream_len=16, n_negatives=0, mtl_stride=1)
+    base.update(loss_kw)
+    return PinFMConfig(rows=4096, n_tables=4, sub_dim=16, seq_len=SEQ,
+                       loss=LossConfig(**base), pos_actions=(1, 2, 3))
+
+
+def small_ranking_model(pcfg, fcfg):
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, fcfg)
+    from repro.core.dcat import DCAT
+    model.pinfm = PinFMPretrain(pcfg, tiny_backbone())
+    model.dcat = DCAT(model.pinfm.body, fcfg.dcat)
+    return model
+
+
+def default_fcfg(**kw):
+    base = dict(variant="graphsage-lt", seq_len=SEQ, graphsage_dim=16,
+                user_feat_dim=8, cand_feat_dim=8, hidden=64,
+                n_cross_layers=2,
+                seq_loss=LossConfig(use_mtl=False, use_ftl=False,
+                                    n_negatives=0, window=4,
+                                    downstream_len=16))
+    base.update(kw)
+    return FinetuneConfig(**base)
+
+
+def pretrain(pcfg, *, steps=PRETRAIN_STEPS, seed=0, data=None):
+    data = data or SyntheticActivity(data_cfg())
+    model = PinFMPretrain(pcfg, tiny_backbone())
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=steps,
+                          weight_decay=0.01)
+    step = jax.jit(make_train_step(model.loss, opt_cfg))
+    opt = adamw_init(params)
+    params, _, hist = train_loop(step, params, opt,
+                                 data.pretrain_batches(16, steps, seed + 1),
+                                 log_every=0)
+    return model, params, hist
+
+
+def finetune_and_eval(pcfg, fcfg, pretrained=None, *, steps=FINETUNE_STEPS,
+                      seed=0, data=None, freeze_pinfm=False):
+    """Returns dict of HIT@3 metrics (save/hide overall + fresh)."""
+    data = data or SyntheticActivity(data_cfg())
+    model = small_ranking_model(pcfg, fcfg)
+    params = model.init(jax.random.PRNGKey(seed + 100))
+    if pretrained is not None:
+        params = dict(params)
+        params["pinfm"] = pretrained
+    lr_mults = {"pinfm": 0.0 if freeze_pinfm else 0.1}
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10, total_steps=steps,
+                          weight_decay=0.01, lr_mults=lr_mults)
+
+    def loss_fn(p, batch, rng):
+        return model.loss(p, batch, rng=rng, train=True)
+
+    step = jax.jit(make_train_step(loss_fn, opt_cfg, has_rng=True))
+    opt = adamw_init(params)
+    params, _, _ = train_loop(
+        step, params, opt,
+        data.ranking_batches(4, 8, steps, seed=seed + 2), log_every=0,
+        rng=jax.random.PRNGKey(seed + 3))
+    return evaluate(model, params, data, seed=seed), params
+
+
+def evaluate(model, params, data, *, seed=0):
+    fwd = jax.jit(lambda p, b: model.forward(p, b, train=False)[0])
+    out = {}
+    for name, fresh_p in (("overall", 0.25), ("fresh", 1.0)):
+        hits_save, hits_hide = [], []
+        for i, b in enumerate(data.ranking_batches(
+                8, 8, EVAL_BATCHES, seed=seed + 900 + int(fresh_p * 10),
+                fresh_prob=fresh_p)):
+            logits = np.asarray(fwd(params, jax.tree.map(jnp.asarray, b)))
+            scores = logits[:, 0].reshape(8, 8)        # save head
+            save = b["labels"][:, 0].reshape(8, 8)
+            hide = b["labels"][:, 2].reshape(8, 8)
+            hits_save.append(float(hit_at_k(jnp.asarray(scores),
+                                            jnp.asarray(save))))
+            hits_hide.append(float(hit_at_k(jnp.asarray(scores),
+                                            jnp.asarray(hide))))
+        out[f"save_{name}"] = float(np.mean(hits_save))
+        out[f"hide_{name}"] = float(np.mean(hits_hide))
+    return out
+
+
+# -- no-PinFM baseline ranker --------------------------------------------------
+
+class NoPinFMRanker(Module):
+    """The downstream ranking model WITHOUT the PinFM module (w/o PinFM rows
+    of Tables 1/2): user+candidate dense features through the same DCN."""
+
+    def __init__(self, fcfg: FinetuneConfig):
+        from repro.core.finetune import CrossNetwork
+        self.cfg = fcfg
+        in_dim = fcfg.user_feat_dim + fcfg.cand_feat_dim + fcfg.graphsage_dim
+        self.in_proj = Linear(in_dim, fcfg.hidden, axes=(None, "embed"),
+                              bias=True)
+        self.cross = CrossNetwork(fcfg.hidden, fcfg.n_cross_layers)
+        self.mid = Linear(fcfg.hidden, fcfg.hidden, axes=("embed", "mlp"),
+                          bias=True)
+        self.heads = Linear(fcfg.hidden, fcfg.n_tasks, axes=("mlp", None),
+                            bias=True)
+
+    def spec(self):
+        return {"in_proj": self.in_proj.spec(), "cross": self.cross.spec(),
+                "mid": self.mid.spec(), "heads": self.heads.spec()}
+
+    def forward(self, p, batch, train=False, rng=None):
+        user_f = jnp.take(batch["user_feats"], batch["inverse_idx"], axis=0)
+        x = jnp.concatenate([user_f, batch["cand_feats"],
+                             batch["graphsage"]], -1)
+        x = self.in_proj(p["in_proj"], x)
+        x = self.cross(p["cross"], x)
+        x = _ACT["relu"](self.mid(p["mid"], x))
+        return self.heads(p["heads"], x), None, None
+
+    def loss(self, p, batch, rng=None, train=True):
+        logits, _, _ = self.forward(p, batch)
+        labels = batch["labels"].astype(jnp.float32)
+        lg = logits.astype(jnp.float32)
+        bce = jnp.mean(jnp.maximum(lg, 0) - lg * labels
+                       + jnp.log1p(jnp.exp(-jnp.abs(lg))))
+        return bce, ({"bce": bce}, logits)
+
+
+def baseline_eval(*, seed=0, data=None):
+    data = data or SyntheticActivity(data_cfg())
+    fcfg = default_fcfg()
+    model = NoPinFMRanker(fcfg)
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_cfg = AdamWConfig(lr=3e-3, warmup_steps=10,
+                          total_steps=FINETUNE_STEPS, weight_decay=0.01)
+
+    def loss_fn(p, batch, rng):
+        return model.loss(p, batch, rng=rng)
+
+    step = jax.jit(make_train_step(loss_fn, opt_cfg, has_rng=True))
+    opt = adamw_init(params)
+    params, _, _ = train_loop(
+        step, params, opt, data.ranking_batches(4, 8, FINETUNE_STEPS,
+                                                seed=seed + 2),
+        log_every=0, rng=jax.random.PRNGKey(seed + 3))
+    return evaluate(model, params, data, seed=seed)
+
+
+def lift(x, base):
+    return 100.0 * (x - base) / max(abs(base), 1e-9)
+
+
+def csv_row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}")

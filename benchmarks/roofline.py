@@ -1,0 +1,159 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the dry-run artifacts in experiments/dryrun/*.json.
+
+  compute    = HLO_FLOPs_per_chip / peak_FLOP/s          (197 TF bf16, v5e)
+  memory     = HLO_bytes_per_chip / HBM_bw               (819 GB/s)
+  collective = collective_bytes_per_chip / ICI_link_bw   (50 GB/s)
+
+HLO_FLOPs / bytes / collective bytes come from the trip-count-aware HLO
+analyzer (repro.launch.hlo_analysis) — XLA's cost_analysis counts scan
+bodies once, which would undercount every term here (all layers/microbatch/
+attention-block loops are scans).  MODEL_FLOPS is the analytic useful-work
+estimate (6*N*D train / 2*N*D prefill / 2*N*D_token decode; N = active
+non-embedding params), so MODEL/HLO exposes remat + dispatch overheads.
+
+Usage:  python -m benchmarks.roofline [--dir experiments/dryrun] [--md out.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PEAK = 197e12        # bf16 FLOP/s per v5e chip
+HBM = 819e9          # bytes/s
+ICI = 50e9           # bytes/s per link
+
+
+def active_params(cfg) -> float:
+    """Non-embedding params; for MoE, only routed-active experts count."""
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.resolved_head_dim
+    attn = d * hd * (cfg.n_heads * 2 + cfg.n_kv * 2)
+    kinds = cfg.block_kinds()
+    total = 0.0
+    for k in kinds:
+        if k == "attn":
+            ffn = 3 * d * cfg.d_ff if cfg.mlp_type == "glu" else 2 * d * cfg.d_ff
+            total += attn + ffn
+        elif k == "moe":
+            e_ff = cfg.moe_d_ff or cfg.d_ff
+            routed = 3 * d * e_ff * cfg.top_k
+            shared = 3 * d * (cfg.shared_d_ff or e_ff) * cfg.n_shared
+            total += attn + routed + shared
+        elif k == "rec":
+            w = cfg.lru_width or d
+            total += 3 * d * w + 2 * w * w + (3 * d * cfg.d_ff)
+        elif k == "ssm":
+            di = cfg.ssm_expand * d
+            total += 2 * d * di + di * d + 2 * d * cfg.ssm_state \
+                + d * (di // cfg.ssm_head_dim)
+    if cfg.family == "audio":
+        total += cfg.encoder_layers * (attn + 2 * d * cfg.d_ff) \
+            + L * (attn + 2 * d * cfg.d_ff)   # decoder cross-attn approx
+    return total
+
+
+def model_flops(cfg, shape) -> float:
+    """Whole-step useful FLOPs (all chips)."""
+    N = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.batch * shape.seq
+        return 6.0 * N * tokens
+    if shape.kind == "prefill":
+        return 2.0 * N * shape.batch * shape.seq
+    if shape.kind == "decode":
+        return 2.0 * N * shape.batch          # one token per sequence
+    if shape.kind == "pretrain":
+        return 6.0 * N * shape.batch * shape.seq
+    if shape.kind == "rank_serve":
+        # context once per unique user + crossing per candidate
+        uniq = max(shape.batch // 128, 16)
+        return 2.0 * N * (uniq * shape.seq + shape.batch * 2)
+    return 0.0
+
+
+def load_records(dirname):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def roofline_row(rec) -> dict | None:
+    if rec["status"] != "ok":
+        return None
+    from repro.launch.shapes import SHAPES
+    from repro.models.config import get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    ana = rec.get("hlo_analysis")
+    if not ana:
+        return None
+    n_dev = rec["n_devices"]
+    t_comp = ana["flops"] / PEAK
+    t_mem = ana["hbm_bytes"] / HBM
+    t_coll = ana["collectives"]["total_bytes"] / ICI
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape) / n_dev
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": ana["flops"],
+        "useful_ratio": mf / ana["flops"] if ana["flops"] else 0.0,
+        "temp_gib": rec["memory"]["temp_size_in_bytes"] / 2 ** 30,
+        "args_gib": rec["memory"]["argument_size_in_bytes"] / 2 ** 30,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="pod_16x16")
+    ap.add_argument("--md", default=None, help="write a markdown table here")
+    ap.add_argument("--csv", action="store_true")
+    args = ap.parse_args()
+
+    rows = []
+    for rec in load_records(args.dir):
+        if rec.get("mesh") != args.mesh:
+            continue
+        r = roofline_row(rec)
+        if r:
+            rows.append(r)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+
+    hdr = (f"{'arch':22s} {'shape':14s} {'comp(s)':>9s} {'mem(s)':>9s} "
+           f"{'coll(s)':>9s} {'dominant':>10s} {'useful':>7s} {'temp':>8s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:14s} {r['t_compute_s']:9.4f} "
+            f"{r['t_memory_s']:9.4f} {r['t_collective_s']:9.4f} "
+            f"{r['dominant']:>10s} {r['useful_ratio']:7.2f} "
+            f"{r['temp_gib']:7.1f}G")
+    print("\n".join(lines))
+
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write("| arch | shape | compute (s) | memory (s) | "
+                    "collective (s) | dominant | useful FLOP ratio | "
+                    "temp GiB |\n|---|---|---|---|---|---|---|---|\n")
+            for r in rows:
+                f.write(f"| {r['arch']} | {r['shape']} | "
+                        f"{r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} | "
+                        f"{r['t_collective_s']:.4f} | {r['dominant']} | "
+                        f"{r['useful_ratio']:.2f} | {r['temp_gib']:.1f} |\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

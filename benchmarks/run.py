@@ -1,0 +1,71 @@
+"""Benchmark driver (deliverable d): one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_dcat             §4.1  DCAT vs full self-attention throughput
+  bench_quant            §4.2  int8/int4 PTQ error + fused dequant kernel
+  bench_table1_fusion    Tbl 1 input-sequence variants (early vs late fusion)
+  bench_table2_coldstart Tbl 2 CIR / IDD / GSLT cold-start techniques
+  bench_table3_losses    Tbl 3 L_ntl / L_mtl / L_ftl ablations
+  bench_table4_actions   Tbl 4 positive-action-set ablation
+  bench_table5_finetuning Tbl 5 frozen vs fine-tuned PinFM
+  bench_table6_vocab     Tbl 6 vocabulary-size scaling
+  roofline               §Dry-run/§Roofline report (reads experiments/dryrun)
+
+Set BENCH_QUICK=1 for a fast smoke pass; --only <name> to run a subset.
+"""
+import argparse
+import os
+import sys
+import time
+import traceback
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks import (bench_dcat, bench_fig3_iterations, bench_quant,
+                        bench_table1_fusion, bench_table2_coldstart,
+                        bench_table3_losses, bench_table4_actions,
+                        bench_table5_finetuning, bench_table6_vocab)
+
+BENCHES = [
+    ("dcat", bench_dcat.main),
+    ("quant", bench_quant.main),
+    ("table1", bench_table1_fusion.main),
+    ("table2", bench_table2_coldstart.main),
+    ("table3", bench_table3_losses.main),
+    ("table4", bench_table4_actions.main),
+    ("table5", bench_table5_finetuning.main),
+    ("table6", bench_table6_vocab.main),
+    ("fig3", bench_fig3_iterations.main),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of benches")
+    args, _ = ap.parse_known_args()
+    only = set(args.only.split(",")) if args.only else None
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in BENCHES:
+        if only and name not in only:
+            continue
+        t0 = time.time()
+        try:
+            fn()
+            print(f"bench/{name}/total,{(time.time() - t0) * 1e6:.0f},ok")
+        except Exception:  # noqa: BLE001
+            failures += 1
+            traceback.print_exc()
+            print(f"bench/{name}/total,0,FAILED")
+    # roofline table (only if dry-run artifacts exist)
+    if os.path.isdir("experiments/dryrun") and (not only or "roofline" in only):
+        from benchmarks import roofline
+        sys.argv = ["roofline"]
+        roofline.main()
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""End-to-end driver (deliverable b): pretrain PinFM on the synthetic
+activity stream for a few hundred steps, fine-tune the Home-Feed-style
+ranking model with early fusion + cold-start techniques, evaluate HIT@3
+lifts vs a no-PinFM baseline, and write checkpoints.
+
+Run:  PYTHONPATH=src python examples/pretrain_finetune.py [--steps 300]
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+
+import jax
+
+from benchmarks.common import (baseline_eval, data_cfg, default_fcfg,
+                               finetune_and_eval, lift, pinfm_cfg, pretrain)
+from repro.data.synthetic import SyntheticActivity
+from repro.training.checkpoint import save_checkpoint
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--outdir", default="experiments/e2e")
+    args = ap.parse_args()
+
+    data = SyntheticActivity(data_cfg())
+    pcfg = pinfm_cfg()
+
+    print(f"== pretraining PinFM for {args.steps} steps ==")
+    model, pre_params, hist = pretrain(pcfg, steps=args.steps, data=data)
+    print(f"   InfoNCE: {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+    save_checkpoint(os.path.join(args.outdir, "pinfm_pretrained"),
+                    pre_params, step=args.steps)
+
+    print("== training the no-PinFM baseline ranker ==")
+    base = baseline_eval(data=data)
+    print(f"   baseline save HIT@3: overall {base['save_overall']:.4f}, "
+          f"fresh {base['save_fresh']:.4f}")
+
+    print("== fine-tuning the ranking model with PinFM "
+          "(graphsage-lt + CIR + IDD) ==")
+    metrics, ft_params = finetune_and_eval(
+        pcfg, default_fcfg(), pre_params, steps=args.steps, data=data)
+    save_checkpoint(os.path.join(args.outdir, "ranking_finetuned"),
+                    ft_params, step=args.steps)
+
+    print("\n== results (HIT@3 Save) ==")
+    print(f"   overall: {metrics['save_overall']:.4f} "
+          f"({lift(metrics['save_overall'], base['save_overall']):+.1f}% "
+          f"vs baseline; paper HF: +3.76%)")
+    print(f"   fresh:   {metrics['save_fresh']:.4f} "
+          f"({lift(metrics['save_fresh'], base['save_fresh']):+.1f}% "
+          f"vs baseline; paper HF 28d: +17.7%)")
+    print(f"   checkpoints in {args.outdir}/")
+
+
+if __name__ == "__main__":
+    main()

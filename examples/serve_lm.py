@@ -1,0 +1,48 @@
+"""4th example: serve an assigned LM architecture with batched requests —
+prefill + jitted ring-buffer decode (the serving loop behind decode_32k).
+
+Run:  PYTHONPATH=src python examples/serve_lm.py [--arch qwen3-4b]
+"""
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.config import get_config
+from repro.models.transformer import TransformerLM
+from repro.serving.generate import GenerateConfig, Generator
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = smoke_config(get_config(args.arch))
+    model = TransformerLM(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    gen = Generator(model, params,
+                    GenerateConfig(max_new_tokens=args.new_tokens,
+                                   temperature=0.8, top_k=50))
+    rng = np.random.RandomState(0)
+    prompts = rng.randint(0, cfg.vocab, (args.batch, args.prompt_len))
+    t0 = time.time()
+    out = gen.generate(prompts, rng=jax.random.PRNGKey(1))
+    dt = time.time() - t0
+    n_tok = args.batch * args.new_tokens
+    print(f"arch={args.arch} (reduced): generated {n_tok} tokens in "
+          f"{dt:.1f}s (incl. compile) — {n_tok / dt:.1f} tok/s")
+    print("sample:", np.asarray(out[0])[:12], "...")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Assigned-architecture configs (plus PinFM's own).  Importing this package
+registers every config; ``repro.models.config.get_config(name)`` resolves.
+"""
+from repro.models.config import ModelConfig, register, get_config, list_configs
+
+from repro.configs import (  # noqa: F401
+    command_r_plus_104b,
+    qwen3_4b,
+    qwen3_8b,
+    qwen1_5_0_5b,
+    mixtral_8x7b,
+    recurrentgemma_2b,
+    mamba2_2_7b,
+    qwen2_moe_a2_7b,
+    pixtral_12b,
+    whisper_base,
+    pinfm_20b,
+    pinfm_hstu,
+)
+
+ASSIGNED = [
+    "command-r-plus-104b", "qwen3-4b", "qwen1.5-0.5b", "mixtral-8x7b",
+    "recurrentgemma-2b", "mamba2-2.7b", "qwen3-8b", "qwen2-moe-a2.7b",
+    "pixtral-12b", "whisper-base",
+]
+
+
+def smoke_config(cfg: ModelConfig) -> ModelConfig:
+    """Reduced variant of the same family: <=3 layers, d_model<=512,
+    <=4 experts — runnable on CPU for smoke tests."""
+    kw = dict(
+        n_layers=max(2, len(cfg.pattern)),
+        d_model=256,
+        n_heads=4,
+        n_kv=min(cfg.n_kv, 4) if cfg.n_kv > 1 else 1,
+        head_dim=64,
+        d_ff=512,
+        vocab=512,
+        max_seq=512,
+        param_dtype="float32",
+        compute_dtype="float32",
+        remat="none",
+        ssm_chunk=16,
+    )
+    if cfg.n_experts:
+        kw.update(n_experts=4, top_k=2, moe_d_ff=128,
+                  n_shared=min(cfg.n_shared, 2),
+                  shared_d_ff=128 if cfg.n_shared else None)
+    if cfg.lru_width:
+        kw.update(lru_width=256)
+    if cfg.frontend:
+        kw.update(frontend_dim=64, n_patches=16)
+    if cfg.encoder_layers:
+        kw.update(encoder_layers=2)
+    if cfg.window:
+        kw.update(window=64)
+    return cfg.replace(**kw)

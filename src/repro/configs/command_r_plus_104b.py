@@ -1,0 +1,16 @@
+"""Command R+ 104B [hf:CohereForAI/c4ai-command-r-v01 family]: dense GQA,
+no biases, 64L d_model=12288 96H (kv=8) d_ff=33792 vocab=256000."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="command-r-plus-104b", family="dense",
+    n_layers=64, d_model=12288, n_heads=96, n_kv=8, head_dim=128,
+    d_ff=33792, vocab=256000,
+    act="silu", norm="layernorm", mlp_type="glu",
+    qkv_bias=False, qk_norm=False, rope=True, rope_theta=75_000_000.0,
+    tie_embeddings=True, max_seq=131072,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp_fsdp",
+    microbatches=8,
+    source="hf:CohereForAI/c4ai-command-r-v01 (scaled to R+ 104B dims)",
+))

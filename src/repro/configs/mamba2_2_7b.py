@@ -1,0 +1,16 @@
+"""Mamba2-2.7B [arXiv:2405.21060]: attention-free SSD (state-space duality),
+64L d_model=2560, ssm_state=128, vocab=50280."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mamba2-2.7b", family="ssm",
+    n_layers=64, d_model=2560, n_heads=80, n_kv=1, head_dim=64,
+    d_ff=0, vocab=50280,
+    norm="rmsnorm", rope=False, tie_embeddings=True, max_seq=1_048_576,
+    pattern=("ssm",), ssm_expand=2, ssm_head_dim=64, ssm_state=128,
+    ssm_groups=1, ssm_chunk=256,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp",
+    microbatches=4,
+    source="arXiv:2405.21060 (Mamba-2, SSD)",
+))

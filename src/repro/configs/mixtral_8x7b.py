@@ -1,0 +1,17 @@
+"""Mixtral 8x7B [arXiv:2401.04088]: MoE 8 experts top-2, sliding-window attn,
+32L d_model=4096 32H (kv=8) expert d_ff=14336 vocab=32000."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="mixtral-8x7b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, n_kv=8, head_dim=128,
+    d_ff=14336, vocab=32000,
+    act="silu", norm="rmsnorm", mlp_type="glu",
+    qkv_bias=False, qk_norm=False, rope=True, rope_theta=1_000_000.0,
+    window=4096, tie_embeddings=False, max_seq=131072,
+    pattern=("moe",), n_experts=8, top_k=2, capacity_factor=1.25,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp_fsdp",
+    microbatches=4,
+    source="arXiv:2401.04088 (Mixtral of Experts)",
+))

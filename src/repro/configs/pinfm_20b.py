@@ -1,0 +1,17 @@
+"""PinFM's own backbone (paper §3.1): GPT2-architecture Pre-LN decoder.
+The 20B+ parameters are dominated by the 8 x 80M x 32 hashed id-embedding
+tables (20.5B); the transformer itself is GPT2-medium-scale.  Sequence
+length is capped at 256 during fine-tuning/serving (paper §4.1)."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pinfm-20b", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv=16, head_dim=64,
+    d_ff=4096, vocab=0,            # id vocabulary lives in the hashed tables
+    act="gelu", norm="layernorm", mlp_type="mlp",
+    qkv_bias=True, qk_norm=False, rope=False, pos_emb="learned",
+    tie_embeddings=True, max_seq=16000,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp", microbatches=4,
+    source="PinFM paper §3.1/§4 (GPT2 Pre-LN; 8x80Mx32 tables)",
+))

@@ -1,0 +1,15 @@
+"""PinFM with the HSTU backbone (paper §3.1: "We also tried HSTU
+architecture and got similar results with GPT2") [arXiv:2402.17152]."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pinfm-hstu", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv=16, head_dim=64,
+    d_ff=0, vocab=0,
+    norm="rmsnorm", rope=True, pos_emb=None,
+    tie_embeddings=True, max_seq=16000,
+    pattern=("hstu",),
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp", microbatches=4,
+    source="PinFM §3.1 alternative backbone; HSTU arXiv:2402.17152",
+))

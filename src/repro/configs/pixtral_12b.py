@@ -1,0 +1,18 @@
+"""Pixtral-12B [hf:mistralai/Pixtral-12B-2409]: VLM; pixtral-ViT frontend is
+STUBBED (precomputed patch embeddings) per the brief — this config is the
+mistral-nemo language decoder: 40L d_model=5120 32H (kv=8) d_ff=14336."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="pixtral-12b", family="vlm",
+    n_layers=40, d_model=5120, n_heads=32, n_kv=8, head_dim=128,
+    d_ff=14336, vocab=131072,
+    act="silu", norm="rmsnorm", mlp_type="glu",
+    qkv_bias=False, qk_norm=False, rope=True, rope_theta=1_000_000.0,
+    tie_embeddings=False, max_seq=131072,
+    frontend="patch", frontend_dim=1024, n_patches=1024,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp_fsdp",
+    microbatches=4,
+    source="hf:mistralai/Pixtral-12B-2409 (decoder dims)",
+))

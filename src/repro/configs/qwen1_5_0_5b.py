@@ -1,0 +1,15 @@
+"""Qwen1.5-0.5B [hf:Qwen/Qwen1.5-0.5B]: dense with QKV bias,
+24L d_model=1024 16H (kv=16) d_ff=2816 vocab=151936."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen1.5-0.5b", family="dense",
+    n_layers=24, d_model=1024, n_heads=16, n_kv=16, head_dim=64,
+    d_ff=2816, vocab=151936,
+    act="silu", norm="rmsnorm", mlp_type="glu",
+    qkv_bias=True, qk_norm=False, rope=True, rope_theta=1_000_000.0,
+    tie_embeddings=True, max_seq=32768,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp",
+    source="hf:Qwen/Qwen1.5-0.5B",
+))

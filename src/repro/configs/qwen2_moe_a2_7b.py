@@ -1,0 +1,18 @@
+"""Qwen2-MoE-A2.7B [hf:Qwen/Qwen1.5-MoE-A2.7B]: 60 routed experts top-4 +
+4 shared, 24L d_model=2048 16H (kv=16) expert d_ff=1408 vocab=151936."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen2-moe-a2.7b", family="moe",
+    n_layers=24, d_model=2048, n_heads=16, n_kv=16, head_dim=128,
+    d_ff=1408, vocab=151936,
+    act="silu", norm="rmsnorm", mlp_type="glu",
+    qkv_bias=True, qk_norm=False, rope=True, rope_theta=1_000_000.0,
+    tie_embeddings=False, max_seq=32768,
+    pattern=("moe",), n_experts=60, top_k=4, n_shared=4,
+    moe_d_ff=1408, shared_d_ff=1408, capacity_factor=1.25,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp_fsdp",
+    microbatches=4,
+    source="hf:Qwen/Qwen1.5-MoE-A2.7B",
+))

@@ -1,0 +1,16 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family]: dense GQA + qk-norm,
+36L d_model=2560 32H (kv=8) d_ff=9728 vocab=151936."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv=8, head_dim=128,
+    d_ff=9728, vocab=151936,
+    act="silu", norm="rmsnorm", mlp_type="glu",
+    qkv_bias=False, qk_norm=True, rope=True, rope_theta=1_000_000.0,
+    tie_embeddings=True, max_seq=131072,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp",
+    microbatches=2,
+    source="hf:Qwen/Qwen3-8B model card (4B sibling dims)",
+))

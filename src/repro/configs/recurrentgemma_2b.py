@@ -1,0 +1,17 @@
+"""RecurrentGemma-2B [arXiv:2402.19427 Griffin]: RG-LRU + local attention 1:2,
+26L d_model=2560 10H (MQA kv=1) d_ff=7680 vocab=256000."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    n_layers=26, d_model=2560, n_heads=10, n_kv=1, head_dim=256,
+    d_ff=7680, vocab=256000,
+    act="gelu_tanh", norm="rmsnorm", mlp_type="glu",
+    qkv_bias=False, qk_norm=False, rope=True, rope_theta=10_000.0,
+    window=2048, embed_scale=True, tie_embeddings=True, max_seq=1_048_576,
+    pattern=("rec", "rec", "attn"), lru_width=2560,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="full", sharding="tp",
+    microbatches=2,
+    source="arXiv:2402.19427 (Griffin / RecurrentGemma-2B)",
+))

@@ -1,0 +1,18 @@
+"""Whisper-base [arXiv:2212.04356]: enc-dec; mel+conv frontend STUBBED
+(precomputed frame embeddings).  6L enc + 6L dec, d_model=512 8H d_ff=2048
+vocab=51865.  long_500k is skipped for this arch (DESIGN.md §6)."""
+from repro.models.config import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, encoder_layers=6, d_model=512, n_heads=8, n_kv=8, head_dim=64,
+    d_ff=2048, vocab=51865,
+    act="gelu", norm="layernorm", mlp_type="mlp",
+    qkv_bias=True, qk_norm=False, rope=False, pos_emb="learned",
+    tie_embeddings=True, max_seq=448,
+    frontend="audio", frontend_dim=512,
+    param_dtype="bfloat16", compute_dtype="bfloat16",
+    remat="none", sharding="tp",
+    microbatches=4,
+    source="arXiv:2212.04356 (Whisper base)",
+))

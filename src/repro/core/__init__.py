@@ -1,0 +1,7 @@
+"""PinFM core: the paper's contribution (pretrain model, InfoNCE losses,
+DCAT, fine-tune ranking integration)."""
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.core.losses import LossConfig, pinfm_losses
+from repro.core.dcat import DCAT, DCATOptions, dedup, dedup_inverse, dedup_stats
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.metrics import hit_at_k

@@ -1,0 +1,127 @@
+"""Deduplicated Cross-Attention Transformer — DCAT (paper §4.1).
+
+Key data pattern: unique user sequences ≪ scored candidates (1:1000 serving,
+1:10 training).  The transformer is split into
+
+  * **context component** — self-attention over the DEDUPLICATED user-sequence
+    batch Ψ(X) (B_u sequences), emitting per-layer KV (attention kinds) or the
+    recurrent/SSD state (rec/ssm kinds — our TPU-side generalization for
+    attention-free backbones, DESIGN.md §5);
+  * **crossing component** — each candidate is a short query sequence that
+    attends to Ψ⁻¹(KV_u) ‖ KV_c per layer (eq. 4), where Ψ⁻¹ is a gather by
+    unique-row index performed inside the layer scan.
+
+Optimizations from the paper, both implemented:
+  * ``rotate_replace`` — keep the sequence length fixed at L (256 in prod):
+    overwrite the oldest tokens' KV slots with the candidate KV and rotate
+    the position ids instead of concatenating (§4.1 "+25%" trick, part 1);
+  * ``skip_last_self_attn`` — at serving, the last layer's context output is
+    only used by the loss, so compute just its K/V projection (part 2).
+
+Ψ itself (deduplication) runs OUTSIDE the accelerator graph — in training the
+data pipeline emits (unique_sequences, inverse_index); at serving the router
+does the same with pointers.  :func:`dedup` is that host-side operation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerBody
+
+
+# ---------------------------------------------------------------------------
+# Ψ — host-side batch deduplication (invertible)
+# ---------------------------------------------------------------------------
+
+def dedup(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Ψ: (B, ...) -> (unique (B_u, ...), inverse (B,)) with
+    Ψ⁻¹(u, inv) = u[inv] == rows.  First-occurrence order is preserved."""
+    rows = np.asarray(rows)
+    flat = rows.reshape(rows.shape[0], -1)
+    _, first_idx, inverse = np.unique(
+        flat, axis=0, return_index=True, return_inverse=True)
+    # re-order unique rows by first occurrence so Ψ is deterministic/stable
+    order = np.argsort(first_idx)
+    rank = np.empty_like(order)
+    rank[order] = np.arange(len(order))
+    unique = rows[np.sort(first_idx)]
+    return unique, rank[inverse].astype(np.int32)
+
+
+def dedup_inverse(unique, inverse):
+    """Ψ⁻¹ — reference implementation (the production path is the gather
+    fused into the crossing layer scan / Pallas kernel)."""
+    return jnp.take(jnp.asarray(unique), jnp.asarray(inverse), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# DCAT over a TransformerBody
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DCATOptions:
+    rotate_replace: bool = False
+    skip_last_self_attn: bool = False
+
+
+class DCAT:
+    """Context/crossing execution over an existing body + params."""
+
+    def __init__(self, body: TransformerBody, opts: Optional[DCATOptions] = None):
+        self.body = body
+        self.opts = opts or DCATOptions()
+
+    def context(self, p_body, x_u, positions=None, *, serving: bool = False):
+        """x_u: (B_u, L, d) deduplicated embedded sequences.
+        -> (H_u, aux, ctxs).  At serving, skip_last_self_attn may elide the
+        last layer's output (H_u is then not the true last hidden state —
+        fine, it is only used by the loss)."""
+        B, L = x_u.shape[0], x_u.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+        skip = serving and self.opts.skip_last_self_attn
+        return self.body.forward(p_body, x_u, positions, collect_ctx=True,
+                                 skip_last_self_attn=skip)
+
+    def crossing(self, p_body, x_c, inverse_idx, ctxs, *, ctx_len: int,
+                 positions=None):
+        """x_c: (B_c, S_c, d) embedded candidate tokens; inverse_idx: (B_c,)
+        maps each candidate to its unique user row (Ψ⁻¹).
+        -> y_c: (B_c, S_c, d) final-normed crossing outputs."""
+        B_c, S_c = x_c.shape[0], x_c.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(ctx_len, ctx_len + S_c), (B_c, S_c))
+        y, aux = self.body.cross(
+            p_body, x_c, ctxs, positions,
+            gather_idx=jnp.asarray(inverse_idx),
+            self_attend=not self.opts.rotate_replace,
+            rotate_replace=self.opts.rotate_replace)
+        return y, aux
+
+    # -- reference (paper's baseline): full self-attention over Ψ⁻¹ batch ----
+    def reference_scores(self, p_body, x_u, x_c, inverse_idx):
+        """Score candidates WITHOUT dedup/DCAT: materialize Ψ⁻¹(X_u), append
+        the candidate tokens, run plain causal self-attention, and read the
+        outputs at the candidate positions.  DCAT (concat mode) must match
+        this exactly — the centerpiece equivalence test."""
+        x_full = jnp.concatenate(
+            [jnp.take(x_u, jnp.asarray(inverse_idx), axis=0), x_c], axis=1)
+        B, S = x_full.shape[0], x_full.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        y, aux, _ = self.body.forward(p_body, x_full, positions)
+        return y[:, -x_c.shape[1]:], aux
+
+
+def dedup_stats(inverse_idx) -> dict:
+    """Observability: dedup ratio etc. (paper: 1:10 training, 1:1000 serving)."""
+    inverse_idx = np.asarray(inverse_idx)
+    b_c = len(inverse_idx)
+    b_u = len(np.unique(inverse_idx))
+    return {"candidates": b_c, "unique_users": b_u,
+            "dedup_ratio": b_c / max(b_u, 1)}

@@ -1,0 +1,61 @@
+"""PinFM hashed id-embedding tables (paper §4.2).
+
+Each item id is looked up in ``n_tables`` sub-tables through independent
+universal hashes; the sub-embeddings are concatenated:
+
+    E_i = emb(id_i) = ⊗_{j=0}^{7} emb_j(hash_j(id_i))       (8 x 80M x 32 -> 256)
+
+The 8-way multi-hash mitigates collisions: two ids collide on the full
+embedding only if they collide in all 8 tables.  In the production config the
+tables hold 8*80M*32 = 20.48B parameters — the bulk of PinFM's "20B+".
+
+Rows are sharded over the full mesh (logical axis "id_vocab").
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, normal_init
+
+# odd 32-bit multipliers + offsets (fixed, so checkpoints are stable)
+_MULTS = np.array([0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+                   0x165667B1, 0xD3A2646D, 0xFD7046C5, 0xB55A4F09],
+                  dtype=np.uint32)
+_OFFS = np.array([0x632BE59B, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2D,
+                  0x165667B5, 0xD3A2646B, 0xFD7046C3, 0xB55A4F0B],
+                 dtype=np.uint32)
+
+
+def multi_hash(ids, n_tables: int, rows: int):
+    """ids: int32/uint32 (...,) -> (..., n_tables) int32 row indices."""
+    u = ids.astype(jnp.uint32)[..., None]
+    mults = jnp.asarray(_MULTS[:n_tables])
+    offs = jnp.asarray(_OFFS[:n_tables])
+    h = u * mults + offs                    # wraps mod 2^32 (multiplicative hashing)
+    h = h ^ (h >> 15)
+    return (h % jnp.uint32(rows)).astype(jnp.int32)
+
+
+class HashedIDEmbedding(Module):
+    def __init__(self, n_tables: int = 8, rows: int = 80_000_000,
+                 sub_dim: int = 32, dtype=jnp.float32):
+        self.n_tables, self.rows, self.sub_dim = n_tables, rows, sub_dim
+        self.dim = n_tables * sub_dim
+        self.dtype = dtype
+
+    def spec(self):
+        return {"tables": Param((self.n_tables, self.rows, self.sub_dim),
+                                self.dtype, (None, "id_vocab", None),
+                                normal_init(0.02))}
+
+    def __call__(self, p, ids):
+        """ids: (...,) int -> (..., n_tables*sub_dim)."""
+        idx = multi_hash(ids, self.n_tables, self.rows)       # (..., T)
+        # gather per table: vmap over the table axis
+        def one(table, rows_idx):
+            return jnp.take(table, rows_idx, axis=0)
+        gathered = jax.vmap(one, in_axes=(0, -1), out_axes=-2)(p["tables"], idx)
+        # gathered: (..., n_tables, sub_dim) -> concat
+        return gathered.reshape(*ids.shape, self.dim)

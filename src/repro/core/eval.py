@@ -1,0 +1,48 @@
+"""Pretraining-quality evaluation: next-positive-item retrieval.
+
+The InfoNCE objectives train H_i to score the next positively-engaged item's
+psi-embedding above in-batch alternatives; recall@k over a candidate corpus
+is the standard proxy for pretraining quality (used by the Figure-3
+iterations benchmark)."""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def next_item_recall(model, params, batches, *, k: int = 10,
+                     corpus_ids=None) -> dict:
+    """Recall@k of the next positively-engaged item against a corpus.
+
+    batches: iterable of pretrain batches; corpus_ids: (C,) candidate items
+    (defaults to all ids present in the evaluated batches)."""
+    anchors, gold = [], []
+    all_ids = []
+    for b in batches:
+        H, _, _ = model.encode(params, jnp.asarray(b["ids"]),
+                               jnp.asarray(b["actions"]),
+                               jnp.asarray(b["surfaces"]))
+        pos = np.asarray(model.pos_action_mask(jnp.asarray(b["actions"])))
+        ids = np.asarray(b["ids"])
+        Hn = np.asarray(H)
+        B, L = ids.shape
+        for bb in range(B):
+            for i in range(L - 1):
+                if pos[bb, i + 1]:
+                    anchors.append(Hn[bb, i])
+                    gold.append(ids[bb, i + 1])
+        all_ids.append(ids.reshape(-1))
+    if not anchors:
+        return {"recall": 0.0, "n": 0}
+    anchors = np.stack(anchors)
+    gold = np.asarray(gold)
+    corpus = (np.unique(np.concatenate(all_ids)) if corpus_ids is None
+              else np.asarray(corpus_ids))
+    z = np.asarray(model.targets(params, jnp.asarray(corpus)))   # (C, D)
+    sims = anchors @ z.T                                          # (N, C)
+    kk = min(k, sims.shape[1])
+    topk = np.argpartition(-sims, kk - 1, axis=1)[:, :kk]
+    hit = np.array([gold[i] in corpus[topk[i]] for i in range(len(gold))])
+    return {"recall": float(hit.mean()), "n": int(len(gold)),
+            "corpus": int(len(corpus)), "k": kk}

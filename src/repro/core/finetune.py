@@ -1,0 +1,308 @@
+"""PinFM fine-tuning: integration into a downstream multi-task ranking model
+(paper §3.2, §5.1 Tables 1-3).
+
+The ranking model is a DCN-v2-family multi-task classifier.  PinFM enters as
+a *module*: the pretrained transformer + tables encode the (deduplicated)
+user activity sequence; depending on the input-sequence variant the candidate
+item is fused early (appended to the sequence, scored via DCAT crossing) or
+late (pooled user embedding only):
+
+  variant            candidate in sequence   extra features
+  ------------------ ----------------------- -------------------------------
+  base               yes (early fusion)      y_cand, emb(cand)
+  graphsage          yes                     + GraphSAGE summed into cand tok
+  graphsage-lt       yes                     + learnable token output
+  lite-mean          no  (late fusion)       mean-pool(H_u), emb(cand)
+  lite-last          no                      H_u[:, -1], emb(cand)
+
+Cold-start techniques (Table 2): Candidate-Item-Randomization (CIR, 10% of
+candidate ids replaced by random ids during training) and Item-age-Dependent
+Dropout (IDD, p=0.7 on PinFM outputs for items <7d old, p=0.5 for 7-28d).
+
+Auxiliary losses (paper §3.2): sequence losses (L_ntl/L_mtl) on the module,
+ranking losses applied directly to the module output via a small head, and
+an MSE loss aligning module-head and final predictions.  The pretrained
+module trains at ~1/10 LR (see AdamWConfig.lr_mults).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.dcat import DCAT, DCATOptions
+from repro.core.losses import LossConfig, learnable_tau, pinfm_losses
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.nn.layers import Linear, PointwiseMLPNorm, _ACT
+from repro.nn.module import Module, Param, fan_in_init, normal_init, zeros_init
+
+VARIANTS = ("base", "graphsage", "graphsage-lt", "lite-mean", "lite-last")
+
+
+@dataclasses.dataclass
+class FinetuneConfig:
+    variant: str = "graphsage-lt"
+    n_tasks: int = 3                  # e.g. save, click, hide
+    user_feat_dim: int = 32
+    cand_feat_dim: int = 32
+    graphsage_dim: int = 64
+    seq_len: int = 128                # L_d — downstream real-time sequence
+    hidden: int = 256
+    n_cross_layers: int = 3
+    # cold start
+    cir_prob: float = 0.10
+    idd_p_fresh: float = 0.7          # item age < 7d
+    idd_p_mid: float = 0.5            # 7d <= age < 28d
+    use_cir: bool = True
+    use_idd: bool = True
+    # aux losses
+    use_seq_loss: bool = True         # L_ntl during fine-tuning
+    seq_loss: LossConfig = dataclasses.field(
+        default_factory=lambda: LossConfig(use_mtl=False, use_ftl=False))
+    use_module_head: bool = True      # ranking loss on module outputs + MSE align
+    align_weight: float = 0.1
+    gs_align_weight: float = 0.01     # align projected GraphSAGE to emb space
+    dcat: DCATOptions = dataclasses.field(default_factory=DCATOptions)
+
+
+class CrossNetwork(Module):
+    """DCN-v2 cross layers: x_{l+1} = x0 * (W x_l + b) + x_l."""
+
+    def __init__(self, dim: int, n_layers: int, dtype=jnp.float32):
+        self.dim, self.n_layers, self.dtype = dim, n_layers, dtype
+
+    def spec(self):
+        return {f"l{i}": {
+            "w": Param((self.dim, self.dim), self.dtype, ("embed", "mlp"),
+                       fan_in_init(0)),
+            "b": Param((self.dim,), self.dtype, ("mlp",), zeros_init)}
+            for i in range(self.n_layers)}
+
+    def __call__(self, p, x0):
+        x = x0
+        for i in range(self.n_layers):
+            w, b = p[f"l{i}"]["w"], p[f"l{i}"]["b"]
+            x = x0 * (x @ w + b) + x
+        return x
+
+
+class PinFMRankingModel(Module):
+    """Downstream ranking model with PinFM integrated as a module.
+
+    Parameter tree is split into {"pinfm": ..., "ranker": ...} so the
+    optimizer can apply the 1/10 LR multiplier to the pretrained module.
+    """
+
+    def __init__(self, pinfm_cfg: PinFMConfig, cfg: FinetuneConfig):
+        assert cfg.variant in VARIANTS
+        self.pcfg, self.cfg = pinfm_cfg, cfg
+        self.pinfm = PinFMPretrain(pinfm_cfg)
+        d_model = self.pinfm.bb.d_model
+        id_dim = pinfm_cfg.id_dim
+        dtype = self.pinfm.bb.pdtype()
+        self.dcat = DCAT(self.pinfm.body, cfg.dcat)
+        self.gs_proj = Linear(cfg.graphsage_dim, id_dim, axes=(None, "embed"),
+                              dtype=dtype)
+        # PinFM feature block: outputs fed into feature crossing
+        n_feat = {"base": 2, "graphsage": 2, "graphsage-lt": 3,
+                  "lite-mean": 2, "lite-last": 2}[cfg.variant]
+        feat_dim = n_feat * id_dim
+        in_dim = cfg.user_feat_dim + cfg.cand_feat_dim + feat_dim
+        self.in_proj = Linear(in_dim, cfg.hidden, axes=(None, "embed"),
+                              bias=True, dtype=dtype)
+        self.cross = CrossNetwork(cfg.hidden, cfg.n_cross_layers, dtype=dtype)
+        self.mlp_mid = Linear(cfg.hidden, cfg.hidden, axes=("embed", "mlp"),
+                              bias=True, dtype=dtype)
+        self.heads = Linear(cfg.hidden, cfg.n_tasks, axes=("mlp", None),
+                            bias=True, dtype=dtype)
+        self.module_head = Linear(feat_dim, cfg.n_tasks, axes=(None, None),
+                                  bias=True, dtype=dtype)
+
+    def spec(self):
+        return {
+            "pinfm": self.pinfm.spec(),
+            "ranker": {
+                "gs_proj": self.gs_proj.spec(),
+                "in_proj": self.in_proj.spec(),
+                "cross": self.cross.spec(),
+                "mlp_mid": self.mlp_mid.spec(),
+                "heads": self.heads.spec(),
+                "module_head": self.module_head.spec(),
+                "learnable_token": Param(
+                    (self.pcfg.id_dim,), self.pinfm.bb.pdtype(), ("embed",),
+                    normal_init(0.02)),
+            },
+        }
+
+    # ------------------------------------------------------------------
+    def _candidate_tokens(self, p, cand_ids, graphsage):
+        """Build the crossing input sequence for each candidate.
+        -> (B_c, S_c, d_model), S_c = 2 for graphsage-lt ([LT, cand]) else 1.
+        Also returns the raw candidate event embedding (pre-phi_in) and the
+        projected GraphSAGE embedding (for the alignment loss)."""
+        cfg = self.cfg
+        pf, pr = p["pinfm"], p["ranker"]
+        e_c = self.pinfm.id_embed(pf["id_embed"], cand_ids)          # (B_c, id_dim)
+        gs_e = None
+        if cfg.variant in ("graphsage", "graphsage-lt") and graphsage is not None:
+            gs_e = self.gs_proj(pr["gs_proj"], graphsage)
+            e_c = e_c + gs_e
+        toks = [e_c[:, None, :]]
+        if cfg.variant == "graphsage-lt":
+            lt = jnp.broadcast_to(pr["learnable_token"],
+                                  (e_c.shape[0], 1, self.pcfg.id_dim))
+            toks = [lt] + toks                                        # [LT, cand]
+        x_c = jnp.concatenate(toks, axis=1)
+        x_c = self.pinfm.phi_in(pf["phi_in"], x_c).astype(self.pinfm.bb.cdtype())
+        if self.pinfm.bb.pos_emb == "learned":
+            L = cfg.seq_len
+            S_c = x_c.shape[1]
+            pos = jnp.arange(L, L + S_c) % self.pinfm.pos_embed.vocab
+            x_c = x_c + self.pinfm.pos_embed(pf["pos_embed"], pos).astype(
+                x_c.dtype)[None]
+        return x_c, e_c, gs_e
+
+    def pinfm_features(self, p, batch, *, train: bool = False, rng=None,
+                       serving: bool = False):
+        """Run the PinFM module.  batch carries the DEDUPLICATED sequences +
+        inverse index (the data pipeline / router performs Ψ on host):
+
+          seq_ids/actions/surfaces: (B_u, L_d); inverse_idx: (B_c,);
+          cand_ids: (B_c,); graphsage: (B_c, gs_dim)
+
+        -> (features (B_c, n_feat*id_dim), H_u, aux)."""
+        cfg, pcfg = self.cfg, self.pcfg
+        pf = p["pinfm"]
+        cand_ids = batch["cand_ids"]
+        if train and cfg.use_cir and rng is not None:
+            # Candidate Item Randomization: 10% random ids (cold-start sim)
+            r1, r2 = jax.random.split(rng)
+            rand_ids = jax.random.randint(r1, cand_ids.shape, 0, 1 << 30)
+            keep = jax.random.uniform(r2, cand_ids.shape) > cfg.cir_prob
+            cand_ids = jnp.where(keep, cand_ids, rand_ids)
+
+        H_u, aux, ctxs = self.pinfm.encode(
+            pf, batch["seq_ids"], batch["seq_actions"], batch["seq_surfaces"],
+            collect_ctx=cfg.variant not in ("lite-mean", "lite-last"))
+
+        inv = batch["inverse_idx"]
+        if cfg.variant in ("lite-mean", "lite-last"):
+            pooled = (jnp.mean(H_u, axis=1) if cfg.variant == "lite-mean"
+                      else H_u[:, -1])
+            user_emb = jnp.take(pooled, inv, axis=0)                 # (B_c, id_dim)
+            e_c = self.pinfm.id_embed(pf["id_embed"], cand_ids)
+            feats = [user_emb, e_c]
+            gs_e = None
+        else:
+            x_c, e_c, gs_e = self._candidate_tokens(
+                p, cand_ids, batch.get("graphsage"))
+            y_c, _ = self.dcat.crossing(pf["body"], x_c, inv, ctxs,
+                                        ctx_len=batch["seq_ids"].shape[1])
+            y_c = self.pinfm.phi_out(pf["phi_out"], y_c.astype(jnp.float32))
+            feats = [y_c[:, -1], e_c]                                # cand output
+            if cfg.variant == "graphsage-lt":
+                feats.insert(1, y_c[:, 0])                           # LT output
+        features = jnp.concatenate(feats, axis=-1)
+
+        # Item-age Dependent Dropout on the module outputs (Table 2 IDD)
+        if train and cfg.use_idd and rng is not None and "cand_age_days" in batch:
+            age = batch["cand_age_days"]
+            pdrop = jnp.where(age < 7, cfg.idd_p_fresh,
+                              jnp.where(age < 28, cfg.idd_p_mid, 0.0))
+            keep = jax.random.uniform(jax.random.fold_in(rng, 7),
+                                      (features.shape[0], 1)) >= pdrop[:, None]
+            features = features * keep / jnp.maximum(1 - pdrop[:, None], 1e-3)
+
+        return features, H_u, {"aux": aux, "gs_e": gs_e,
+                               "e_cand": e_c if cfg.variant != "lite-mean" else None}
+
+    # -- late-fusion serving split (lite variants) -----------------------------
+    def encode_user(self, p, seq_ids, seq_actions, seq_surfaces):
+        """Pooled user embedding for lite variants — cacheable across
+        requests because it does not depend on candidates (paper §3.2 late
+        fusion: 'we can easily cache the output of PinFM')."""
+        assert self.cfg.variant in ("lite-mean", "lite-last")
+        H_u, _, _ = self.pinfm.encode(p["pinfm"], seq_ids, seq_actions,
+                                      seq_surfaces, collect_ctx=False)
+        return (jnp.mean(H_u, axis=1) if self.cfg.variant == "lite-mean"
+                else H_u[:, -1])
+
+    def score_with_user_emb(self, p, user_emb, batch):
+        """user_emb: (B_c, id_dim) — already Ψ⁻¹-gathered per candidate."""
+        pf, pr = p["pinfm"], p["ranker"]
+        e_c = self.pinfm.id_embed(pf["id_embed"], batch["cand_ids"])
+        feats = jnp.concatenate([user_emb, e_c], axis=-1)
+        user_f = jnp.take(batch["user_feats"], batch["inverse_idx"], axis=0)
+        x = jnp.concatenate([user_f, batch["cand_feats"], feats],
+                            -1).astype(feats.dtype)
+        x = self.in_proj(pr["in_proj"], x)
+        x = self.cross(pr["cross"], x)
+        x = _ACT["relu"](self.mlp_mid(pr["mlp_mid"], x))
+        return self.heads(pr["heads"], x)
+
+    def forward(self, p, batch, *, train: bool = False, rng=None):
+        """-> (task_logits (B_c, n_tasks), module_logits, extras)."""
+        feats, H_u, extras = self.pinfm_features(p, batch, train=train, rng=rng)
+        pr = p["ranker"]
+        user_f = jnp.take(batch["user_feats"], batch["inverse_idx"], axis=0)
+        x = jnp.concatenate(
+            [user_f, batch["cand_feats"], feats], axis=-1).astype(feats.dtype)
+        x = self.in_proj(pr["in_proj"], x)
+        x = self.cross(pr["cross"], x)
+        x = _ACT["relu"](self.mlp_mid(pr["mlp_mid"], x))
+        logits = self.heads(pr["heads"], x)
+        module_logits = self.module_head(pr["module_head"], feats)
+        extras["H_u"] = H_u
+        return logits, module_logits, extras
+
+    # ------------------------------------------------------------------
+    def loss(self, p, batch, *, rng=None, train: bool = True):
+        cfg = self.cfg
+        logits, module_logits, extras = self.forward(p, batch, train=train,
+                                                     rng=rng)
+        labels = batch["labels"].astype(jnp.float32)                 # (B_c, T)
+        bce = _bce(logits, labels)
+        metrics = {"bce": bce}
+        total = bce
+
+        if cfg.use_module_head:
+            m_bce = _bce(module_logits, labels)
+            align = jnp.mean(jnp.square(
+                jax.nn.sigmoid(module_logits.astype(jnp.float32))
+                - jax.lax.stop_gradient(
+                    jax.nn.sigmoid(logits.astype(jnp.float32)))))
+            total = total + m_bce + cfg.align_weight * align
+            metrics.update(module_bce=m_bce, align=align)
+
+        if cfg.use_seq_loss:
+            pf = p["pinfm"]
+            z = self.pinfm.targets(pf, batch["seq_ids"])
+            tau = learnable_tau(pf["log_tau"], cfg.seq_loss)
+            pos = self.pinfm.pos_action_mask(batch["seq_actions"])
+            valid = batch.get("seq_valid",
+                              jnp.ones_like(batch["seq_ids"], bool))
+            seq_total, seq_m = pinfm_losses(
+                extras["H_u"], z, pos, valid.astype(bool),
+                batch["seq_user_id"], tau, cfg.seq_loss)
+            total = total + 0.1 * seq_total
+            metrics["seq_ntl"] = seq_m.get("ntl", 0.0)
+
+        if cfg.gs_align_weight and extras.get("gs_e") is not None:
+            e_id = self.pinfm.id_embed(p["pinfm"]["id_embed"],
+                                       batch["cand_ids"])
+            ga = jnp.mean(jnp.square(
+                extras["gs_e"].astype(jnp.float32)
+                - jax.lax.stop_gradient(e_id.astype(jnp.float32))))
+            total = total + cfg.gs_align_weight * ga
+            metrics["gs_align"] = ga
+
+        metrics["total"] = total
+        return total, (metrics, logits)
+
+
+def _bce(logits, labels):
+    lg = logits.astype(jnp.float32)
+    return jnp.mean(jnp.maximum(lg, 0) - lg * labels
+                    + jnp.log1p(jnp.exp(-jnp.abs(lg))))

@@ -1,0 +1,127 @@
+"""PinFM pretraining losses (paper §3.1): sampled-InfoNCE next-token,
+multi-token-window, and future-token objectives.
+
+All three share one structure: an anchor user-representation H_i, a positive
+target z_j (the psi-projected embedding of a future positively-engaged item),
+and in-batch negatives — embeddings of positively-engaged items from OTHER
+users (eq. 2: "sampled in-batch excluding items positively engaged by the
+same user").
+
+Numerics: similarities are inner products of l2-normalized vectors divided by
+a learnable temperature; the denominator is computed as
+logaddexp(pos, logsumexp(negs)) so a small tau cannot overflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclasses.dataclass(frozen=True)
+class LossConfig:
+    use_ntl: bool = True
+    use_mtl: bool = True
+    use_ftl: bool = True
+    window: int = 16          # L' — multi-token / future-token window
+    downstream_len: int = 128  # L_d — anchor position for L_ftl
+    mtl_stride: int = 2       # subsample L_mtl pairs (paper: "we also subsample")
+    n_negatives: int = 4096   # K — in-batch negative pool size (eq. 2)
+    tau_min: float = 0.01
+
+
+def _neg_logsumexp(H, z, pos_mask, user_ids, tau, n_negatives: int = 0):
+    """Per-anchor logsumexp over in-batch negatives.
+
+    H: (B, L, D) anchors; z: (B, L, D) item embeddings (targets pool);
+    pos_mask: (B, L) bool — pool entries that are positively-engaged items;
+    user_ids: (B,) — exclusion key.
+    When n_negatives < B*L the pool is a deterministic stride-subsample (the
+    paper samples K in-batch negatives; eq. 2) — required at production batch
+    sizes where the full (BL, BL) similarity matrix would not fit.
+    Returns (B, L): logsumexp_k sim(H_bi, z_k)/tau over valid negatives.
+    """
+    B, L, D = H.shape
+    BL = B * L
+    Hf = H.reshape(BL, D).astype(jnp.float32)
+    zf = z.reshape(BL, D).astype(jnp.float32)
+    pool_ok = pos_mask.reshape(-1)
+    pool_user = jnp.repeat(user_ids, L)
+    if 0 < n_negatives < BL:
+        idx = (jnp.arange(n_negatives) * (BL // n_negatives)) % BL
+        zf, pool_ok, pool_user = zf[idx], pool_ok[idx], pool_user[idx]
+    sims = (Hf @ zf.T) / tau                                   # (BL, M)
+    anchor_user = jnp.repeat(user_ids, L)
+    valid = pool_ok[None, :] & (anchor_user[:, None] != pool_user[None, :])
+    sims = jnp.where(valid, sims, NEG_INF)
+    return jax.nn.logsumexp(sims, axis=-1).reshape(B, L)
+
+
+def _pair_sims(H, z, tau):
+    """(B, L, L) sims[b, i, j] = H_bi . z_bj / tau (within-user)."""
+    return jnp.einsum("bid,bjd->bij", H.astype(jnp.float32),
+                      z.astype(jnp.float32)) / tau
+
+
+def _masked_mean(x, m):
+    return jnp.sum(x * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+def pinfm_losses(H, z, pos_mask, valid_mask, user_ids, tau,
+                 cfg: LossConfig) -> Tuple[jax.Array, dict]:
+    """H: (B, L, D) user reps; z: (B, L, D) psi(emb(id)); pos_mask: (B, L)
+    positive-action indicator; valid_mask: (B, L) non-padding; user_ids: (B,).
+    """
+    B, L, _ = H.shape
+    pos = pos_mask & valid_mask
+    neg_lse = _neg_logsumexp(H, z, pos, user_ids, tau,
+                             cfg.n_negatives)                   # (B, L) per anchor
+    sims = _pair_sims(H, z, tau)                                # (B, L, L)
+
+    # pairwise loss for anchor i, target j: -s_ij + logaddexp(s_ij, neg_lse_i)
+    def pair_loss(i_j_mask):
+        l = -sims + jnp.logaddexp(sims, neg_lse[:, :, None])    # (B, L, L)
+        return _masked_mean(l, i_j_mask)
+
+    ii = jnp.arange(L)
+    delta = ii[None, :] - ii[:, None]                           # j - i
+    anchor_ok = valid_mask[:, :, None]
+    target_ok = pos[:, None, :]
+
+    metrics = {}
+    total = jnp.zeros((), jnp.float32)
+
+    if cfg.use_ntl:
+        m_ntl = (delta == 1) & anchor_ok & target_ok
+        l_ntl = pair_loss(m_ntl.astype(jnp.float32))
+        metrics["ntl"] = l_ntl
+        total = total + l_ntl
+
+    if cfg.use_mtl:
+        band = (delta >= 1) & (delta <= cfg.window)
+        if cfg.mtl_stride > 1:   # deterministic subsampling of the band
+            band = band & ((delta % cfg.mtl_stride) == 1)
+        m_mtl = band & anchor_ok & target_ok
+        l_mtl = pair_loss(m_mtl.astype(jnp.float32))
+        metrics["mtl"] = l_mtl
+        total = total + l_mtl
+
+    if cfg.use_ftl:
+        ld = min(cfg.downstream_len, L - 1) - 1                 # 0-indexed H_{L_d}
+        anchor = jnp.zeros((L,), bool).at[ld].set(True)
+        band = (delta >= 1) & (delta <= cfg.window)
+        m_ftl = band & anchor[None, :, None] & anchor_ok & target_ok
+        l_ftl = pair_loss(m_ftl.astype(jnp.float32))
+        metrics["ftl"] = l_ftl
+        total = total + l_ftl
+
+    metrics["tau"] = tau
+    return total, metrics
+
+
+def learnable_tau(log_tau, cfg: LossConfig):
+    return jnp.maximum(jnp.exp(log_tau.astype(jnp.float32)), cfg.tau_min)

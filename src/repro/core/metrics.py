@@ -1,0 +1,31 @@
+"""Ranking metrics.  HIT@3 (paper §5.1): for each recommendation group, how
+many of the model's top-3 scored items received the user action."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def hit_at_k(scores, labels, *, k: int = 3):
+    """scores/labels: (n_groups, group_size).  Returns mean over groups of
+    (number of top-k items with label==1) / k."""
+    _, idx = jax.lax.top_k(scores, k)
+    picked = jnp.take_along_axis(labels.astype(jnp.float32), idx, axis=-1)
+    return jnp.mean(jnp.sum(picked, axis=-1) / k)
+
+
+def grouped_hit_at_k(scores, labels, group_ids, *, k: int = 3,
+                     num_groups: int | None = None):
+    """Variable-group variant via segment ops; group_ids must be 0..G-1."""
+    import numpy as np
+    scores = np.asarray(scores); labels = np.asarray(labels)
+    group_ids = np.asarray(group_ids)
+    hits, total = 0.0, 0
+    for g in np.unique(group_ids):
+        m = group_ids == g
+        s, l = scores[m], labels[m]
+        kk = min(k, len(s))
+        top = np.argsort(-s)[:kk]
+        hits += l[top].sum() / kk
+        total += 1
+    return hits / max(total, 1)

@@ -1,0 +1,143 @@
+"""PinFM pretraining model (paper §3.1).
+
+    H = phi_out( M( phi_in( E + V + A ) ) )            (eq. 1)
+    z_j = psi( emb(id_j) )
+
+E: hashed-multi-table id embeddings; V: surface embeddings; A: action
+embeddings; M: any decoder backbone (GPT2 Pre-LN by default — backbone is
+pluggable per DESIGN.md §5); phi_in/phi_out/psi: pointwise MLP + l2 norm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.embeddings import HashedIDEmbedding
+from repro.core.losses import LossConfig, learnable_tau, pinfm_losses
+from repro.models.config import ModelConfig, get_config
+from repro.models.transformer import TransformerBody
+from repro.nn.layers import Embedding, PointwiseMLPNorm
+from repro.nn.module import Module, Param
+
+
+@dataclasses.dataclass
+class PinFMConfig:
+    backbone: str = "pinfm-20b"
+    n_tables: int = 8
+    rows: int = 80_000_000
+    sub_dim: int = 32
+    action_vocab: int = 16
+    surface_vocab: int = 8
+    seq_len: int = 256            # L: pretraining segment length
+    loss: LossConfig = dataclasses.field(default_factory=LossConfig)
+    # positive-action ids (paper Table 4 ablates this set)
+    pos_actions: Tuple[int, ...] = (1, 2, 3)     # e.g. save, download, clickthrough
+    tau_init: float = 0.05
+
+    @property
+    def id_dim(self) -> int:
+        return self.n_tables * self.sub_dim
+
+    def backbone_config(self) -> ModelConfig:
+        return get_config(self.backbone)
+
+    def replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+
+class PinFMPretrain(Module):
+    def __init__(self, cfg: PinFMConfig,
+                 backbone_cfg: Optional[ModelConfig] = None):
+        self.cfg = cfg
+        self.bb = backbone_cfg or cfg.backbone_config()
+        dtype = self.bb.pdtype()
+        d = self.bb.d_model
+        self.id_embed = HashedIDEmbedding(cfg.n_tables, cfg.rows, cfg.sub_dim,
+                                          dtype=dtype)
+        self.action_embed = Embedding(cfg.action_vocab, cfg.id_dim,
+                                      axes=(None, "embed"), dtype=dtype)
+        self.surface_embed = Embedding(cfg.surface_vocab, cfg.id_dim,
+                                       axes=(None, "embed"), dtype=dtype)
+        self.phi_in = PointwiseMLPNorm(cfg.id_dim, d, dtype=dtype, l2=True)
+        self.body = TransformerBody(self.bb)
+        self.phi_out = PointwiseMLPNorm(d, cfg.id_dim, dtype=dtype, l2=True)
+        self.psi = PointwiseMLPNorm(cfg.id_dim, cfg.id_dim, dtype=dtype, l2=True)
+        if self.bb.pos_emb == "learned":
+            self.pos_embed = Embedding(min(self.bb.max_seq, 16384), d,
+                                       axes=(None, "embed"), dtype=dtype)
+
+    def spec(self):
+        s = {
+            "id_embed": self.id_embed.spec(),
+            "action_embed": self.action_embed.spec(),
+            "surface_embed": self.surface_embed.spec(),
+            "phi_in": self.phi_in.spec(),
+            "body": self.body.spec(),
+            "phi_out": self.phi_out.spec(),
+            "psi": self.psi.spec(),
+            "log_tau": Param((), jnp.float32, (),
+                             lambda k, sh, d: jnp.asarray(
+                                 jnp.log(self.cfg.tau_init), d)),
+        }
+        if self.bb.pos_emb == "learned":
+            s["pos_embed"] = self.pos_embed.spec()
+        return s
+
+    # -- encoding -----------------------------------------------------------
+    def event_embed(self, p, ids, actions, surfaces):
+        """E + V + A -> (B, L, id_dim)."""
+        e = self.id_embed(p["id_embed"], ids)
+        v = self.surface_embed(p["surface_embed"], surfaces)
+        a = self.action_embed(p["action_embed"], actions)
+        return e + v + a
+
+    def input_tokens(self, p, ids, actions, surfaces, positions=None):
+        x = self.phi_in(p["phi_in"], self.event_embed(p, ids, actions, surfaces))
+        x = x.astype(self.bb.cdtype())
+        if self.bb.pos_emb == "learned":
+            B, L = ids.shape[0], ids.shape[1]
+            if positions is None:
+                positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+            cap = self.pos_embed.vocab
+            x = x + self.pos_embed(p["pos_embed"], positions % cap).astype(x.dtype)
+        return x
+
+    def encode(self, p, ids, actions, surfaces, *, collect_ctx: bool = False,
+               positions=None):
+        """-> (H: (B, L, id_dim), aux, ctxs)."""
+        B, L = ids.shape
+        x = self.input_tokens(p, ids, actions, surfaces, positions)
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(L), (B, L))
+        y, aux, ctxs = self.body.forward(p["body"], x, positions,
+                                         collect_ctx=collect_ctx)
+        H = self.phi_out(p["phi_out"], y.astype(jnp.float32))
+        return H, aux, ctxs
+
+    def targets(self, p, ids):
+        """z = psi(emb(id)) -> (B, L, id_dim)."""
+        e = self.id_embed(p["id_embed"], ids)
+        return self.psi(p["psi"], e.astype(jnp.float32))
+
+    # -- pretraining loss ------------------------------------------------------
+    def pos_action_mask(self, actions):
+        m = jnp.zeros_like(actions, dtype=bool)
+        for a in self.cfg.pos_actions:
+            m |= actions == a
+        return m
+
+    def loss(self, p, batch):
+        """batch: ids/actions/surfaces (B, L) int32, valid (B, L) bool,
+        user_id (B,) int32."""
+        H, aux, _ = self.encode(p, batch["ids"], batch["actions"],
+                                batch["surfaces"])
+        z = self.targets(p, batch["ids"])
+        tau = learnable_tau(p["log_tau"], self.cfg.loss)
+        pos = self.pos_action_mask(batch["actions"])
+        total, metrics = pinfm_losses(
+            H, z, pos, batch["valid"].astype(bool), batch["user_id"], tau,
+            self.cfg.loss)
+        return total, metrics

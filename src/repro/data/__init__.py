@@ -1,0 +1,3 @@
+from repro.data.synthetic import DataConfig, SyntheticActivity
+from repro.data.segment import (pack_segments, realtime_sequence,
+                                segment_history)

@@ -1,0 +1,68 @@
+"""Sequence segmentation utilities (paper §3.1 data construction): a user's
+full history (up to 16k events, timestamp-ascending) is cut into
+NON-OVERLAPPING segments of length L for pretraining; the most recent L_d
+events form the downstream real-time sequence."""
+from __future__ import annotations
+
+from typing import Dict, Iterator, List
+
+import numpy as np
+
+FIELDS = ("ids", "actions", "surfaces", "timestamps")
+
+
+def sort_by_time(events: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    order = np.argsort(events["timestamps"], kind="stable")
+    return {k: np.asarray(v)[order] for k, v in events.items()}
+
+
+def segment_history(events: Dict[str, np.ndarray], seg_len: int,
+                    *, max_len: int = 16_000,
+                    drop_last_partial: bool = False) -> List[dict]:
+    """Non-overlapping length-L segments (earliest first).  The final
+    partial segment is right-padded and carries a ``valid`` mask."""
+    ev = sort_by_time(events)
+    n = min(len(ev["ids"]), max_len)
+    ev = {k: v[-n:] for k, v in ev.items()}          # keep the most recent
+    out = []
+    for start in range(0, n, seg_len):
+        end = min(start + seg_len, n)
+        if end - start < seg_len and drop_last_partial:
+            break
+        seg = {}
+        valid = np.zeros(seg_len, bool)
+        valid[: end - start] = True
+        for k in FIELDS:
+            if k not in ev:
+                continue
+            buf = np.zeros(seg_len, np.asarray(ev[k]).dtype)
+            buf[: end - start] = ev[k][start:end]
+            seg[k] = buf
+        seg["valid"] = valid
+        out.append(seg)
+    return out
+
+
+def realtime_sequence(events: Dict[str, np.ndarray], l_d: int) -> dict:
+    """The downstream model's input: the LAST L_d events, left-padded."""
+    ev = sort_by_time(events)
+    n = min(len(ev["ids"]), l_d)
+    seg = {}
+    valid = np.zeros(l_d, bool)
+    valid[l_d - n:] = True
+    for k in FIELDS:
+        if k not in ev:
+            continue
+        buf = np.zeros(l_d, np.asarray(ev[k]).dtype)
+        if n:
+            buf[l_d - n:] = ev[k][-n:]
+        seg[k] = buf
+    seg["valid"] = valid
+    return seg
+
+
+def pack_segments(segments: List[dict], batch_size: int) -> Iterator[dict]:
+    """Batch segments into fixed-size arrays (trailing remainder dropped)."""
+    for i in range(0, len(segments) - batch_size + 1, batch_size):
+        chunk = segments[i:i + batch_size]
+        yield {k: np.stack([s[k] for s in chunk]) for k in chunk[0]}

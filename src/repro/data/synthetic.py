@@ -1,0 +1,197 @@
+"""Synthetic user-activity stream with planted latent-interest structure.
+
+Pinterest's 2-year activity logs are not available; we generate a stream
+with the statistical properties the paper's mechanisms depend on:
+
+  * users have a small set of latent topics; items belong to topics;
+    engagement probability is high iff the item matches an interest
+    (so sequence models CAN predict future engagements — HIT@3 lifts on this
+    data are directional evidence, DESIGN.md §2);
+  * item popularity is Zipfian (so id embeddings matter and hash collisions
+    hit the tail);
+  * action types with a positive subset (save=1, download=2, clickthrough=3,
+    click=4, hide=5, impression=0) and surfaces (HF=0, I2I=1, search=2);
+  * "fresh" items (cold-start pool) appear with small ages and no history;
+  * ranking requests score G candidates per user (the 1:G dedup pattern).
+
+Everything is deterministic given the seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterator, Optional
+
+import numpy as np
+
+ACTIONS = {"impression": 0, "save": 1, "download": 2, "clickthrough": 3,
+           "click": 4, "hide": 5}
+POSITIVE_ACTIONS = (1, 2, 3)
+N_ACTIONS = 6
+N_SURFACES = 3
+
+
+@dataclasses.dataclass
+class DataConfig:
+    n_users: int = 2000
+    n_items: int = 5000
+    n_topics: int = 32
+    interests_per_user: int = 3
+    seq_len: int = 64             # L: pretraining segment length
+    events_per_user: int = 128
+    zipf_a: float = 1.2
+    p_engage_match: float = 0.55  # P(positive action | topic match)
+    p_engage_miss: float = 0.05
+    fresh_frac: float = 0.15      # fraction of items in the fresh pool
+    seed: int = 0
+
+
+class SyntheticActivity:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.RandomState(cfg.seed)
+        self.item_topic = rng.randint(0, cfg.n_topics, cfg.n_items)
+        # zipf popularity within topic
+        self.item_pop = 1.0 / np.arange(1, cfg.n_items + 1) ** cfg.zipf_a
+        rng.shuffle(self.item_pop)
+        self.user_interests = np.stack([
+            rng.choice(cfg.n_topics, cfg.interests_per_user, replace=False)
+            for _ in range(cfg.n_users)])
+        n_fresh = int(cfg.n_items * cfg.fresh_frac)
+        self.fresh_items = np.arange(cfg.n_items - n_fresh, cfg.n_items)
+        self.fresh_set = set(self.fresh_items.tolist())
+        # topic -> item lists with popularity weights (established items only)
+        self.topic_items = []
+        established = np.arange(cfg.n_items - n_fresh)
+        for t in range(cfg.n_topics):
+            items = established[self.item_topic[established] == t]
+            if len(items) == 0:
+                items = established[:1]
+            w = self.item_pop[items]
+            self.topic_items.append((items, w / w.sum()))
+
+    # -- event stream --------------------------------------------------------
+    def user_events(self, user: int, n: int, rng: np.random.RandomState):
+        """-> dict of arrays: ids, actions, surfaces, timestamps."""
+        cfg = self.cfg
+        interests = self.user_interests[user]
+        ids = np.empty(n, np.int64)
+        actions = np.empty(n, np.int32)
+        surfaces = rng.randint(0, N_SURFACES, n).astype(np.int32)
+        t0 = rng.randint(0, 10_000)
+        timestamps = t0 + np.cumsum(rng.exponential(30.0, n))
+        for i in range(n):
+            if rng.rand() < 0.8:   # browse within an interest
+                topic = interests[rng.randint(len(interests))]
+            else:                  # exploration
+                topic = rng.randint(cfg.n_topics)
+            items, w = self.topic_items[topic]
+            ids[i] = items[rng.choice(len(items), p=w)]
+            match = self.item_topic[ids[i]] in interests
+            p = cfg.p_engage_match if match else cfg.p_engage_miss
+            if rng.rand() < p:
+                actions[i] = rng.choice(POSITIVE_ACTIONS,
+                                        p=[0.6, 0.15, 0.25])
+            else:
+                actions[i] = (ACTIONS["hide"] if rng.rand() < 0.05
+                              else ACTIONS["impression"])
+        return {"ids": ids, "actions": actions, "surfaces": surfaces,
+                "timestamps": timestamps.astype(np.float32)}
+
+    # -- pretraining batches ----------------------------------------------------
+    def pretrain_batches(self, batch_size: int, n_batches: int,
+                         seed: int = 1) -> Iterator[dict]:
+        """Non-overlapping length-L segments (paper §3.1 data construction)."""
+        cfg = self.cfg
+        rng = np.random.RandomState(seed)
+        for _ in range(n_batches):
+            users = rng.randint(0, cfg.n_users, batch_size)
+            out = {k: [] for k in ("ids", "actions", "surfaces")}
+            for u in users:
+                ev = self.user_events(int(u), cfg.seq_len, rng)
+                for k in out:
+                    out[k].append(ev[k][:cfg.seq_len])
+            yield {
+                "ids": np.stack(out["ids"]).astype(np.int32),
+                "actions": np.stack(out["actions"]),
+                "surfaces": np.stack(out["surfaces"]),
+                "valid": np.ones((batch_size, cfg.seq_len), bool),
+                "user_id": users.astype(np.int32),
+            }
+
+    # -- fine-tuning / ranking batches ------------------------------------------
+    def ranking_batches(self, n_requests: int, cands_per_request: int,
+                        n_batches: int, seq_len: Optional[int] = None,
+                        seed: int = 2,
+                        fresh_prob: float = 0.25) -> Iterator[dict]:
+        """Each batch: n_requests unique users × G candidates (the paper's
+        1:G dedup pattern, already Ψ-deduplicated as the pipeline emits it)."""
+        cfg = self.cfg
+        L = seq_len or cfg.seq_len
+        rng = np.random.RandomState(seed)
+        G = cands_per_request
+        for _ in range(n_batches):
+            users = rng.choice(cfg.n_users, n_requests, replace=False)
+            seq = {k: [] for k in ("ids", "actions", "surfaces")}
+            for u in users:
+                ev = self.user_events(int(u), L, rng)
+                for k in seq:
+                    seq[k].append(ev[k])
+            cand_ids, labels, ages = [], [], []
+            for u in users:
+                interests = self.user_interests[u]
+                for _ in range(G):
+                    if rng.rand() < fresh_prob:
+                        c = int(rng.choice(self.fresh_items))
+                        age = rng.randint(0, 28)
+                    else:
+                        topic = (interests[rng.randint(len(interests))]
+                                 if rng.rand() < 0.5
+                                 else rng.randint(cfg.n_topics))
+                        items, w = self.topic_items[topic]
+                        c = int(items[rng.choice(len(items), p=w)])
+                        age = rng.randint(28, 1000)
+                    match = self.item_topic[c] in interests
+                    p = cfg.p_engage_match if match else cfg.p_engage_miss
+                    save = rng.rand() < p
+                    click = rng.rand() < min(2 * p, 0.9)
+                    hide = (not match) and rng.rand() < 0.08
+                    cand_ids.append(c)
+                    labels.append([save, click, hide])
+                    ages.append(age)
+            B_c = n_requests * G
+            inv = np.repeat(np.arange(n_requests), G).astype(np.int32)
+            cand_ids = np.asarray(cand_ids, np.int32)
+            # dense features: noisy topic one-hot-ish summaries
+            user_feats = rng.randn(n_requests, 8).astype(np.float32)
+            cand_feats = np.stack(
+                [self.item_pop[cand_ids],
+                 (self.item_topic[cand_ids] % 8).astype(np.float32)],
+                axis=1).astype(np.float32)
+            cand_feats = np.concatenate(
+                [cand_feats, rng.randn(B_c, 6).astype(np.float32)], axis=1)
+            gs = self._graphsage(cand_ids, rng)
+            yield {
+                "seq_ids": np.stack(seq["ids"]).astype(np.int32),
+                "seq_actions": np.stack(seq["actions"]),
+                "seq_surfaces": np.stack(seq["surfaces"]),
+                "seq_valid": np.ones((n_requests, L), bool),
+                "seq_user_id": users.astype(np.int32),
+                "inverse_idx": inv,
+                "cand_ids": cand_ids,
+                "cand_feats": cand_feats,
+                "user_feats": user_feats,
+                "graphsage": gs,
+                "cand_age_days": np.asarray(ages, np.float32),
+                "labels": np.asarray(labels, np.float32),
+            }
+
+    def _graphsage(self, item_ids, rng, dim: int = 16):
+        """Stand-in GraphSAGE embeddings: topic-structured + noise, available
+        for fresh items too (that is the point of the technique)."""
+        topic = self.item_topic[item_ids]
+        base = np.zeros((len(item_ids), dim), np.float32)
+        base[np.arange(len(item_ids)), topic % dim] = 1.0
+        return base + 0.1 * rng.randn(len(item_ids), dim).astype(np.float32)
+
+    def is_fresh(self, item_ids) -> np.ndarray:
+        return np.isin(item_ids, self.fresh_items)

@@ -1,0 +1,226 @@
+"""Logical-axis -> mesh-axis sharding policies.
+
+Params carry *logical* axis names ("embed", "mlp", "kv_heads", "q_per_kv",
+"head_dim", "vocab", "state", "id_vocab", ...).  A policy dict maps those to
+mesh axes ("data", "model", "pod").
+
+Tensor parallelism for attention picks ONE of {kv_heads, q_per_kv, head_dim}
+— whichever divides the model-axis width — per architecture
+(:func:`attention_tp_axis`).  kv_heads gives classic Megatron sharding
+(1 all-reduce / layer); head_dim is the fallback for kv=8 GQA archs on a
+16-wide model axis (2 all-reduces / layer: after QK^T and after the out
+projection).  The 5-D attention formulation (nn/attention.py) makes all
+three choices propagate through GSPMD without resharding.
+
+Parameter regimes:
+  * ``tp``      — tensor-parallel only; params otherwise replicated.  Right
+                  for <=8B archs where per-layer weight all-gathers would
+                  cost more than replication saves.
+  * ``tp_fsdp`` — additionally shard the "embed" (d_model) dim of large
+                  matrices over data (+pod): ZeRO-3-style.  Required for
+                  archs whose params+optimizer would not fit HBM otherwise.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+BASE_RULES = {
+    "mlp": "model", "vocab": "model", "state": "model", "heads": "model",
+    "id_vocab": "model",
+    "kv_heads": None, "q_per_kv": None, "head_dim": None,
+    "expert": None, "embed": None, "layers": None, "expert_dim": None,
+    "embed_sub": None, None: None,
+}
+
+
+def attention_tp_axis(n_kv: int, q_per_kv: int, head_dim: int,
+                      tp_width: int) -> Optional[str]:
+    """Which attention logical axis to shard over the model mesh axis."""
+    if n_kv % tp_width == 0:
+        return "kv_heads"
+    if q_per_kv % tp_width == 0:
+        return "q_per_kv"
+    if head_dim % tp_width == 0:
+        return "head_dim"
+    return None
+
+
+def make_policy(mode: str = "tp", *, multi_pod: bool = False,
+                model_cfg=None, tp_width: int = 16) -> dict:
+    rules = dict(BASE_RULES)
+    data_axes = ("pod", "data") if multi_pod else "data"
+    if model_cfg is not None:
+        ax = attention_tp_axis(model_cfg.n_kv,
+                               model_cfg.n_heads // model_cfg.n_kv,
+                               model_cfg.resolved_head_dim, tp_width)
+        if ax:
+            rules[ax] = "model"
+        if ax == "head_dim":
+            # kv=8-style GQA on a 16-wide axis: head_dim sharding is kept
+            # for WEIGHT STORAGE, but full-sequence attention runs
+            # sequence-parallel (queries sharded over 'model', K/V
+            # all-gathered) — head_dim-sharded QK^T would all-reduce every
+            # score matrix (§Perf iteration 5: 107 TB -> ~0.4 TB per step
+            # for command-r prefill_32k).
+            rules["_attn_seq"] = True
+        if model_cfg.n_heads % tp_width == 0 and ax != "head_dim":
+            rules["heads"] = "model"     # per-head scalars (mamba A/dt/D)
+        elif model_cfg.n_heads % tp_width != 0:
+            rules["heads"] = None
+    if mode == "dp":
+        # pure data parallelism over the WHOLE mesh: right for sub-1B
+        # backbones (PinFM's transformer) where per-layer TP collectives
+        # dwarf the once-per-step gradient all-reduce (§Perf iteration 7)
+        for k in list(rules):
+            rules[k] = None
+        rules["_batch"] = (("pod", "data", "model") if multi_pod
+                           else ("data", "model"))
+        rules["_residual_model"] = False
+        rules["id_vocab"] = rules["_batch"]
+        return rules
+    if mode == "tp_fsdp":
+        rules["embed"] = data_axes
+    elif mode != "tp":
+        raise ValueError(f"unknown sharding mode {mode!r}")
+    # PinFM hashed id tables (20.5B params): shard rows over the FULL mesh —
+    # 16-way sharding leaves 10.2 GiB/chip of fp32 Adam moments
+    # (§Perf iteration 6)
+    rules["id_vocab"] = (("pod", "data", "model") if multi_pod
+                         else ("data", "model"))
+    rules["_batch"] = data_axes
+    return rules
+
+
+def batch_axes(policy: dict):
+    return policy["_batch"]
+
+
+def clean(policy: dict) -> dict:
+    return {k: v for k, v in policy.items() if not str(k).startswith("_")}
+
+
+def param_pspecs(spec_tree, policy: dict):
+    from repro.nn.module import partition_specs
+    return partition_specs(spec_tree, clean(policy))
+
+
+def param_shardings(spec_tree, mesh: Mesh, policy: dict):
+    pspecs = param_pspecs(spec_tree, policy)
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def data_pspec(policy: dict, extra_axes: int = 1) -> P:
+    """PartitionSpec for a batch tensor: batch dim sharded, rest replicated."""
+    return P(batch_axes(policy), *([None] * extra_axes))
+
+
+def constrain(x, mesh: Mesh, *axes):
+    """Sharding constraint helper for activations inside jit."""
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*axes)))
+
+
+# ---------------------------------------------------------------------------
+# Residual-stream activation sharding (EXPERIMENTS.md §Perf iteration 2).
+#
+# The layer-scan carry x: (B, S, d_model) is saved once per layer for the
+# rematerialized backward — 64 x 1.6 GiB/device for command-r+ if only the
+# batch dim is sharded.  Constraining d_model over "model" at layer
+# boundaries cuts that 16x; GSPMD turns the tensor-parallel all-reduces into
+# equal-byte reduce-scatter + all-gather pairs (Megatron sequence-parallel
+# style).  Installed via a context manager so plain CPU tests (no mesh)
+# are unaffected.
+# ---------------------------------------------------------------------------
+
+import contextlib
+
+_ACT_CTX = None
+
+
+@contextlib.contextmanager
+def activation_constraints(mesh: Mesh, policy: dict):
+    global _ACT_CTX
+    prev = _ACT_CTX
+    _ACT_CTX = (mesh, policy)
+    try:
+        yield
+    finally:
+        _ACT_CTX = prev
+
+
+def seq_parallel_attention(q, k, v, positions, *, causal=True, window=None,
+                           attend_fn=None):
+    """Sequence-parallel full-sequence attention (§Perf iteration 5).
+
+    q: (B, S, K, G, D); k/v: (B, S, K, D); positions: (B, S).
+    Queries are sharded over 'model' along S; K/V are all-gathered once per
+    layer (2*B*S*K*D bytes vs all-reducing B*H*S*T score matrices).  Returns
+    None when no activation context / mesh is installed or shapes don't
+    divide — caller falls back to the plain path.
+    """
+    if _ACT_CTX is None:
+        return None
+    mesh, policy = _ACT_CTX
+    if not policy.get("_attn_seq") or "model" not in mesh.axis_names:
+        return None
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    S = q.shape[1]
+    if S % sizes["model"] != 0 or S == 1:
+        return None
+    from jax.experimental.shard_map import shard_map
+
+    batch_ax = policy.get("_batch")
+    bw = sizes.get(batch_ax, 1) if not isinstance(batch_ax, tuple) else 0
+    if isinstance(batch_ax, tuple):
+        bw = 1
+        for a in batch_ax:
+            bw *= sizes[a]
+    dp = batch_ax if q.shape[0] % max(bw, 1) == 0 else None
+
+    def local(q_l, k_l, v_l, pos_l):
+        k_f = jax.lax.all_gather(k_l, "model", axis=1, tiled=True)
+        v_f = jax.lax.all_gather(v_l, "model", axis=1, tiled=True)
+        pos_f = jax.lax.all_gather(pos_l, "model", axis=1, tiled=True)
+        return attend_fn(q_l, k_f, v_f, q_pos=pos_l, k_pos=pos_f,
+                         causal=causal, window=window)
+
+    qspec = P(dp, "model", None, None, None)
+    kspec = P(dp, "model", None, None)
+    return shard_map(local, mesh=mesh,
+                     in_specs=(qspec, kspec, kspec, P(dp, "model")),
+                     out_specs=qspec, check_rep=False)(q, k, v, positions)
+
+
+def constrain_residual(x, model_on_last: bool = True):
+    """Shard (batch -> data[+pod], last dim -> model) where divisible.
+    With model_on_last=False only the batch dim is constrained — used right
+    after embedding gathers, where forcing a model-sharded output trips an
+    XLA SPMD gather-partitioning bug for replicated (vocab%16!=0) tables."""
+    if _ACT_CTX is None or x.ndim < 2:
+        return x
+    mesh, policy = _ACT_CTX
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def width(ax):
+        if ax is None:
+            return 1
+        if isinstance(ax, tuple):
+            n = 1
+            for a in ax:
+                n *= sizes[a]
+            return n
+        return sizes[ax]
+
+    batch_ax = policy.get("_batch")
+    spec = [None] * x.ndim
+    if batch_ax and x.shape[0] % width(batch_ax) == 0:
+        spec[0] = batch_ax
+    if model_on_last and policy.get("_residual_model", True) \
+            and "model" in sizes and x.shape[-1] % sizes["model"] == 0:
+        spec[-1] = "model"
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*spec)))

@@ -1,0 +1,5 @@
+"""Pallas TPU kernels for PinFM's compute hot spots (paper §4):
+flash attention (baseline), DCAT crossing attention (fused Ψ⁻¹ gather),
+int4/int8 embedding dequantization.  Validated in interpret mode against
+the pure-jnp oracles in ref.py.
+"""

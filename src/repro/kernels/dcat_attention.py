@@ -1,0 +1,136 @@
+"""Pallas TPU kernel for DCAT crossing attention (paper §4.1, eq. 4).
+
+Computes, for every candidate b:
+
+    o_b = softmax( q_b [K_u[inv[b]] ‖ K_c[b]]^T ) [V_u[inv[b]] ‖ V_c[b]]
+
+The paper implements Ψ⁻¹ (the dedup broadcast) as a Triton gather kernel on
+GPU.  TPU adaptation (DESIGN.md §3): ``inv`` is a **scalar-prefetch operand**
+and the gather happens in the K/V BlockSpec ``index_map`` — each grid step
+DMAs the context block of the right unique user straight from HBM to VMEM.
+Ψ⁻¹ therefore never materializes: no (B_c, L, K, D) tensor is ever written,
+which is exactly the "pointer" semantics the paper's inference server uses.
+
+Grid: (B, H, nL) with the context-length dimension innermost (sequential
+online-softmax reduction).  The candidate KV block (S_c tokens) is folded in
+at the last grid step with a causal mask among candidates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _dcat_kernel(inv_ref, q_ref, ku_ref, vu_ref, kc_ref, vc_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *, scale: float, bl: int, nl: int,
+                 ctx_len: int, sc: int):
+    il = pl.program_id(2)
+
+    @pl.when(il == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)                       # (SC, D)
+    k = ku_ref[0, 0].astype(jnp.float32)                      # (BL, D)
+    v = vu_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = il * bl + jax.lax.broadcasted_iota(jnp.int32, (sc, bl), 1)
+    mask = k_pos < ctx_len                                    # context padding
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None]) * mask.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = l_prev * alpha + jnp.sum(p, axis=1)
+    acc = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...], l_ref[...], acc_ref[...] = m_new, l_new, acc
+
+    @pl.when(il == nl - 1)
+    def _candidates_and_finish():
+        kc = kc_ref[0, 0].astype(jnp.float32)                 # (SC, D)
+        vc = vc_ref[0, 0].astype(jnp.float32)
+        sck = jax.lax.dot_general(q, kc, (((1,), (1,)), ((), ())),
+                                  preferred_element_type=jnp.float32) * scale
+        # causal among the S_c candidate tokens (positions L..L+S_c-1)
+        qi = jax.lax.broadcasted_iota(jnp.int32, (sc, sc), 0)
+        kj = jax.lax.broadcasted_iota(jnp.int32, (sc, sc), 1)
+        cmask = kj <= qi
+        sck = jnp.where(cmask, sck, NEG_INF)
+
+        m_prev2, l_prev2 = m_ref[...], l_ref[...]
+        m_fin = jnp.maximum(m_prev2, jnp.max(sck, axis=1))
+        pc = jnp.exp(sck - m_fin[:, None]) * cmask.astype(jnp.float32)
+        alpha2 = jnp.exp(m_prev2 - m_fin)
+        l_fin = l_prev2 * alpha2 + jnp.sum(pc, axis=1)
+        acc_fin = acc_ref[...] * alpha2[:, None] + jax.lax.dot_general(
+            pc, vc, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        o_ref[0, 0] = (acc_fin / jnp.maximum(l_fin, 1e-30)[:, None]
+                       ).astype(o_ref.dtype)
+
+
+def dcat_cross_attention(q, k_u, v_u, k_c, v_c, inv, *, bl: int = 128,
+                         interpret: bool = True):
+    """q: (B, S_c, H, D); k_u/v_u: (B_u, L, K, D); k_c/v_c: (B, S_c, K, D);
+    inv: (B,) int32 mapping candidates to unique users.  -> (B, S_c, H, D).
+    """
+    B, SC, H, D = q.shape
+    Bu, L, K = k_u.shape[0], k_u.shape[1], k_u.shape[2]
+    G = H // K
+    scale = D ** -0.5
+
+    bl_ = min(bl, L)
+    pad_l = -L % bl_
+    # kernel operates head-major; S_c rides in the block's sublane dim
+    qt = q.transpose(0, 2, 1, 3)                              # (B, H, SC, D)
+    kut = jnp.pad(k_u.transpose(0, 2, 1, 3),
+                  ((0, 0), (0, 0), (0, pad_l), (0, 0)))       # (Bu, K, L', D)
+    vut = jnp.pad(v_u.transpose(0, 2, 1, 3),
+                  ((0, 0), (0, 0), (0, pad_l), (0, 0)))
+    kct = k_c.transpose(0, 2, 1, 3)                           # (B, K, SC, D)
+    vct = v_c.transpose(0, 2, 1, 3)
+    nl = kut.shape[2] // bl_
+
+    kernel = functools.partial(_dcat_kernel, scale=scale, bl=bl_, nl=nl,
+                               ctx_len=L, sc=SC)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, H, nl),
+        in_specs=[
+            pl.BlockSpec((1, 1, SC, D), lambda b, h, il, inv: (b, h, 0, 0)),
+            # Ψ⁻¹ fused here: the unique-user row comes from the prefetched inv
+            pl.BlockSpec((1, 1, bl_, D),
+                         lambda b, h, il, inv: (inv[b], h // G, il, 0)),
+            pl.BlockSpec((1, 1, bl_, D),
+                         lambda b, h, il, inv: (inv[b], h // G, il, 0)),
+            pl.BlockSpec((1, 1, SC, D), lambda b, h, il, inv: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, SC, D), lambda b, h, il, inv: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, SC, D), lambda b, h, il, inv: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((SC,), jnp.float32),
+            pltpu.VMEM((SC,), jnp.float32),
+            pltpu.VMEM((SC, D), jnp.float32),
+        ],
+    )
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct(qt.shape, q.dtype),
+        interpret=interpret,
+    )(inv.astype(jnp.int32), qt, kut, vut, kct, vct)
+    return out.transpose(0, 2, 1, 3)

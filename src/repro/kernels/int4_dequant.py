@@ -1,0 +1,64 @@
+"""Pallas TPU kernel: fused bit-unpack + min-max dequantization of int4/int8
+embedding rows (paper §4.2).
+
+The paper packs each quantized 32-dim fp16 sub-embedding as 32 int4 codes +
+fp16 scale + fp16 bias, bitpacked into words, and dequantizes on the
+accelerator with a custom Triton kernel that fuses unpacking and FBGEMM
+dequantization.  TPU adaptation: the same layout (codes d -> word d//8,
+nibble d%8 for int4), unpacked with vector shifts/masks in VMEM and fused
+with the scale/bias multiply-add — one HBM read of the packed table slice,
+one HBM write of the dequantized block.
+
+Row tiles of 512 keep the block ≥(8,128)-shaped after unpacking.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dequant_kernel(packed_ref, scale_ref, bias_ref, o_ref, *, bits: int,
+                    per_word: int):
+    words = packed_ref[...]                                   # (TR, W) int32
+    tr, w = words.shape
+    mask = (1 << bits) - 1
+    cols = []
+    for n in range(per_word):
+        cols.append((words >> (bits * n)) & mask)             # (TR, W)
+    codes = jnp.stack(cols, axis=-1).reshape(tr, w * per_word)
+    out = codes.astype(jnp.float32) * scale_ref[...] + bias_ref[...]
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def dequant_embedding(packed, scale, bias, *, bits: int = 4, rows_per_block:
+                      int = 512, out_dtype=jnp.float32, interpret: bool = True):
+    """packed: (R, D*bits/32) int32; scale/bias: (R, 1).  -> (R, D)."""
+    assert bits in (4, 8)
+    per_word = 32 // bits
+    R, W = packed.shape
+    D = W * per_word
+    tr = min(rows_per_block, R)
+    pad = -R % tr
+    packed = jnp.pad(packed, ((0, pad), (0, 0)))
+    scale = jnp.pad(scale.astype(jnp.float32), ((0, pad), (0, 0)),
+                    constant_values=1.0)
+    bias = jnp.pad(bias.astype(jnp.float32), ((0, pad), (0, 0)))
+    nr = packed.shape[0] // tr
+
+    kernel = functools.partial(_dequant_kernel, bits=bits, per_word=per_word)
+    out = pl.pallas_call(
+        kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((tr, W), lambda r: (r, 0)),
+            pl.BlockSpec((tr, 1), lambda r: (r, 0)),
+            pl.BlockSpec((tr, 1), lambda r: (r, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, D), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((packed.shape[0], D), out_dtype),
+        interpret=interpret,
+    )(packed, scale, bias)
+    return out[:R]

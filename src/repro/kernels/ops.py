@@ -1,0 +1,36 @@
+"""Jit'd public wrappers for the Pallas kernels (interpret=True on CPU;
+on real TPU hardware set REPRO_PALLAS_INTERPRET=0)."""
+import functools
+import os
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.dcat_attention import dcat_cross_attention as _dcat
+from repro.kernels.int4_dequant import dequant_embedding as _dequant
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "bq", "bk"))
+def flash_attention(q, k, v, *, causal=True, window=None, bq=128, bk=128):
+    return _flash(q, k, v, causal=causal, window=window, bq=bq, bk=bk,
+                  interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bl",))
+def dcat_cross_attention(q, k_u, v_u, k_c, v_c, inv, *, bl=128):
+    return _dcat(q, k_u, v_u, k_c, v_c, inv, bl=bl, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "out_dtype"))
+def int_dequant(packed, scale, bias, *, bits=4, out_dtype=None):
+    import jax.numpy as jnp
+    return _dequant(packed, scale, bias, bits=bits,
+                    out_dtype=out_dtype or jnp.float32, interpret=_INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk=64):
+    from repro.kernels.ssd_scan import ssd_scan as _ssd
+    return _ssd(x, dt, A, Bm, Cm, chunk=chunk, interpret=_INTERPRET)

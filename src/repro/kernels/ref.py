@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.attention import attend
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window=None):
+    """q: (B, S, H, D); k/v: (B, S, K, D) — mask-general reference."""
+    return attend(q, k, v, causal=causal, window=window)
+
+
+def dcat_cross_attention_ref(q, k_u, v_u, k_c, v_c, inv):
+    """DCAT crossing (eq. 4): gather Ψ⁻¹, concat candidate KV, attend.
+
+    q: (B, Sc, H, D); k_u/v_u: (B_u, L, K, D); k_c/v_c: (B, Sc, K, D);
+    inv: (B,) int32.  Candidates sit at positions L..L+Sc-1 (causal among
+    themselves, full visibility of the context).
+    """
+    B, Sc = q.shape[0], q.shape[1]
+    L = k_u.shape[1]
+    k_full = jnp.concatenate([jnp.take(k_u, inv, axis=0), k_c], axis=1)
+    v_full = jnp.concatenate([jnp.take(v_u, inv, axis=0), v_c], axis=1)
+    q_pos = jnp.broadcast_to(jnp.arange(L, L + Sc), (B, Sc))
+    k_pos = jnp.broadcast_to(jnp.arange(L + Sc), (B, L + Sc))
+    return attend(q, k_full, v_full, q_pos=q_pos, k_pos=k_pos, causal=True)
+
+
+def int4_dequant_ref(packed, scale, bias):
+    """packed: (R, D//8) int32 — 8 x int4 codes per word, code d lives in
+    word d//8, nibble d%8; scale/bias: (R, 1).  -> (R, D) float32."""
+    R, W = packed.shape
+    shifts = jnp.arange(8, dtype=jnp.int32) * 4
+    nib = (packed[:, :, None] >> shifts[None, None, :]) & 0xF   # (R, W, 8)
+    codes = nib.reshape(R, W * 8).astype(jnp.float32)
+    return codes * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+
+
+def int8_dequant_ref(packed, scale, bias):
+    """packed: (R, D//4) int32 — 4 x int8 codes per word."""
+    R, W = packed.shape
+    shifts = jnp.arange(4, dtype=jnp.int32) * 8
+    b = (packed[:, :, None] >> shifts[None, None, :]) & 0xFF
+    codes = b.reshape(R, W * 4).astype(jnp.float32)
+    return codes * scale.astype(jnp.float32) + bias.astype(jnp.float32)

@@ -1,0 +1,111 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunk scan (arXiv:2405.21060).
+
+Grid (B, H, n_chunks) with the CHUNK dimension innermost and sequential:
+the (N, P) inter-chunk state lives in VMEM scratch across grid steps, so
+HBM sees only the chunked inputs once and the outputs once — the quadratic
+intra-chunk piece (Q x Q) and both state contractions run on the MXU from
+VMEM-resident blocks.  B/C group projections are de-duplicated via the
+BlockSpec index_map (kv-group g = h // (H/G)), mirroring the GQA trick in
+flash_attention.py.
+
+Oracle: repro.nn.ssd.ssd_chunked (pure jnp, scan over chunks).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, hout_ref,
+                h_ref, *, nc: int, q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, 0, 0].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)        # (Q,)
+    a = a_ref[0, 0].astype(jnp.float32)             # scalar (negative)
+    bm = b_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+    cm = c_ref[0, 0, 0].astype(jnp.float32)         # (Q, N)
+
+    la = a * dt                                     # (Q,)
+    cs = jnp.cumsum(la)                             # inclusive
+    bx = x * dt[:, None]                            # (Q, P)
+
+    # intra-chunk: M_ij = (C_i . B_j) exp(cs_i - cs_j) for j <= i
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    diff = cs[:, None] - cs[None, :]
+    qi = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    causal = kj <= qi
+    diff = jnp.where(causal, diff, 0.0)     # avoid inf in the masked region
+    m = jnp.where(causal, scores * jnp.exp(diff), 0.0)
+    y = jax.lax.dot_general(m, bx, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state
+    h = h_ref[...]                                  # (N, P)
+    y += jax.lax.dot_general(cm * jnp.exp(cs)[:, None], h,
+                             (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_ref[0, 0, 0] = y.astype(y_ref.dtype)
+
+    # state update: h = h * exp(cs_Q) + sum_j exp(cs_Q - cs_j) B_j (dt_j x_j)^T
+    to_end = jnp.exp(cs[-1] - cs)                   # (Q,)
+    s_c = jax.lax.dot_general(bm * to_end[:, None], bx,
+                              (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    h_ref[...] = h * jnp.exp(cs[-1]) + s_c
+
+    @pl.when(ic == nc - 1)
+    def _emit_state():
+        hout_ref[0, 0] = h_ref[...]
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 64, interpret: bool = True):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,G,N).
+    -> (y: (B,S,H,P), h_last: (B,H,N,P)).  S % chunk == 0."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    assert S % chunk == 0
+    nc, q = S // chunk, chunk
+
+    xt = x.transpose(0, 2, 1, 3).reshape(Bsz, H, nc, q, P)
+    dtt = dt.transpose(0, 2, 1).reshape(Bsz, H, nc, q)
+    bt = Bm.transpose(0, 2, 1, 3).reshape(Bsz, G, nc, q, N)
+    ct = Cm.transpose(0, 2, 1, 3).reshape(Bsz, G, nc, q, N)
+    a2 = A.reshape(H, 1).astype(jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc, q=q)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q), lambda b, h, c: (b, h, c, 0)),
+            pl.BlockSpec((1, 1), lambda b, h, c: (h, 0)),
+            pl.BlockSpec((1, 1, 1, q, N),
+                         lambda b, h, c: (b, h // rep, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, q, N),
+                         lambda b, h, c: (b, h // rep, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, q, P), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, N, P), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Bsz, H, nc, q, P), x.dtype),
+            jax.ShapeDtypeStruct((Bsz, H, N, P), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(xt, dtt, a2, bt, ct)
+    return y.reshape(Bsz, H, S, P).transpose(0, 2, 1, 3), h_last

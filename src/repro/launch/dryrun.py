@@ -1,0 +1,207 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512").strip()
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh) combo
+lowers, compiles, and fits — without hardware.
+
+For each combo this driver builds abstract inputs (ShapeDtypeStruct only),
+jits the step with explicit in/out shardings over the production mesh
+(16x16 single pod, 2x16x16 multi-pod), compiles, and records:
+
+  * memory_analysis()  — per-device bytes (proves it fits),
+  * cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective bytes   — parsed from the post-SPMD optimized HLO
+                         (all-gather / all-reduce / reduce-scatter /
+                          all-to-all / collective-permute),
+
+into experiments/dryrun/<arch>__<shape>__<mesh>.json (read by
+benchmarks/roofline.py and EXPERIMENTS.md).
+
+NOTE: the XLA_FLAGS line above MUST run before any other jax import — jax
+locks the device count at first init.  Do not import this module from code
+that already initialized jax with real devices.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import ASSIGNED_SHAPES, SHAPES, applicable
+from repro.launch.steps import StepBundle, make_bundle, shard_tree
+from repro.models.config import get_config
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_DTYPE_BYTES = {"pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2,
+                "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+                "f64": 8, "c64": 8, "c128": 16}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Bytes of the first shape literal in an HLO result type, incl tuples."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from optimized HLO.
+
+    Methodology (EXPERIMENTS.md §Roofline): per-chip traffic is approximated
+    by the op's result bytes, x2 for all-reduce (reduce-scatter+all-gather
+    phases).  Ring-factor (n-1)/n ~ 1 is folded in.
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if ls.startswith("%") or ls.startswith("ROOT"):
+            m = re.search(r"=\s*(.+?)\s+(\S+)\(", ls)
+            if not m:
+                continue
+            result_ty, opname = m.group(1), m.group(2)
+            for c in COLLECTIVES:
+                if opname == c or opname.startswith(c + "-start") or \
+                        opname.startswith(c + "."):
+                    b = _shape_bytes(result_ty)
+                    if c == "all-reduce":
+                        b *= 2
+                    out[c]["count"] += 1
+                    out[c]["bytes"] += b
+                    break
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def run_combo(arch: str, shape_name: str, *, multi_pod: bool = False,
+              outdir: str = "experiments/dryrun", verbose: bool = True,
+              save: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = applicable(cfg, shape)
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return _finish(rec, outdir, save, verbose)
+
+    t0 = time.time()
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        bundle: StepBundle = make_bundle(cfg, shape, multi_pod=multi_pod)
+        in_sh = tuple(shard_tree(mesh, ps) for ps in bundle.in_pspecs)
+        out_sh = shard_tree(mesh, bundle.out_pspecs) \
+            if bundle.out_pspecs is not None else None
+        from repro.distributed.sharding import activation_constraints
+        with mesh, activation_constraints(mesh, bundle.policy):
+            jitted = jax.jit(bundle.step, in_shardings=in_sh,
+                             out_shardings=out_sh,
+                             donate_argnums=bundle.donate)
+            lowered = jitted.lower(*bundle.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        from repro.launch.hlo_analysis import analyze
+        ana = analyze(hlo)          # trip-count-aware (see hlo_analysis.py)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            memory={k: int(getattr(mem, k, 0)) for k in
+                    ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes")},
+            cost={k: float(v) for k, v in (cost or {}).items()
+                  if isinstance(v, (int, float))},
+            hlo_analysis=ana.to_dict(),
+            collectives=ana.to_dict()["collectives"],
+            n_devices=mesh.devices.size,
+        )
+    except Exception as e:  # noqa: BLE001 — record the failure, keep going
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return _finish(rec, outdir, save, verbose)
+
+
+def _finish(rec, outdir, save, verbose):
+    if save:
+        os.makedirs(outdir, exist_ok=True)
+        fn = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+        with open(os.path.join(outdir, fn), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        if rec["status"] == "ok":
+            mem_gb = rec["memory"]["temp_size_in_bytes"] / 2**30
+            arg_gb = rec["memory"]["argument_size_in_bytes"] / 2**30
+            fl = rec.get("hlo_analysis", {}).get("flops",
+                                                 rec["cost"].get("flops", 0))
+            cb = rec["collectives"]["total_bytes"] / 2**30
+            print(f"[OK]   {rec['arch']:22s} {rec['shape']:13s} "
+                  f"{rec['mesh']:16s} temp={mem_gb:8.2f}GiB "
+                  f"args={arg_gb:8.2f}GiB flops={fl:.3e} coll={cb:8.2f}GiB "
+                  f"(lower {rec['lower_s']}s compile {rec['compile_s']}s)")
+        elif rec["status"] == "skipped":
+            print(f"[SKIP] {rec['arch']:22s} {rec['shape']:13s} "
+                  f"{rec['mesh']:16s} {rec['reason']}")
+        else:
+            print(f"[ERR]  {rec['arch']:22s} {rec['shape']:13s} "
+                  f"{rec['mesh']:16s} {rec['error']}")
+    return rec
+
+
+def main():
+    from repro.configs import ASSIGNED
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--outdir", default="experiments/dryrun")
+    ap.add_argument("--pinfm", action="store_true",
+                    help="also run pinfm-20b's own shapes")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(ASSIGNED_SHAPES)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results = []
+    for mp in meshes:
+        for arch in archs:
+            arch_shapes = shapes
+            if arch == "pinfm-20b":
+                arch_shapes = ["pinfm_pretrain", "rank_serve"]
+            for sh in arch_shapes:
+                results.append(run_combo(arch, sh, multi_pod=mp,
+                                         outdir=args.outdir))
+        if args.pinfm and not args.arch:
+            for sh in ("pinfm_pretrain", "rank_serve"):
+                results.append(run_combo("pinfm-20b", sh, multi_pod=mp,
+                                         outdir=args.outdir))
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run: {n_ok} ok, {n_skip} skipped, {n_err} errors "
+          f"of {len(results)} combos ==")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

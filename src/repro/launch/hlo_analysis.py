@@ -1,0 +1,224 @@
+"""Trip-count-aware analysis of post-SPMD optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+but this framework deliberately puts layers, microbatches, attention blocks
+and SSD chunks inside scans — so flops/bytes/collectives must be scaled by
+loop trip counts.  This module parses the HLO text into computations, builds
+the call graph (while/call/fusion/conditional), extracts each while loop's
+trip count from the comparison constant in its condition computation, and
+propagates multipliers to every op:
+
+  * flops            — 2 * prod(result_dims) * contraction for dot ops
+                       (operand shapes resolved through a per-computation
+                       symbol table)
+  * hbm_bytes        — Σ result bytes of top-level materializing ops
+                       (+ dot operand reads): traffic at fusion boundaries
+  * collective bytes — per collective kind, result bytes (x2 for all-reduce)
+
+All numbers are PER DEVICE: the text is the partitioned single-device module.
+Validated against hand-computable scans in tests/test_hlo_analysis.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z]\w*?)\[([\d,]*)\](?:\{[^}]*\})?")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(\(?.*?\)?)\s+([\w\-]+)\((.*)$")
+_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(")
+
+
+def _shapes_in(text: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append((dt, [int(d) for d in dims.split(",") if d]))
+    return out
+
+
+def _bytes_of(text: str) -> int:
+    total = 0
+    for dt, shape in _shapes_in(text):
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    kind: str
+    result_text: str
+    rest: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    is_entry: bool
+    ops: List[Op]
+    symbols: Dict[str, str]          # op name -> result type text
+
+
+def parse_computations(hlo: str) -> Tuple[Dict[str, Computation],
+                                          Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry = None
+    cur: Optional[Computation] = None
+    for line in hlo.splitlines():
+        s = line.rstrip()
+        if cur is None:
+            m = _HDR_RE.match(s.strip())
+            if m and s.endswith("{") and "->" in s:
+                cur = Computation(m.group(2), bool(m.group(1)), [], {})
+                comps[cur.name] = cur
+                if cur.is_entry:
+                    entry = cur.name
+            continue
+        if s.strip() == "}":
+            cur = None
+            continue
+        m = _OP_RE.match(s)
+        if m:
+            name, result_ty, opkind, rest = m.groups()
+            op = Op(name, opkind, result_ty, rest, s)
+            cur.ops.append(op)
+            cur.symbols[name] = result_ty
+    return comps, entry
+
+
+_REF_RES = [re.compile(p) for p in (
+    r"to_apply=%?([\w\.\-]+)",
+    r"calls=%?([\w\.\-]+)",
+    r"true_computation=%?([\w\.\-]+)",
+    r"false_computation=%?([\w\.\-]+)",
+)]
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_LINE_RE = re.compile(r"s32\[\]\{?\}?\s+constant\((\d+)\)")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def while_trip_count(cond: Computation) -> int:
+    consts = [int(v) for op in cond.ops
+              for v in _CONST_LINE_RE.findall(op.line)]
+    return max(consts) if consts else 1
+
+
+def _dot_flops(op: Op, symbols: Dict[str, str]) -> Tuple[float, float]:
+    """-> (flops, operand_bytes)."""
+    res = _shapes_in(op.result_text)
+    if not res:
+        return 0.0, 0.0
+    n_res = 1
+    for d in res[0][1]:
+        n_res *= d
+    args = op.rest.split(")", 1)[0]
+    names = _OPERANDS_RE.findall(args)
+    operand_bytes = sum(_bytes_of(symbols.get(n, "")) for n in names)
+    m = _LHS_C_RE.search(op.rest)
+    contr = 1
+    if m and names:
+        lhs_shapes = _shapes_in(symbols.get(names[0], ""))
+        if lhs_shapes:
+            lhs = lhs_shapes[0][1]
+            for d in m.group(1).split(","):
+                if d and int(d) < len(lhs):
+                    contr *= lhs[int(d)]
+    return 2.0 * n_res * contr, float(operand_bytes)
+
+
+# HBM-traffic op set: data movers + matmul results only.  Elementwise /
+# softmax / norm intermediates are EXCLUDED — on the TPU target those fuse
+# into neighbors (and the perf-critical ones live in our Pallas kernels'
+# VMEM).  The memory term is therefore a fusion-optimistic lower bound;
+# the CPU-lowered HLO's unfused elementwise ops would otherwise inflate it
+# ~100x (§Perf iteration 5 measured this).
+_MATERIALIZING = {"dot", "convolution", "custom-call",
+                  "dynamic-slice", "dynamic-update-slice",
+                  "scatter", "gather", "sort", "rng"}
+
+
+@dataclasses.dataclass
+class Analysis:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {k: {"count": 0, "bytes": 0.0}
+                                 for k in COLLECTIVES})
+
+    @property
+    def collective_bytes(self) -> float:
+        return sum(v["bytes"] for v in self.collectives.values())
+
+    def to_dict(self):
+        d = {k: dict(v) for k, v in self.collectives.items()}
+        d["total_bytes"] = self.collective_bytes
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collectives": d}
+
+
+def analyze(hlo: str) -> Analysis:
+    comps, entry = parse_computations(hlo)
+    if entry is None:
+        entry = max(comps, key=lambda c: len(comps[c].ops))
+
+    out = Analysis()
+    stack = set()
+
+    def visit(name: str, mult: float):
+        if name not in comps or name in stack:
+            return
+        stack.add(name)
+        comp = comps[name]
+        for op in comp.ops:
+            if op.kind == "while":
+                mb, mc = _BODY_RE.search(op.rest), _COND_RE.search(op.rest)
+                trips = 1
+                if mc and mc.group(1) in comps:
+                    trips = while_trip_count(comps[mc.group(1)])
+                if mb:
+                    visit(mb.group(1), mult * trips)
+                continue
+            if op.kind == "conditional":
+                mbr = _BRANCHES_RE.search(op.rest)
+                if mbr:
+                    for b in mbr.group(1).split(","):
+                        visit(b.strip().lstrip("%"), mult)
+            for rx in _REF_RES:
+                for r in rx.findall(op.rest):
+                    visit(r, mult)
+            if op.kind == "dot":
+                fl, ob = _dot_flops(op, comp.symbols)
+                out.flops += mult * fl
+                out.hbm_bytes += mult * ob
+            hit_coll = False
+            for c in COLLECTIVES:
+                if op.kind == c or op.kind.startswith(c + "-start"):
+                    b = _bytes_of(op.result_text)
+                    if c == "all-reduce":
+                        b *= 2
+                    out.collectives[c]["count"] += int(round(mult))
+                    out.collectives[c]["bytes"] += mult * b
+                    hit_coll = True
+            if not hit_coll and op.kind in _MATERIALIZING:
+                out.hbm_bytes += mult * _bytes_of(op.result_text)
+        stack.discard(name)
+
+    visit(entry, 1.0)
+    return out

@@ -1,0 +1,55 @@
+"""The four assigned input shapes + PinFM's own serving/pretrain shapes."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    kind: str              # train | prefill | decode | rank_serve | pretrain
+    seq: int
+    batch: int
+
+
+SHAPES = {
+    "train_4k":    InputShape("train_4k", "train", 4_096, 256),
+    "prefill_32k": InputShape("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k":  InputShape("decode_32k", "decode", 32_768, 128),
+    "long_500k":   InputShape("long_500k", "decode", 524_288, 1),
+    # PinFM's own workloads (extra, not part of the 10x4 matrix):
+    "pinfm_pretrain": InputShape("pinfm_pretrain", "pretrain", 256, 4096),
+    "rank_serve":  InputShape("rank_serve", "rank_serve", 256, 2048),
+}
+
+ASSIGNED_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def applicable(cfg, shape: InputShape) -> tuple[bool, str]:
+    """Shape/arch applicability (skips are recorded in DESIGN.md §6)."""
+    if cfg.family == "audio" and shape.name == "long_500k":
+        return False, ("enc-dec audio model: no 500k-token decode regime "
+                       "(30s windows -> <=1500 frames); skipped per DESIGN.md §6")
+    if cfg.name == "pinfm-20b" and shape.name in ASSIGNED_SHAPES:
+        return False, "pinfm-20b uses its own shapes (pinfm_pretrain, rank_serve)"
+    if cfg.name != "pinfm-20b" and shape.kind in ("rank_serve", "pretrain"):
+        return False, "PinFM-specific shape"
+    return True, ""
+
+
+def resolve_config(cfg, shape: InputShape):
+    """Shape-specific config overrides:
+    * long_500k on full-attention archs runs the sliding-window variant
+      (DESIGN.md §6 carve-out) — window = cfg.long_context_window;
+    * decode steps never remat."""
+    out = cfg
+    if (shape.name == "long_500k" and out.window is None
+            and out.family in ("dense", "vlm", "moe")):
+        # full-attention archs (incl. full-attn MoE) run long_500k only in
+        # the sliding-window variant (DESIGN.md §6) — otherwise the 524k KV
+        # cache alone busts HBM (measured 20.1 GiB for qwen2-moe)
+        out = out.replace(window=out.long_context_window)
+    if shape.kind in ("decode", "rank_serve"):
+        out = out.replace(remat="none")
+    return out

@@ -1,0 +1,322 @@
+"""Step builders + abstract input specs for every (arch x shape) combo.
+
+Everything here is allocation-free: inputs are ShapeDtypeStructs, parameters
+are abstract trees from the module specs, and the dry-run lowers
+``jax.jit(step, in_shardings, out_shardings).lower(*specs).compile()``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.distributed.sharding import (attention_tp_axis, batch_axes, clean,
+                                        make_policy, param_pspecs)
+from repro.launch.shapes import InputShape, resolve_config
+from repro.models.config import ModelConfig
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import TransformerLM
+from repro.nn.module import abstract
+from repro.training.optim import AdamWConfig, adamw_update
+
+WHISPER_DEC_FRAC = 8      # decoder tokens = seq // 8 for train shapes
+WHISPER_ENC_LEN = 1536    # encoder frames cached at decode (30 s window)
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family == "audio":
+        return EncDecLM(cfg)
+    return TransformerLM(cfg)
+
+
+def sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def abstract_opt_state(abstract_params):
+    f32 = lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32)
+    return {"m": jax.tree.map(f32, abstract_params),
+            "v": jax.tree.map(f32, abstract_params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# sharding spec trees
+# ---------------------------------------------------------------------------
+
+def opt_pspecs(param_ps):
+    return {"m": param_ps, "v": param_ps, "step": P()}
+
+
+def cache_pspecs(abstract_caches, policy, cfg: ModelConfig, shardable_batch):
+    """PartitionSpec tree matching the cache pytree structure."""
+    dp = batch_axes(policy) if shardable_batch else None
+    kv_ax = attention_tp_axis(cfg.n_kv, cfg.n_heads // max(cfg.n_kv, 1),
+                              cfg.resolved_head_dim, 16)
+    heads_ok = policy.get("heads") == "model"
+
+    def leaf_spec(path, leaf):
+        name = None
+        for k in reversed(path):
+            s = str(getattr(k, "name", getattr(k, "key", "")))
+            if s:
+                name = s
+                break
+        nd = len(leaf.shape)
+        if name in ("k", "v", "xk", "xv"):          # (reps, B, size, K, D)
+            return P(None, dp, None,
+                     "model" if kv_ax == "kv_heads" else None,
+                     "model" if kv_ax == "head_dim" else None)
+        if name == "pos":
+            return P(None, dp)
+        if name == "h" and nd == 5:                  # SSD (reps,B,H,N,P)
+            return P(None, dp, "model" if heads_ok else None, None, None)
+        if name == "h":                              # RG-LRU (reps,B,W)
+            return P(None, dp, "model")
+        if name == "conv":                           # (reps,B,k,C)
+            return P(None, dp, None,
+                     "model" if leaf.shape[-1] % 16 == 0 else None)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree.flatten_with_path(abstract_caches)
+    return jax.tree.unflatten(treedef, [leaf_spec(p, l) for p, l in flat])
+
+
+def shard_tree(mesh, pspec_tree):
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# bundles: (step_fn, abstract args, shardings) per shape kind
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class StepBundle:
+    name: str
+    step: Callable
+    args: tuple                 # abstract arg trees
+    in_pspecs: tuple
+    out_pspecs: Any
+    donate: tuple = ()
+    policy: dict = None         # the sharding policy actually used
+
+
+def _scalar_metrics(d):
+    return {k: v for k, v in d.items() if hasattr(v, "ndim") and v.ndim == 0}
+
+
+def make_accum_train_step(loss_fn, opt_cfg: AdamWConfig, microbatches: int):
+    """Train step with gradient accumulation over `microbatches` slices
+    (lax.scan) — activation memory scales down by the microbatch factor at
+    the cost of one fp32 grad accumulator (§Perf iteration 3)."""
+
+    def step(params, opt_state, b):
+        if microbatches <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, b)
+        else:
+            m = microbatches
+            bm = jax.tree.map(
+                lambda x: x.reshape(m, x.shape[0] // m, *x.shape[1:]), b)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(acc, mb):
+                (l, mets), g = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, gg: a + gg.astype(jnp.float32) / m, acc, g)
+                return acc, l
+
+            grads, losses = jax.lax.scan(body, acc0, bm)
+            loss, metrics = jnp.mean(losses), {}
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, {"loss": loss, **_scalar_metrics(metrics),
+                                   **_scalar_metrics(om)}
+
+    return step
+
+
+def make_bundle(cfg: ModelConfig, shape: InputShape, *,
+                multi_pod: bool = False,
+                opt_cfg: Optional[AdamWConfig] = None) -> StepBundle:
+    cfg = resolve_config(cfg, shape)
+    policy = make_policy(cfg.sharding, multi_pod=multi_pod, model_cfg=cfg)
+    dp = batch_axes(policy)
+    if cfg.name == "pinfm-20b":
+        return _pinfm_bundle(cfg, shape, policy, opt_cfg)
+    model = build_model(cfg)
+    aparams = abstract(model.spec())
+    pps = param_pspecs(model.spec(), policy)
+    opt_cfg = opt_cfg or AdamWConfig()
+    B, S = shape.batch, shape.seq
+
+    if shape.kind == "train":
+        batch, bps = _train_batch_specs(cfg, B, S, dp)
+        aopt = abstract_opt_state(aparams)
+        ops_ = opt_pspecs(pps)
+        step = make_accum_train_step(model.loss, opt_cfg, cfg.microbatches)
+        out_ps = (pps, ops_, None)
+        return StepBundle(f"{cfg.name}/{shape.name}/train", step,
+                          (aparams, aopt, batch), (pps, ops_, bps), out_ps,
+                          donate=(0, 1), policy=policy)
+
+    if shape.kind == "prefill":
+        batch, bps = _train_batch_specs(cfg, B, S, dp, labels=False)
+
+        def step(params, b):
+            if cfg.family == "audio":
+                enc = model.encode(params, b["frames"])
+                logits = model.decode_fwd(params, b["tokens"], enc)
+            else:
+                logits, _ = model.forward(params, b["tokens"],
+                                          embeds=b.get("embeds"))
+            return logits[:, -1]
+
+        return StepBundle(f"{cfg.name}/{shape.name}/prefill", step,
+                          (aparams, batch), (pps, bps),
+                          P(dp, None), policy=policy)
+
+    if shape.kind == "decode":
+        shardable = B % (32 if multi_pod else 16) == 0
+        dpb = dp if shardable else None
+        tokens = sds((B, 1))
+        positions = sds((B, 1))
+        cdtype = cfg.cdtype()
+        if cfg.family == "audio":
+            acaches = model.abstract_caches(B, min(S, 8192), WHISPER_ENC_LEN,
+                                            cdtype)
+        else:
+            acaches = model.abstract_caches(B, S, cdtype)
+        cps = cache_pspecs(acaches, policy, cfg, shardable)
+
+        def step(params, tok, caches, pos):
+            return model.decode_step(params, tok, caches, pos)
+
+        return StepBundle(
+            f"{cfg.name}/{shape.name}/decode", step,
+            (aparams, tokens, acaches, positions),
+            (pps, P(dpb, None), cps, P(dpb, None)),
+            (P(dpb, None, None), cps), donate=(2,), policy=policy)
+
+    raise ValueError(shape.kind)
+
+
+def _train_batch_specs(cfg: ModelConfig, B, S, dp, labels=True):
+    if cfg.family == "audio":
+        sd = max(S // WHISPER_DEC_FRAC, 8)
+        batch = {"frames": sds((B, S, cfg.d_model), cfg.cdtype()),
+                 "tokens": sds((B, sd))}
+        bps = {"frames": P(dp, None, None), "tokens": P(dp, None)}
+        if labels:
+            batch["labels"] = sds((B, sd))
+            bps["labels"] = P(dp, None)
+        return batch, bps
+    if cfg.family == "vlm":
+        st = S - cfg.n_patches
+        batch = {"tokens": sds((B, st)),
+                 "embeds": sds((B, cfg.n_patches, cfg.frontend_dim),
+                               cfg.cdtype())}
+        bps = {"tokens": P(dp, None), "embeds": P(dp, None, None)}
+        if labels:
+            batch["labels"] = sds((B, st))
+            bps["labels"] = P(dp, None)
+        return batch, bps
+    batch = {"tokens": sds((B, S))}
+    bps = {"tokens": P(dp, None)}
+    if labels:
+        batch["labels"] = sds((B, S))
+        bps["labels"] = P(dp, None)
+    return batch, bps
+
+
+# ---------------------------------------------------------------------------
+# PinFM's own shapes
+# ---------------------------------------------------------------------------
+
+def production_pinfm_config() -> PinFMConfig:
+    from repro.core.losses import LossConfig
+    return PinFMConfig(rows=80_000_000, n_tables=8, sub_dim=32, seq_len=256,
+                       loss=LossConfig(window=16, downstream_len=128))
+
+
+def _pinfm_bundle(cfg, shape, policy, opt_cfg):
+    pcfg = production_pinfm_config()
+    if shape.kind == "pretrain":
+        # sub-1B backbone: pure data parallelism over the full mesh beats
+        # tensor parallelism ~10x on collectives (§Perf iteration 7)
+        policy = make_policy("dp", multi_pod="pod" in str(policy["_batch"]))
+    dp = batch_axes(policy)
+    if shape.kind == "pretrain":
+        model = PinFMPretrain(pcfg, cfg)
+        aparams = abstract(model.spec())
+        pps = param_pspecs(model.spec(), policy)
+        opt_cfg = opt_cfg or AdamWConfig()
+        B, L = shape.batch, shape.seq
+        batch = {"ids": sds((B, L)), "actions": sds((B, L)),
+                 "surfaces": sds((B, L)), "valid": sds((B, L), jnp.bool_),
+                 "user_id": sds((B,))}
+        bps = {"ids": P(dp, None), "actions": P(dp, None),
+               "surfaces": P(dp, None), "valid": P(dp, None),
+               "user_id": P(dp)}
+        aopt = abstract_opt_state(aparams)
+        ops_ = opt_pspecs(pps)
+
+        def step(params, opt_state, b):
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, b)
+            params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                                 opt_state)
+            return params, opt_state, {"loss": loss,
+                                        **_scalar_metrics(metrics),
+                                        **_scalar_metrics(om)}
+
+        return StepBundle(f"pinfm-20b/{shape.name}", step,
+                          (aparams, aopt, batch), (pps, ops_, bps),
+                          (pps, ops_, None), donate=(0, 1), policy=policy)
+
+    if shape.kind == "rank_serve":
+        from repro.core.dcat import DCATOptions
+        fcfg = FinetuneConfig(
+            variant="graphsage-lt", seq_len=shape.seq,
+            dcat=DCATOptions(rotate_replace=False, skip_last_self_attn=True))
+        model = PinFMRankingModel(pcfg, fcfg)
+        aparams = abstract(model.spec())
+        pps = param_pspecs(model.spec(), policy)
+        B_c = shape.batch
+        min_u = 32 if isinstance(dp, tuple) else 16
+        B_u = max(B_c // 128, min_u)         # ~1:128 dedup at serving
+        L = shape.seq
+        batch = {
+            "seq_ids": sds((B_u, L)), "seq_actions": sds((B_u, L)),
+            "seq_surfaces": sds((B_u, L)),
+            "inverse_idx": sds((B_c,)),
+            "cand_ids": sds((B_c,)),
+            "cand_feats": sds((B_c, fcfg.cand_feat_dim), jnp.float32),
+            "user_feats": sds((B_u, fcfg.user_feat_dim), jnp.float32),
+            "graphsage": sds((B_c, fcfg.graphsage_dim), jnp.float32),
+            "cand_age_days": sds((B_c,), jnp.float32),
+        }
+        bps = {"seq_ids": P(dp, None), "seq_actions": P(dp, None),
+               "seq_surfaces": P(dp, None),
+               "inverse_idx": P(dp), "cand_ids": P(dp),
+               "cand_feats": P(dp, None), "user_feats": P(dp, None),
+               "graphsage": P(dp, None), "cand_age_days": P(dp)}
+
+        def step(params, b):
+            logits, _, _ = model.forward(params, b, train=False)
+            return jax.nn.sigmoid(logits.astype(jnp.float32))
+
+        return StepBundle(f"pinfm-20b/{shape.name}", step,
+                          (aparams, batch), (pps, bps), P(dp, None),
+                          policy=policy)
+
+    raise ValueError(shape.kind)

@@ -1,0 +1,62 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+With --smoke (default on CPU) the arch's reduced family variant trains for a
+few steps on synthetic tokens — the runnable path.  Without --smoke the full
+config is built and the step is lowered against the production mesh (use
+repro.launch.dryrun for the full matrix).
+"""
+import argparse
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--batch", type=int, default=2)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    args = ap.parse_args()
+
+    from repro.configs import smoke_config
+    from repro.models.config import get_config
+    from repro.launch.steps import build_model
+    from repro.training.optim import AdamWConfig, adamw_init
+    from repro.training.train import make_train_step, train_loop
+
+    cfg = smoke_config(get_config(args.arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    opt_cfg = AdamWConfig(lr=args.lr, warmup_steps=5, total_steps=args.steps)
+    step = jax.jit(make_train_step(model.loss, opt_cfg))
+    opt = adamw_init(params)
+    rng = np.random.RandomState(0)
+    B, S = args.batch, args.seq
+
+    def batches():
+        for _ in range(args.steps):
+            toks = rng.randint(0, cfg.vocab, (B, S))
+            b = {"tokens": toks, "labels": np.roll(toks, -1, 1)}
+            if cfg.family == "vlm":
+                b["embeds"] = rng.randn(B, 4, cfg.frontend_dim).astype(np.float32)
+            if cfg.family == "audio":
+                b = {"frames": rng.randn(B, S, cfg.d_model).astype(np.float32),
+                     "tokens": toks[:, :16], "labels": toks[:, :16]}
+            yield b
+
+    n = sum(int(np.prod(l.shape)) for l in jax.tree.leaves(params))
+    print(f"arch={args.arch} (reduced) params={n / 1e6:.2f}M")
+    t0 = time.time()
+    params, opt, hist = train_loop(step, params, opt, batches(), log_every=5)
+    print(f"{args.steps} steps in {time.time() - t0:.1f}s; "
+          f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,131 @@
+"""ModelConfig: one dataclass that describes every supported architecture
+family (dense / moe / hybrid / ssm / vlm / audio).  Configs for the assigned
+architectures live in ``repro.configs.<id>`` and are registered here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax.numpy as jnp
+
+_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16, "float16": jnp.float16}
+
+
+@dataclasses.dataclass
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"              # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int = 12
+    d_model: int = 768
+    n_heads: int = 12
+    n_kv: int = 12
+    head_dim: Optional[int] = None
+    d_ff: int = 3072
+    vocab: int = 32000
+    act: str = "silu"
+    norm: str = "rmsnorm"              # rmsnorm | layernorm
+    mlp_type: str = "glu"              # glu | mlp
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    rope: bool = True
+    rope_theta: float = 10000.0
+    pos_emb: Optional[str] = None      # None | "learned"
+    window: Optional[int] = None       # sliding-window attention size
+    embed_scale: bool = False          # gemma-style sqrt(d) embedding scaling
+    tie_embeddings: bool = True
+    max_seq: int = 8192
+
+    # -- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 2
+    n_shared: int = 0
+    moe_d_ff: Optional[int] = None     # per-expert hidden (defaults to d_ff)
+    shared_d_ff: Optional[int] = None
+    capacity_factor: float = 1.25
+
+    # -- hybrid / ssm --------------------------------------------------------
+    pattern: Tuple[str, ...] = ("attn",)   # repeating block-kind unit
+    lru_width: Optional[int] = None
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_state: int = 128
+    ssm_groups: int = 1
+    ssm_chunk: int = 64
+
+    # -- stub frontends (the one permitted stub: modality encoders) ---------
+    frontend: Optional[str] = None     # None | "patch" | "audio"
+    frontend_dim: int = 1024           # dim of precomputed patch/frame embeds
+    n_patches: int = 1024              # VLM: patches per image in train shapes
+
+    # -- enc-dec (whisper) ----------------------------------------------------
+    encoder_layers: int = 0
+
+    # -- numerics / execution -------------------------------------------------
+    param_dtype: str = "float32"
+    compute_dtype: str = "float32"
+    remat: str = "none"                # none | full
+    attn_impl: str = "xla"             # xla | pallas
+    sharding: str = "tp"               # tp | tp_fsdp
+    microbatches: int = 1              # gradient-accumulation steps per batch
+    # long-context variant: for pure full-attention archs, long_500k runs only
+    # with a sliding-window override (DESIGN.md §6)
+    long_context_window: Optional[int] = 4096
+    source: str = ""                   # citation for the config
+
+    def pdtype(self):
+        return _DTYPES[self.param_dtype]
+
+    def cdtype(self):
+        return _DTYPES[self.compute_dtype]
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    def block_kinds(self) -> Tuple[str, ...]:
+        """Expand the repeating pattern to n_layers block kinds."""
+        reps = -(-self.n_layers // len(self.pattern))
+        return (self.pattern * reps)[: self.n_layers]
+
+    def scan_groups(self):
+        """[(unit_kinds, repeats)] — maximal homogeneous runs of the pattern
+        for lax.scan over layers; a partial trailing unit becomes its own
+        group (e.g. recurrentgemma 26 = 8 x (rec,rec,attn) + (rec,rec))."""
+        kinds = self.block_kinds()
+        u = len(self.pattern)
+        full = len(kinds) // u
+        groups = []
+        if full:
+            groups.append((tuple(self.pattern), full))
+        rem = kinds[full * u:]
+        if rem:
+            groups.append((tuple(rem), 1))
+        return groups
+
+    def replace(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    _REGISTRY[cfg.name] = cfg
+    return cfg
+
+
+def get_config(name: str) -> ModelConfig:
+    import repro.configs  # noqa: F401  (populates the registry)
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; have {sorted(_REGISTRY)}")
+    return _REGISTRY[name]
+
+
+def list_configs():
+    import repro.configs  # noqa: F401
+    return sorted(_REGISTRY)

@@ -1,0 +1,203 @@
+"""Encoder-decoder transformer (whisper-style).
+
+The conv/mel frontend is stubbed per the brief: inputs are precomputed frame
+embeddings (B, frames, d_model).  The encoder output is the DCAT "context"
+for enc-dec archs: computed once per unique audio, cross-attended by every
+decode step (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_residual
+from repro.models.config import ModelConfig
+from repro.nn.module import Module, stack_specs
+from repro.nn.layers import Embedding, LayerNorm, MLP
+from repro.nn.attention import (Attention, KVCache, attend5, attend_blocked,
+                                _BLOCKED_THRESHOLD)
+
+
+def sinusoid_pos(seq: int, dim: int, dtype=jnp.float32):
+    pos = jnp.arange(seq)[:, None].astype(jnp.float32)
+    i = jnp.arange(dim // 2)[None, :].astype(jnp.float32)
+    angles = pos / jnp.power(10000.0, 2 * i / dim)
+    return jnp.concatenate([jnp.sin(angles), jnp.cos(angles)], -1).astype(dtype)
+
+
+class EncBlock(Module):
+    def __init__(self, cfg: ModelConfig):
+        dtype = cfg.pdtype()
+        self.attn = Attention(cfg.d_model, cfg.n_heads, cfg.n_kv, bias=True,
+                              rope=False, causal=False, dtype=dtype)
+        self.mlp = MLP(cfg.d_model, cfg.d_ff, act="gelu", bias=True, dtype=dtype)
+        self.norm1 = LayerNorm(cfg.d_model, dtype=dtype)
+        self.norm2 = LayerNorm(cfg.d_model, dtype=dtype)
+
+    def spec(self):
+        return {"attn": self.attn.spec(), "mlp": self.mlp.spec(),
+                "norm1": self.norm1.spec(), "norm2": self.norm2.spec()}
+
+    def __call__(self, p, x):
+        x = x + self.attn(p["attn"], self.norm1(p["norm1"], x))
+        return x + self.mlp(p["mlp"], self.norm2(p["norm2"], x))
+
+
+class DecBlock(Module):
+    def __init__(self, cfg: ModelConfig):
+        dtype = cfg.pdtype()
+        self.self_attn = Attention(cfg.d_model, cfg.n_heads, cfg.n_kv, bias=True,
+                                   rope=False, causal=True, dtype=dtype)
+        self.cross_attn = Attention(cfg.d_model, cfg.n_heads, cfg.n_kv, bias=True,
+                                    rope=False, causal=False, dtype=dtype)
+        self.mlp = MLP(cfg.d_model, cfg.d_ff, act="gelu", bias=True, dtype=dtype)
+        self.norm1 = LayerNorm(cfg.d_model, dtype=dtype)
+        self.normx = LayerNorm(cfg.d_model, dtype=dtype)
+        self.norm2 = LayerNorm(cfg.d_model, dtype=dtype)
+
+    def spec(self):
+        return {"self_attn": self.self_attn.spec(),
+                "cross_attn": self.cross_attn.spec(), "mlp": self.mlp.spec(),
+                "norm1": self.norm1.spec(), "normx": self.normx.spec(),
+                "norm2": self.norm2.spec()}
+
+    def cross_kv(self, p, enc_out):
+        pc = p["cross_attn"]
+        k = jnp.einsum("bsd,dkh->bskh", enc_out, pc["wk"]) + pc["bk"]
+        v = jnp.einsum("bsd,dkh->bskh", enc_out, pc["wv"]) + pc["bv"]
+        return k, v
+
+    def _cross(self, p, x, k, v):
+        pc = p["cross_attn"]
+        q = jnp.einsum("bsd,dkgh->bskgh", x, pc["wq"]) + pc["bq"]
+        if q.shape[1] * k.shape[1] > _BLOCKED_THRESHOLD:
+            o = attend_blocked(q, k, v, causal=False)
+        else:
+            o = attend5(q, k, v, causal=False)
+        return jnp.einsum("bskgh,kghd->bsd", o, pc["wo"])
+
+    def fwd(self, p, x, enc_out, positions):
+        x = x + self.self_attn(p["self_attn"], self.norm1(p["norm1"], x),
+                               positions=positions)
+        k, v = self.cross_kv(p, enc_out)
+        x = x + self._cross(p, self.normx(p["normx"], x), k, v)
+        return x + self.mlp(p["mlp"], self.norm2(p["norm2"], x))
+
+    def step(self, p, x, cache, positions):
+        """cache: {"kv": KVCache, "xk": (B,T,H,D), "xv": (B,T,H,D)}."""
+        h = self.norm1(p["norm1"], x)
+        y, kv = self.self_attn.decode(p["self_attn"], h, cache["kv"], positions)
+        x = x + y
+        x = x + self._cross(p, self.normx(p["normx"], x), cache["xk"], cache["xv"])
+        x = x + self.mlp(p["mlp"], self.norm2(p["norm2"], x))
+        return x, {"kv": kv, "xk": cache["xk"], "xv": cache["xv"]}
+
+
+class EncDecLM(Module):
+    def __init__(self, cfg: ModelConfig):
+        assert cfg.encoder_layers > 0
+        self.cfg = cfg
+        dtype = cfg.pdtype()
+        self.embed = Embedding(cfg.vocab, cfg.d_model, dtype=dtype,
+                               pad_rows_to=16)
+        self.pos_embed = Embedding(cfg.max_seq, cfg.d_model, axes=(None, "embed"),
+                                   dtype=dtype)
+        self.enc_block = EncBlock(cfg)
+        self.dec_block = DecBlock(cfg)
+        self.enc_norm = LayerNorm(cfg.d_model, dtype=dtype)
+        self.dec_norm = LayerNorm(cfg.d_model, dtype=dtype)
+
+    def spec(self):
+        return {
+            "embed": self.embed.spec(),
+            "pos_embed": self.pos_embed.spec(),
+            "encoder": stack_specs(self.enc_block.spec(), self.cfg.encoder_layers),
+            "decoder": stack_specs(self.dec_block.spec(), self.cfg.n_layers),
+            "enc_norm": self.enc_norm.spec(),
+            "dec_norm": self.dec_norm.spec(),
+        }
+
+    def encode(self, p, frames):
+        """frames: (B, T, d_model) — post-conv-stub frame embeddings."""
+        cfg = self.cfg
+        x = frames.astype(cfg.cdtype())
+        x = x + sinusoid_pos(x.shape[1], cfg.d_model, x.dtype)[None]
+        x = constrain_residual(x, model_on_last=False)  # see sharding.py
+
+        def body(h, lp):
+            return constrain_residual(self.enc_block(lp, h)), None
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, p["encoder"], length=cfg.encoder_layers)
+        return self.enc_norm(p["enc_norm"], x)
+
+    def decode_fwd(self, p, tokens, enc_out, positions=None):
+        cfg = self.cfg
+        B, S = tokens.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x = self.embed(p["embed"], tokens).astype(cfg.cdtype())
+        x = x + self.pos_embed(p["pos_embed"],
+                               positions[0] % cfg.max_seq).astype(x.dtype)[None]
+        x = constrain_residual(x, model_on_last=False)  # see sharding.py
+
+        def body(h, lp):
+            return constrain_residual(
+                self.dec_block.fwd(lp, h, enc_out, positions)), None
+        if cfg.remat == "full":
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, p["decoder"], length=cfg.n_layers)
+        return self.embed.attend(p["embed"], self.dec_norm(p["dec_norm"], x))
+
+    def forward(self, p, batch):
+        enc_out = self.encode(p, batch["frames"])
+        return self.decode_fwd(p, batch["tokens"], enc_out), jnp.zeros((), jnp.float32)
+
+    def loss(self, p, batch):
+        logits, _ = self.forward(p, batch)
+        logits = logits.astype(jnp.float32)
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+        nll = jnp.mean(logz - gold)
+        return nll, {"nll": nll}
+
+    # -- decode ----------------------------------------------------------------
+    def init_caches(self, p_or_abstract, batch: int, size: int, enc_len: int,
+                    dtype=None):
+        """Zero caches; the cross KV is filled by :meth:`prefill_cross`."""
+        cfg = self.cfg
+        dtype = dtype or cfg.cdtype()
+        L, H, D = cfg.n_layers, cfg.n_kv, cfg.resolved_head_dim
+        kv = KVCache.zeros(batch, size, H, D, dtype)
+        kv = jax.tree.map(lambda a: jnp.broadcast_to(a, (L, *a.shape)), kv)
+        xk = jnp.zeros((L, batch, enc_len, H, D), dtype)
+        return {"kv": kv, "xk": xk, "xv": xk}
+
+    def abstract_caches(self, batch, size, enc_len, dtype=None):
+        return jax.eval_shape(
+            lambda: self.init_caches(None, batch, size, enc_len, dtype))
+
+    def prefill_cross(self, p, enc_out, caches):
+        def body(_, lp):
+            k, v = self.dec_block.cross_kv(lp, enc_out)
+            return (), (k, v)
+        _, (xk, xv) = jax.lax.scan(body, (), p["decoder"], length=self.cfg.n_layers)
+        return {"kv": caches["kv"], "xk": xk.astype(caches["xk"].dtype),
+                "xv": xv.astype(caches["xv"].dtype)}
+
+    def decode_step(self, p, tokens, caches, positions):
+        cfg = self.cfg
+        x = self.embed(p["embed"], tokens).astype(cfg.cdtype())
+        x = x + self.pos_embed(p["pos_embed"], positions % cfg.max_seq).astype(x.dtype)
+
+        def body(h, xs):
+            lp, c = xs
+            h, c2 = self.dec_block.step(lp, h, c, positions)
+            return h, c2
+        x, caches = jax.lax.scan(body, x, (p["decoder"], caches),
+                                 length=cfg.n_layers)
+        return self.embed.attend(p["embed"], self.dec_norm(p["dec_norm"], x)), caches

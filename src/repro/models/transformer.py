@@ -1,0 +1,436 @@
+"""Generic decoder stack covering dense / moe / hybrid / ssm / vlm families.
+
+Layers are stacked per homogeneous pattern group and iterated with
+``jax.lax.scan`` (compile-time control for 64-layer archs; remat at scan
+boundaries).  The stack is split into:
+
+  * :class:`TransformerBody` — the blocks + final norm, operating on embedded
+    inputs.  PinFM uses the body directly (its "vocabulary" lives in hashed
+    id-embedding tables, not a token embedding).
+  * :class:`TransformerLM` — token embedding + body + LM head.
+
+Every block kind supports three call modes (DESIGN.md §5):
+
+  fwd(p, x, positions, return_ctx)   full sequence; optionally emits the DCAT
+                                     context (KV for attention kinds, the
+                                     recurrent state for rec/ssm kinds)
+  cross(p, x, ctx, positions)        DCAT crossing: candidate tokens attend
+                                     to / continue from a provided context
+  step(p, x, cache, positions)       one-token decode against a cache
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain_residual
+from repro.models.config import ModelConfig
+from repro.nn.module import Module, stack_specs
+from repro.nn.layers import Embedding, GLUMLP, LayerNorm, Linear, MLP, RMSNorm
+from repro.nn.attention import Attention, KVCache
+from repro.nn.moe import MoE
+from repro.nn.recurrent import RecurrentBlock
+from repro.nn.ssd import Mamba2Block
+
+
+def _make_norm(cfg: ModelConfig, dtype):
+    if cfg.norm == "rmsnorm":
+        return RMSNorm(cfg.d_model, dtype=dtype)
+    return LayerNorm(cfg.d_model, dtype=dtype)
+
+
+class Block(Module):
+    """One residual block of a given kind ('attn' | 'moe' | 'rec' | 'ssm')."""
+
+    def __init__(self, cfg: ModelConfig, kind: str):
+        self.cfg, self.kind = cfg, kind
+        dtype = cfg.pdtype()
+        self.norm1 = _make_norm(cfg, dtype)
+        if kind in ("attn", "moe"):
+            self.attn = Attention(
+                cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.resolved_head_dim,
+                bias=cfg.qkv_bias, qk_norm=cfg.qk_norm, rope=cfg.rope,
+                rope_theta=cfg.rope_theta, window=cfg.window, causal=True,
+                dtype=dtype, impl=cfg.attn_impl)
+        elif kind == "rec":
+            self.rec = RecurrentBlock(cfg.d_model, cfg.lru_width, dtype=dtype)
+        elif kind == "ssm":
+            self.ssm = Mamba2Block(
+                cfg.d_model, expand=cfg.ssm_expand, head_dim=cfg.ssm_head_dim,
+                d_state=cfg.ssm_state, n_groups=cfg.ssm_groups,
+                chunk=cfg.ssm_chunk, dtype=dtype)
+        elif kind == "hstu":
+            from repro.nn.hstu import HSTUBlock
+            self.hstu = HSTUBlock(cfg.d_model, cfg.n_heads,
+                                  cfg.resolved_head_dim, rope=cfg.rope,
+                                  rope_theta=cfg.rope_theta, dtype=dtype)
+        else:
+            raise ValueError(kind)
+
+        if kind == "moe":
+            self.ffn = MoE(cfg.d_model, cfg.moe_d_ff or cfg.d_ff, cfg.n_experts,
+                           cfg.top_k, n_shared=cfg.n_shared,
+                           shared_hidden=cfg.shared_d_ff,
+                           capacity_factor=cfg.capacity_factor, act=cfg.act,
+                           dtype=dtype)
+        elif kind in ("attn", "rec"):
+            mk = GLUMLP if cfg.mlp_type == "glu" else MLP
+            kw = {} if cfg.mlp_type == "glu" else {"bias": True}
+            self.ffn = mk(cfg.d_model, cfg.d_ff, act=cfg.act, dtype=dtype, **kw)
+        else:
+            self.ffn = None   # mamba2 / hstu: single-mixer blocks
+        if self.ffn is not None:
+            self.norm2 = _make_norm(cfg, dtype)
+
+    def spec(self):
+        if self.kind == "hstu":
+            return {"hstu": self.hstu.spec()}
+        s = {"norm1": self.norm1.spec()}
+        if self.kind in ("attn", "moe"):
+            s["attn"] = self.attn.spec()
+        elif self.kind == "rec":
+            s["rec"] = self.rec.spec()
+        else:
+            s["ssm"] = self.ssm.spec()
+        if self.ffn is not None:
+            s["ffn"] = self.ffn.spec()
+            s["norm2"] = self.norm2.spec()
+        return s
+
+    def _ffn(self, p, x):
+        aux = jnp.zeros((), jnp.float32)
+        if self.ffn is not None:
+            h = self.norm2(p["norm2"], x)
+            if self.kind == "moe":
+                y, moe_aux = self.ffn(p["ffn"], h)
+                aux = moe_aux["lb_loss"]
+            else:
+                y = self.ffn(p["ffn"], h)
+            x = x + y
+        return x, aux
+
+    # -- full-sequence ---------------------------------------------------------
+    def fwd(self, p, x, positions, return_ctx: bool = False):
+        """-> (x, aux, ctx).  ctx is the DCAT context: (k, v) for attention
+        kinds, the recurrent/ssm state for rec/ssm kinds."""
+        if self.kind == "hstu":
+            x, ctx = self.hstu.fwd(p["hstu"], x, positions,
+                                   return_ctx=return_ctx)
+            return x, jnp.zeros((), jnp.float32), ctx
+        h = self.norm1(p["norm1"], x)
+        ctx = None
+        if self.kind in ("attn", "moe"):
+            if return_ctx:
+                y, kv = self.attn(p["attn"], h, positions=positions, return_kv=True)
+                ctx = kv
+            else:
+                y = self.attn(p["attn"], h, positions=positions)
+            x = x + y
+        elif self.kind == "rec":
+            y, state = self.rec(p["rec"], h)
+            ctx = state
+            x = x + y
+        else:
+            y, state = self.ssm(p["ssm"], h)
+            ctx = state
+            x = x + y
+        x, aux = self._ffn(p, x)
+        return x, aux, ctx
+
+    # -- DCAT crossing -----------------------------------------------------------
+    def cross(self, p, x, ctx, positions, *, self_attend: bool = True,
+              ctx_pos=None, rotate_replace: bool = False, gather_idx=None):
+        """Candidate tokens x attend to / continue from a context ctx."""
+        if self.kind == "hstu":
+            y = self.hstu.cross(p["hstu"], x, ctx, positions, ctx_pos=ctx_pos,
+                                gather_idx=gather_idx,
+                                self_attend=self_attend or rotate_replace)
+            return y, jnp.zeros((), jnp.float32)
+        h = self.norm1(p["norm1"], x)
+        if self.kind in ("attn", "moe"):
+            k_ctx, v_ctx = ctx
+            y = self.attn.cross(p["attn"], h, k_ctx, v_ctx, positions=positions,
+                                k_pos=ctx_pos, self_attend=self_attend,
+                                rotate_replace=rotate_replace,
+                                gather_idx=gather_idx)
+            x = x + y
+        elif self.kind == "rec":
+            y, _ = self.rec(p["rec"], h, ctx)
+            x = x + y
+        else:
+            y, _ = self.ssm(p["ssm"], h, ctx)
+            x = x + y
+        x, aux = self._ffn(p, x)
+        return x, aux
+
+    # -- decode ---------------------------------------------------------------
+    def init_cache(self, batch: int, size: int, dtype):
+        cfg = self.cfg
+        if self.kind in ("attn", "moe"):
+            size = min(size, cfg.window) if cfg.window else size
+            return KVCache.zeros(batch, size, cfg.n_kv, cfg.resolved_head_dim, dtype)
+        if self.kind == "hstu":
+            return KVCache.zeros(batch, size, cfg.n_heads,
+                                 cfg.resolved_head_dim, dtype)
+        if self.kind == "rec":
+            return self.rec.init_state(batch, dtype)
+        return self.ssm.init_state(batch, dtype)
+
+    def step(self, p, x, cache, positions):
+        if self.kind == "hstu":
+            return self.hstu.step(p["hstu"], x, cache, positions)
+        h = self.norm1(p["norm1"], x)
+        if self.kind in ("attn", "moe"):
+            y, cache = self.attn.decode(p["attn"], h, cache, positions)
+        elif self.kind == "rec":
+            y, cache = self.rec.step(p["rec"], h, cache)
+        else:
+            y, cache = self.ssm.step(p["ssm"], h, cache)
+        x = x + y
+        x, _ = self._ffn(p, x)
+        return x, cache
+
+
+class TransformerBody(Module):
+    """Pattern-grouped block stack + final norm, scanned over layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.groups = [tuple(Block(cfg, k) for k in unit)
+                       for unit, _ in cfg.scan_groups()]
+        self.repeats = [r for _, r in cfg.scan_groups()]
+        self.final_norm = _make_norm(cfg, cfg.pdtype())
+
+    def spec(self):
+        return {
+            "groups": [
+                {"blocks": [stack_specs(b.spec(), r) for b in unit]}
+                for unit, r in zip(self.groups, self.repeats)],
+            "final_norm": self.final_norm.spec(),
+        }
+
+    def forward(self, p, x, positions, *, collect_ctx: bool = False,
+                final_norm: bool = True, skip_last_self_attn: bool = False):
+        """-> (y, aux, ctxs).  ctxs: list-per-group of tuple-per-unit-position
+        of stacked contexts (leading dim = repeats), or None.
+
+        skip_last_self_attn (paper §4.1, serving): the LAST layer's context
+        output x_u^(L) feeds only the loss, so at serving we compute just its
+        K/V projection and skip its attention + FFN.  Requires collect_ctx
+        and a trailing attention-kind layer.
+        """
+        aux_total = jnp.zeros((), jnp.float32)
+        ctxs = [] if collect_ctx else None
+        skip = (skip_last_self_attn and collect_ctx
+                and len(self.groups[-1]) == 1
+                and self.groups[-1][0].kind in ("attn", "moe"))
+        n_groups = len(self.groups)
+        for gi, (unit, gp, reps) in enumerate(
+                zip(self.groups, p["groups"], self.repeats)):
+            last_group = gi == n_groups - 1
+            scan_reps = reps - 1 if (skip and last_group) else reps
+            blocks = tuple(gp["blocks"])
+            if skip and last_group:
+                scan_blocks = jax.tree.map(lambda a: a[:-1], blocks)
+            else:
+                scan_blocks = blocks
+
+            def body(carry, layer_params):
+                h, aux = carry
+                outs = []
+                for blk, bp in zip(unit, layer_params):
+                    h, a, ctx = blk.fwd(bp, h, positions, return_ctx=collect_ctx)
+                    aux = aux + a
+                    outs.append(ctx)
+                h = constrain_residual(h)
+                return (h, aux), tuple(outs) if collect_ctx else None
+            if self.cfg.remat == "full":
+                body = jax.checkpoint(body, prevent_cse=False)
+            if scan_reps > 0:
+                (x, aux_total), ys = jax.lax.scan(
+                    body, (x, aux_total), scan_blocks, length=scan_reps)
+            else:
+                ys = None
+            if skip and last_group:
+                blk = unit[0]
+                bp_last = jax.tree.map(lambda a: a[-1], blocks[0])
+                h = blk.norm1(bp_last["norm1"], x)
+                _, k, v = blk.attn.qkv(bp_last["attn"], h, positions)
+                kv_last = jax.tree.map(lambda a: a[None], (k, v))
+                ys = ((kv_last,) if ys is None else
+                      jax.tree.map(lambda a, b: jnp.concatenate([a, b], 0),
+                                   ys, (kv_last,)))
+            if collect_ctx:
+                ctxs.append(ys)
+        if final_norm:
+            x = self.final_norm(p["final_norm"], x)
+        return x, aux_total, ctxs
+
+    def cross(self, p, x, ctxs, positions, *, self_attend: bool = True,
+              ctx_pos=None, final_norm: bool = True, gather_idx=None,
+              rotate_replace: bool = False):
+        """DCAT crossing: run candidate tokens through every layer, each layer
+        attending to / continuing from its stored context.
+
+        gather_idx: (B_c,) int — the paper's Ψ⁻¹: per-layer broadcast of the
+        deduplicated context to the candidate batch, performed INSIDE the
+        layer scan so the un-deduplicated KV never exists for all layers at
+        once.
+        """
+        aux_total = jnp.zeros((), jnp.float32)
+        for unit, gp, reps, gc in zip(self.groups, p["groups"], self.repeats,
+                                      ctxs):
+            def body(carry, xs):
+                h, aux = carry
+                layer_params, layer_ctx = xs
+                for blk, bp, c in zip(unit, layer_params, layer_ctx):
+                    gidx = gather_idx
+                    if gather_idx is not None and blk.kind not in ("attn", "moe"):
+                        # rec/ssm states: Ψ⁻¹ materializes the (small) state
+                        c = jax.tree.map(lambda a: jnp.take(a, gather_idx,
+                                                            axis=0), c)
+                        gidx = None
+                    h, a = blk.cross(bp, h, c, positions,
+                                     self_attend=self_attend, ctx_pos=ctx_pos,
+                                     rotate_replace=rotate_replace,
+                                     gather_idx=gidx)
+                    aux = aux + a
+                return (h, aux), None
+            (x, aux_total), _ = jax.lax.scan(
+                body, (x, aux_total), (tuple(gp["blocks"]), tuple(gc)),
+                length=reps)
+        if final_norm:
+            x = self.final_norm(p["final_norm"], x)
+        return x, aux_total
+
+    def decode(self, p, x, caches, positions, *, final_norm: bool = True):
+        new_caches = []
+        for unit, gp, reps, gc in zip(self.groups, p["groups"], self.repeats,
+                                      caches):
+            def body(h, xs):
+                layer_params, layer_caches = xs
+                outs = []
+                for blk, bp, c in zip(unit, layer_params, layer_caches):
+                    h, c2 = blk.step(bp, h, c, positions)
+                    outs.append(c2)
+                return h, tuple(outs)
+            x, cout = jax.lax.scan(body, x, (tuple(gp["blocks"]), tuple(gc)),
+                                   length=reps)
+            new_caches.append(cout)
+        if final_norm:
+            x = self.final_norm(p["final_norm"], x)
+        return x, new_caches
+
+    def init_caches(self, batch: int, size: int, dtype=None):
+        dtype = dtype or self.cfg.cdtype()
+        caches = []
+        for unit, reps in zip(self.groups, self.repeats):
+            unit_caches = []
+            for blk in unit:
+                one = blk.init_cache(batch, size, dtype)
+                unit_caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (reps, *a.shape)), one))
+            caches.append(tuple(unit_caches))
+        return caches
+
+    def abstract_caches(self, batch: int, size: int, dtype=None):
+        return jax.eval_shape(lambda: self.init_caches(batch, size, dtype))
+
+
+class TransformerLM(Module):
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        dtype = cfg.pdtype()
+        self.embed = Embedding(cfg.vocab, cfg.d_model, dtype=dtype,
+                               pad_rows_to=16)
+        self.body = TransformerBody(cfg)
+        if not cfg.tie_embeddings:
+            self.lm_head = Linear(cfg.d_model, cfg.vocab,
+                                  axes=("embed", "vocab"), dtype=dtype)
+        if cfg.frontend == "patch":
+            self.projector = Linear(cfg.frontend_dim, cfg.d_model,
+                                    axes=(None, "embed"), dtype=dtype)
+        if cfg.pos_emb == "learned":
+            self.pos_embed = Embedding(cfg.max_seq, cfg.d_model,
+                                       axes=(None, "embed"), dtype=dtype)
+
+    def spec(self):
+        cfg = self.cfg
+        s = {"embed": self.embed.spec(), "body": self.body.spec()}
+        if not cfg.tie_embeddings:
+            s["lm_head"] = self.lm_head.spec()
+        if cfg.frontend == "patch":
+            s["projector"] = self.projector.spec()
+        if cfg.pos_emb == "learned":
+            s["pos_embed"] = self.pos_embed.spec()
+        return s
+
+    # -- embedding / head ------------------------------------------------------
+    def embed_inputs(self, p, tokens, embeds=None, positions=None):
+        cfg = self.cfg
+        x = self.embed(p["embed"], tokens).astype(cfg.cdtype())
+        if cfg.embed_scale:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, cfg.cdtype())
+        if embeds is not None:
+            pe = self.projector(p["projector"], embeds.astype(cfg.cdtype()))
+            x = jnp.concatenate([pe, x], axis=1)
+        if cfg.pos_emb == "learned":
+            if positions is None:
+                positions = jnp.arange(x.shape[1])[None]
+            x = x + self.pos_embed(
+                p["pos_embed"], positions % cfg.max_seq).astype(x.dtype)
+        # explicit reshard boundary: keeps the residual-stream model-axis
+        # constraint from propagating INTO the embedding gather (XLA SPMD
+        # mis-partitions gathers of replicated tables, e.g. vocab % 16 != 0)
+        return constrain_residual(x, model_on_last=False)
+
+    def logits(self, p, x):
+        if self.cfg.tie_embeddings:
+            lg = self.embed.attend(p["embed"], x)
+            if self.embed.rows != self.cfg.vocab:   # mask padded columns
+                mask = jnp.arange(self.embed.rows) < self.cfg.vocab
+                lg = jnp.where(mask, lg, jnp.asarray(-1e30, lg.dtype))
+            return lg
+        return self.lm_head(p["lm_head"], x)
+
+    # -- public API -----------------------------------------------------------
+    def forward(self, p, tokens, *, embeds=None, positions=None):
+        B = tokens.shape[0]
+        x = self.embed_inputs(p, tokens, embeds)
+        S = x.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        x, aux, _ = self.body.forward(p["body"], x, positions)
+        return self.logits(p, x), aux
+
+    def init_caches(self, batch: int, size: int, dtype=None):
+        return self.body.init_caches(batch, size, dtype)
+
+    def abstract_caches(self, batch: int, size: int, dtype=None):
+        return self.body.abstract_caches(batch, size, dtype)
+
+    def decode_step(self, p, tokens, caches, positions):
+        """tokens: (B, 1); positions: (B, 1) absolute -> (logits, caches)."""
+        x = self.embed_inputs(p, tokens, positions=positions)
+        x, caches = self.body.decode(p["body"], x, caches, positions)
+        return self.logits(p, x), caches
+
+    # -- loss ------------------------------------------------------------------
+    def loss(self, p, batch):
+        """batch: {tokens (B,S), labels (B,S), [embeds], [mask]} -> scalar."""
+        logits, aux = self.forward(p, batch["tokens"], embeds=batch.get("embeds"))
+        labels = batch["labels"]
+        if batch.get("embeds") is not None:
+            logits = logits[:, -labels.shape[1]:]   # frontend tokens: no labels
+        logits = logits.astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+        nll = logz - gold
+        mask = batch.get("mask")
+        if mask is None:
+            mask = jnp.ones_like(nll)
+        nll = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+        lb = 0.01 * aux / max(len(self.cfg.block_kinds()), 1)
+        return nll + lb, {"nll": nll, "lb": lb}

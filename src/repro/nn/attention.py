@@ -1,0 +1,311 @@
+"""Multi-head / grouped-query attention with causal, sliding-window,
+ring-buffer cache, and cross-attention call modes.
+
+Sharding-aware formulation: Q projections are stored and computed natively
+as (d_model, kv_heads, q_per_kv, head_dim) — 5-D activations — so tensor
+parallelism can shard whichever axis divides the mesh (kv_heads for MHA-ish
+archs, head_dim for kv=8 GQA archs on a 16-wide model axis).  Merged-head
+reshapes of sharded tensors (which break GSPMD propagation) never occur
+inside the model.  See distributed/sharding.py::attention_axis.
+
+The math lives in :func:`attend5` (5-D) with :func:`attend` as the 4-D
+wrapper used by kernels/refs/tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, fan_in_init, ones_init
+from repro.nn.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def attend5(q, k, v, *, q_pos=None, k_pos=None, causal=True, window=None,
+            k_valid=None, scale=None):
+    """q: (B, S, K, G, D); k/v: (B, T, K, D).  -> (B, S, K, G, D).
+
+    q_pos/k_pos: (B, S)/(B, T) absolute positions (or 1-D broadcastable);
+    k_valid: (B, T) mask for unwritten cache slots.
+    """
+    B, S, K, G, D = q.shape
+    T = k.shape[1]
+    scale = scale if scale is not None else D ** -0.5
+
+    if q_pos is None:
+        q_pos = jnp.arange(S)
+    if k_pos is None:
+        k_pos = jnp.arange(T)
+    q_pos = jnp.broadcast_to(q_pos, (B, S)) if q_pos.ndim == 1 else q_pos
+    k_pos = jnp.broadcast_to(k_pos, (B, T)) if k_pos.ndim == 1 else k_pos
+
+    logits = jnp.einsum("bskgd,btkd->bkgst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+
+    mask = jnp.ones((B, S, T), dtype=bool)
+    if causal:
+        mask &= k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    if k_valid is not None:
+        kv = jnp.broadcast_to(k_valid, (B, T)) if k_valid.ndim == 1 else k_valid
+        mask &= kv[:, None, :]
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def attend(q, k, v, *, q_pos=None, k_pos=None, causal=True, window=None,
+           k_valid=None, scale=None):
+    """4-D wrapper: q (B, S, H, D), kv-head of query h is h // (H/K)."""
+    B, S, H, D = q.shape
+    K = k.shape[2]
+    q5 = q.reshape(B, S, K, H // K, D)
+    out = attend5(q5, k, v, q_pos=q_pos, k_pos=k_pos, causal=causal,
+                  window=window, k_valid=k_valid, scale=scale)
+    return out.reshape(B, S, H, D)
+
+
+def attend_blocked(q, k, v, *, q_pos=None, k_pos=None, causal=True,
+                   window=None, k_valid=None, scale=None, bq: int = 256):
+    """Memory-tiled attention: lax.scan over query blocks so the (S, T)
+    score matrix never materializes (S*T can be 32k x 32k in prefill).
+    Numerically identical to :func:`attend5`.  q is 5-D."""
+    B, S, K, G, D = q.shape
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    elif q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos, (B, S))
+    bq = min(bq, S)
+    pad = -S % bq
+    if pad:
+        qp = jnp.pad(q, ((0, 0), (0, pad)) + ((0, 0),) * 3)
+        pp = jnp.pad(q_pos, ((0, 0), (0, pad)))
+    else:
+        qp, pp = q, q_pos
+    nq = qp.shape[1] // bq
+    qs = jnp.moveaxis(qp.reshape(B, nq, bq, K, G, D), 1, 0)
+    ps = jnp.moveaxis(pp.reshape(B, nq, bq), 1, 0)
+
+    def body(_, inp):
+        qb, pb = inp
+        ob = attend5(qb, k, v, q_pos=pb, k_pos=k_pos, causal=causal,
+                     window=window, k_valid=k_valid, scale=scale)
+        return (), ob
+
+    # flash-style recompute: never save per-block scores/probs for backward
+    # (they are O(bq * T * heads) fp32 per block — the dominant training-
+    # memory term at 4k-32k sequence; recomputing costs ~30% extra attention
+    # flops in bwd).  See EXPERIMENTS.md §Perf iteration 1.
+    body = jax.checkpoint(body, prevent_cse=False)
+    _, out = jax.lax.scan(body, (), (qs, ps))
+    out = jnp.moveaxis(out, 0, 1).reshape(B, nq * bq, K, G, D)
+    return out[:, :S]
+
+
+# score matrices larger than this (elements) switch to the blocked path
+_BLOCKED_THRESHOLD = 4 * 1024 * 1024
+
+
+@dataclasses.dataclass
+class KVCache:
+    """Ring-buffer KV cache.  ``size`` slots; slot for absolute position p is
+    p % size.  For full-attention archs size == max_len (no wrap); for
+    sliding-window archs size == window (the paper's "rotate-replace"
+    optimization generalized: overwrite the oldest token, rotate the mask).
+    """
+    k: jax.Array          # (B, size, K, D)
+    v: jax.Array          # (B, size, K, D)
+    pos: jax.Array        # (B,) int32 — number of tokens written so far
+
+    @property
+    def size(self):
+        return self.k.shape[1]
+
+    @staticmethod
+    def zeros(batch, size, n_kv, head_dim, dtype=jnp.bfloat16):
+        shape = (batch, size, n_kv, head_dim)
+        return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                       pos=jnp.zeros((batch,), jnp.int32))
+
+    def slot_positions(self):
+        """Absolute position currently held by each slot, and validity."""
+        B, size = self.k.shape[0], self.size
+        slots = jnp.arange(size)[None, :]                       # (1, size)
+        n = self.pos[:, None]                                   # (B, 1)
+        # slot s holds the largest p < n with p % size == s  (if any)
+        last = n - 1 - (n - 1 - slots) % size
+        valid = (slots < n) & (last >= 0)
+        return jnp.where(valid, last, 0), valid
+
+    def update(self, k_new, v_new):
+        """Append one token per sequence (k_new: (B, 1, K, D)).
+
+        Scatter-based in-place write: O(1) HBM traffic per token.  (A
+        one-hot multiply would read+write the ENTIRE cache each step —
+        §Perf iteration 4.)"""
+        b = jnp.arange(self.k.shape[0])
+        slot = self.pos % self.size
+        return KVCache(
+            k=self.k.at[b, slot].set(k_new[:, 0].astype(self.k.dtype)),
+            v=self.v.at[b, slot].set(v_new[:, 0].astype(self.v.dtype)),
+            pos=self.pos + 1)
+
+
+jax.tree_util.register_dataclass(KVCache, data_fields=["k", "v", "pos"], meta_fields=[])
+
+
+class Attention(Module):
+    """GQA attention with optional qk-norm, bias, RoPE, sliding window."""
+
+    def __init__(self, dim: int, n_heads: int, n_kv: int, head_dim: Optional[int] = None,
+                 *, bias: bool = False, qk_norm: bool = False, rope: bool = True,
+                 rope_theta: float = 10000.0, window: Optional[int] = None,
+                 causal: bool = True, dtype=jnp.float32, impl: str = "xla"):
+        assert n_heads % n_kv == 0
+        self.dim, self.n_heads, self.n_kv = dim, n_heads, n_kv
+        self.q_per_kv = n_heads // n_kv
+        self.head_dim = head_dim or dim // n_heads
+        self.bias, self.qk_norm = bias, qk_norm
+        self.rope, self.rope_theta, self.window = rope, rope_theta, window
+        self.causal, self.dtype, self.impl = causal, dtype, impl
+
+    def spec(self):
+        D, K, G, hd = self.dim, self.n_kv, self.q_per_kv, self.head_dim
+        dt = self.dtype
+        s = {
+            "wq": Param((D, K, G, hd), dt,
+                        ("embed", "kv_heads", "q_per_kv", "head_dim"),
+                        fan_in_init(0)),
+            "wk": Param((D, K, hd), dt, ("embed", "kv_heads", "head_dim"),
+                        fan_in_init(0)),
+            "wv": Param((D, K, hd), dt, ("embed", "kv_heads", "head_dim"),
+                        fan_in_init(0)),
+            "wo": Param((K, G, hd, D), dt,
+                        ("kv_heads", "q_per_kv", "head_dim", "embed"),
+                        fan_in_init(0)),
+        }
+        if self.bias:
+            z = lambda k, sh, d: jnp.zeros(sh, d)
+            s["bq"] = Param((K, G, hd), dt, ("kv_heads", "q_per_kv", "head_dim"), z)
+            s["bk"] = Param((K, hd), dt, ("kv_heads", "head_dim"), z)
+            s["bv"] = Param((K, hd), dt, ("kv_heads", "head_dim"), z)
+        if self.qk_norm:
+            s["q_norm"] = Param((hd,), dt, ("head_dim",), ones_init)
+            s["k_norm"] = Param((hd,), dt, ("head_dim",), ones_init)
+        return s
+
+    # -- projections --------------------------------------------------------
+    def _rms(self, x, scale):
+        xf = x.astype(jnp.float32)
+        y = xf * jax.lax.rsqrt(jnp.mean(jnp.square(xf), -1, keepdims=True) + 1e-6)
+        return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+    def qkv(self, p, x, positions):
+        """Project x -> (q (B,S,K,G,D), k (B,S,K,D), v) with qk-norm/RoPE."""
+        q = jnp.einsum("bsd,dkgh->bskgh", x, p["wq"])
+        k = jnp.einsum("bsd,dkh->bskh", x, p["wk"])
+        v = jnp.einsum("bsd,dkh->bskh", x, p["wv"])
+        if self.bias:
+            q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+        if self.qk_norm:
+            q, k = self._rms(q, p["q_norm"]), self._rms(k, p["k_norm"])
+        if self.rope:
+            q = apply_rope(q, positions, self.rope_theta)
+            k = apply_rope(k, positions, self.rope_theta)
+        return q, k, v
+
+    def out(self, p, o):
+        return jnp.einsum("bskgh,kghd->bsd", o, p["wo"])
+
+    def _attend(self, q, k, v, **kw):
+        S, T = q.shape[1], k.shape[1]
+        if S * T > _BLOCKED_THRESHOLD:
+            return attend_blocked(q, k, v, **kw)
+        return attend5(q, k, v, **kw)
+
+    # -- call modes ----------------------------------------------------------
+    def __call__(self, p, x, *, positions=None, return_kv: bool = False):
+        """Full-sequence self-attention (train / prefill)."""
+        B, S, _ = x.shape
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+        q, k, v = self.qkv(p, x, positions)
+        if self.impl == "pallas":
+            from repro.kernels import ops as kops
+            q4 = q.reshape(B, S, self.n_heads, self.head_dim)
+            o = kops.flash_attention(q4, k, v, causal=self.causal,
+                                     window=self.window)
+            o = o.reshape(q.shape)
+        else:
+            from repro.distributed.sharding import seq_parallel_attention
+            o = seq_parallel_attention(
+                q, k, v, positions, causal=self.causal, window=self.window,
+                attend_fn=self._attend)
+            if o is None:
+                o = self._attend(q, k, v, q_pos=positions, k_pos=positions,
+                                 causal=self.causal, window=self.window)
+        y = self.out(p, o)
+        return (y, (k, v)) if return_kv else y
+
+    def decode(self, p, x, cache: KVCache, positions):
+        """One-token decode: x (B, 1, d); positions (B, 1) absolute."""
+        q, k, v = self.qkv(p, x, positions)
+        cache = cache.update(k, v)
+        k_pos, k_valid = cache.slot_positions()
+        o = attend5(q, cache.k, cache.v, q_pos=positions, k_pos=k_pos,
+                    causal=True, window=self.window, k_valid=k_valid)
+        return self.out(p, o), cache
+
+    def cross(self, p, x, k_ctx, v_ctx, *, positions=None, k_pos=None,
+              self_attend: bool = True, rotate_replace: bool = False,
+              gather_idx=None):
+        """Cross-attention of x against an external KV (DCAT crossing /
+        whisper decoder cross-attn).
+
+        self_attend: x's own KV is appended (DCAT eq. 4 concatenation).
+        rotate_replace: instead of concatenating, overwrite the OLDEST
+        context slots with x's KV and rotate the positions (paper §4.1's
+        fixed-length-256 optimization — no concat, shapes stay 2^k-aligned).
+        gather_idx: (B,) Ψ⁻¹ index — k_ctx/v_ctx are then the DEDUPLICATED
+        (B_u, L, K, D) context.  On the Pallas path the gather is fused into
+        the kernel's BlockSpec index_map (never materialized in HBM); the
+        XLA path materializes the gather.
+        """
+        B, S, _ = x.shape
+        L = k_ctx.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(L, L + S), (B, S))
+        q, k, v = self.qkv(p, x, positions)
+
+        if (self.impl == "pallas" and gather_idx is not None
+                and not rotate_replace and self_attend and k_pos is None):
+            from repro.kernels import ops as kops
+            q4 = q.reshape(B, S, self.n_heads, self.head_dim)
+            o = kops.dcat_cross_attention(q4, k_ctx, v_ctx, k, v, gather_idx)
+            return self.out(p, o.reshape(q.shape))
+
+        if gather_idx is not None:
+            k_ctx = jnp.take(k_ctx, gather_idx, axis=0)
+            v_ctx = jnp.take(v_ctx, gather_idx, axis=0)
+        ctx_pos = (jnp.broadcast_to(jnp.arange(L), (B, L))
+                   if k_pos is None else jnp.broadcast_to(k_pos, (B, L)))
+        if rotate_replace:
+            k_full = jax.lax.dynamic_update_slice_in_dim(k_ctx, k, 0, axis=1)
+            v_full = jax.lax.dynamic_update_slice_in_dim(v_ctx, v, 0, axis=1)
+            kp = jax.lax.dynamic_update_slice_in_dim(ctx_pos, positions, 0, axis=1)
+        elif self_attend:
+            k_full = jnp.concatenate([k_ctx, k], axis=1)
+            v_full = jnp.concatenate([v_ctx, v], axis=1)
+            kp = jnp.concatenate([ctx_pos, positions], axis=1)
+        else:
+            k_full, v_full, kp = k_ctx, v_ctx, ctx_pos
+        o = self._attend(q, k_full, v_full, q_pos=positions, k_pos=kp,
+                         causal=self.causal, window=self.window)
+        return self.out(p, o)

@@ -1,0 +1,144 @@
+"""HSTU-style block (Zhai et al., ICML 2024, arXiv:2402.17152) — the
+alternative backbone the PinFM paper reports trying with results similar to
+GPT2 (§3.1: "We also tried HSTU architecture and got similar results").
+
+Pointwise aggregated attention: no softmax; SiLU-gated linear attention
+normalized by context length, with a learned elementwise gate U:
+
+    U, V, Q, K = split( SiLU( f1(norm(x)) ) )
+    A_ij       = SiLU( Q_i · K_j / sqrt(d) ) / n_i          (j <= i)
+    Y          = A @ V
+    out        = x + f2( norm2(Y) * U )
+
+Because aggregation is a causal sum (not a normalized softmax), the DCAT
+context/crossing split and ring-buffer decode reuse the same KV machinery
+as standard attention.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, fan_in_init
+from repro.nn.layers import RMSNorm
+from repro.nn.rope import apply_rope
+
+
+def hstu_attend(q, k, v, *, q_pos=None, k_pos=None, k_valid=None,
+                window=None, n_ctx=None):
+    """q: (B, S, H, D); k/v: (B, T, H, D).  SiLU attention, causal.
+
+    n_ctx: normalizer per query (defaults to q_pos+1 — the number of
+    attendable positions)."""
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if k_pos is None:
+        k_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    q_pos = jnp.broadcast_to(q_pos, (B, S)) if q_pos.ndim == 1 else q_pos
+    k_pos = jnp.broadcast_to(k_pos, (B, T)) if k_pos.ndim == 1 else k_pos
+    s = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (D ** -0.5)
+    mask = k_pos[:, None, :] <= q_pos[:, :, None]
+    if window is not None:
+        mask &= k_pos[:, None, :] > q_pos[:, :, None] - window
+    if k_valid is not None:
+        kv = jnp.broadcast_to(k_valid, (B, T)) if k_valid.ndim == 1 else k_valid
+        mask &= kv[:, None, :]
+    a = jax.nn.silu(s) * mask[:, None].astype(jnp.float32)
+    if n_ctx is None:
+        n_ctx = (q_pos + 1).astype(jnp.float32)
+    a = a / n_ctx[:, None, :, None]
+    y = jnp.einsum("bhst,bthd->bshd", a, v.astype(jnp.float32))
+    return y.astype(q.dtype)
+
+
+class HSTUBlock(Module):
+    def __init__(self, dim: int, n_heads: int, head_dim: Optional[int] = None,
+                 *, rope: bool = False, rope_theta: float = 10000.0,
+                 dtype=jnp.float32):
+        self.dim, self.n_heads = dim, n_heads
+        self.head_dim = head_dim or dim // n_heads
+        self.rope, self.rope_theta = rope, rope_theta
+        self.dtype = dtype
+        self.norm1 = RMSNorm(dim, dtype=dtype)
+        self.norm2 = RMSNorm(n_heads * self.head_dim, dtype=dtype)
+
+    def spec(self):
+        D, H, hd = self.dim, self.n_heads, self.head_dim
+        dt = self.dtype
+        return {
+            "norm1": self.norm1.spec(),
+            "norm2": self.norm2.spec(),
+            # u, v, q, k projections fused conceptually; stored separately so
+            # each keeps clean (embed -> heads x head_dim) sharding axes
+            "wu": Param((D, H, hd), dt, ("embed", "heads", "head_dim"),
+                        fan_in_init(0)),
+            "wv": Param((D, H, hd), dt, ("embed", "heads", "head_dim"),
+                        fan_in_init(0)),
+            "wq": Param((D, H, hd), dt, ("embed", "heads", "head_dim"),
+                        fan_in_init(0)),
+            "wk": Param((D, H, hd), dt, ("embed", "heads", "head_dim"),
+                        fan_in_init(0)),
+            "wo": Param((H, hd, D), dt, ("heads", "head_dim", "embed"),
+                        fan_in_init(0)),
+        }
+
+    def _uvqk(self, p, x, positions):
+        h = self.norm1(p["norm1"], x)
+        proj = lambda w: jax.nn.silu(jnp.einsum("bsd,dhk->bshk", h, p[w]))
+        u, v, q, k = proj("wu"), proj("wv"), proj("wq"), proj("wk")
+        if self.rope:
+            q = apply_rope(q, positions, self.rope_theta)
+            k = apply_rope(k, positions, self.rope_theta)
+        return u, v, q, k
+
+    def _out(self, p, y, u):
+        B, S = y.shape[0], y.shape[1]
+        flat = y.reshape(B, S, -1)
+        g = self.norm2(p["norm2"], flat).reshape(y.shape) * u
+        return jnp.einsum("bshk,hkd->bsd", g, p["wo"])
+
+    def fwd(self, p, x, positions, return_ctx: bool = False):
+        u, v, q, k = self._uvqk(p, x, positions)
+        y = hstu_attend(q, k, v, q_pos=positions, k_pos=positions)
+        out = x + self._out(p, y, u)
+        return (out, (k, v)) if return_ctx else (out, None)
+
+    def cross(self, p, x, ctx, positions, *, ctx_pos=None, gather_idx=None,
+              self_attend: bool = True):
+        """DCAT crossing for HSTU: candidates silu-attend to Ψ⁻¹(context KV)
+        plus their own KV."""
+        k_ctx, v_ctx = ctx
+        if gather_idx is not None:
+            k_ctx = jnp.take(k_ctx, gather_idx, axis=0)
+            v_ctx = jnp.take(v_ctx, gather_idx, axis=0)
+        B, S, _ = x.shape
+        L = k_ctx.shape[1]
+        if positions is None:
+            positions = jnp.broadcast_to(jnp.arange(L, L + S), (B, S))
+        u, v, q, k = self._uvqk(p, x, positions)
+        if self_attend:
+            k_full = jnp.concatenate([k_ctx, k], 1)
+            v_full = jnp.concatenate([v_ctx, v], 1)
+            kp = jnp.concatenate(
+                [jnp.broadcast_to(jnp.arange(L), (B, L)) if ctx_pos is None
+                 else jnp.broadcast_to(ctx_pos, (B, L)), positions], 1)
+        else:
+            k_full, v_full = k_ctx, v_ctx
+            kp = (jnp.broadcast_to(jnp.arange(L), (B, L)) if ctx_pos is None
+                  else jnp.broadcast_to(ctx_pos, (B, L)))
+        y = hstu_attend(q, k_full, v_full, q_pos=positions, k_pos=kp)
+        return x + self._out(p, y, u)
+
+    def step(self, p, x, cache, positions):
+        from repro.nn.attention import KVCache
+        u, v, q, k = self._uvqk(p, x, positions)
+        cache = cache.update(k, v)
+        k_pos, k_valid = cache.slot_positions()
+        y = hstu_attend(q, cache.k, cache.v, q_pos=positions, k_pos=k_pos,
+                        k_valid=k_valid)
+        return x + self._out(p, y, u), cache

@@ -1,0 +1,155 @@
+"""Basic layers: Linear, Embedding, LayerNorm/RMSNorm, MLPs."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, fan_in_init, normal_init, ones_init, zeros_init
+
+
+class Linear(Module):
+    """y = x @ w (+ b).  ``axes`` are the logical names of (in, out) dims."""
+
+    def __init__(self, in_dim: int, out_dim: int, *, axes=("embed", "mlp"),
+                 bias: bool = False, dtype=jnp.float32, init=None):
+        self.in_dim, self.out_dim = in_dim, out_dim
+        self.axes, self.bias, self.dtype = tuple(axes), bias, dtype
+        self.w_init = init or fan_in_init(axis=0)
+
+    def spec(self):
+        s = {"w": Param((self.in_dim, self.out_dim), self.dtype, self.axes, self.w_init)}
+        if self.bias:
+            s["b"] = Param((self.out_dim,), self.dtype, (self.axes[1],), zeros_init)
+        return s
+
+    def __call__(self, p, x):
+        y = jnp.einsum("...i,io->...o", x, p["w"])
+        if self.bias:
+            y = y + p["b"].astype(y.dtype)
+        return y
+
+
+class Embedding(Module):
+    def __init__(self, vocab: int, dim: int, *, axes=("vocab", "embed"),
+                 dtype=jnp.float32, init=None, pad_rows_to: int = 1):
+        self.vocab, self.dim = vocab, dim
+        # pad rows so odd vocabularies (50280, 51865) stay shardable over the
+        # 16-wide model axis; padded logit columns are masked at the head
+        self.rows = -(-vocab // pad_rows_to) * pad_rows_to
+        self.axes, self.dtype = tuple(axes), dtype
+        self.w_init = init or normal_init(0.02)
+
+    def spec(self):
+        return {"table": Param((self.rows, self.dim), self.dtype, self.axes, self.w_init)}
+
+    def __call__(self, p, ids):
+        return jnp.take(p["table"], ids, axis=0)
+
+    def attend(self, p, x):
+        """Logits against the table (weight tying)."""
+        return jnp.einsum("...d,vd->...v", x, p["table"])
+
+
+class RMSNorm(Module):
+    def __init__(self, dim: int, *, eps: float = 1e-6, axes=("embed",), dtype=jnp.float32):
+        self.dim, self.eps, self.axes, self.dtype = dim, eps, tuple(axes), dtype
+
+    def spec(self):
+        return {"scale": Param((self.dim,), self.dtype, self.axes, ones_init)}
+
+    def __call__(self, p, x):
+        dtype = x.dtype
+        x = x.astype(jnp.float32)
+        var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+        y = x * jax.lax.rsqrt(var + self.eps)
+        return (y * p["scale"].astype(jnp.float32)).astype(dtype)
+
+
+class LayerNorm(Module):
+    def __init__(self, dim: int, *, eps: float = 1e-5, axes=("embed",),
+                 bias: bool = True, dtype=jnp.float32):
+        self.dim, self.eps, self.axes = dim, eps, tuple(axes)
+        self.bias, self.dtype = bias, dtype
+
+    def spec(self):
+        s = {"scale": Param((self.dim,), self.dtype, self.axes, ones_init)}
+        if self.bias:
+            s["bias"] = Param((self.dim,), self.dtype, self.axes, zeros_init)
+        return s
+
+    def __call__(self, p, x):
+        dtype = x.dtype
+        x = x.astype(jnp.float32)
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + self.eps)
+        y = y * p["scale"].astype(jnp.float32)
+        if self.bias:
+            y = y + p["bias"].astype(jnp.float32)
+        return y.astype(dtype)
+
+
+def l2_normalize(x, axis=-1, eps=1e-6):
+    return x * jax.lax.rsqrt(jnp.sum(jnp.square(x), axis=axis, keepdims=True) + eps)
+
+
+_ACT = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+}
+
+
+class MLP(Module):
+    """Standard 2-layer MLP (GPT-2 / whisper style)."""
+
+    def __init__(self, dim: int, hidden: int, *, act: str = "gelu", bias: bool = True,
+                 dtype=jnp.float32):
+        self.up = Linear(dim, hidden, axes=("embed", "mlp"), bias=bias, dtype=dtype)
+        self.down = Linear(hidden, dim, axes=("mlp", "embed"), bias=bias, dtype=dtype)
+        self.act = _ACT[act]
+
+    def spec(self):
+        return {"up": self.up.spec(), "down": self.down.spec()}
+
+    def __call__(self, p, x):
+        return self.down(p["down"], self.act(self.up(p["up"], x)))
+
+
+class GLUMLP(Module):
+    """Gated MLP (llama / qwen / mixtral expert style): down(act(gate(x)) * up(x))."""
+
+    def __init__(self, dim: int, hidden: int, *, act: str = "silu", bias: bool = False,
+                 dtype=jnp.float32):
+        self.gate = Linear(dim, hidden, axes=("embed", "mlp"), bias=bias, dtype=dtype)
+        self.up = Linear(dim, hidden, axes=("embed", "mlp"), bias=bias, dtype=dtype)
+        self.down = Linear(hidden, dim, axes=("mlp", "embed"), bias=bias, dtype=dtype)
+        self.act = _ACT[act]
+
+    def spec(self):
+        return {"gate": self.gate.spec(), "up": self.up.spec(), "down": self.down.spec()}
+
+    def __call__(self, p, x):
+        return self.down(p["down"], self.act(self.gate(p["gate"], x)) * self.up(p["up"], x))
+
+
+class PointwiseMLPNorm(Module):
+    """PinFM's phi_in / phi_out / psi: pointwise MLP followed by l2 norm."""
+
+    def __init__(self, in_dim: int, out_dim: int, hidden: Optional[int] = None,
+                 *, act: str = "gelu", dtype=jnp.float32, l2: bool = True):
+        hidden = hidden or max(in_dim, out_dim)
+        self.fc1 = Linear(in_dim, hidden, axes=("embed", "mlp"), bias=True, dtype=dtype)
+        self.fc2 = Linear(hidden, out_dim, axes=("mlp", "embed"), bias=True, dtype=dtype)
+        self.act = _ACT[act]
+        self.l2 = l2
+
+    def spec(self):
+        return {"fc1": self.fc1.spec(), "fc2": self.fc2.spec()}
+
+    def __call__(self, p, x):
+        y = self.fc2(p["fc2"], self.act(self.fc1(p["fc1"], x)))
+        return l2_normalize(y) if self.l2 else y

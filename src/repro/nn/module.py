@@ -1,0 +1,176 @@
+"""Functional module system: parameter pytrees with logical sharding axes.
+
+Design: a model is described by a tree of :class:`Param` specs (shape, dtype,
+logical axes, initializer).  From the spec tree we can derive, without ever
+allocating memory:
+
+  * ``abstract(spec)``       -> jax.ShapeDtypeStruct tree (for .lower())
+  * ``logical_axes(spec)``   -> tree of logical-axis-name tuples
+  * ``partition_specs(...)`` -> jax.sharding.PartitionSpec tree via a policy
+
+and with a PRNG key we can materialize real parameters for small models:
+
+  * ``init(spec, key)``      -> tree of jnp arrays
+
+Every layer is a :class:`Module`: ``.spec()`` returns its Param tree and
+``__call__(params, *args)`` is a pure function of that tree.  Composite
+modules nest children specs under their own keys.  There is no tracing or
+metaclass magic; everything is a plain pytree, which keeps pjit/shard_map
+and scan-over-layers straightforward.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Param spec
+# ---------------------------------------------------------------------------
+
+InitFn = Callable[[jax.Array, Sequence[int], Any], jax.Array]
+
+
+def zeros_init(key, shape, dtype):
+    del key
+    return jnp.zeros(shape, dtype)
+
+
+def ones_init(key, shape, dtype):
+    del key
+    return jnp.ones(shape, dtype)
+
+
+def normal_init(stddev: float = 0.02) -> InitFn:
+    def f(key, shape, dtype):
+        return (stddev * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return f
+
+
+def fan_in_init(axis: int = 0) -> InitFn:
+    """LeCun-normal style init: stddev = 1/sqrt(fan_in)."""
+    def f(key, shape, dtype):
+        fan_in = shape[axis] if shape else 1
+        std = 1.0 / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+    return f
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    """Declarative spec for one parameter tensor."""
+    shape: tuple
+    dtype: Any
+    axes: tuple            # logical axis names, len == len(shape); None entries ok
+    init: InitFn = dataclasses.field(default_factory=lambda: fan_in_init())
+
+    def __post_init__(self):
+        if len(self.axes) != len(self.shape):
+            raise ValueError(f"axes {self.axes} rank != shape {self.shape} rank")
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities over Param specs
+# ---------------------------------------------------------------------------
+
+def _map_params(fn, spec):
+    return jax.tree.map(fn, spec, is_leaf=is_param)
+
+
+def abstract(spec):
+    """ShapeDtypeStruct tree for jit(...).lower() without allocation."""
+    return _map_params(lambda p: jax.ShapeDtypeStruct(p.shape, p.dtype), spec)
+
+
+def logical_axes(spec):
+    return _map_params(lambda p: p.axes, spec)
+
+
+def param_count(spec) -> int:
+    leaves = jax.tree.leaves(spec, is_leaf=is_param)
+    return int(sum(int(np.prod(p.shape)) for p in leaves))
+
+
+def param_bytes(spec) -> int:
+    leaves = jax.tree.leaves(spec, is_leaf=is_param)
+    return int(sum(int(np.prod(p.shape)) * jnp.dtype(p.dtype).itemsize for p in leaves))
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def init(spec, key: jax.Array):
+    """Materialize parameters.  Each leaf gets a key derived from its path,
+    so adding/removing parameters does not perturb unrelated leaves."""
+    flat, treedef = jax.tree.flatten_with_path(spec, is_leaf=is_param)
+    leaves = []
+    for path, p in flat:
+        h = int.from_bytes(
+            hashlib.blake2s(_path_str(path).encode(), digest_size=4).digest(), "big")
+        leaves.append(p.init(jax.random.fold_in(key, h), p.shape, p.dtype))
+    return jax.tree.unflatten(treedef, leaves)
+
+
+# ---------------------------------------------------------------------------
+# Partition specs from logical axes
+# ---------------------------------------------------------------------------
+
+def partition_specs(spec, policy: dict):
+    """Map each Param's logical axes through ``policy`` (logical -> mesh axis
+    name, or None, or a tuple of mesh axes).  Unknown logical names -> None.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    def one(p: Param):
+        return P(*[policy.get(a) for a in p.axes])
+    return _map_params(one, spec)
+
+
+def named_sharding_tree(spec, mesh, policy: dict):
+    from jax.sharding import NamedSharding
+    pspecs = partition_specs(spec, policy)
+    return jax.tree.map(lambda ps: NamedSharding(mesh, ps), pspecs,
+                        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+
+
+# ---------------------------------------------------------------------------
+# Module base class
+# ---------------------------------------------------------------------------
+
+class Module:
+    """Base class: stateless, config in __init__, params passed to __call__."""
+
+    def spec(self):
+        raise NotImplementedError
+
+    def init(self, key: jax.Array):
+        return init(self.spec(), key)
+
+    def abstract(self):
+        return abstract(self.spec())
+
+    def param_count(self) -> int:
+        return param_count(self.spec())
+
+
+def stack_specs(spec, n: int, axis_name: str = "layers"):
+    """Turn a single-layer Param tree into an n-layer stacked tree (leading
+    ``layers`` axis) for use with jax.lax.scan over layers."""
+    def one(p: Param):
+        base = p.init
+
+        def stacked_init(key, shape, dtype):
+            keys = jax.random.split(key, shape[0])
+            return jax.vmap(lambda k: base(k, shape[1:], dtype))(keys)
+
+        return Param((n, *p.shape), p.dtype, (axis_name, *p.axes), stacked_init)
+    return _map_params(one, spec)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN with GShard/Switch-style capacity dispatch.
+
+TPU-idiomatic design (see DESIGN.md §7): experts are NOT sharded across a
+mesh axis (8 and 60 do not divide 16); instead every expert's FFN weights are
+tensor-sharded over ``model`` (logical axis "mlp") and tokens are dispatched
+with capacity-factor one-hot einsums, grouped per sequence so the dispatch
+tensors stay small.  Routing therefore lowers to dense matmuls and reuses the
+same collectives as a dense FFN.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, stack_specs
+from repro.nn.layers import GLUMLP, Linear
+
+
+class MoE(Module):
+    def __init__(self, dim: int, hidden: int, n_experts: int, top_k: int, *,
+                 n_shared: int = 0, shared_hidden: Optional[int] = None,
+                 capacity_factor: float = 1.25, act: str = "silu",
+                 group_size: int = 512, router_dtype=jnp.float32,
+                 dtype=jnp.float32):
+        self.dim, self.hidden = dim, hidden
+        self.n_experts, self.top_k = n_experts, top_k
+        self.capacity_factor = capacity_factor
+        self.group_size = group_size
+        self.router = Linear(dim, n_experts, axes=("embed", "expert_dim"),
+                             bias=False, dtype=router_dtype)
+        self.expert = GLUMLP(dim, hidden, act=act, bias=False, dtype=dtype)
+        self.n_shared = n_shared
+        if n_shared:
+            self.shared = GLUMLP(dim, (shared_hidden or hidden) * n_shared,
+                                 act=act, bias=False, dtype=dtype)
+            # qwen2-moe: shared-expert gate (sigmoid) on the shared branch
+            self.shared_gate = Linear(dim, 1, axes=("embed", None),
+                                      bias=False, dtype=dtype)
+
+    def spec(self):
+        s = {"router": self.router.spec(),
+             "experts": stack_specs(self.expert.spec(), self.n_experts, "expert")}
+        if self.n_shared:
+            s["shared"] = self.shared.spec()
+            s["shared_gate"] = self.shared_gate.spec()
+        return s
+
+    def capacity(self, group: int) -> int:
+        c = int(group * self.top_k / self.n_experts * self.capacity_factor)
+        return max(4, -(-c // 4) * 4)   # round up to multiple of 4
+
+    def __call__(self, p, x):
+        """x: (B, S, d) -> (y, aux) where aux carries the load-balance loss.
+
+        Tokens are routed within GROUPS of ``group_size`` (GShard-style), so
+        the dispatch/combine one-hots stay (G, E, C)-sized regardless of the
+        global token count — essential for 60-expert configs at 4k sequence.
+        """
+        B0, S0, d = x.shape
+        G = min(self.group_size, B0 * S0)
+        total = B0 * S0
+        pad = -total % G
+        xf = x.reshape(total, d)
+        if pad:
+            xf = jnp.concatenate([xf, jnp.zeros((pad, d), x.dtype)], 0)
+        x = xf.reshape(-1, G, d)                 # (n_groups, G, d) as (B, S, d)
+        B, S = x.shape[0], x.shape[1]
+        E, k = self.n_experts, self.top_k
+        C = self.capacity(S)
+
+        logits = self.router(p["router"], x.astype(self.router.dtype))   # (B,S,E)
+        probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+
+        # top-k gates, renormalized over the selected experts
+        top_p, top_i = jax.lax.top_k(probs, k)                           # (B,S,k)
+        top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+        # position of each (token, choice) in its expert's buffer
+        onehot = jax.nn.one_hot(top_i, E, dtype=jnp.float32)             # (B,S,k,E)
+        flat = onehot.reshape(B, S * k, E)
+        pos = jnp.cumsum(flat, axis=1) - flat                            # (B,S*k,E)
+        pos = pos.reshape(B, S, k, E)
+        in_cap = pos < C
+        gates = top_p[..., None] * onehot * in_cap                       # (B,S,k,E)
+
+        # dispatch/combine tensors (B, S, E, C)
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C,
+                                dtype=jnp.float32)                       # (B,S,k,E,C)
+        combine = jnp.einsum("bske,bskec->bsec", gates, pos_oh)
+        dispatch = (combine > 0).astype(x.dtype)
+
+        xin = jnp.einsum("bsec,bsd->becd", dispatch, x)                  # (B,E,C,d)
+        yexp = jax.vmap(self.expert, in_axes=(0, 1), out_axes=1)(
+            p["experts"], xin)                                           # (B,E,C,d)
+        y = jnp.einsum("bsec,becd->bsd", combine.astype(x.dtype), yexp)
+
+        if self.n_shared:
+            g = jax.nn.sigmoid(self.shared_gate(p["shared_gate"], x))
+            y = y + g * self.shared(p["shared"], x)
+
+        # Switch-style load-balance loss
+        frac_tokens = jnp.mean(onehot.sum(2), axis=(0, 1))               # (E,)
+        frac_probs = jnp.mean(probs, axis=(0, 1))                        # (E,)
+        aux = {"lb_loss": E * jnp.sum(frac_tokens * frac_probs),
+               "router_overflow": 1.0 - jnp.mean(in_cap)}
+        y = y.reshape(-1, d)[:total].reshape(B0, S0, d)
+        return y, aux

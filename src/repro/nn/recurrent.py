@@ -1,0 +1,145 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+a_t = exp(-c * softplus(Lambda) * r_t),  r_t = sigmoid(W_a x_t),
+i_t = sigmoid(W_x x_t)
+
+Sequence mode uses an associative scan over the linear recurrence
+(h_t = a_t h_{t-1} + b_t); decode mode is a single fused step.  The carried
+state is the DCAT "context" analogue for hybrid archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, fan_in_init, zeros_init
+from repro.nn.layers import Linear, _ACT
+
+_C = 8.0  # Griffin's fixed recurrence-sharpness constant
+
+
+def linear_scan(a, b):
+    """Associative scan for h_t = a_t h_{t-1} + b_t over axis 1 (seq)."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    return jax.lax.associative_scan(combine, (a, b), axis=1)[1]
+
+
+@dataclasses.dataclass
+class RecurrentState:
+    h: jax.Array       # (B, width) RG-LRU hidden state
+    conv: jax.Array    # (B, conv_width-1, width) trailing conv inputs
+
+
+jax.tree_util.register_dataclass(RecurrentState, data_fields=["h", "conv"],
+                                 meta_fields=[])
+
+
+class RGLRU(Module):
+    def __init__(self, width: int, dtype=jnp.float32):
+        self.width, self.dtype = width, dtype
+
+    def spec(self):
+        w, dt = self.width, self.dtype
+        return {
+            "lam": Param((w,), dt, ("state",),
+                         lambda k, s, d: jnp.full(s, 0.65, d)),   # a ~ .9-.99 region
+            "wa": Param((w, w), dt, ("embed", "state"), fan_in_init(0)),
+            "wx": Param((w, w), dt, ("embed", "state"), fan_in_init(0)),
+            "ba": Param((w,), dt, ("state",), zeros_init),
+            "bx": Param((w,), dt, ("state",), zeros_init),
+        }
+
+    def gates(self, p, x):
+        r = jax.nn.sigmoid(x @ p["wa"] + p["ba"])
+        i = jax.nn.sigmoid(x @ p["wx"] + p["bx"])
+        log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r.astype(jnp.float32)
+        a = jnp.exp(log_a)
+        gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+            * (i.astype(jnp.float32) * x.astype(jnp.float32))
+        return a, gated
+
+    def __call__(self, p, x, h0: Optional[jax.Array] = None):
+        """x: (B, S, width).  Returns (y, h_last)."""
+        a, b = self.gates(p, x)
+        if h0 is not None:
+            b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+        h = linear_scan(a, b)
+        return h.astype(x.dtype), h[:, -1]
+
+    def step(self, p, x, h):
+        """x: (B, 1, width); h: (B, width)."""
+        a, b = self.gates(p, x)
+        h_new = a[:, 0] * h.astype(jnp.float32) + b[:, 0]
+        return h_new.astype(x.dtype)[:, None], h_new
+
+
+class CausalConv1D(Module):
+    """Depthwise causal conv (width w_conv), with decode-state support."""
+
+    def __init__(self, width: int, kernel: int = 4, dtype=jnp.float32):
+        self.width, self.kernel, self.dtype = width, kernel, dtype
+
+    def spec(self):
+        return {"w": Param((self.kernel, self.width), self.dtype,
+                           (None, "state"), fan_in_init(0)),
+                "b": Param((self.width,), self.dtype, ("state",), zeros_init)}
+
+    def __call__(self, p, x, prefix: Optional[jax.Array] = None):
+        """x: (B, S, width); prefix: (B, kernel-1, width) carried inputs."""
+        B, S, W = x.shape
+        if prefix is None:
+            prefix = jnp.zeros((B, self.kernel - 1, W), x.dtype)
+        xp = jnp.concatenate([prefix, x], axis=1)
+        y = sum(xp[:, i:i + S] * p["w"][i] for i in range(self.kernel))
+        return y + p["b"], xp[:, -(self.kernel - 1):]
+
+
+class RecurrentBlock(Module):
+    """Griffin recurrent block: two branches (gate: linear+GeLU; recurrent:
+    linear -> causal conv -> RG-LRU), merged multiplicatively."""
+
+    def __init__(self, dim: int, width: Optional[int] = None, *, conv_kernel: int = 4,
+                 dtype=jnp.float32):
+        self.dim = dim
+        self.width = width or dim
+        self.gate_proj = Linear(dim, self.width, axes=("embed", "state"), dtype=dtype)
+        self.rec_proj = Linear(dim, self.width, axes=("embed", "state"), dtype=dtype)
+        self.conv = CausalConv1D(self.width, conv_kernel, dtype=dtype)
+        self.lru = RGLRU(self.width, dtype=dtype)
+        self.out_proj = Linear(self.width, dim, axes=("state", "embed"), dtype=dtype)
+        self.act = _ACT["gelu"]
+
+    def spec(self):
+        return {"gate": self.gate_proj.spec(), "rec": self.rec_proj.spec(),
+                "conv": self.conv.spec(), "lru": self.lru.spec(),
+                "out": self.out_proj.spec()}
+
+    def init_state(self, batch: int, dtype=jnp.float32) -> RecurrentState:
+        return RecurrentState(
+            h=jnp.zeros((batch, self.width), dtype),
+            conv=jnp.zeros((batch, self.conv.kernel - 1, self.width), dtype))
+
+    def __call__(self, p, x, state: Optional[RecurrentState] = None):
+        g = self.act(self.gate_proj(p["gate"], x))
+        r = self.rec_proj(p["rec"], x)
+        conv_prefix = state.conv if state is not None else None
+        r, conv_carry = self.conv(p["conv"], r, conv_prefix)
+        h0 = state.h if state is not None else None
+        r, h_last = self.lru(p["lru"], r, h0)
+        y = self.out_proj(p["out"], g * r)
+        return y, RecurrentState(h=h_last, conv=conv_carry)
+
+    def step(self, p, x, state: RecurrentState):
+        g = self.act(self.gate_proj(p["gate"], x))
+        r = self.rec_proj(p["rec"], x)
+        r, conv_carry = self.conv(p["conv"], r, state.conv)
+        r, h_new = self.lru.step(p["lru"], r, state.h)
+        y = self.out_proj(p["out"], g * r)
+        return y, RecurrentState(h=h_new, conv=conv_carry)

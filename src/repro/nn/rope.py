@@ -1,0 +1,28 @@
+"""Rotary position embeddings (RoPE), half-rotation convention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    exp = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exp)          # (head_dim/2,)
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (batch, seq, *head_axes, head_dim) — any number of head axes
+    (1 for (B,S,K,D) keys, 2 for (B,S,K,G,D) queries); positions: (batch,
+    seq) or (seq,) int32.  Split-halves (rotate_half) convention.
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                        # (hd/2,)
+    if positions.ndim == 1:
+        positions = jnp.broadcast_to(positions, x.shape[:2])
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B, seq, hd/2)
+    n_head_axes = x.ndim - angles.ndim
+    for _ in range(n_head_axes):
+        angles = angles[..., None, :]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)

@@ -1,0 +1,206 @@
+"""Mamba-2 SSD (state-space duality, arXiv:2405.21060), chunked algorithm.
+
+Per head:  h_t = exp(A*dt_t) * h_{t-1} + dt_t * B_t x_t^T ;  y_t = C_t h_t + D x_t
+
+The chunked form (quadratic intra-chunk "attention" + linear inter-chunk
+state pass) is the TPU-friendly formulation: both pieces are MXU matmuls,
+and the inter-chunk scan carries only (H, N, P) states.  The carried state
+doubles as the DCAT context analogue for SSM archs (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.module import Module, Param, fan_in_init, zeros_init, ones_init
+from repro.nn.layers import Linear
+from repro.nn.recurrent import CausalConv1D
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, *, chunk: int = 64, h0=None):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,) negative; Bm/Cm: (B,S,G,N), H%G==0.
+
+    Returns (y: (B,S,H,P), h_last: (B,H,N,P)).
+
+    Sequential ``lax.scan`` over chunks: each step does the quadratic
+    intra-chunk piece (MXU matmuls over (Q, Q)) and one state update, so peak
+    memory is O(B*H*(Q^2 + N*P)) regardless of sequence length — this is
+    what lets ``prefill_32k``/``long_500k`` lower without materializing all
+    chunks at once.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    assert S % chunk == 0, f"seq {S} % chunk {chunk} != 0"
+    Nc, Q = S // chunk, chunk
+    rep = H // G
+    Af = A.astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+
+    # chunked views, chunk axis leading for scan
+    xr = x.reshape(Bsz, Nc, Q, H, P).transpose(1, 0, 2, 3, 4)
+    dtr = dt.reshape(Bsz, Nc, Q, H).transpose(1, 0, 2, 3)
+    Br = Bm.reshape(Bsz, Nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+    Cr = Cm.reshape(Bsz, Nc, Q, G, N).transpose(1, 0, 2, 3, 4)
+
+    h_init = (jnp.zeros((Bsz, H, N, P), jnp.float32) if h0 is None
+              else h0.astype(jnp.float32))
+
+    def body(h, inp):
+        xc, dtc, bc, cc = inp                          # (B,Q,H,P) (B,Q,H) ...
+        xc = xc.astype(jnp.float32)
+        dtc = dtc.astype(jnp.float32)
+        bc = jnp.repeat(bc.astype(jnp.float32), rep, axis=2)   # (B,Q,H,N)
+        cc = jnp.repeat(cc.astype(jnp.float32), rep, axis=2)
+        la = Af * dtc                                  # (B,Q,H)
+        cs = jnp.cumsum(la, axis=1)                    # inclusive
+        ci = cs.transpose(0, 2, 1)                     # (B,H,Q)
+        scores = jnp.einsum("bihn,bjhn->bhij", cc, bc)
+        diff = ci[..., :, None] - ci[..., None, :]
+        # double-where: exp(diff) overflows to inf in the masked j>i region
+        # (diff up to +|A|*dt*Q), and grad-of-where would propagate NaN from
+        # the dead branch — clamp the argument inside the mask first
+        diff = jnp.where(mask, diff, 0.0)
+        M = jnp.where(mask, scores * jnp.exp(diff), 0.0)
+        bx = xc * dtc[..., None]
+        y_intra = jnp.einsum("bhij,bjhp->bihp", M, bx)
+        y_inter = jnp.einsum("bihn,bhnp->bihp",
+                             cc * jnp.exp(cs)[..., None], h)
+        to_end = jnp.exp(cs[:, -1:, :] - cs)
+        s_c = jnp.einsum("bjhn,bjhp->bhnp", bc * to_end[..., None], bx)
+        h_new = h * jnp.exp(cs[:, -1, :])[..., None, None] + s_c
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    h_last, ys = jax.lax.scan(body, h_init, (xr, dtr, Br, Cr))
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(Bsz, S, H, P)
+    return y, h_last
+
+
+def ssd_step(x, dt, A, Bm, Cm, h):
+    """One decode step.  x: (B,H,P); dt: (B,H); Bm/Cm: (B,G,N); h: (B,H,N,P)."""
+    H, G = x.shape[1], Bm.shape[1]
+    rep = H // G
+    Br = jnp.repeat(Bm, rep, axis=1).astype(jnp.float32)
+    Cr = jnp.repeat(Cm, rep, axis=1).astype(jnp.float32)
+    a = jnp.exp(A.astype(jnp.float32) * dt.astype(jnp.float32))     # (B,H)
+    bx = dt.astype(jnp.float32)[..., None] * x.astype(jnp.float32)  # (B,H,P)
+    h_new = h * a[..., None, None] + jnp.einsum("bhn,bhp->bhnp", Br, bx)
+    y = jnp.einsum("bhn,bhnp->bhp", Cr, h_new)
+    return y.astype(x.dtype), h_new
+
+
+@dataclasses.dataclass
+class SSDState:
+    h: jax.Array       # (B, H, N, P)
+    conv: jax.Array    # (B, kernel-1, conv_dim)
+
+
+jax.tree_util.register_dataclass(SSDState, data_fields=["h", "conv"], meta_fields=[])
+
+
+class Mamba2Block(Module):
+    """Full Mamba-2 mixer block (in_proj -> conv -> SSD -> gated norm -> out).
+
+    Sharding note: z/x/B/C/dt use SEPARATE projections (the reference fused
+    in_proj + split would slice a tensor-sharded dim off shard boundaries).
+    x/z are sharded on "state" (d_inner, model axis); B/C/dt are small and
+    replicated.  The (d_inner) -> (heads, head_dim) reshape is
+    shard-boundary-aligned because d_inner/16 is a multiple of head_dim for
+    the assigned config (5120/16 = 320 = 5*64)."""
+
+    def __init__(self, dim: int, *, expand: int = 2, head_dim: int = 64,
+                 d_state: int = 128, n_groups: int = 1, conv_kernel: int = 4,
+                 chunk: int = 64, dtype=jnp.float32):
+        self.dim = dim
+        self.d_inner = expand * dim
+        self.head_dim, self.d_state, self.n_groups = head_dim, d_state, n_groups
+        self.n_heads = self.d_inner // head_dim
+        self.chunk = chunk
+        self.bc_dim = n_groups * d_state
+        self.dtype = dtype
+        self.z_proj = Linear(dim, self.d_inner, axes=("embed", "state"), dtype=dtype)
+        self.x_proj = Linear(dim, self.d_inner, axes=("embed", "state"), dtype=dtype)
+        self.b_proj = Linear(dim, self.bc_dim, axes=("embed", None), dtype=dtype)
+        self.c_proj = Linear(dim, self.bc_dim, axes=("embed", None), dtype=dtype)
+        self.dt_proj = Linear(dim, self.n_heads, axes=("embed", None), dtype=dtype)
+        self.conv_x = CausalConv1D(self.d_inner, conv_kernel, dtype=dtype)
+        self.conv_b = CausalConv1D(self.bc_dim, conv_kernel, dtype=dtype)
+        self.conv_c = CausalConv1D(self.bc_dim, conv_kernel, dtype=dtype)
+        self.out_proj = Linear(self.d_inner, dim, axes=("state", "embed"), dtype=dtype)
+
+    def spec(self):
+        H, dt = self.n_heads, self.dtype
+        return {
+            "z_proj": self.z_proj.spec(), "x_proj": self.x_proj.spec(),
+            "b_proj": self.b_proj.spec(), "c_proj": self.c_proj.spec(),
+            "dt_proj": self.dt_proj.spec(),
+            "conv_x": self.conv_x.spec(), "conv_b": self.conv_b.spec(),
+            "conv_c": self.conv_c.spec(),
+            "out_proj": self.out_proj.spec(),
+            "A_log": Param((H,), dt, ("heads",),
+                           lambda k, s, d: jnp.log(jnp.linspace(1.0, 16.0, s[0])).astype(d)),
+            "dt_bias": Param((H,), dt, ("heads",), zeros_init),
+            "D": Param((H,), dt, ("heads",), ones_init),
+            "norm": Param((self.d_inner,), dt, ("state",), ones_init),
+        }
+
+    def init_state(self, batch: int, dtype=jnp.float32) -> SSDState:
+        k = self.conv_x.kernel - 1
+        return SSDState(
+            h=jnp.zeros((batch, self.n_heads, self.d_state, self.head_dim), jnp.float32),
+            conv=jnp.zeros((batch, k, self.d_inner + 2 * self.bc_dim), dtype))
+
+    def _split(self, p, x, conv_prefix):
+        z = self.z_proj(p["z_proj"], x)
+        xs = self.x_proj(p["x_proj"], x)
+        Bm = self.b_proj(p["b_proj"], x)
+        Cm = self.c_proj(p["c_proj"], x)
+        dt = self.dt_proj(p["dt_proj"], x)
+        if conv_prefix is not None:
+            px, pb, pc = jnp.split(
+                conv_prefix, [self.d_inner, self.d_inner + self.bc_dim], -1)
+        else:
+            px = pb = pc = None
+        xs, cx = self.conv_x(p["conv_x"], xs, px)
+        Bm, cb = self.conv_b(p["conv_b"], Bm, pb)
+        Cm, cc = self.conv_c(p["conv_c"], Cm, pc)
+        xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+        dt = jax.nn.softplus(dt + p["dt_bias"])
+        conv_carry = jnp.concatenate([cx, cb, cc], axis=-1)
+        return z, xs, Bm, Cm, dt, conv_carry
+
+    def _finish(self, p, y, xs_heads, z):
+        y = y + p["D"][..., None] * xs_heads            # D skip, per head
+        y = y.reshape(*y.shape[:-2], self.d_inner)
+        # gated RMSNorm (mamba2's norm_before_gate=False path)
+        g = y * jax.nn.silu(z)
+        gf = g.astype(jnp.float32)
+        g = (gf * jax.lax.rsqrt(jnp.mean(jnp.square(gf), -1, keepdims=True) + 1e-6)
+             * p["norm"].astype(jnp.float32)).astype(y.dtype)
+        return self.out_proj(p["out_proj"], g)
+
+    def __call__(self, p, x, state: Optional[SSDState] = None):
+        B, S, _ = x.shape
+        prefix = state.conv if state is not None else None
+        z, xs, Bm, Cm, dt, conv_carry = self._split(p, x, prefix)
+        xh = xs.reshape(B, S, self.n_heads, self.head_dim)
+        Bm = Bm.reshape(B, S, self.n_groups, self.d_state)
+        Cm = Cm.reshape(B, S, self.n_groups, self.d_state)
+        A = -jnp.exp(p["A_log"].astype(jnp.float32))
+        h0 = state.h if state is not None else None
+        y, h_last = ssd_chunked(xh, dt, A, Bm, Cm, chunk=self.chunk, h0=h0)
+        out = self._finish(p, y, xh, z)
+        return out, SSDState(h=h_last, conv=conv_carry)
+
+    def step(self, p, x, state: SSDState):
+        """x: (B, 1, dim)."""
+        B = x.shape[0]
+        z, xs, Bm, Cm, dt, conv_carry = self._split(p, x, state.conv)
+        xh = xs.reshape(B, self.n_heads, self.head_dim)
+        y, h_new = ssd_step(xh, dt[:, 0], -jnp.exp(p["A_log"].astype(jnp.float32)),
+                            Bm.reshape(B, self.n_groups, self.d_state),
+                            Cm.reshape(B, self.n_groups, self.d_state), state.h)
+        out = self._finish(p, y[:, None], xh[:, None], z)
+        return out, SSDState(h=h_new, conv=conv_carry)

@@ -1,0 +1,4 @@
+from repro.quant.ptq import (QuantizedTable, quantize_table, dequantize_table,
+                             relative_l2_error, compression_ratio,
+                             quantized_lookup)
+from repro.quant.kv_cache import QuantizedKVCache

@@ -1,0 +1,2 @@
+from repro.serving.router import InferenceRouter, RankRequest
+from repro.serving.generate import GenerateConfig, Generator

@@ -1,0 +1,74 @@
+"""Batched autoregressive generation for the LM architectures (the serving
+loop behind the decode_32k / long_500k shapes): prefill once, then jitted
+single-token steps against the ring-buffer caches, with greedy / temperature
+/ top-k sampling."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import TransformerLM
+
+
+@dataclasses.dataclass
+class GenerateConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0        # 0 => greedy
+    top_k: Optional[int] = None
+    cache_size: Optional[int] = None   # default: prompt + new tokens
+
+
+def sample_token(logits, rng, cfg: GenerateConfig):
+    """logits: (B, V) -> (B,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lg = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k:
+        kth = jax.lax.top_k(lg, cfg.top_k)[0][:, -1:]
+        lg = jnp.where(lg < kth, -1e30, lg)
+    return jax.random.categorical(rng, lg).astype(jnp.int32)
+
+
+class Generator:
+    def __init__(self, model: TransformerLM, params,
+                 cfg: Optional[GenerateConfig] = None):
+        self.model, self.params = model, params
+        self.cfg = cfg or GenerateConfig()
+        self._step = jax.jit(self._decode_one)
+
+    def _decode_one(self, params, tok, caches, pos, rng):
+        logits, caches = self.model.decode_step(params, tok, caches, pos)
+        nxt = sample_token(logits[:, -1], rng, self.cfg)
+        return nxt, caches
+
+    def generate(self, prompts, *, rng=None):
+        """prompts: (B, S) int32 -> (B, max_new_tokens) int32.
+
+        Prefill runs through the decode path token-by-token for correctness
+        parity with serving (prompt lengths are uniform here; a production
+        server would batch a true prefill kernel — see launch/steps.py
+        prefill bundles)."""
+        cfg = self.cfg
+        prompts = jnp.asarray(prompts, jnp.int32)
+        B, S = prompts.shape
+        size = cfg.cache_size or (S + cfg.max_new_tokens)
+        caches = self.model.init_caches(B, size)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+        tok = prompts[:, :1]
+        nxt = tok[:, 0]
+        for t in range(S):
+            pos = jnp.full((B, 1), t, jnp.int32)
+            nxt, caches = self._step(self.params, prompts[:, t:t + 1],
+                                     caches, pos, jax.random.fold_in(rng, t))
+        out = [nxt]
+        for i in range(cfg.max_new_tokens - 1):
+            t = S + i
+            pos = jnp.full((B, 1), t, jnp.int32)
+            nxt, caches = self._step(self.params, out[-1][:, None], caches,
+                                     pos, jax.random.fold_in(rng, t))
+            out.append(nxt)
+        return jnp.stack(out, axis=1)

@@ -1,0 +1,52 @@
+"""Flat-npz checkpointing: param/optimizer pytrees -> one .npz + a JSON
+manifest of tree paths.  Single-host (this container); the save path is
+sharding-oblivious (device_get gathers addressable shards)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree.flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = []
+    for _, v in flat:
+        a = np.asarray(jax.device_get(v))
+        if a.dtype.kind == "V":      # ml_dtypes (bfloat16 etc.): store as f32
+            a = np.asarray(jax.device_get(v)).astype(np.float32)
+        leaves.append(a)
+    return paths, leaves, treedef
+
+
+def save_checkpoint(path: str, tree, step: int | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    paths, leaves, _ = _flatten(tree)
+    arrays = {f"a{i}": leaf for i, leaf in enumerate(leaves)}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    manifest = {"paths": paths, "step": step}
+    with open(path.removesuffix(".npz") + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def load_checkpoint(path: str, like_tree) -> Any:
+    """Restore into the structure of ``like_tree`` (paths must match)."""
+    base = path.removesuffix(".npz")
+    with open(base + ".json") as f:
+        manifest = json.load(f)
+    data = np.load(base + ".npz")
+    paths, _, treedef = _flatten(like_tree)
+    if paths != manifest["paths"]:
+        missing = set(manifest["paths"]) ^ set(paths)
+        raise ValueError(f"checkpoint tree mismatch: {sorted(missing)[:5]}...")
+    leaves = [data[f"a{i}"] for i in range(len(paths))]
+    like_leaves = jax.tree.leaves(like_tree)
+    import jax.numpy as jnp
+    leaves = [jnp.asarray(l, dtype=ll.dtype) for l, ll in
+              zip(leaves, like_leaves)]
+    return jax.tree.unflatten(treedef, leaves)

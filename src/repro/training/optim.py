@@ -1,0 +1,104 @@
+"""AdamW optimizer + LR schedules, built on raw pytrees (no optax).
+
+Supports per-subtree LR multipliers, needed for PinFM fine-tuning where the
+pretrained module runs at ~1/10 of the ranking-model LR (paper §3.2).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # map from top-level param-tree key -> lr multiplier (e.g. {"pinfm": 0.1})
+    lr_mults: Optional[dict] = None
+    schedule: str = "cosine"         # constant | linear | cosine
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def make_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def sched(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+        if cfg.schedule == "constant":
+            decay = 1.0
+        elif cfg.schedule == "linear":
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            decay = 1.0 - (1.0 - cfg.min_lr_ratio) * frac
+        else:  # cosine
+            frac = jnp.clip((step - cfg.warmup_steps)
+                            / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+            decay = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+                1 + jnp.cos(jnp.pi * frac))
+        return cfg.lr * warm * decay
+    return sched
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree):
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def _lr_mult_tree(params, lr_mults):
+    if not lr_mults:
+        return jax.tree.map(lambda _: 1.0, params)
+    return {k: jax.tree.map(lambda _: float(lr_mults.get(k, 1.0)), v)
+            for k, v in params.items()}
+
+
+def adamw_update(cfg: AdamWConfig, params, grads, state):
+    """Returns (new_params, new_state, metrics)."""
+    sched = make_schedule(cfg)
+    step = state["step"] + 1
+    lr = sched(step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) if cfg.grad_clip else 1.0
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    mults = _lr_mult_tree(params, cfg.lr_mults)
+
+    def upd(p, g, m, v, mult):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mh, vh = m / bc1, v / bc2
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:      # decay matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * mult * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    flat_mu = jax.tree.leaves(mults)
+    new_p, new_m, new_v = [], [], []
+    for p, g, m, v, mu in zip(flat_p, flat_g, flat_m, flat_v, flat_mu):
+        a, b, c = upd(p, g, m, v, mu)
+        new_p.append(a); new_m.append(b); new_v.append(c)
+    new_params = jax.tree.unflatten(treedef, new_p)
+    new_state = {"m": jax.tree.unflatten(treedef, new_m),
+                 "v": jax.tree.unflatten(treedef, new_v), "step": step}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,78 @@
+"""Generic pjit training loop.
+
+``make_train_step`` builds a donated, jitted (params, opt_state, batch) ->
+(params, opt_state, metrics) step for any model exposing
+``loss(params, batch) -> (scalar, metrics)``; ``loss_fn`` may be overridden
+(e.g. the fine-tuning ranking loss threads an rng).  With a mesh, param and
+batch shardings come from the logical-axis policy (distributed/sharding.py).
+"""
+from __future__ import annotations
+
+import functools
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import (batch_axes, data_pspec, make_policy,
+                                        param_shardings)
+from repro.training.optim import AdamWConfig, adamw_init, adamw_update
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: AdamWConfig, *,
+                    has_rng: bool = False):
+    """loss_fn(params, batch[, rng]) -> (loss, metrics)."""
+
+    def step(params, opt_state, batch, rng=None):
+        if has_rng:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch, rng)
+        else:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        params, opt_state, opt_m = adamw_update(opt_cfg, params, grads,
+                                                opt_state)
+        out = {"loss": loss, **opt_m}
+        if isinstance(metrics, dict):
+            out.update({k: v for k, v in metrics.items()
+                        if jnp.ndim(v) == 0})
+        return params, opt_state, out
+
+    return step
+
+
+def jit_train_step(step, mesh=None, param_spec_tree=None, policy=None):
+    if mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1))
+    pshard = param_shardings(param_spec_tree, mesh, policy)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    rep = NamedSharding(mesh, P())
+    return jax.jit(step, donate_argnums=(0, 1),
+                   in_shardings=(pshard, None, None, None),
+                   out_shardings=(pshard, None, None))
+
+
+def train_loop(step_fn, params, opt_state, batches: Iterator[dict],
+               *, rng: Optional[jax.Array] = None, log_every: int = 10,
+               log_fn=print):
+    """Runs the loop; returns (params, opt_state, history)."""
+    history = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        batch = jax.tree.map(jnp.asarray, batch)
+        args = (params, opt_state, batch)
+        if rng is not None:
+            args = args + (jax.random.fold_in(rng, i),)
+        params, opt_state, metrics = step_fn(*args)
+        history.append({k: float(v) for k, v in metrics.items()})
+        if log_every and (i % log_every == 0):
+            dt = time.time() - t0
+            log_fn(f"step {i:5d}  loss {history[-1]['loss']:.4f}  "
+                   f"({dt:.1f}s)")
+    return params, opt_state, history
+
+
+def init_train_state(model, opt_cfg: AdamWConfig, key):
+    params = model.init(key)
+    return params, adamw_init(params)

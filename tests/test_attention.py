@@ -1,0 +1,138 @@
+"""Attention math: reference vs naive, blocked tiling, ring-buffer cache,
+RoPE — including hypothesis property tests on cache slot bookkeeping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn.attention import (Attention, KVCache, attend, attend5,
+                                attend_blocked)
+from repro.nn.rope import apply_rope
+
+
+def naive_attention(q, k, v, causal=True, window=None):
+    """O(S*T) dense softmax attention, fp64-ish reference."""
+    B, S, H, D = q.shape
+    T, K = k.shape[1], k.shape[2]
+    G = H // K
+    out = np.zeros_like(np.asarray(q, np.float32))
+    qn, kn, vn = map(lambda x: np.asarray(x, np.float32), (q, k, v))
+    for b in range(B):
+        for h in range(H):
+            kk = kn[b, :, h // G]
+            vv = vn[b, :, h // G]
+            s = qn[b, :, h] @ kk.T / np.sqrt(D)
+            for i in range(S):
+                for j in range(T):
+                    if causal and j > i:
+                        s[i, j] = -np.inf
+                    if window is not None and j <= i - window:
+                        s[i, j] = -np.inf
+            p = np.exp(s - s.max(-1, keepdims=True))
+            p /= p.sum(-1, keepdims=True)
+            out[b, :, h] = p @ vv
+    return out
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 8),
+                                           (False, None)])
+@pytest.mark.parametrize("H,K", [(4, 4), (4, 2), (4, 1)])
+def test_attend_matches_naive(causal, window, H, K):
+    key = jax.random.PRNGKey(0)
+    B, S, D = 2, 24, 16
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    out = attend(q, k, v, causal=causal, window=window)
+    ref = naive_attention(q, k, v, causal, window)
+    np.testing.assert_allclose(np.asarray(out), ref, atol=2e-5)
+
+
+def test_blocked_equals_direct():
+    key = jax.random.PRNGKey(1)
+    B, S, K, G, D = 2, 100, 2, 2, 16
+    q = jax.random.normal(key, (B, S, K, G, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    for bq in (16, 32, 64, 100, 128):
+        out = attend_blocked(q, k, v, bq=bq)
+        ref = attend5(q, k, v)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-6)
+
+
+@given(size=st.integers(2, 16), n=st.integers(0, 40))
+@settings(max_examples=30, deadline=None)
+def test_cache_slot_positions_property(size, n):
+    """After n appends into a ring of `size`, the valid slots hold exactly
+    the last min(n, size) positions."""
+    cache = KVCache.zeros(1, size, 1, 4)
+    cache = KVCache(cache.k, cache.v, jnp.array([n], jnp.int32))
+    pos, valid = cache.slot_positions()
+    pos, valid = np.asarray(pos[0]), np.asarray(valid[0])
+    expect = set(range(max(0, n - size), n))
+    got = set(pos[valid].tolist())
+    assert got == expect
+
+
+def test_cache_update_ring_semantics():
+    B, size, K, D = 2, 4, 1, 2
+    cache = KVCache.zeros(B, size, K, D, jnp.float32)
+    for t in range(7):
+        k_new = jnp.full((B, 1, K, D), float(t))
+        cache = cache.update(k_new, k_new)
+    # positions 3..6 live in slots 3,0,1,2
+    np.testing.assert_allclose(np.asarray(cache.k[0, :, 0, 0]),
+                               [4, 5, 6, 3])
+    pos, valid = cache.slot_positions()
+    assert valid.all()
+    np.testing.assert_array_equal(np.asarray(pos[0]), [4, 5, 6, 3])
+
+
+def test_decode_equals_full_attention():
+    """Ring-buffer decode (size >= S) reproduces full causal attention."""
+    key = jax.random.PRNGKey(2)
+    att = Attention(32, 4, 2, 8, rope=True)
+    p = att.init(key)
+    B, S = 2, 10
+    x = jax.random.normal(jax.random.fold_in(key, 3), (B, S, 32))
+    full = att(p, x)
+    cache = KVCache.zeros(B, 16, 2, 8, jnp.float32)
+    outs = []
+    for t in range(S):
+        y, cache = att.decode(p, x[:, t:t + 1], cache,
+                              jnp.full((B, 1), t, jnp.int32))
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-5)
+
+
+def test_sliding_window_decode_ring():
+    """size == window ring cache == full cache with window mask."""
+    key = jax.random.PRNGKey(4)
+    att = Attention(32, 4, 2, 8, rope=True, window=4)
+    p = att.init(key)
+    B, S = 1, 12
+    x = jax.random.normal(key, (B, S, 32))
+    full = att(p, x)
+    cache = KVCache.zeros(B, 4, 2, 8, jnp.float32)     # ring of window size
+    outs = []
+    for t in range(S):
+        y, cache = att.decode(p, x[:, t:t + 1], cache,
+                              jnp.full((B, 1), t, jnp.int32))
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=1e-5)
+
+
+def test_rope_rotation_invariance():
+    """<rope(q,p), rope(k,p)> depends only on relative position."""
+    D = 16
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+    def dot_at(pq, pk):
+        qq = apply_rope(q, jnp.array([[pq]]))
+        kk = apply_rope(k, jnp.array([[pk]]))
+        return float(jnp.sum(qq * kk))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-6  # sanity: not constant

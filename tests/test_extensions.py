@@ -1,0 +1,156 @@
+"""HSTU backbone, generation driver, segmentation, retrieval eval."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCAT
+from repro.models.config import get_config
+from repro.models.transformer import TransformerBody, TransformerLM
+
+
+def test_hstu_dcat_equivalence():
+    cfg = smoke_config(get_config("pinfm-hstu"))
+    body = TransformerBody(cfg)
+    p = body.init(jax.random.PRNGKey(0))
+    Bu, L, Sc = 3, 12, 2
+    x_u = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (Bu, L, cfg.d_model))
+    inv = np.array([0, 0, 0, 1, 1, 2, 2, 2], np.int32)
+    x_c = 0.1 * jax.random.normal(jax.random.PRNGKey(2),
+                                  (len(inv), Sc, cfg.d_model))
+    dcat = DCAT(body)
+    _, _, ctxs = dcat.context(p, x_u)
+    y_d, _ = dcat.crossing(p, x_c, inv, ctxs, ctx_len=L)
+    y_r, _ = dcat.reference_scores(p, x_u, x_c, inv)
+    np.testing.assert_allclose(np.asarray(y_d), np.asarray(y_r), atol=5e-5)
+
+
+def test_hstu_decode_matches_forward():
+    cfg = smoke_config(get_config("pinfm-hstu"))
+    body = TransformerBody(cfg)
+    p = body.init(jax.random.PRNGKey(0))
+    B, L = 2, 10
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (B, L, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(L), (B, L))
+    full, _, _ = body.forward(p, x, pos)
+    caches = body.init_caches(B, 16)
+    outs = []
+    for t in range(L):
+        y, caches = body.decode(p, x[:, t:t + 1], caches,
+                                jnp.full((B, 1), t, jnp.int32))
+        outs.append(y)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=2e-5)
+
+
+def test_hstu_pretrains():
+    from repro.core.pretrain import PinFMConfig, PinFMPretrain
+    from repro.core.losses import LossConfig
+    cfg = smoke_config(get_config("pinfm-hstu"))
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=16,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    m = PinFMPretrain(pcfg, cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    key = jax.random.PRNGKey(1)
+    batch = {"ids": jax.random.randint(key, (3, 16), 0, 1 << 20),
+             "actions": jax.random.randint(key, (3, 16), 0, 6),
+             "surfaces": jax.random.randint(key, (3, 16), 0, 3),
+             "valid": jnp.ones((3, 16), bool),
+             "user_id": jnp.arange(3, dtype=jnp.int32)}
+    loss, _ = m.loss(p, batch)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda pp: m.loss(pp, batch)[0])(p)
+    assert all(bool(jnp.all(jnp.isfinite(l))) for l in jax.tree.leaves(g))
+
+
+# -- generation ---------------------------------------------------------------
+
+def test_generator_greedy_matches_argmax_rollout():
+    from repro.serving.generate import GenerateConfig, Generator
+    cfg = smoke_config(get_config("qwen3-4b"))
+    model = TransformerLM(cfg)
+    p = model.init(jax.random.PRNGKey(0))
+    prompts = jax.random.randint(jax.random.PRNGKey(1), (2, 5), 0, cfg.vocab)
+    gen = Generator(model, p, GenerateConfig(max_new_tokens=4))
+    out = gen.generate(prompts)
+    assert out.shape == (2, 4)
+    # manual rollout via full forward re-encoding
+    toks = prompts
+    for _ in range(4):
+        logits, _ = model.forward(p, toks)
+        nxt = jnp.argmax(logits[:, -1], -1).astype(jnp.int32)
+        toks = jnp.concatenate([toks, nxt[:, None]], 1)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(toks[:, 5:]))
+
+
+def test_generator_topk_sampling_valid_tokens():
+    from repro.serving.generate import GenerateConfig, Generator
+    cfg = smoke_config(get_config("qwen1.5-0.5b"))
+    model = TransformerLM(cfg)
+    p = model.init(jax.random.PRNGKey(0))
+    gen = Generator(model, p, GenerateConfig(max_new_tokens=3,
+                                             temperature=1.0, top_k=5))
+    out = gen.generate(jnp.zeros((2, 3), jnp.int32))
+    assert out.shape == (2, 3)
+    assert (np.asarray(out) >= 0).all() and (np.asarray(out) < cfg.vocab).all()
+
+
+# -- segmentation -------------------------------------------------------------
+
+def test_segment_history_roundtrip():
+    from repro.data.segment import pack_segments, realtime_sequence, \
+        segment_history
+    rng = np.random.RandomState(0)
+    n = 53
+    ev = {"ids": rng.randint(0, 100, n),
+          "actions": rng.randint(0, 6, n),
+          "surfaces": rng.randint(0, 3, n),
+          "timestamps": np.sort(rng.rand(n).astype(np.float32))}
+    segs = segment_history(ev, 16)
+    assert len(segs) == 4                       # 16+16+16+5
+    assert segs[-1]["valid"].sum() == 5
+    recon = np.concatenate([s["ids"][s["valid"]] for s in segs])
+    np.testing.assert_array_equal(recon, ev["ids"])
+
+    rt = realtime_sequence(ev, 16)
+    np.testing.assert_array_equal(rt["ids"][rt["valid"]], ev["ids"][-16:])
+    rt2 = realtime_sequence({k: v[:4] for k, v in ev.items()}, 16)
+    assert rt2["valid"].sum() == 4              # left-padded short history
+
+    batches = list(pack_segments(segs, 2))
+    assert len(batches) == 2 and batches[0]["ids"].shape == (2, 16)
+
+
+def test_segment_unsorted_input_sorted():
+    from repro.data.segment import segment_history
+    ev = {"ids": np.array([3, 1, 2]), "actions": np.zeros(3, int),
+          "surfaces": np.zeros(3, int),
+          "timestamps": np.array([3.0, 1.0, 2.0], np.float32)}
+    segs = segment_history(ev, 4)
+    np.testing.assert_array_equal(segs[0]["ids"][:3], [1, 2, 3])
+
+
+# -- retrieval eval -----------------------------------------------------------
+
+def test_next_item_recall_perfect_model():
+    """A model whose H_i exactly embeds the next item must get recall 1."""
+    from repro.core.eval import next_item_recall
+
+    class Oracle:
+        def encode(self, params, ids, actions, surfaces, **kw):
+            z = self.targets(params, jnp.roll(ids, -1, axis=1))
+            return z, None, None
+
+        def targets(self, params, ids):
+            return jax.nn.one_hot(ids % 97, 97)
+
+        def pos_action_mask(self, actions):
+            return actions == 1
+
+    b = {"ids": np.arange(20).reshape(2, 10) % 97,
+         "actions": np.ones((2, 10), np.int32),
+         "surfaces": np.zeros((2, 10), np.int32)}
+    r = next_item_recall(Oracle(), None, [b], k=1)
+    assert r["recall"] == 1.0 and r["n"] == 18

@@ -1,0 +1,178 @@
+"""Fine-tuning ranking model: variants, cold-start techniques, router."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dcat import DCATOptions
+from repro.core.finetune import VARIANTS, FinetuneConfig, PinFMRankingModel
+from repro.core.metrics import hit_at_k
+from repro.core.pretrain import PinFMConfig
+from repro.core.losses import LossConfig
+from repro.configs import smoke_config
+from repro.models.config import get_config
+
+L = 16
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    return pcfg, bb
+
+
+def _batch(key, Bu=3, G=4):
+    Bc = Bu * G
+    ks = jax.random.split(key, 10)
+    return {
+        "seq_ids": jax.random.randint(ks[0], (Bu, L), 0, 1 << 20),
+        "seq_actions": jax.random.randint(ks[1], (Bu, L), 0, 6),
+        "seq_surfaces": jax.random.randint(ks[2], (Bu, L), 0, 3),
+        "seq_valid": jnp.ones((Bu, L), bool),
+        "seq_user_id": jnp.arange(Bu, dtype=jnp.int32),
+        "inverse_idx": jnp.repeat(jnp.arange(Bu), G),
+        "cand_ids": jax.random.randint(ks[3], (Bc,), 0, 1 << 20),
+        "graphsage": jax.random.normal(ks[4], (Bc, 64)),
+        "cand_feats": jax.random.normal(ks[5], (Bc, 32)),
+        "user_feats": jax.random.normal(ks[6], (Bu, 32)),
+        "cand_age_days": jnp.asarray([3.0, 10.0, 40.0] * G + [100.0] * 0)[:Bc],
+        "labels": jax.random.bernoulli(ks[7], 0.3, (Bc, 3)).astype(jnp.float32),
+    }
+
+
+@pytest.mark.parametrize("variant", VARIANTS)
+def test_variant_runs_and_grads(variant, setup):
+    pcfg, bb = setup
+    cfg = FinetuneConfig(variant=variant, seq_len=L)
+    class _M(PinFMRankingModel):
+        pass
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    model.pinfm = type(model.pinfm)(pcfg, bb)       # small backbone
+    model.dcat = type(model.dcat)(model.pinfm.body, cfg.dcat)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(jax.random.PRNGKey(1))
+    loss, (metrics, logits) = model.loss(params, batch,
+                                         rng=jax.random.PRNGKey(2))
+    assert logits.shape == (12, 3)
+    assert bool(jnp.isfinite(loss))
+    g = jax.grad(lambda p: model.loss(p, batch, rng=jax.random.PRNGKey(2))[0]
+                 )(params)
+    gn = sum(float(jnp.sum(jnp.abs(l))) for l in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
+def _small_model(pcfg, bb, cfg):
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    from repro.core.pretrain import PinFMPretrain
+    from repro.core.dcat import DCAT
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    return model
+
+
+def test_cir_changes_training_forward_only(setup):
+    """CIR randomizes ids only in training mode (10%); eval is unaffected."""
+    pcfg, bb = setup
+    cfg = FinetuneConfig(variant="base", seq_len=L, cir_prob=1.0)
+    model = _small_model(pcfg, bb, cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(jax.random.PRNGKey(1))
+    eval1, _, _ = model.forward(params, batch, train=False)
+    eval2, _, _ = model.forward(params, batch, train=False,
+                                rng=jax.random.PRNGKey(5))
+    np.testing.assert_array_equal(np.asarray(eval1), np.asarray(eval2))
+    tr, _, _ = model.forward(params, batch, train=True,
+                             rng=jax.random.PRNGKey(5))
+    assert float(jnp.max(jnp.abs(tr - eval1))) > 1e-6
+
+
+def test_idd_dropout_only_on_fresh(setup):
+    pcfg, bb = setup
+    cfg = FinetuneConfig(variant="base", seq_len=L, use_cir=False,
+                         idd_p_fresh=0.9999, idd_p_mid=0.0)
+    model = _small_model(pcfg, bb, cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch(jax.random.PRNGKey(1))
+    batch["cand_age_days"] = jnp.asarray([1.0] * 6 + [100.0] * 6)
+    f_train, _, _ = model.pinfm_features(params, batch, train=True,
+                                         rng=jax.random.PRNGKey(3))
+    f_eval, _, _ = model.pinfm_features(params, batch, train=False)
+    fresh_zeroed = np.asarray(jnp.all(f_train[:6] == 0, axis=-1))
+    assert fresh_zeroed.all()       # p~1 dropout zeroes fresh rows
+    old_same = np.allclose(np.asarray(f_train[6:]), np.asarray(f_eval[6:]))
+    assert old_same
+
+
+def test_hit_at_k():
+    scores = jnp.asarray([[0.9, 0.8, 0.7, 0.1], [0.1, 0.2, 0.3, 0.9]])
+    labels = jnp.asarray([[1, 0, 1, 1], [0, 0, 0, 1]])
+    # group 1 top3 = items 0,1,2 -> 2 hits; group 2 top3 = 3,2,1 -> 1 hit
+    assert float(hit_at_k(scores, labels, k=3)) == pytest.approx(0.5)
+
+
+def test_router_matches_direct_scoring(setup):
+    from repro.serving.router import InferenceRouter, RankRequest
+    pcfg, bb = setup
+    cfg = FinetuneConfig(variant="graphsage-lt", seq_len=L)
+    model = _small_model(pcfg, bb, cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    router = InferenceRouter(model, params, max_unique=4, max_candidates=8)
+    rng = np.random.RandomState(0)
+    seq = rng.randint(0, 1000, L)
+    reqs = [RankRequest(seq_ids=seq,
+                        seq_actions=rng.randint(0, 6, L),
+                        seq_surfaces=rng.randint(0, 3, L),
+                        cand_ids=rng.randint(0, 1000, 3),
+                        cand_feats=rng.randn(3, 32).astype(np.float32),
+                        user_feats=rng.randn(32).astype(np.float32),
+                        graphsage=rng.randn(3, 64).astype(np.float32))
+            for _ in range(2)]
+    # identical sequences -> dedup to 1 unique user
+    reqs[1].seq_actions = reqs[0].seq_actions
+    reqs[1].seq_surfaces = reqs[0].seq_surfaces
+    out = router.score(reqs)
+    assert len(out) == 2 and out[0].shape == (3, 3)
+    assert router.stats[-1]["unique_users"] == 1
+    assert (out[0] >= 0).all() and (out[0] <= 1).all()
+
+
+def test_router_user_embedding_cache(setup):
+    """Late-fusion serving cache: cached path == uncached path; repeat
+    sequences hit the LRU and skip the transformer."""
+    from repro.serving.router import (InferenceRouter, RankRequest,
+                                      UserEmbeddingCache)
+    pcfg, bb = setup
+    cfg = FinetuneConfig(variant="lite-last", seq_len=L)
+    model = _small_model(pcfg, bb, cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    cache = UserEmbeddingCache(capacity=16)
+    router = InferenceRouter(model, params, max_unique=4, max_candidates=8,
+                             user_cache=cache)
+    rng = np.random.RandomState(0)
+
+    def mk(seed):
+        r = np.random.RandomState(seed)
+        return RankRequest(seq_ids=r.randint(0, 1000, L),
+                           seq_actions=r.randint(0, 6, L),
+                           seq_surfaces=r.randint(0, 3, L),
+                           cand_ids=rng.randint(0, 1000, 3),
+                           cand_feats=rng.randn(3, 32).astype(np.float32),
+                           user_feats=r.randn(32).astype(np.float32))
+
+    reqs = [mk(1), mk(2)]
+    out1 = router.score_cached(reqs)
+    assert cache.misses == 2 and cache.hits == 0
+    # same users again -> pure cache hits, same scores
+    out2 = router.score_cached(reqs)
+    assert cache.hits == 2
+    np.testing.assert_allclose(out1[0], out2[0], atol=1e-6)
+    # cached path matches the monolithic forward
+    direct = router.score(reqs)
+    np.testing.assert_allclose(out1[0], direct[0], atol=1e-4)
+    np.testing.assert_allclose(out1[1], direct[1], atol=1e-4)

@@ -1,0 +1,62 @@
+"""The trip-count-aware HLO analyzer (launch/hlo_analysis.py) against
+hand-computable programs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+def test_flat_matmul():
+    x = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    a = analyze(_compile(lambda x, w: x @ w, x, w))
+    assert a.flops == 2 * 128 * 64 * 32
+
+
+def test_scan_multiplies_trip_count():
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((12, 64, 64), jnp.float32)
+
+    def f(x, ws):
+        def body(c, w):
+            return c @ w, None
+        return jax.lax.scan(body, x, ws)[0]
+
+    a = analyze(_compile(f, x, ws))
+    assert a.flops == pytest.approx(12 * 2 * 64 ** 3)
+
+
+def test_nested_scans_multiply():
+    x = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 32, 32), jnp.float32)
+
+    def f(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return c2 @ w, None
+            return jax.lax.scan(inner, c, None, length=7)[0], None
+        return jax.lax.scan(outer, x, ws)[0]
+
+    a = analyze(_compile(f, x, ws))
+    assert a.flops == pytest.approx(21 * 2 * 32 ** 3)
+
+
+def test_batch_dot():
+    x = jax.ShapeDtypeStruct((4, 16, 8), jnp.float32)
+    y = jax.ShapeDtypeStruct((4, 8, 16), jnp.float32)
+    a = analyze(_compile(lambda x, y: jnp.einsum("bij,bjk->bik", x, y), x, y))
+    assert a.flops == 2 * 4 * 16 * 8 * 16
+
+
+def test_hbm_bytes_counts_dot_traffic():
+    x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+    a = analyze(_compile(lambda x, w: x @ w, x, w))
+    # operands + result of the dot
+    assert a.hbm_bytes >= 3 * 256 * 256 * 4
+    assert a.hbm_bytes < 10 * 256 * 256 * 4

@@ -1,0 +1,123 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.dcat_attention import dcat_cross_attention
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.int4_dequant import dequant_embedding
+from repro.kernels import ref as kref
+from repro.quant import quantize_table
+
+
+@pytest.mark.parametrize("B,S,H,K,D", [
+    (2, 128, 4, 2, 64), (1, 256, 4, 4, 64), (2, 100, 4, 1, 32),
+    (1, 64, 8, 8, 128), (2, 192, 2, 1, 16),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_sweep(B, S, H, K, D, causal, window):
+    key = jax.random.PRNGKey(S + H)
+    q = jax.random.normal(key, (B, S, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, K, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, K, D))
+    out = flash_attention(q, k, v, causal=causal, window=window, bq=64, bk=64)
+    ref = kref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 64, 2, 32)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 2, 32)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(key, 2), (1, 64, 2, 32)).astype(dtype)
+    out = flash_attention(q, k, v, bq=32, bk=32)
+    ref = kref.flash_attention_ref(q, k, v)
+    assert out.dtype == dtype
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2)
+
+
+@pytest.mark.parametrize("B,Bu,L,SC,H,K,D", [
+    (8, 3, 256, 2, 4, 2, 64), (16, 2, 100, 1, 8, 8, 32),
+    (4, 4, 64, 2, 2, 1, 128), (32, 2, 256, 1, 4, 4, 64),
+])
+def test_dcat_kernel_sweep(B, Bu, L, SC, H, K, D):
+    key = jax.random.PRNGKey(B + L)
+    ks = jax.random.split(key, 5)
+    q = jax.random.normal(ks[0], (B, SC, H, D))
+    ku = jax.random.normal(ks[1], (Bu, L, K, D))
+    vu = jax.random.normal(ks[2], (Bu, L, K, D))
+    kc = jax.random.normal(ks[3], (B, SC, K, D))
+    vc = jax.random.normal(ks[4], (B, SC, K, D))
+    inv = jnp.asarray(np.random.RandomState(0).randint(0, Bu, B), jnp.int32)
+    out = dcat_cross_attention(q, ku, vu, kc, vc, inv, bl=64)
+    ref = kref.dcat_cross_attention_ref(q, ku, vu, kc, vc, inv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_dcat_kernel_every_candidate_sees_its_own_user():
+    """Make user contexts wildly different; outputs must track inv exactly."""
+    Bu, L, H, K, D = 4, 32, 2, 2, 16
+    ku = jnp.stack([jnp.full((L, K, D), float(u)) for u in range(Bu)])
+    vu = ku
+    q = jnp.ones((Bu * 2, 1, H, D))
+    kc = jnp.zeros((Bu * 2, 1, K, D))
+    vc = jnp.zeros((Bu * 2, 1, K, D))
+    inv = jnp.asarray([0, 1, 2, 3, 3, 2, 1, 0], jnp.int32)
+    out = dcat_cross_attention(q, ku, vu, kc, vc, inv, bl=32)
+    ref = kref.dcat_cross_attention_ref(q, ku, vu, kc, vc, inv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-5)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("R,D", [(100, 32), (513, 32), (64, 64), (8, 256)])
+def test_dequant_kernel_sweep(bits, R, D):
+    key = jax.random.PRNGKey(R)
+    table = 0.05 * jax.random.normal(key, (R, D))
+    qt = quantize_table(table, bits)
+    out = dequant_embedding(qt.packed, qt.scale, qt.bias, bits=bits,
+                            rows_per_block=128)
+    ref = (kref.int4_dequant_ref if bits == 4 else kref.int8_dequant_ref)(
+        qt.packed, qt.scale, qt.bias)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+@pytest.mark.parametrize("B,S,H,P,G,N,chunk", [
+    (2, 128, 4, 8, 2, 16, 32), (1, 64, 2, 16, 1, 8, 16),
+    (2, 256, 8, 64, 1, 128, 64), (1, 96, 4, 32, 4, 16, 32),
+])
+def test_ssd_scan_kernel_sweep(B, S, H, P, G, N, chunk):
+    from repro.kernels.ssd_scan import ssd_scan
+    from repro.nn.ssd import ssd_chunked
+    key = jax.random.PRNGKey(S + H)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y, h = ssd_scan(x, dt, A, Bm, Cm, chunk=chunk)
+    yr, hr = ssd_chunked(x, dt, A, Bm, Cm, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), atol=5e-5)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(hr), atol=5e-5)
+
+
+def test_ssd_scan_kernel_bf16():
+    from repro.kernels.ssd_scan import ssd_scan
+    from repro.nn.ssd import ssd_chunked
+    key = jax.random.PRNGKey(9)
+    ks = jax.random.split(key, 5)
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 16
+    x = jax.random.normal(ks[0], (B, S, H, P)).astype(jnp.bfloat16)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y, _ = ssd_scan(x, dt, A, Bm, Cm, chunk=16)
+    yr, _ = ssd_chunked(x.astype(jnp.float32), dt, A, Bm, Cm, chunk=16)
+    assert y.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(y, np.float32), np.asarray(yr),
+                               atol=0.15)

@@ -1,0 +1,54 @@
+"""int8 KV-cache quantization (beyond-paper §Perf extension): ring-buffer
+parity with the fp cache and bounded decode-output error."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn.attention import Attention, KVCache, attend5
+from repro.quant import QuantizedKVCache
+
+
+def test_ring_semantics_match_fp_cache():
+    B, size, K, D = 2, 4, 2, 8
+    fp = KVCache.zeros(B, size, K, D, jnp.float32)
+    q8 = QuantizedKVCache.zeros(B, size, K, D, jnp.float32)
+    key = jax.random.PRNGKey(0)
+    for t in range(7):
+        kn = jax.random.normal(jax.random.fold_in(key, t), (B, 1, K, D))
+        fp = fp.update(kn, kn)
+        q8 = q8.update(kn, kn)
+    np.testing.assert_array_equal(np.asarray(fp.pos), np.asarray(q8.pos))
+    p1, v1 = fp.slot_positions()
+    p2, v2 = q8.slot_positions()
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    # dequantized contents close to fp contents
+    err = float(jnp.max(jnp.abs(fp.k - q8.k)))
+    assert err < 0.05
+
+
+def test_decode_output_error_bounded_and_memory_halved():
+    key = jax.random.PRNGKey(1)
+    att = Attention(64, 4, 2, 16, rope=True)
+    p = att.init(key)
+    B, S = 2, 24
+    x = jax.random.normal(jax.random.fold_in(key, 2), (B, S, 64))
+    fp = KVCache.zeros(B, 32, 2, 16, jnp.float32)
+    q8 = QuantizedKVCache.zeros(B, 32, 2, 16, jnp.float32)
+    outs_fp, outs_q8 = [], []
+    for t in range(S):
+        pos = jnp.full((B, 1), t, jnp.int32)
+        q, k, v = att.qkv(p, x[:, t:t + 1], pos)
+        fp = fp.update(k, v)
+        q8 = q8.update(k, v)
+        for cache, outs in ((fp, outs_fp), (q8, outs_q8)):
+            kp, kv = cache.slot_positions()
+            o = attend5(q, cache.k, cache.v, q_pos=pos, k_pos=kp,
+                        causal=True, k_valid=kv)
+            outs.append(att.out(p, o))
+    a = np.asarray(jnp.concatenate(outs_fp, 1))
+    b = np.asarray(jnp.concatenate(outs_q8, 1))
+    rel = np.linalg.norm(a - b) / np.linalg.norm(a)
+    assert rel < 0.01, rel          # <1% relative L2 on attention outputs
+    fp_bytes = fp.k.size * 4 * 2
+    assert q8.nbytes < 0.35 * fp_bytes   # int8 + scales vs fp32

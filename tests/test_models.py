@@ -1,0 +1,145 @@
+"""Model-level invariants: decode == forward per family, MoE capacity,
+SSD/RG-LRU chunking and continuation, scan-group structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.models.config import get_config
+from repro.models.encdec import EncDecLM
+from repro.models.transformer import TransformerLM
+from repro.nn.recurrent import RecurrentBlock
+from repro.nn.ssd import Mamba2Block, ssd_chunked, ssd_step
+
+
+@pytest.mark.parametrize("arch", ["qwen3-4b", "qwen1.5-0.5b", "mamba2-2.7b",
+                                  "recurrentgemma-2b", "mixtral-8x7b"])
+def test_decode_matches_forward(arch):
+    cfg = smoke_config(get_config(arch)).replace(ssm_chunk=8,
+                                                 capacity_factor=8.0)
+    m = TransformerLM(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+    full, _ = m.forward(p, toks)
+    caches = m.init_caches(B, 64)
+    outs = []
+    for t in range(S):
+        lg, caches = m.decode_step(p, toks[:, t:t + 1], caches,
+                                   jnp.full((B, 1), t, jnp.int32))
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=2e-4)
+
+
+def test_whisper_decode_matches_forward():
+    cfg = smoke_config(get_config("whisper-base"))
+    m = EncDecLM(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    B, T, S = 2, 24, 8
+    frames = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model))
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0, cfg.vocab)
+    enc = m.encode(p, frames)
+    full = m.decode_fwd(p, toks, enc)
+    caches = m.prefill_cross(p, enc, m.init_caches(p, B, 32, T))
+    outs = []
+    for t in range(S):
+        lg, caches = m.decode_step(p, toks[:, t:t + 1], caches,
+                                   jnp.full((B, 1), t, jnp.int32))
+        outs.append(lg)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, 1)),
+                               np.asarray(full), atol=2e-5)
+
+
+def test_scan_groups_recurrentgemma_pattern():
+    cfg = get_config("recurrentgemma-2b")
+    groups = cfg.scan_groups()
+    assert groups == [(("rec", "rec", "attn"), 8), (("rec", "rec"), 1)]
+    kinds = cfg.block_kinds()
+    assert len(kinds) == 26
+    assert kinds.count("attn") == 8 and kinds.count("rec") == 18
+
+
+def test_moe_capacity_drops_are_bounded():
+    from repro.nn.moe import MoE
+    moe = MoE(16, 32, n_experts=4, top_k=2, capacity_factor=1.0,
+              group_size=64)
+    p = moe.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, 16))
+    y, aux = moe(p, x)
+    assert y.shape == x.shape
+    assert 0.0 <= float(aux["router_overflow"]) < 0.5
+    assert float(aux["lb_loss"]) >= 1.0 - 1e-5   # >= 1 by Cauchy-Schwarz
+
+
+def test_moe_group_size_invariance_without_drops():
+    """With generous capacity, grouping must not change outputs."""
+    from repro.nn.moe import MoE
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (2, 32, 16))
+    outs = []
+    for gs in (8, 32, 512):
+        moe = MoE(16, 32, n_experts=4, top_k=2, capacity_factor=8.0,
+                  group_size=gs)
+        p = moe.init(jax.random.PRNGKey(0))
+        y, _ = moe(p, x)
+        outs.append(np.asarray(y))
+    np.testing.assert_allclose(outs[0], outs[1], atol=2e-5)
+    np.testing.assert_allclose(outs[0], outs[2], atol=2e-5)
+
+
+def test_ssd_chunk_invariance():
+    key = jax.random.PRNGKey(0)
+    B, S, H, P, G, N = 1, 64, 2, 8, 1, 8
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (B, S, G, N))
+    Cm = jax.random.normal(ks[4], (B, S, G, N))
+    y8, h8 = ssd_chunked(x, dt, A, Bm, Cm, chunk=8)
+    y32, h32 = ssd_chunked(x, dt, A, Bm, Cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y8), np.asarray(y32), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(h8), np.asarray(h32), atol=1e-4)
+
+
+def test_mamba_block_step_matches_seq():
+    blk = Mamba2Block(32, expand=2, head_dim=8, d_state=16, chunk=4)
+    p = blk.init(jax.random.PRNGKey(0))
+    x = 0.3 * jax.random.normal(jax.random.PRNGKey(1), (2, 12, 32))
+    y_seq, st_seq = blk(p, x)
+    st = blk.init_state(2)
+    ys = []
+    for t in range(12):
+        yt, st = blk.step(p, x[:, t:t + 1], st)
+        ys.append(yt)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(ys, 1)),
+                               np.asarray(y_seq), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(st.h), np.asarray(st_seq.h),
+                               atol=1e-4)
+
+
+def test_rglru_continuation():
+    blk = RecurrentBlock(16, 24)
+    p = blk.init(jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 16))
+    y_full, st_full = blk(p, x)
+    y1, s1 = blk(p, x[:, :7])
+    y2, s2 = blk(p, x[:, 7:], s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s2.h), np.asarray(st_full.h),
+                               atol=1e-5)
+
+
+def test_vlm_patch_prefix_changes_text_logits():
+    cfg = smoke_config(get_config("pixtral-12b"))
+    m = TransformerLM(cfg)
+    p = m.init(jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    e1 = jax.random.normal(jax.random.PRNGKey(2), (1, 4, cfg.frontend_dim))
+    e2 = jax.random.normal(jax.random.PRNGKey(3), (1, 4, cfg.frontend_dim))
+    l1, _ = m.forward(p, toks, embeds=e1)
+    l2, _ = m.forward(p, toks, embeds=e2)
+    assert float(jnp.max(jnp.abs(l1[:, -8:] - l2[:, -8:]))) > 1e-4
