@@ -1,0 +1,146 @@
+"""Serving engine benchmark (paper §4.3): cached vs uncached QPS on
+repeat-user traffic, plus recompile accounting across a mixed-shape
+request stream.
+
+  uncached — monolithic rank executor: context transformer + crossing on
+             every call (the seed router's steady state);
+  cached   — ContextCache holds per-user context KV; repeat-user traffic
+             skips the context transformer and goes straight to DCAT
+             crossing.
+
+Run:   PYTHONPATH=src python benchmarks/bench_serving_engine.py [--smoke]
+
+--smoke shrinks the traffic for CI: it still asserts the two acceptance
+properties (cached beats uncached on repeat traffic; zero recompiles on
+the second pass of a mixed-shape stream after warmup()).
+"""
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.dirname(os.path.dirname(__file__)))
+
+import numpy as np
+import jax
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCAT, DCATOptions
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.models.config import get_config
+from repro.serving import ContextCache, RankRequest, ServingEngine
+
+SMOKE = "--smoke" in sys.argv
+
+# The paper's production context length (§4.1): at toy L the context
+# transformer is too cheap for caching to matter; at L=256 it dominates.
+L = 256
+
+
+def serving_model():
+    bb = smoke_config(get_config("pinfm-20b")).replace(
+        n_layers=4, d_model=128, d_ff=256, n_heads=8, n_kv=8, head_dim=16)
+    pcfg = PinFMConfig(rows=4096, n_tables=4, sub_dim=16, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=16,
+                                       n_negatives=0))
+    fcfg = FinetuneConfig(
+        variant="graphsage-lt", seq_len=L, graphsage_dim=16, user_feat_dim=8,
+        cand_feat_dim=8, hidden=64, n_cross_layers=2,
+        dcat=DCATOptions(rotate_replace=False, skip_last_self_attn=True),
+        seq_loss=LossConfig(use_mtl=False, use_ftl=False, n_negatives=0))
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, fcfg)
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, fcfg.dcat)
+    return model, fcfg
+
+
+def make_traffic(fcfg, *, n_users, n_batches, reqs_per_batch, n_cand,
+                 seed=0):
+    """Zipf-ish repeat-user traffic: every batch draws reqs_per_batch users
+    from a pool of n_users, so steady state is dominated by repeats."""
+    rng = np.random.RandomState(seed)
+
+    def mk(user_seed):
+        r = np.random.RandomState(1000 + user_seed)
+        return RankRequest(
+            seq_ids=r.randint(0, 1500, L),
+            seq_actions=r.randint(0, 6, L),
+            seq_surfaces=r.randint(0, 3, L),
+            cand_ids=rng.randint(0, 1500, n_cand),
+            cand_feats=rng.randn(n_cand, fcfg.cand_feat_dim)
+            .astype(np.float32),
+            user_feats=np.random.RandomState(1000 + user_seed)
+            .randn(fcfg.user_feat_dim).astype(np.float32),
+            graphsage=rng.randn(n_cand, fcfg.graphsage_dim)
+            .astype(np.float32))
+
+    return [[mk(int(u)) for u in rng.randint(0, n_users, reqs_per_batch)]
+            for _ in range(n_batches)]
+
+
+def drive(engine, traffic):
+    t0 = time.time()
+    n_cand = 0
+    for batch in traffic:
+        out = engine.score(batch)
+        n_cand += sum(len(o) for o in out)
+    dt = time.time() - t0
+    return n_cand / dt, dt
+
+
+def main():
+    model, fcfg = serving_model()
+    params = model.init(jax.random.PRNGKey(0))
+
+    n_batches = 4 if SMOKE else 24
+    traffic = make_traffic(fcfg, n_users=6, n_batches=n_batches,
+                           reqs_per_batch=6, n_cand=8)
+
+    kw = dict(max_unique=8, max_candidates=64, min_unique=4,
+              min_candidates=32)
+    uncached = ServingEngine(model, params, **kw)
+    cached = ServingEngine(model, params, cache=ContextCache(4096), **kw)
+    tu = uncached.warmup()
+    tc = cached.warmup()
+    print(f"warmup: uncached {tu['executors']} executors {tu['warmup_s']:.1f}s"
+          f" | cached {tc['executors']} executors {tc['warmup_s']:.1f}s")
+
+    # prime the cache with one pass, then measure steady-state repeat traffic
+    cached.score(traffic[0][:])
+    qps_u, dt_u = drive(uncached, traffic)
+    qps_c, dt_c = drive(cached, traffic)
+    ratio = cached.cache.hits / max(cached.cache.hits + cached.cache.misses, 1)
+    print(f"uncached: {qps_u:9.0f} candidates/s ({dt_u * 1e3:6.1f} ms total)")
+    print(f"cached:   {qps_c:9.0f} candidates/s ({dt_c * 1e3:6.1f} ms total, "
+          f"hit rate {ratio * 100:.0f}%, "
+          f"{cached.cache.nbytes / 2**20:.1f} MiB ctx KV)")
+    print(f"speedup:  {qps_c / qps_u:.2f}x on repeat-user traffic")
+
+    # recompile accounting on a mixed-shape stream
+    rng = np.random.RandomState(7)
+    mixed = [t[:int(n)] for t, n in zip(traffic, rng.randint(1, 7, n_batches))]
+    for batch in mixed:
+        uncached.score(batch)
+        cached.score(batch)
+    rec_u = uncached.registry.compiles_after_warmup
+    rec_c = cached.registry.compiles_after_warmup
+    for batch in mixed:                         # second pass
+        uncached.score(batch)
+        cached.score(batch)
+    print(f"recompiles after warmup (mixed-shape stream, 2 passes): "
+          f"uncached {uncached.registry.compiles_after_warmup}, "
+          f"cached {cached.registry.compiles_after_warmup}")
+
+    assert cached.registry.compiles_after_warmup == 0 == rec_c
+    assert uncached.registry.compiles_after_warmup == 0 == rec_u
+    assert qps_c > qps_u, (
+        f"ContextCache path ({qps_c:.0f}/s) must beat the uncached path "
+        f"({qps_u:.0f}/s) on repeat-user traffic")
+    print("OK: cached > uncached, zero recompiles after warmup")
+
+
+if __name__ == "__main__":
+    main()

@@ -25,7 +25,7 @@ does the same with pointers.  :func:`dedup` is that host-side operation.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional, Sequence, Tuple
 
 import numpy as np
 import jax
@@ -38,9 +38,12 @@ from repro.models.transformer import TransformerBody
 # Ψ — host-side batch deduplication (invertible)
 # ---------------------------------------------------------------------------
 
-def dedup(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
-    """Ψ: (B, ...) -> (unique (B_u, ...), inverse (B,)) with
-    Ψ⁻¹(u, inv) = u[inv] == rows.  First-occurrence order is preserved."""
+def dedup_with_first(
+        rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Ψ with provenance: (B, ...) -> (unique (B_u, ...), inverse (B,),
+    first_of (B_u,)) where ``first_of[u]`` is the input row index of the
+    first occurrence of unique row ``u``.  Fully vectorized — no per-unique
+    Python loop; first-occurrence order is preserved."""
     rows = np.asarray(rows)
     flat = rows.reshape(rows.shape[0], -1)
     _, first_idx, inverse = np.unique(
@@ -49,14 +52,62 @@ def dedup(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     order = np.argsort(first_idx)
     rank = np.empty_like(order)
     rank[order] = np.arange(len(order))
-    unique = rows[np.sort(first_idx)]
-    return unique, rank[inverse].astype(np.int32)
+    first_of = np.sort(first_idx).astype(np.int32)
+    return rows[first_of], rank[inverse.ravel()].astype(np.int32), first_of
+
+
+def dedup(rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Ψ: (B, ...) -> (unique (B_u, ...), inverse (B,)) with
+    Ψ⁻¹(u, inv) = u[inv] == rows.  First-occurrence order is preserved."""
+    unique, inverse, _ = dedup_with_first(rows)
+    return unique, inverse
 
 
 def dedup_inverse(unique, inverse):
     """Ψ⁻¹ — reference implementation (the production path is the gather
     fused into the crossing layer scan / Pallas kernel)."""
     return jnp.take(jnp.asarray(unique), jnp.asarray(inverse), axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Context pytree (ctxs) per-user slicing — the serving ContextCache unit
+# ---------------------------------------------------------------------------
+# ``ctxs`` as emitted by TransformerBody.forward(collect_ctx=True) is a
+# list-per-scan-group of tuple-per-unit-position of stacked contexts.  Every
+# leaf — attention KV, recurrent state, SSD state — carries the scan-repeats
+# axis at 0 and the UNIQUE-USER batch axis at 1, so one user's context is the
+# axis-1 slice of every leaf.  These helpers are what lets the engine cache
+# early-fusion contexts per user and reassemble arbitrary batches of them.
+
+def ctx_slice(ctxs, i: int):
+    """Extract user ``i``'s context as a host-side (numpy-leaf) pytree with
+    the batch axis removed: leaf (reps, B_u, ...) -> (reps, ...)."""
+    return jax.tree.map(lambda a: np.asarray(a[:, i]), ctxs)
+
+
+def ctx_pack(user_ctxs: Sequence, b_u: Optional[int] = None):
+    """Inverse of :func:`ctx_slice` over a batch: stack per-user context
+    pytrees back into a batched pytree with ``b_u`` unique-user rows
+    (zero-padded past ``len(user_ctxs)`` so the result fits a shape bucket).
+    """
+    n = len(user_ctxs)
+    assert n > 0, "ctx_pack needs at least one user context"
+    b_u = n if b_u is None else b_u
+    assert b_u >= n
+
+    def pack(*leaves):
+        first = np.asarray(leaves[0])
+        out = np.zeros((first.shape[0], b_u, *first.shape[1:]), first.dtype)
+        for i, leaf in enumerate(leaves):
+            out[:, i] = leaf
+        return out
+
+    return jax.tree.map(pack, *user_ctxs)
+
+
+def ctx_nbytes(ctx) -> int:
+    """Approximate host memory footprint of one context pytree."""
+    return int(sum(np.asarray(l).nbytes for l in jax.tree.leaves(ctx)))
 
 
 # ---------------------------------------------------------------------------

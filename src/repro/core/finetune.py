@@ -164,13 +164,50 @@ class PinFMRankingModel(Module):
                 x_c.dtype)[None]
         return x_c, e_c, gs_e
 
-    def pinfm_features(self, p, batch, *, train: bool = False, rng=None,
+    def encode_context(self, p, seq_ids, seq_actions, seq_surfaces, *,
                        serving: bool = False):
+        """Context component only (candidate-independent, so cacheable per
+        user — the early-fusion analogue of :meth:`encode_user`):
+        deduplicated sequences -> (H_u, ctxs, aux).  ``ctxs`` is the
+        per-layer DCAT context (KV / recurrent state) consumed by
+        :meth:`candidate_features`; at serving, skip_last_self_attn may
+        elide the last layer's hidden output (H_u then only feeds the loss,
+        which serving does not use)."""
+        pf = p["pinfm"]
+        x_u = self.pinfm.input_tokens(pf, seq_ids, seq_actions, seq_surfaces)
+        y, aux, ctxs = self.dcat.context(pf["body"], x_u, serving=serving)
+        H_u = self.pinfm.phi_out(pf["phi_out"], y.astype(jnp.float32))
+        return H_u, ctxs, aux
+
+    def candidate_features(self, p, batch, ctxs, *, ctx_len: int,
+                           cand_ids=None):
+        """Crossing component: candidate tokens attend to precomputed
+        context ``ctxs`` (early-fusion variants).  -> (features
+        (B_c, n_feat*id_dim), e_cand, gs_e)."""
+        cfg, pf = self.cfg, p["pinfm"]
+        if cand_ids is None:
+            cand_ids = batch["cand_ids"]
+        x_c, e_c, gs_e = self._candidate_tokens(
+            p, cand_ids, batch.get("graphsage"))
+        y_c, _ = self.dcat.crossing(pf["body"], x_c, batch["inverse_idx"],
+                                    ctxs, ctx_len=ctx_len)
+        y_c = self.pinfm.phi_out(pf["phi_out"], y_c.astype(jnp.float32))
+        feats = [y_c[:, -1], e_c]                                    # cand output
+        if cfg.variant == "graphsage-lt":
+            feats.insert(1, y_c[:, 0])                               # LT output
+        return jnp.concatenate(feats, axis=-1), e_c, gs_e
+
+    def pinfm_features(self, p, batch, *, train: bool = False, rng=None,
+                       serving: bool = False, ctxs=None):
         """Run the PinFM module.  batch carries the DEDUPLICATED sequences +
         inverse index (the data pipeline / router performs Ψ on host):
 
           seq_ids/actions/surfaces: (B_u, L_d); inverse_idx: (B_c,);
           cand_ids: (B_c,); graphsage: (B_c, gs_dim)
+
+        ``ctxs``: optional precomputed context from :meth:`encode_context`
+        (early-fusion variants only) — the context transformer is then
+        skipped entirely and H_u is returned as None (serving cache path).
 
         -> (features (B_c, n_feat*id_dim), H_u, aux)."""
         cfg, pcfg = self.cfg, self.pcfg
@@ -183,28 +220,31 @@ class PinFMRankingModel(Module):
             keep = jax.random.uniform(r2, cand_ids.shape) > cfg.cir_prob
             cand_ids = jnp.where(keep, cand_ids, rand_ids)
 
-        H_u, aux, ctxs = self.pinfm.encode(
-            pf, batch["seq_ids"], batch["seq_actions"], batch["seq_surfaces"],
-            collect_ctx=cfg.variant not in ("lite-mean", "lite-last"))
+        lite = cfg.variant in ("lite-mean", "lite-last")
+        H_u = None
+        aux = jnp.zeros((), jnp.float32)
+        if lite:
+            H_u, aux, _ = self.pinfm.encode(
+                pf, batch["seq_ids"], batch["seq_actions"],
+                batch["seq_surfaces"], collect_ctx=False)
+        elif ctxs is None:
+            H_u, ctxs, aux = self.encode_context(
+                p, batch["seq_ids"], batch["seq_actions"],
+                batch["seq_surfaces"], serving=serving)
 
         inv = batch["inverse_idx"]
-        if cfg.variant in ("lite-mean", "lite-last"):
+        if lite:
             pooled = (jnp.mean(H_u, axis=1) if cfg.variant == "lite-mean"
                       else H_u[:, -1])
             user_emb = jnp.take(pooled, inv, axis=0)                 # (B_c, id_dim)
             e_c = self.pinfm.id_embed(pf["id_embed"], cand_ids)
-            feats = [user_emb, e_c]
+            features = jnp.concatenate([user_emb, e_c], axis=-1)
             gs_e = None
         else:
-            x_c, e_c, gs_e = self._candidate_tokens(
-                p, cand_ids, batch.get("graphsage"))
-            y_c, _ = self.dcat.crossing(pf["body"], x_c, inv, ctxs,
-                                        ctx_len=batch["seq_ids"].shape[1])
-            y_c = self.pinfm.phi_out(pf["phi_out"], y_c.astype(jnp.float32))
-            feats = [y_c[:, -1], e_c]                                # cand output
-            if cfg.variant == "graphsage-lt":
-                feats.insert(1, y_c[:, 0])                           # LT output
-        features = jnp.concatenate(feats, axis=-1)
+            ctx_len = (batch["seq_ids"].shape[1] if "seq_ids" in batch
+                       else cfg.seq_len)
+            features, e_c, gs_e = self.candidate_features(
+                p, batch, ctxs, ctx_len=ctx_len, cand_ids=cand_ids)
 
         # Item-age Dependent Dropout on the module outputs (Table 2 IDD)
         if train and cfg.use_idd and rng is not None and "cand_age_days" in batch:
@@ -229,31 +269,42 @@ class PinFMRankingModel(Module):
         return (jnp.mean(H_u, axis=1) if self.cfg.variant == "lite-mean"
                 else H_u[:, -1])
 
-    def score_with_user_emb(self, p, user_emb, batch):
-        """user_emb: (B_c, id_dim) — already Ψ⁻¹-gathered per candidate."""
-        pf, pr = p["pinfm"], p["ranker"]
-        e_c = self.pinfm.id_embed(pf["id_embed"], batch["cand_ids"])
-        feats = jnp.concatenate([user_emb, e_c], axis=-1)
+    def _ranker_logits(self, p, batch, feats):
+        """Feature crossing + task heads over PinFM features (B_c, F)."""
+        pr = p["ranker"]
         user_f = jnp.take(batch["user_feats"], batch["inverse_idx"], axis=0)
         x = jnp.concatenate([user_f, batch["cand_feats"], feats],
-                            -1).astype(feats.dtype)
+                            axis=-1).astype(feats.dtype)
         x = self.in_proj(pr["in_proj"], x)
         x = self.cross(pr["cross"], x)
         x = _ACT["relu"](self.mlp_mid(pr["mlp_mid"], x))
         return self.heads(pr["heads"], x)
 
-    def forward(self, p, batch, *, train: bool = False, rng=None):
+    def score_with_user_emb(self, p, user_emb, batch):
+        """user_emb: (B_c, id_dim) — already Ψ⁻¹-gathered per candidate."""
+        e_c = self.pinfm.id_embed(p["pinfm"]["id_embed"], batch["cand_ids"])
+        feats = jnp.concatenate([user_emb, e_c], axis=-1)
+        return self._ranker_logits(p, batch, feats)
+
+    # -- early-fusion serving split (context-KV cache path) --------------------
+    def score_with_ctxs(self, p, batch, ctxs, *, ctx_len: Optional[int] = None):
+        """Early-fusion scoring from a PRECOMPUTED context (the candidate-
+        independent half of DCAT, cacheable per user exactly like the lite
+        pooled embedding): crossing + feature crossing only, no context
+        transformer.  -> task logits (B_c, n_tasks)."""
+        assert self.cfg.variant not in ("lite-mean", "lite-last")
+        feats, _, _ = self.candidate_features(
+            p, batch, ctxs,
+            ctx_len=self.cfg.seq_len if ctx_len is None else ctx_len)
+        return self._ranker_logits(p, batch, feats)
+
+    def forward(self, p, batch, *, train: bool = False, rng=None,
+                serving: bool = False, ctxs=None):
         """-> (task_logits (B_c, n_tasks), module_logits, extras)."""
-        feats, H_u, extras = self.pinfm_features(p, batch, train=train, rng=rng)
-        pr = p["ranker"]
-        user_f = jnp.take(batch["user_feats"], batch["inverse_idx"], axis=0)
-        x = jnp.concatenate(
-            [user_f, batch["cand_feats"], feats], axis=-1).astype(feats.dtype)
-        x = self.in_proj(pr["in_proj"], x)
-        x = self.cross(pr["cross"], x)
-        x = _ACT["relu"](self.mlp_mid(pr["mlp_mid"], x))
-        logits = self.heads(pr["heads"], x)
-        module_logits = self.module_head(pr["module_head"], feats)
+        feats, H_u, extras = self.pinfm_features(
+            p, batch, train=train, rng=rng, serving=serving, ctxs=ctxs)
+        logits = self._ranker_logits(p, batch, feats)
+        module_logits = self.module_head(p["ranker"]["module_head"], feats)
         extras["H_u"] = H_u
         return logits, module_logits, extras
 

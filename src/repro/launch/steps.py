@@ -84,7 +84,7 @@ def cache_pspecs(abstract_caches, policy, cfg: ModelConfig, shardable_batch):
                      "model" if leaf.shape[-1] % 16 == 0 else None)
         return P(*([None] * nd))
 
-    flat, treedef = jax.tree.flatten_with_path(abstract_caches)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(abstract_caches)
     return jax.tree.unflatten(treedef, [leaf_spec(p, l) for p, l in flat])
 
 

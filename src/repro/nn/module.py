@@ -111,7 +111,7 @@ def _path_str(path) -> str:
 def init(spec, key: jax.Array):
     """Materialize parameters.  Each leaf gets a key derived from its path,
     so adding/removing parameters does not perturb unrelated leaves."""
-    flat, treedef = jax.tree.flatten_with_path(spec, is_leaf=is_param)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(spec, is_leaf=is_param)
     leaves = []
     for path, p in flat:
         h = int.from_bytes(

@@ -1,2 +1,8 @@
-from repro.serving.router import InferenceRouter, RankRequest
+from repro.serving.context_cache import ContextCache
+from repro.serving.engine import ServingEngine
+from repro.serving.executors import ExecutorRegistry
 from repro.serving.generate import GenerateConfig, Generator
+from repro.serving.microbatch import MicroBatcher, Ticket
+from repro.serving.plan import (BatchPlan, BucketLadder, RankRequest,
+                                build_plan, request_key, split_requests)
+from repro.serving.router import InferenceRouter, UserEmbeddingCache

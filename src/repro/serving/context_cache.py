@@ -1,0 +1,75 @@
+"""ContextCache: per-user LRU of candidate-independent PinFM outputs.
+
+The paper's §3.2 observation — late fusion makes the PinFM output cacheable
+because the candidate never enters the sequence — generalizes to EARLY
+fusion: DCAT's context component (§4.1) is equally candidate-independent.
+So the cache stores, per user sequence:
+
+  * lite variants:         the pooled user embedding (id_dim,)
+  * early-fusion variants: the per-layer context KV / state pytree emitted
+                           by ``DCAT.context`` (``ctx_slice`` of the batch),
+
+and repeat-user traffic skips the context transformer entirely, going
+straight to ``DCAT.crossing``.  Values are host-side numpy pytrees; the
+cache also tracks its approximate byte footprint for observability.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Optional
+
+import numpy as np
+
+from repro.core.dcat import ctx_nbytes
+
+
+class ContextCache:
+    """LRU keyed by the user-sequence identity bytes (see
+    ``plan.request_key``)."""
+
+    def __init__(self, capacity: int = 4096):
+        self.capacity = capacity
+        self._d: OrderedDict = OrderedDict()
+        self._bytes: dict = {}
+        self.hits = 0
+        self.misses = 0
+        self.nbytes = 0
+
+    @staticmethod
+    def key(seq_ids, seq_actions, seq_surfaces=None) -> bytes:
+        k = (np.asarray(seq_ids).tobytes()
+             + np.asarray(seq_actions).tobytes())
+        if seq_surfaces is not None:
+            k += np.asarray(seq_surfaces).tobytes()
+        return k
+
+    def __len__(self):
+        return len(self._d)
+
+    def get(self, key) -> Optional[Any]:
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return None
+
+    def peek(self, key) -> Optional[Any]:
+        """Lookup without touching hit/miss counters or LRU order."""
+        return self._d.get(key)
+
+    def put(self, key, value):
+        if key in self._d:
+            self.nbytes -= self._bytes.pop(key, 0)
+        self._d[key] = value
+        self._d.move_to_end(key)
+        nb = ctx_nbytes(value)
+        self._bytes[key] = nb
+        self.nbytes += nb
+        while len(self._d) > self.capacity:
+            old, _ = self._d.popitem(last=False)
+            self.nbytes -= self._bytes.pop(old, 0)
+
+    def stats(self) -> dict:
+        return {"entries": len(self._d), "hits": self.hits,
+                "misses": self.misses, "nbytes": self.nbytes}

@@ -1,0 +1,293 @@
+"""Serving engine (paper §4.3, Figure 2) — the layered successor of the
+seed's monolithic ``InferenceRouter``:
+
+  requests ──► MicroBatcher ──► BatchPlan (Ψ + shape bucket, host)
+                                   │
+                                   ▼
+               ExecutorRegistry — one jitted fn per (kind, bucket)
+                 "rank"     full forward            (cache disabled)
+                 "context"  DCAT context -> ctx KV  (early fusion)
+                 "cross"    DCAT crossing + ranker  (early fusion)
+                 "encode"   pooled user embedding   (lite)
+                 "score_emb" ranker from pooled emb (lite)
+                                   │
+               ContextCache ───────┘  per-user ctx KV / pooled emb
+
+Because the bucket ladder is finite, ``warmup()`` precompiles every
+executor the engine can ever dispatch; steady-state traffic — including a
+mixed-shape request stream — then runs with zero fresh XLA compiles
+(``registry.compiles_after_warmup == 0``).
+
+The cached early-fusion path always round-trips contexts through per-user
+host slices (``ctx_slice``/``ctx_pack``), so a cache-hit pass feeds the
+crossing executor the exact same bytes as the pass that populated the
+cache: hit and miss scoring agree bit-for-bit on the same bucket.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dcat import ctx_pack, ctx_slice
+from repro.core.finetune import PinFMRankingModel
+from repro.serving.context_cache import ContextCache
+from repro.serving.executors import ExecutorRegistry
+from repro.serving.plan import (BatchPlan, BucketLadder, RankRequest,
+                                _pad_rows, build_plan, split_requests)
+
+LITE_VARIANTS = ("lite-mean", "lite-last")
+_CROSS_KEYS = ("inverse_idx", "cand_ids", "cand_feats", "user_feats")
+
+
+class ServingEngine:
+    """Dedup-aware, shape-bucketed, cache-accelerated ranking engine."""
+
+    def __init__(self, model: PinFMRankingModel, params, *,
+                 max_unique: int = 8, max_candidates: int = 64,
+                 min_unique: int = 1, min_candidates: int = 8,
+                 cache: Optional[ContextCache] = None, key_fn=None):
+        self.model, self.params = model, params
+        self.variant = model.cfg.variant
+        self.lite = self.variant in LITE_VARIANTS
+        self.use_graphsage = self.variant in ("graphsage", "graphsage-lt")
+        self.max_unique, self.max_candidates = max_unique, max_candidates
+        self.ladder_u = BucketLadder(max_unique, min(min_unique, max_unique))
+        self.ladder_c = BucketLadder(max_candidates,
+                                     min(min_candidates, max_candidates))
+        self.cache = cache
+        self._key_fn = key_fn
+        self.registry = ExecutorRegistry()
+        self.stats: List[dict] = []
+        self._register_executors()
+
+    # ------------------------------------------------------------------
+    def _register_executors(self):
+        model = self.model
+
+        def rank_factory(key):
+            def fn(p, batch):
+                logits, _, _ = model.forward(p, batch, train=False,
+                                             serving=True)
+                return jax.nn.sigmoid(logits.astype(jnp.float32))
+            return fn
+
+        self.registry.register("rank", rank_factory)
+
+        if self.lite:
+            self.registry.register(
+                "encode", lambda key: model.encode_user)
+            self.registry.register(
+                "score_emb", lambda key: lambda p, emb, batch: jax.nn.sigmoid(
+                    model.score_with_user_emb(p, emb, batch)
+                    .astype(jnp.float32)))
+        else:
+            self.registry.register(
+                "context",
+                lambda key: lambda p, ids, actions, surfaces:
+                    model.encode_context(p, ids, actions, surfaces,
+                                         serving=True)[1])
+
+            def cross_factory(key):
+                ctx_len = key[2]             # (b_u, b_c, L)
+
+                def fn(p, batch, ctxs):
+                    return jax.nn.sigmoid(
+                        model.score_with_ctxs(p, batch, ctxs,
+                                              ctx_len=ctx_len)
+                        .astype(jnp.float32))
+                return fn
+
+            self.registry.register("cross", cross_factory)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _device(batch):
+        return jax.tree.map(jnp.asarray, batch)
+
+    def _cross_batch(self, batch: Dict[str, np.ndarray]):
+        keys = _CROSS_KEYS + (("graphsage",) if self.use_graphsage else ())
+        return {k: batch[k] for k in keys}
+
+    # ------------------------------------------------------------------
+    def score(self, requests: Sequence[RankRequest]) -> List[np.ndarray]:
+        """-> per-request (N_b, n_tasks) probabilities.  Oversized request
+        lists are transparently split into bucket-sized chunks; a single
+        request with more than max_candidates candidates is split by
+        candidate slice and reassembled."""
+        pieces, owner = [], []               # flattened sub-requests
+        for i, r in enumerate(requests):
+            for part in self._split_candidates(r):
+                pieces.append(part)
+                owner.append(i)
+        scored: List[Optional[np.ndarray]] = [None] * len(pieces)
+        for idxs in split_requests(pieces, self.max_unique,
+                                   self.max_candidates):
+            per_req = self._score_chunk([pieces[i] for i in idxs])
+            for i, p in zip(idxs, per_req):
+                scored[i] = p
+        out: List[List[np.ndarray]] = [[] for _ in requests]
+        for i, p in zip(owner, scored):
+            out[i].append(p)
+        return [p[0] if len(p) == 1 else np.concatenate(p) for p in out]
+
+    def _split_candidates(self, r: RankRequest) -> List[RankRequest]:
+        n = len(r.cand_ids)
+        if n <= self.max_candidates:
+            return [r]
+        return [dataclasses.replace(
+            r, cand_ids=r.cand_ids[o:o + self.max_candidates],
+            cand_feats=r.cand_feats[o:o + self.max_candidates],
+            graphsage=(None if r.graphsage is None
+                       else r.graphsage[o:o + self.max_candidates]))
+            for o in range(0, n, self.max_candidates)]
+
+    def _score_chunk(self, chunk: Sequence[RankRequest]) -> List[np.ndarray]:
+        t0 = time.time()
+        plan = build_plan(chunk, self.ladder_u, self.ladder_c,
+                          **({"key_fn": self._key_fn} if self._key_fn else {}))
+        if not self.use_graphsage:
+            plan.batch.pop("graphsage", None)
+        elif "graphsage" not in plan.batch:
+            raise ValueError(f"variant {self.variant!r} requires graphsage "
+                             "features on every request")
+
+        if self.cache is None:
+            probs = np.asarray(self.registry(
+                "rank", (plan.b_u, plan.b_c, plan.seq_len),
+                self.params, self._device(plan.batch)))
+        elif self.lite:
+            probs = self._score_lite_cached(plan)
+        else:
+            probs = self._score_early_cached(plan)
+
+        probs = probs[:plan.n_candidates]
+        entry = {"candidates": plan.n_candidates,
+                 "unique_users": plan.n_unique,
+                 "dedup_ratio": plan.dedup_ratio,
+                 "b_u": plan.b_u, "b_c": plan.b_c,
+                 "latency_s": time.time() - t0,
+                 **{f"exec_{k}": v for k, v in
+                    self.registry.telemetry().items()}}
+        if self.cache is not None:
+            entry["cache_hits"] = self.cache.hits
+            entry["cache_misses"] = self.cache.misses
+        self.stats.append(entry)
+
+        out, off = [], 0
+        for c in plan.counts:
+            out.append(probs[off:off + c])
+            off += c
+        return out
+
+    # -- early-fusion path: per-user context-KV cache -----------------------
+    def _lookup_users(self, plan: BatchPlan):
+        values: Dict[int, object] = {}
+        miss_rows: List[int] = []
+        for u, key in enumerate(plan.user_keys):
+            v = self.cache.get(key)
+            if v is None:
+                miss_rows.append(u)
+            else:
+                values[u] = v
+        return values, miss_rows
+
+    def _encode_missing(self, plan: BatchPlan, miss_rows: List[int], kind: str):
+        """Run the context/encode executor over just the cache-missing users
+        (padded to their own bucket) -> device output batched over misses."""
+        b_m = self.ladder_u.fit(len(miss_rows))
+
+        def gather_pad(name):
+            return jnp.asarray(_pad_rows(plan.batch[name][miss_rows], b_m))
+
+        return self.registry(
+            kind, (b_m, plan.seq_len), self.params,
+            gather_pad("seq_ids"), gather_pad("seq_actions"),
+            gather_pad("seq_surfaces"))
+
+    def _score_early_cached(self, plan: BatchPlan) -> np.ndarray:
+        values, miss_rows = self._lookup_users(plan)
+        if miss_rows:
+            ctxs = self._encode_missing(plan, miss_rows, "context")
+            for j, u in enumerate(miss_rows):
+                sl = ctx_slice(ctxs, j)
+                self.cache.put(plan.user_keys[u], sl)
+                values[u] = sl
+        packed = ctx_pack([values[u] for u in range(plan.n_unique)], plan.b_u)
+        return np.asarray(self.registry(
+            "cross", (plan.b_u, plan.b_c, plan.seq_len), self.params,
+            self._device(self._cross_batch(plan.batch)),
+            self._device(packed)))
+
+    # -- lite path: pooled-embedding cache (now dedup-aware) ----------------
+    def _score_lite_cached(self, plan: BatchPlan) -> np.ndarray:
+        values, miss_rows = self._lookup_users(plan)
+        if miss_rows:
+            fresh = np.asarray(self._encode_missing(plan, miss_rows, "encode"))
+            for j, u in enumerate(miss_rows):
+                self.cache.put(plan.user_keys[u], fresh[j])
+                values[u] = fresh[j]
+        emb_u = np.zeros((plan.b_u, values[0].shape[-1]), np.float32)
+        for u in range(plan.n_unique):
+            emb_u[u] = values[u]
+        user_emb = emb_u[plan.batch["inverse_idx"]]          # Ψ⁻¹ on host
+        return np.asarray(self.registry(
+            "score_emb", (plan.b_u, plan.b_c), self.params,
+            jnp.asarray(user_emb),
+            self._device(self._cross_batch(plan.batch))))
+
+    # ------------------------------------------------------------------
+    def warmup(self, *, seq_len: Optional[int] = None) -> dict:
+        """Precompile every executor reachable from the bucket ladder, so
+        steady-state traffic never pays an XLA compile.  Returns registry
+        telemetry (incl. wall time)."""
+        L = int(seq_len if seq_len is not None else self.model.cfg.seq_len)
+        t0 = time.time()
+        params = self.params
+        zi = lambda *s: jnp.zeros(s, jnp.int32)
+
+        for b_u in self.ladder_u.sizes():
+            if self.cache is not None:
+                kind = "encode" if self.lite else "context"
+                ctxs = self.registry.warm(kind, (b_u, L), params,
+                                          zi(b_u, L), zi(b_u, L), zi(b_u, L))
+            for b_c in self.ladder_c.sizes():
+                batch = self._dummy_batch(b_u, b_c, L)
+                if self.cache is None:
+                    self.registry.warm("rank", (b_u, b_c, L), params,
+                                       self._device(batch))
+                elif self.lite:
+                    d = self.model.pcfg.id_dim
+                    self.registry.warm(
+                        "score_emb", (b_u, b_c), params,
+                        jnp.zeros((b_c, d), jnp.float32),
+                        self._device(self._cross_batch(batch)))
+                else:
+                    self.registry.warm(
+                        "cross", (b_u, b_c, L), params,
+                        self._device(self._cross_batch(batch)), ctxs)
+        tel = self.registry.telemetry()
+        tel["warmup_s"] = time.time() - t0
+        return tel
+
+    def _dummy_batch(self, b_u: int, b_c: int, L: int) -> dict:
+        cfg = self.model.cfg
+        batch = {
+            "seq_ids": np.zeros((b_u, L), np.int32),
+            "seq_actions": np.zeros((b_u, L), np.int32),
+            "seq_surfaces": np.zeros((b_u, L), np.int32),
+            "seq_valid": np.ones((b_u, L), bool),
+            "seq_user_id": np.zeros(b_u, np.int32),
+            "inverse_idx": np.zeros(b_c, np.int32),
+            "cand_ids": np.zeros(b_c, np.int32),
+            "cand_feats": np.zeros((b_c, cfg.cand_feat_dim), np.float32),
+            "user_feats": np.zeros((b_u, cfg.user_feat_dim), np.float32),
+            "cand_age_days": np.zeros(b_c, np.float32),
+        }
+        if self.use_graphsage:
+            batch["graphsage"] = np.zeros((b_c, cfg.graphsage_dim), np.float32)
+        return batch

@@ -1,0 +1,74 @@
+"""Executor registry: one jitted function per (executor kind, shape bucket).
+
+Shapes are fixed per bucket, so each executor compiles exactly once; after
+``ServingEngine.warmup()`` walks the whole ladder, steady-state traffic runs
+with ZERO fresh XLA compiles.  The registry keeps the telemetry that proves
+it: ``compiles`` counts first executions (each one paid a compile),
+``hits`` counts executions against an already-compiled executor.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Hashable, Tuple
+
+import jax
+
+
+class ExecutorRegistry:
+    """Lazily builds and caches jitted executors.
+
+    A *kind* is registered with a factory ``factory(key) -> callable``; the
+    key is the shape-bucket tuple (plus any static config such as the
+    context length), so the factory can close over static values instead of
+    threading them through jit as traced arguments.
+    """
+
+    def __init__(self):
+        self._factories: Dict[str, Callable] = {}
+        self._jitted: Dict[Tuple[str, Hashable], Callable] = {}
+        self._executed: set = set()
+        self._warmed: set = set()
+        self.compiles = 0
+        self.hits = 0
+
+    def register(self, kind: str, factory: Callable):
+        self._factories[kind] = factory
+
+    @property
+    def kinds(self):
+        return tuple(self._factories)
+
+    def executors(self):
+        """-> tuple of (kind, key) instantiated so far."""
+        return tuple(self._jitted)
+
+    def __call__(self, kind: str, key: Hashable, *args):
+        k = (kind, key)
+        fn = self._jitted.get(k)
+        if fn is None:
+            fn = jax.jit(self._factories[kind](key))
+            self._jitted[k] = fn
+        if k in self._executed:
+            self.hits += 1
+        else:
+            self._executed.add(k)
+            self.compiles += 1
+        return fn(*args)
+
+    def warm(self, kind: str, key: Hashable, *args):
+        """Execute once for compilation and tag the executor as warmed; the
+        warmup compile is excluded from steady-state telemetry questions via
+        ``compiles_after_warmup``."""
+        out = self(kind, key, *args)
+        self._warmed.add((kind, key))
+        return out
+
+    @property
+    def compiles_after_warmup(self) -> int:
+        """Executors that compiled OUTSIDE warmup — the number a production
+        deployment wants pinned at zero."""
+        return len(self._executed - self._warmed)
+
+    def telemetry(self) -> dict:
+        return {"executors": len(self._jitted), "compiles": self.compiles,
+                "hits": self.hits, "warmed": len(self._warmed),
+                "compiles_after_warmup": self.compiles_after_warmup}

@@ -1,0 +1,115 @@
+"""Micro-batching front-end: coalesce RankRequests across callers before
+planning, so concurrent low-fanout callers share one device batch (and one
+Ψ pass — duplicate users ACROSS callers dedup too, which is where the
+paper's 1:1000 serving ratio comes from).
+
+Synchronous-friendly design: ``submit`` enqueues and returns a ticket;
+the queue flushes when ``max_requests`` or ``max_candidates`` worth of work
+has accumulated, when ``max_wait_s`` has elapsed since the oldest pending
+request, or on demand (``flush()`` / ``ticket.result()``).  No background
+thread — deterministic for tests; a server loop calls ``poll()``.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.serving.plan import RankRequest
+
+
+class Ticket:
+    """Handle for one submitted request; ``result()`` forces a flush if the
+    batch has not gone out yet."""
+
+    def __init__(self, batcher: "MicroBatcher"):
+        self._batcher = batcher
+        self._done = threading.Event()
+        self._value: Optional[np.ndarray] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self) -> np.ndarray:
+        if not self._done.is_set():
+            self._batcher.flush()
+            # another caller's flush may have picked this request up and
+            # still be inside engine.score — wait for it to land
+            self._done.wait()
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _set(self, value):
+        self._value = value
+        self._done.set()
+
+    def _set_error(self, exc: BaseException):
+        self._error = exc
+        self._done.set()
+
+
+class MicroBatcher:
+    def __init__(self, engine, *, max_requests: int = 32,
+                 max_candidates: Optional[int] = None,
+                 max_wait_s: float = 0.01):
+        self.engine = engine
+        self.max_requests = max_requests
+        self.max_candidates = (max_candidates if max_candidates is not None
+                               else engine.max_candidates)
+        self.max_wait_s = max_wait_s
+        self._lock = threading.Lock()
+        # the engine (ContextCache LRU, ExecutorRegistry dicts, stats list)
+        # is not thread-safe: serialize engine.score across flushing callers
+        self._engine_lock = threading.Lock()
+        self._pending: List[RankRequest] = []
+        self._tickets: List[Ticket] = []
+        self._oldest: Optional[float] = None
+        self.flushes = 0
+        self.coalesced = 0
+
+    def submit(self, request: RankRequest) -> Ticket:
+        with self._lock:
+            t = Ticket(self)
+            self._pending.append(request)
+            self._tickets.append(t)
+            if self._oldest is None:
+                self._oldest = time.time()
+            full = (len(self._pending) >= self.max_requests
+                    or sum(len(r.cand_ids) for r in self._pending)
+                    >= self.max_candidates)
+        if full:
+            self.flush()
+        return t
+
+    def poll(self):
+        """Flush if the oldest pending request has waited past max_wait_s."""
+        with self._lock:
+            expired = (self._oldest is not None
+                       and time.time() - self._oldest >= self.max_wait_s)
+        if expired:
+            self.flush()
+
+    def flush(self):
+        with self._lock:
+            pending, tickets = self._pending, self._tickets
+            self._pending, self._tickets, self._oldest = [], [], None
+            if pending:
+                self.flushes += 1
+                self.coalesced += len(pending)
+        if not pending:
+            return
+        try:
+            with self._engine_lock:
+                results = self.engine.score(pending)
+        except BaseException as exc:
+            # never orphan a ticket: a caller blocked in result() must see
+            # the failure, not hang
+            for t in tickets:
+                t._set_error(exc)
+            raise
+        for t, r in zip(tickets, results):
+            t._set(r)

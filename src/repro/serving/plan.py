@@ -1,0 +1,183 @@
+"""Batch planning for the serving engine (paper §4.3, Figure 2).
+
+The planner is the pure host-side layer of the engine: it takes a list of
+:class:`RankRequest`, performs Ψ over the request batch (vectorized — the
+``first_of`` provenance comes straight out of ``np.unique``, no per-unique
+``np.argmax`` loop), and pads everything into a SHAPE BUCKET from a small
+powers-of-two ladder.  Because the ladder is finite, the set of jitted
+executors downstream is finite and can be fully precompiled by
+``ServingEngine.warmup()`` — a new (B_u, B_c) never triggers a fresh XLA
+compile in steady state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.dcat import dedup_with_first
+
+
+@dataclasses.dataclass
+class RankRequest:
+    seq_ids: np.ndarray          # (L,)
+    seq_actions: np.ndarray
+    seq_surfaces: np.ndarray
+    cand_ids: np.ndarray         # (N_b,)
+    cand_feats: np.ndarray       # (N_b, F_c)
+    user_feats: np.ndarray       # (F_u,)
+    graphsage: Optional[np.ndarray] = None
+
+
+def request_key(r: RankRequest) -> bytes:
+    """ContextCache key: the full user-sequence identity (ids + actions +
+    surfaces) — anything that feeds the context component."""
+    return (np.asarray(r.seq_ids).tobytes()
+            + np.asarray(r.seq_actions).tobytes()
+            + np.asarray(r.seq_surfaces).tobytes())
+
+
+# ---------------------------------------------------------------------------
+# Shape buckets
+# ---------------------------------------------------------------------------
+
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLadder:
+    """Powers-of-two sizes in [min_size, max_size].  ``fit(n)`` returns the
+    smallest bucket that holds n rows; n > max_size is a planning error (the
+    request stream must be chunked first — see :func:`split_requests`)."""
+    max_size: int
+    min_size: int = 1
+
+    def __post_init__(self):
+        assert 1 <= self.min_size <= self.max_size
+
+    def sizes(self) -> Tuple[int, ...]:
+        out, s = [], _next_pow2(self.min_size)
+        while s < self.max_size:
+            out.append(s)
+            s *= 2
+        out.append(self.max_size)
+        return tuple(out)
+
+    def fit(self, n: int) -> int:
+        for s in self.sizes():
+            if n <= s:
+                return s
+        raise ValueError(f"{n} rows exceed the bucket ladder max "
+                         f"{self.max_size}")
+
+
+# ---------------------------------------------------------------------------
+# BatchPlan
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchPlan:
+    """One fixed-shape device batch plus the host-side bookkeeping needed to
+    route results back to requests and to key the ContextCache."""
+    batch: Dict[str, np.ndarray]   # padded to (b_u, ...) / (b_c, ...)
+    b_u: int                       # unique-user bucket size
+    b_c: int                       # candidate bucket size
+    n_unique: int                  # actual unique users (<= b_u)
+    n_candidates: int              # actual candidates (<= b_c)
+    counts: List[int]              # candidates per request
+    inv_req: np.ndarray            # (R,) request -> unique row
+    first_of: np.ndarray           # (n_unique,) request index of first occur.
+    user_keys: List[bytes]         # per unique row, ContextCache key
+    seq_len: int
+
+    @property
+    def dedup_ratio(self) -> float:
+        return self.n_candidates / max(self.n_unique, 1)
+
+
+def _pad_rows(x: np.ndarray, n: int, fill=0) -> np.ndarray:
+    out = np.full((n, *x.shape[1:]), fill, x.dtype)
+    out[:len(x)] = x
+    return out
+
+
+def build_plan(requests: Sequence[RankRequest], ladder_u: BucketLadder,
+               ladder_c: BucketLadder, key_fn=request_key) -> BatchPlan:
+    """Ψ over the request batch + padding into the bucket ladder.
+    ``key_fn(request) -> bytes`` derives the ContextCache key of each
+    unique user (default: full sequence identity)."""
+    assert len(requests) > 0
+    all_ids = np.stack([np.asarray(r.seq_ids) for r in requests])
+    all_actions = np.stack([np.asarray(r.seq_actions) for r in requests])
+    all_surfaces = np.stack([np.asarray(r.seq_surfaces) for r in requests])
+    # Ψ over the FULL context input (ids+actions+surfaces): rows may only
+    # share a context when everything feeding the context component matches
+    identity = np.concatenate([all_ids, all_actions, all_surfaces], axis=1)
+    _, inv_req, first_of = dedup_with_first(identity)
+    uniq_seq = all_ids[first_of]
+    counts = [len(r.cand_ids) for r in requests]
+    # Ψ⁻¹ index per candidate, vectorized over the request->unique mapping
+    inverse_idx = np.repeat(inv_req, counts).astype(np.int32)
+
+    n_unique, n_cand = len(uniq_seq), len(inverse_idx)
+    b_u, b_c = ladder_u.fit(n_unique), ladder_c.fit(n_cand)
+    L = uniq_seq.shape[1]
+
+    seq_actions = all_actions[first_of]
+    seq_surfaces = all_surfaces[first_of]
+    batch = {
+        "seq_ids": _pad_rows(uniq_seq.astype(np.int32), b_u),
+        "seq_actions": _pad_rows(seq_actions.astype(np.int32), b_u),
+        "seq_surfaces": _pad_rows(seq_surfaces.astype(np.int32), b_u),
+        "seq_valid": _pad_rows(np.ones_like(uniq_seq, bool), b_u),
+        "seq_user_id": _pad_rows(np.arange(n_unique, dtype=np.int32), b_u),
+        "inverse_idx": _pad_rows(inverse_idx, b_c),
+        "cand_ids": _pad_rows(np.concatenate(
+            [np.asarray(r.cand_ids) for r in requests]).astype(np.int32), b_c),
+        "cand_feats": _pad_rows(np.concatenate(
+            [np.asarray(r.cand_feats) for r in requests]).astype(np.float32),
+            b_c),
+        "user_feats": _pad_rows(np.stack(
+            [np.asarray(r.user_feats) for r in requests])[first_of]
+            .astype(np.float32), b_u),
+        "cand_age_days": np.zeros(b_c, np.float32),
+    }
+    if requests[0].graphsage is not None:
+        batch["graphsage"] = _pad_rows(np.concatenate(
+            [np.asarray(r.graphsage) for r in requests]).astype(np.float32),
+            b_c)
+
+    user_keys = [key_fn(requests[i]) for i in first_of]
+    return BatchPlan(batch=batch, b_u=b_u, b_c=b_c, n_unique=n_unique,
+                     n_candidates=n_cand, counts=counts, inv_req=inv_req,
+                     first_of=first_of, user_keys=user_keys, seq_len=L)
+
+
+def split_requests(requests: Sequence[RankRequest], max_unique: int,
+                   max_candidates: int) -> List[List[int]]:
+    """Greedily chunk a request list so every chunk fits the bucket maxima
+    (<= max_unique distinct user sequences, <= max_candidates total
+    candidates).  Returns lists of request indices; order is preserved."""
+    chunks: List[List[int]] = []
+    cur: List[int] = []
+    cur_keys: set = set()
+    cur_cands = 0
+    for i, r in enumerate(requests):
+        n = len(r.cand_ids)
+        if n > max_candidates:
+            raise ValueError(f"request {i} has {n} candidates > "
+                             f"max_candidates={max_candidates}")
+        key = request_key(r)
+        new_user = key not in cur_keys
+        if cur and (cur_cands + n > max_candidates
+                    or len(cur_keys) + new_user > max_unique):
+            chunks.append(cur)
+            cur, cur_keys, cur_cands = [], set(), 0
+        cur.append(i)
+        cur_keys.add(key)
+        cur_cands += n
+    if cur:
+        chunks.append(cur)
+    return chunks

@@ -1,222 +1,73 @@
-"""Serving path (paper §4.3, Figure 2).
+"""Back-compat facade over the serving engine (paper §4.3, Figure 2).
 
-The inference router receives ranking requests (user sequence + N candidate
-items), fetches quantized id-embedding rows from the "CPU host" table shard,
-DEDUPLICATES the sequence batch (Ψ — pointers, host-side), and hands fixed-
-shape batches to the jitted rank step.  PinFM's context is computed once per
-unique user and crossed with every candidate (DCAT).
-
-On this container the "CPU host" and the "accelerator" are both the CPU; the
-structural split (packed int4 table + gather on host, dequant + transformer
-on device) is preserved.
+The seed's monolithic ``InferenceRouter`` grew into a layered engine —
+see :mod:`repro.serving.engine` (BatchPlan / ExecutorRegistry /
+ContextCache / MicroBatcher).  This module keeps the original public
+surface (``InferenceRouter``, ``RankRequest``, ``UserEmbeddingCache``)
+as thin wrappers so existing callers and tests keep working; new code
+should use :class:`repro.serving.engine.ServingEngine` directly.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
-import time
 from typing import List, Optional, Sequence
 
 import numpy as np
-import jax
-import jax.numpy as jnp
 
-from repro.core.dcat import dedup, dedup_stats
-from repro.core.finetune import PinFMRankingModel
+from repro.serving.context_cache import ContextCache
+from repro.serving.engine import LITE_VARIANTS, ServingEngine
+from repro.serving.plan import RankRequest                     # re-export
 
-
-@dataclasses.dataclass
-class RankRequest:
-    seq_ids: np.ndarray          # (L,)
-    seq_actions: np.ndarray
-    seq_surfaces: np.ndarray
-    cand_ids: np.ndarray         # (N_b,)
-    cand_feats: np.ndarray       # (N_b, F_c)
-    user_feats: np.ndarray       # (F_u,)
-    graphsage: Optional[np.ndarray] = None
+__all__ = ["InferenceRouter", "RankRequest", "UserEmbeddingCache"]
 
 
-class UserEmbeddingCache:
+class UserEmbeddingCache(ContextCache):
     """LRU of pooled user embeddings for late-fusion (lite) variants —
     the paper's §3.2 point that late fusion makes the PinFM output cacheable
-    across requests (the candidate never enters the sequence)."""
-
-    def __init__(self, capacity: int = 4096):
-        from collections import OrderedDict
-        self.capacity = capacity
-        self._d = OrderedDict()
-        self.hits = 0
-        self.misses = 0
-
-    @staticmethod
-    def key(seq_ids, seq_actions):
-        return (np.asarray(seq_ids).tobytes(),
-                np.asarray(seq_actions).tobytes())
-
-    def get(self, key):
-        if key in self._d:
-            self._d.move_to_end(key)
-            self.hits += 1
-            return self._d[key]
-        self.misses += 1
-        return None
-
-    def put(self, key, emb):
-        self._d[key] = emb
-        self._d.move_to_end(key)
-        if len(self._d) > self.capacity:
-            self._d.popitem(last=False)
+    across requests.  Kept as a named subclass of the generalized
+    :class:`ContextCache` for backward compatibility (including the
+    inherited seed-style ``key(seq_ids, seq_actions)``)."""
 
 
 class InferenceRouter:
-    """Batches requests, dedups sequences, pads to fixed shapes, scores."""
+    """Batches requests, dedups sequences, pads to fixed shapes, scores.
 
-    def __init__(self, model: PinFMRankingModel, params, *,
-                 max_unique: int = 8, max_candidates: int = 64,
+    ``score`` runs the monolithic ranking executor; ``score_cached`` runs
+    the cached path (pooled embeddings for lite variants — unchanged
+    behavior, now dedup-aware across requests within a call)."""
+
+    def __init__(self, model, params, *, max_unique: int = 8,
+                 max_candidates: int = 64,
                  user_cache: Optional[UserEmbeddingCache] = None):
         self.model, self.params = model, params
         self.max_unique, self.max_candidates = max_unique, max_candidates
-        self._rank = jax.jit(self._rank_step)
         self.user_cache = user_cache
+        self._engine = ServingEngine(model, params, max_unique=max_unique,
+                                     max_candidates=max_candidates)
+        self._cached_engine = None
         if user_cache is not None:
-            assert model.cfg.variant in ("lite-mean", "lite-last"), \
+            assert model.cfg.variant in LITE_VARIANTS, \
                 "user-embedding caching requires a late-fusion variant"
-            self._encode = jax.jit(self.model.encode_user)
-            self._score = jax.jit(
-                lambda p, emb, b: jax.nn.sigmoid(
-                    self.model.score_with_user_emb(p, emb, b)
-                    .astype(jnp.float32)))
-        self.stats: List[dict] = []
+            self._cached_engine = ServingEngine(
+                model, params, max_unique=max_unique,
+                max_candidates=max_candidates, cache=user_cache,
+                # seed semantics: the lite LRU keys by ids+actions only
+                key_fn=lambda r: UserEmbeddingCache.key(r.seq_ids,
+                                                        r.seq_actions))
+            # one chronological stats stream across both paths, like the
+            # seed's single list
+            self._cached_engine.stats = self._engine.stats
 
-    def _rank_step(self, params, batch):
-        logits, _, _ = self.model.forward(params, batch, train=False)
-        return jax.nn.sigmoid(logits.astype(jnp.float32))
+    @property
+    def stats(self) -> List[dict]:
+        return self._engine.stats
 
     def score(self, requests: Sequence[RankRequest]) -> List[np.ndarray]:
         """-> per-request (N_b, n_tasks) probabilities."""
-        t0 = time.time()
-        # assemble the candidate-level batch
-        all_seq = np.stack([r.seq_ids for r in requests])
-        uniq_seq, inv_req = dedup(all_seq)                    # Ψ over requests
-        seq_actions = np.stack([r.seq_actions for r in requests])
-        seq_surfaces = np.stack([r.seq_surfaces for r in requests])
-        first_of = np.array([np.argmax(inv_req == u)
-                             for u in range(len(uniq_seq))])
-        counts = [len(r.cand_ids) for r in requests]
-        inverse_idx = np.concatenate(
-            [np.full(c, inv_req[i], np.int32) for i, c in enumerate(counts)])
+        return self._engine.score(requests)
 
-        B_u = self._pad_to(len(uniq_seq), self.max_unique)
-        B_c = self._pad_to(len(inverse_idx), self.max_candidates)
-        L = uniq_seq.shape[1]
-
-        def padu(x, fill=0):
-            out = np.full((B_u, *x.shape[1:]), fill, x.dtype)
-            out[:len(x)] = x
-            return out
-
-        def padc(x, fill=0):
-            out = np.full((B_c, *x.shape[1:]), fill, x.dtype)
-            out[:len(x)] = x
-            return out
-
-        batch = {
-            "seq_ids": padu(uniq_seq.astype(np.int32)),
-            "seq_actions": padu(seq_actions[first_of].astype(np.int32)),
-            "seq_surfaces": padu(seq_surfaces[first_of].astype(np.int32)),
-            "seq_valid": padu(np.ones_like(uniq_seq, bool)),
-            "seq_user_id": padu(np.arange(len(uniq_seq), dtype=np.int32)),
-            "inverse_idx": padc(inverse_idx),
-            "cand_ids": padc(np.concatenate([r.cand_ids for r in requests])
-                             .astype(np.int32)),
-            "cand_feats": padc(np.concatenate(
-                [r.cand_feats for r in requests]).astype(np.float32)),
-            "user_feats": padu(np.stack(
-                [r.user_feats for r in requests])[first_of]
-                .astype(np.float32)),
-        }
-        if requests[0].graphsage is not None:
-            batch["graphsage"] = padc(np.concatenate(
-                [r.graphsage for r in requests]).astype(np.float32))
-        batch["cand_age_days"] = padc(
-            np.zeros(len(inverse_idx), np.float32))
-        probs = np.asarray(self._rank(self.params,
-                                      jax.tree.map(jnp.asarray, batch)))
-        self.stats.append({**dedup_stats(inverse_idx),
-                           "latency_s": time.time() - t0})
-        # split back per request
-        out, off = [], 0
-        for c in counts:
-            out.append(probs[off:off + c])
-            off += c
-        return out
-
-    @staticmethod
-    def _pad_to(n: int, quantum: int) -> int:
-        return max(quantum, -(-n // quantum) * quantum)
-
-    # -- late-fusion path with the user-embedding cache ----------------------
     def score_cached(self, requests: Sequence[RankRequest]) -> List[np.ndarray]:
         """Lite-variant scoring: pooled user embeddings come from the LRU
         when the same user sequence was seen before (any earlier request),
         so repeat traffic skips the transformer entirely."""
-        assert self.user_cache is not None
-        t0 = time.time()
-        cache = self.user_cache
-        embs = []
-        to_encode, enc_slots = [], []
-        for i, r in enumerate(requests):
-            key = cache.key(r.seq_ids, r.seq_actions)
-            hit = cache.get(key)
-            embs.append(hit)
-            if hit is None:
-                to_encode.append(r)
-                enc_slots.append((i, key))
-        if to_encode:
-            B_u = self._pad_to(len(to_encode), self.max_unique)
-            L = len(to_encode[0].seq_ids)
-
-            def pad(xs):
-                out = np.zeros((B_u, L), np.int32)
-                out[:len(xs)] = np.stack(xs)
-                return jnp.asarray(out)
-
-            fresh = np.asarray(self._encode(
-                self.params,
-                pad([r.seq_ids for r in to_encode]),
-                pad([r.seq_actions for r in to_encode]),
-                pad([r.seq_surfaces for r in to_encode])))
-            for j, (i, key) in enumerate(enc_slots):
-                cache.put(key, fresh[j])
-                embs[i] = fresh[j]
-
-        counts = [len(r.cand_ids) for r in requests]
-        B_c = self._pad_to(sum(counts), self.max_candidates)
-        user_emb = np.zeros((B_c, embs[0].shape[-1]), np.float32)
-        cand_ids = np.zeros(B_c, np.int32)
-        cand_feats = np.zeros((B_c, requests[0].cand_feats.shape[1]),
-                              np.float32)
-        user_feats = np.zeros((B_c, len(requests[0].user_feats)), np.float32)
-        off = 0
-        for r, e in zip(requests, embs):
-            n = len(r.cand_ids)
-            user_emb[off:off + n] = e
-            cand_ids[off:off + n] = r.cand_ids
-            cand_feats[off:off + n] = r.cand_feats
-            user_feats[off:off + n] = r.user_feats
-            off += n
-        batch = {"cand_ids": jnp.asarray(cand_ids),
-                 "cand_feats": jnp.asarray(cand_feats),
-                 "user_feats": jnp.asarray(user_feats),
-                 "inverse_idx": jnp.arange(B_c)}
-        probs = np.asarray(self._score(self.params, jnp.asarray(user_emb),
-                                       batch))
-        self.stats.append({
-            "candidates": sum(counts), "unique_users": len(requests),
-            "cache_hits": cache.hits, "cache_misses": cache.misses,
-            "latency_s": time.time() - t0})
-        out, off = [], 0
-        for c in counts:
-            out.append(probs[off:off + c])
-            off += c
-        return out
+        assert self._cached_engine is not None
+        return self._cached_engine.score(requests)

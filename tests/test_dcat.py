@@ -11,7 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_stub import given, settings, st
 
 from repro.configs import smoke_config
 from repro.core.dcat import DCAT, DCATOptions, dedup, dedup_inverse, dedup_stats

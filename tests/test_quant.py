@@ -5,8 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
-from hypothesis.extra import numpy as hnp
+from _hypothesis_stub import given, hnp, settings, st
 
 from repro.quant import (compression_ratio, dequantize_table, quantize_table,
                          quantized_lookup, relative_l2_error)

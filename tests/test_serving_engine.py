@@ -1,0 +1,355 @@
+"""Serving engine (paper §4.3): batch planner, shape buckets, executor
+registry, context-KV cache, micro-batcher.
+
+Covers the acceptance points of the engine refactor:
+  * vectorized Ψ/first_of in the planner == the naive per-unique argmax
+    loop, on permuted and duplicate request orders (regression);
+  * engine.score == per-request single scoring == direct model.forward;
+  * cached early-fusion path (ContextCache hit) == uncached pass
+    BIT-FOR-BIT on the same bucket;
+  * zero fresh compiles on a mixed-shape request stream after warmup().
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCATOptions, dedup_with_first
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.models.config import get_config
+from repro.serving.context_cache import ContextCache
+from repro.serving.engine import ServingEngine
+from repro.serving.microbatch import MicroBatcher
+from repro.serving.plan import (BucketLadder, RankRequest, build_plan,
+                                split_requests)
+
+L = 16
+
+
+def _make_model(variant, **fkw):
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    cfg = FinetuneConfig(variant=variant, seq_len=L, **fkw)
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    from repro.core.dcat import DCAT
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def early_model():
+    return _make_model(
+        "graphsage-lt",
+        dcat=DCATOptions(rotate_replace=False, skip_last_self_attn=True))
+
+
+@pytest.fixture(scope="module")
+def lite_model():
+    return _make_model("lite-last")
+
+
+def _mk_request(user_seed, cand_rng, n_cand=3, graphsage=True):
+    r = np.random.RandomState(user_seed)
+    return RankRequest(
+        seq_ids=r.randint(0, 1000, L),
+        seq_actions=r.randint(0, 6, L),
+        seq_surfaces=r.randint(0, 3, L),
+        cand_ids=cand_rng.randint(0, 1000, n_cand),
+        cand_feats=cand_rng.randn(n_cand, 32).astype(np.float32),
+        user_feats=r.randn(32).astype(np.float32),
+        graphsage=(cand_rng.randn(n_cand, 64).astype(np.float32)
+                   if graphsage else None))
+
+
+# ---------------------------------------------------------------------------
+# planner
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder():
+    lad = BucketLadder(64, 8)
+    assert lad.sizes() == (8, 16, 32, 64)
+    assert lad.fit(1) == 8 and lad.fit(9) == 16 and lad.fit(64) == 64
+    with pytest.raises(ValueError):
+        lad.fit(65)
+    assert BucketLadder(6, 1).sizes() == (1, 2, 4, 6)
+
+
+def test_first_of_vectorized_matches_argmax_loop():
+    """Regression for the O(B_u*B_c) per-unique np.argmax loop the seed
+    router used: the vectorized first_of/inverse must agree on permuted and
+    duplicate-heavy request orders."""
+    rng = np.random.RandomState(0)
+    for trial in range(20):
+        n_req = rng.randint(1, 12)
+        pattern = rng.randint(0, 5, n_req)            # duplicate-heavy
+        rows = np.stack([np.full(L, v) + np.arange(L) for v in pattern])
+        uniq, inv, first_of = dedup_with_first(rows)
+        # naive reference (the seed implementation)
+        ref_first = np.array([np.argmax(inv == u) for u in range(len(uniq))])
+        np.testing.assert_array_equal(first_of, ref_first)
+        np.testing.assert_array_equal(rows[first_of], uniq)
+        np.testing.assert_array_equal(uniq[inv], rows)        # Ψ⁻¹ inverts
+        # first-occurrence order is preserved under permutation
+        assert (np.diff(first_of) > 0).all()
+
+
+def test_build_plan_layout():
+    rng = np.random.RandomState(0)
+    reqs = [_mk_request(s, rng, n_cand=n)
+            for s, n in ((1, 3), (2, 2), (1, 4), (3, 1), (1, 2))]
+    plan = build_plan(reqs, BucketLadder(8), BucketLadder(32, 4))
+    assert plan.n_unique == 3 and plan.b_u == 4
+    assert plan.n_candidates == 12 and plan.b_c == 16
+    assert plan.counts == [3, 2, 4, 1, 2]
+    # candidates of requests 0, 2 and 4 share unique row 0 (same user seed)
+    inv = plan.batch["inverse_idx"][:plan.n_candidates]
+    np.testing.assert_array_equal(
+        inv, [0, 0, 0, 1, 1, 0, 0, 0, 0, 2, 0, 0])
+    # padding rows are zero / invalid
+    assert not plan.batch["seq_valid"][plan.n_unique:].any()
+    assert (plan.batch["cand_ids"][plan.n_candidates:] == 0).all()
+    assert len(plan.user_keys) == plan.n_unique
+    assert plan.dedup_ratio == pytest.approx(4.0)
+
+
+def test_plan_dedups_on_full_identity():
+    """Ψ may only merge requests whose ENTIRE context input matches —
+    same ids with different actions/surfaces are different contexts (and
+    different ContextCache keys), so merging them would score one user's
+    candidates against the other's context."""
+    rng = np.random.RandomState(12)
+    a, b = _mk_request(1, rng), _mk_request(1, rng)
+    b.seq_actions = (b.seq_actions + 1) % 6
+    plan = build_plan([a, b], BucketLadder(8), BucketLadder(32, 4))
+    assert plan.n_unique == 2
+    assert len(set(plan.user_keys)) == 2
+    c = _mk_request(1, rng)                     # identical identity to a
+    plan = build_plan([a, c], BucketLadder(8), BucketLadder(32, 4))
+    assert plan.n_unique == 1
+
+
+def test_split_requests_respects_maxima():
+    rng = np.random.RandomState(0)
+    reqs = [_mk_request(s % 4, rng, n_cand=3) for s in range(10)]
+    chunks = split_requests(reqs, max_unique=2, max_candidates=7)
+    assert sorted(i for c in chunks for i in c) == list(range(10))
+    for c in chunks:
+        assert sum(len(reqs[i].cand_ids) for i in c) <= 7
+        assert len({reqs[i].seq_ids.tobytes() for i in c}) <= 2
+    with pytest.raises(ValueError):
+        split_requests([_mk_request(0, rng, n_cand=9)], 4, 8)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence
+# ---------------------------------------------------------------------------
+
+def test_engine_matches_single_request_scoring(early_model):
+    model, params = early_model
+    rng = np.random.RandomState(1)
+    reqs = [_mk_request(s, rng) for s in (1, 2, 1, 3)]
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16)
+    batched = engine.score(reqs)
+    solo_engine = ServingEngine(model, params, max_unique=4,
+                                max_candidates=16)
+    for r, b in zip(reqs, batched):
+        solo = solo_engine.score([r])[0]
+        np.testing.assert_allclose(b, solo, atol=1e-5)
+
+
+def test_engine_matches_direct_forward(early_model):
+    model, params = early_model
+    rng = np.random.RandomState(2)
+    reqs = [_mk_request(s, rng) for s in (1, 2, 1)]
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16)
+    out = engine.score(reqs)
+    plan = build_plan(reqs, engine.ladder_u, engine.ladder_c)
+    logits, _, _ = model.forward(params, jax.tree.map(jnp.asarray, plan.batch),
+                                 train=False)
+    ref = np.asarray(jax.nn.sigmoid(logits.astype(jnp.float32)))
+    np.testing.assert_allclose(np.concatenate(out), ref[:plan.n_candidates],
+                               atol=1e-5)
+
+
+def test_oversized_single_request_is_split(early_model):
+    """A request with more candidates than max_candidates is split by
+    candidate slice and reassembled (the seed router padded it instead —
+    unbounded shapes; the engine keeps shapes bucketed)."""
+    import dataclasses
+    model, params = early_model
+    rng = np.random.RandomState(10)
+    big = _mk_request(1, rng, n_cand=10)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=8)
+    out = engine.score([big])
+    assert out[0].shape == (10, 3)
+    parts = [dataclasses.replace(big, cand_ids=big.cand_ids[s],
+                                 cand_feats=big.cand_feats[s],
+                                 graphsage=big.graphsage[s])
+             for s in (slice(0, 8), slice(8, 10))]
+    ref = np.concatenate([engine.score([p])[0] for p in parts])
+    np.testing.assert_allclose(out[0], ref, atol=1e-6)
+
+
+def test_oversized_request_list_is_chunked(early_model):
+    model, params = early_model
+    rng = np.random.RandomState(3)
+    reqs = [_mk_request(s, rng) for s in range(9)]       # 9 users > max_unique
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16)
+    out = engine.score(reqs)
+    assert len(out) == 9 and all(o.shape == (3, 3) for o in out)
+    assert len(engine.stats) >= 3                        # several chunks
+
+
+# ---------------------------------------------------------------------------
+# context-KV cache (early fusion)
+# ---------------------------------------------------------------------------
+
+def test_context_cache_hit_bitwise_identical(early_model):
+    model, params = early_model
+    rng = np.random.RandomState(4)
+    reqs = [_mk_request(s, rng) for s in (1, 2, 3, 1)]
+    cache = ContextCache(capacity=16)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=cache)
+    miss_pass = engine.score(reqs)                       # populates the cache
+    assert cache.misses == 3 and cache.hits == 0         # 3 unique users
+    hit_pass = engine.score(reqs)                        # pure hits
+    assert cache.misses == 3 and cache.hits == 3
+    for a, b in zip(miss_pass, hit_pass):
+        np.testing.assert_array_equal(a, b)              # bit-for-bit
+    # and the cached path agrees with the uncached engine
+    plain = ServingEngine(model, params, max_unique=4,
+                          max_candidates=16).score(reqs)
+    for a, b in zip(miss_pass, plain):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_context_cache_eviction_and_bytes(early_model):
+    model, params = early_model
+    rng = np.random.RandomState(5)
+    cache = ContextCache(capacity=2)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=cache)
+    engine.score([_mk_request(s, rng) for s in (1, 2, 3)])
+    assert len(cache) == 2 and cache.nbytes > 0          # user 1 evicted
+    engine.score([_mk_request(1, rng)])
+    assert cache.misses == 4                             # re-encoded
+
+
+def test_lite_cached_matches_uncached(lite_model):
+    model, params = lite_model
+    rng = np.random.RandomState(6)
+    reqs = [_mk_request(s, rng, graphsage=False) for s in (1, 2, 1)]
+    cache = ContextCache(capacity=16)
+    cached = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=cache)
+    out1 = cached.score(reqs)
+    assert cache.misses == 2 and cache.hits == 0         # 2 unique users
+    out2 = cached.score(reqs)
+    for a, b in zip(out1, out2):
+        np.testing.assert_array_equal(a, b)
+    plain = ServingEngine(model, params, max_unique=4,
+                          max_candidates=16).score(reqs)
+    for a, b in zip(out1, plain):
+        np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# executor registry / warmup
+# ---------------------------------------------------------------------------
+
+def test_zero_recompiles_after_warmup(early_model):
+    model, params = early_model
+    cache = ContextCache(capacity=32)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           min_candidates=4, cache=cache)
+    tel = engine.warmup()
+    assert tel["compiles"] > 0 and tel["compiles_after_warmup"] == 0
+    rng = np.random.RandomState(7)
+    # mixed-shape stream: different request counts, candidate fanouts, and
+    # repeat patterns hit several (b_u, b_c) buckets
+    stream = [
+        [_mk_request(1, rng, n_cand=2)],
+        [_mk_request(s, rng, n_cand=3) for s in (1, 2, 3)],
+        [_mk_request(s, rng, n_cand=5) for s in (2, 2, 4, 1)],
+        [_mk_request(s, rng, n_cand=1) for s in (5, 6)],
+    ]
+    for batch in stream:                                 # first pass
+        engine.score(batch)
+    assert engine.registry.compiles_after_warmup == 0
+    hits_before = engine.registry.hits
+    for batch in stream:                                 # second pass
+        engine.score(batch)
+    assert engine.registry.compiles_after_warmup == 0
+    assert engine.registry.hits > hits_before
+
+
+def test_lite_cached_zero_recompiles_after_warmup(lite_model):
+    """The score_emb executor is keyed by (b_u, b_c): user_feats is
+    (b_u, F), so a b_u the warmup missed would silently retrace."""
+    model, params = lite_model
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=8,
+                           cache=ContextCache(16))
+    engine.warmup()
+    rng = np.random.RandomState(11)
+    for seeds in ((1,), (1, 2), (1, 2, 3)):              # b_u = 1, 2, 4
+        engine.score([_mk_request(s, rng, graphsage=False) for s in seeds])
+    assert engine.registry.compiles_after_warmup == 0
+
+
+def test_uncached_engine_warmup_covers_rank_executors(early_model):
+    model, params = early_model
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=8,
+                           min_candidates=8)
+    engine.warmup()
+    rng = np.random.RandomState(8)
+    engine.score([_mk_request(1, rng), _mk_request(2, rng)])
+    assert engine.registry.compiles_after_warmup == 0
+
+
+# ---------------------------------------------------------------------------
+# micro-batcher
+# ---------------------------------------------------------------------------
+
+def test_microbatcher_coalesces(early_model):
+    model, params = early_model
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=ContextCache(16))
+    rng = np.random.RandomState(9)
+    reqs = [_mk_request(s, rng) for s in (1, 2, 1, 3)]
+    ref = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                        cache=ContextCache(16)).score(reqs)
+    mb = MicroBatcher(engine, max_requests=4)
+    tickets = [mb.submit(r) for r in reqs]
+    assert all(t.done() for t in tickets)                # auto-flushed at 4
+    assert mb.flushes == 1 and mb.coalesced == 4
+    for t, r in zip(tickets, ref):
+        np.testing.assert_allclose(t.result(), r, atol=1e-6)
+    # partial batch: result() forces the flush
+    t = mb.submit(_mk_request(5, rng))
+    assert not t.done()
+    assert t.result().shape == (3, 3)
+    assert mb.flushes == 2
+
+
+def test_microbatcher_propagates_engine_errors(early_model):
+    """A failing engine.score must fail the tickets, not orphan them (a
+    caller blocked in result() would hang forever)."""
+    model, params = early_model
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16)
+    mb = MicroBatcher(engine, max_requests=8)
+    rng = np.random.RandomState(13)
+    t = mb.submit(_mk_request(1, rng, graphsage=False))  # variant needs gs
+    with pytest.raises(ValueError, match="graphsage"):
+        mb.flush()
+    assert t.done()
+    with pytest.raises(ValueError, match="graphsage"):
+        t.result()
