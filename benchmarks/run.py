@@ -22,13 +22,15 @@ import traceback
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks import (bench_dcat, bench_fig3_iterations, bench_quant,
-                        bench_table1_fusion, bench_table2_coldstart,
-                        bench_table3_losses, bench_table4_actions,
-                        bench_table5_finetuning, bench_table6_vocab)
+                        bench_retrieval, bench_table1_fusion,
+                        bench_table2_coldstart, bench_table3_losses,
+                        bench_table4_actions, bench_table5_finetuning,
+                        bench_table6_vocab)
 
 BENCHES = [
     ("dcat", bench_dcat.main),
     ("quant", bench_quant.main),
+    ("retrieval", bench_retrieval.main),
     ("table1", bench_table1_fusion.main),
     ("table2", bench_table2_coldstart.main),
     ("table3", bench_table3_losses.main),

@@ -45,3 +45,18 @@ def int8_dequant_ref(packed, scale, bias):
     b = (packed[:, :, None] >> shifts[None, None, :]) & 0xFF
     codes = b.reshape(R, W * 4).astype(jnp.float32)
     return codes * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+
+
+def retrieval_topk_ref(packed, scale, bias, queries, *, k, bits=4):
+    """Corpus retrieval oracle: dequantize the WHOLE packed corpus to fp32,
+    score every row against every query, one big stable top_k.
+
+    packed: (R, D*bits/32) int32; scale/bias: (R, 1); queries: (Q, D).
+    -> (scores (Q, k) fp32, rows (Q, k) int32), ties broken by lower row
+    index (``jax.lax.top_k`` is stable)."""
+    ref = int4_dequant_ref if bits == 4 else int8_dequant_ref
+    deq = ref(packed, scale, bias)                           # (R, D)
+    s = jnp.dot(queries.astype(jnp.float32), deq.T,
+                preferred_element_type=jnp.float32)          # (Q, R)
+    scores, rows = jax.lax.top_k(s, k)
+    return scores, rows.astype(jnp.int32)

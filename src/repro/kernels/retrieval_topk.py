@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: fused int4/int8 corpus scoring + running top-k
+(retrieval subsystem, PinnerFormer-style corpus dot-product retrieval).
+
+One grid step processes one block of packed corpus rows:
+
+  HBM -> VMEM:  packed codes (TR, W) int32, fp16 scale/bias (TR, 1)
+  in-register:  unpack nibbles/bytes -> codes (TR, D), dequantize
+                (FBGEMM min-max: code * scale + bias), score the block
+                against the resident query block:  s = Q . deq^T
+  carry:        the (Q, K) running top-k scores + global row indices live
+                in the output block (constant index map), merged with the
+                freshly scored block via a stable top_k each step.
+
+The merge preserves the global tie-break contract "equal scores -> lower
+row index wins": corpus blocks arrive in index order, every carried entry
+comes from an earlier (lower-index) block, and ``jax.lax.top_k`` is stable,
+so equal-score entries keep carried-before-fresh == index order.
+
+One HBM read of the packed corpus, no (Q, R) score matrix in HBM — the
+score block never leaves VMEM.  The pure-jnp oracle (dequantize the whole
+corpus, one big top_k) is ``kernels.ref.retrieval_topk_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_kernel(packed_ref, scale_ref, bias_ref, q_ref, os_ref, oi_ref, *,
+                 bits: int, per_word: int, n_items: int, block_rows: int):
+    r = pl.program_id(0)
+
+    @pl.when(r == 0)
+    def _init():
+        os_ref[...] = jnp.full_like(os_ref, -jnp.inf)
+        oi_ref[...] = jnp.zeros_like(oi_ref)
+
+    words = packed_ref[...]                                  # (TR, W) int32
+    tr, w = words.shape
+    mask = (1 << bits) - 1
+    cols = [(words >> (bits * n)) & mask for n in range(per_word)]
+    codes = jnp.stack(cols, axis=-1).reshape(tr, w * per_word)
+    deq = (codes.astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+           + bias_ref[...].astype(jnp.float32))              # (TR, D)
+    s = jnp.dot(q_ref[...], deq.T,
+                preferred_element_type=jnp.float32)          # (Q, TR)
+    ridx = r * block_rows + jax.lax.broadcasted_iota(jnp.int32, (1, tr), 1)
+    s = jnp.where(ridx < n_items, s, -jnp.inf)
+
+    cat_s = jnp.concatenate([os_ref[...], s], axis=1)        # (Q, K+TR)
+    cat_i = jnp.concatenate(
+        [oi_ref[...], jnp.broadcast_to(ridx, s.shape)], axis=1)
+    k = os_ref.shape[1]
+    top_s, top_p = jax.lax.top_k(cat_s, k)                   # stable
+    os_ref[...] = top_s
+    oi_ref[...] = jnp.take_along_axis(cat_i, top_p, axis=1)
+
+
+def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
+                   block_rows: int = 512, interpret: bool = True):
+    """Fused dequant + score + running top-k over a packed corpus.
+
+    packed: (R, D*bits/32) int32; scale/bias: (R, 1) fp16;
+    queries: (Q, D) fp32.  -> (scores (Q, k) fp32, rows (Q, k) int32),
+    sorted by score descending, ties broken by lower row index.
+    """
+    assert bits in (4, 8)
+    per_word = 32 // bits
+    R, W = packed.shape
+    D = W * per_word
+    assert queries.shape[-1] == D, (queries.shape, D)
+    assert 0 < k <= R, f"k={k} must be in (0, {R}]"
+    Q = queries.shape[0]
+    tr = min(block_rows, R)
+    pad = -R % tr
+    packed = jnp.pad(packed, ((0, pad), (0, 0)))
+    scale = jnp.pad(scale.astype(jnp.float16), ((0, pad), (0, 0)))
+    bias = jnp.pad(bias.astype(jnp.float16), ((0, pad), (0, 0)))
+    nr = packed.shape[0] // tr
+
+    kernel = functools.partial(_topk_kernel, bits=bits, per_word=per_word,
+                               n_items=R, block_rows=tr)
+    return pl.pallas_call(
+        kernel,
+        grid=(nr,),
+        in_specs=[
+            pl.BlockSpec((tr, W), lambda r: (r, 0)),
+            pl.BlockSpec((tr, 1), lambda r: (r, 0)),
+            pl.BlockSpec((tr, 1), lambda r: (r, 0)),
+            pl.BlockSpec((Q, D), lambda r: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((Q, k), lambda r: (0, 0)),
+            pl.BlockSpec((Q, k), lambda r: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Q, k), jnp.float32),
+            jax.ShapeDtypeStruct((Q, k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(packed, scale, bias, queries.astype(jnp.float32))

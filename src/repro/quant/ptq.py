@@ -38,21 +38,35 @@ jax.tree_util.register_dataclass(
     meta_fields=["bits", "dim"])
 
 
+_F16_MAX = 65504.0   # largest finite float16 — scale/bias are stored fp16
+
+
 def quantize_table(table, bits: int = 4) -> QuantizedTable:
-    """table: (R, D) float.  D*bits must be a multiple of 32."""
+    """table: (R, D) float.  D*bits must be a multiple of 32.
+
+    Degenerate rows are handled exactly: a constant row has ``mx == mn``,
+    so ``scale == 0`` and every code is forced to 0 — dequantization then
+    returns ``bias`` == the fp16-rounded row value (exact round-trip at
+    serving precision).  Row extrema are clamped into the finite fp16
+    range first so scale/bias never overflow to inf (which would turn the
+    whole dequantized row into inf/nan)."""
     assert bits in (4, 8)
     R, D = table.shape
     per_word = 32 // bits
     assert D % per_word == 0
     x = table.astype(jnp.float32)
-    mn = jnp.min(x, axis=1, keepdims=True)
-    mx = jnp.max(x, axis=1, keepdims=True)
+    mn = jnp.clip(jnp.min(x, axis=1, keepdims=True), -_F16_MAX, _F16_MAX)
+    mx = jnp.clip(jnp.max(x, axis=1, keepdims=True), -_F16_MAX, _F16_MAX)
     # fp16 scale/bias, exactly as served (paper stores fp16 scale + bias)
     scale = ((mx - mn) / (2 ** bits - 1)).astype(jnp.float16)
     bias = mn.astype(jnp.float16)
-    sf = jnp.maximum(scale.astype(jnp.float32), 1e-12)
-    codes = jnp.clip(jnp.round((x - bias.astype(jnp.float32)) / sf),
-                     0, 2 ** bits - 1).astype(jnp.int32)       # (R, D)
+    sf = scale.astype(jnp.float32)
+    codes = jnp.where(
+        sf > 0,
+        jnp.clip(jnp.round((x - bias.astype(jnp.float32))
+                           / jnp.where(sf > 0, sf, 1.0)),
+                 0, 2 ** bits - 1),
+        0.0).astype(jnp.int32)                                 # (R, D)
     codes = codes.reshape(R, D // per_word, per_word)
     shifts = jnp.arange(per_word, dtype=jnp.int32) * bits
     packed = jnp.sum(codes << shifts[None, None, :], axis=-1,

@@ -1,0 +1,31 @@
+"""Corpus-scale retrieval subsystem: candidate generation upstream of the
+ranking engine (PinnerFormer-style pooled-user-embedding -> corpus
+dot-product retrieval over an int4/int8-packed item index).
+
+Module map:
+
+  index.py    ItemIndex — packed item-embedding corpus (int4/int8 codes +
+              fp16 scale/bias, pytree-registered, npz save/load) and
+              IndexBuilder — exports candidate-tower embeddings from
+              ``PinFMRankingModel._candidate_tokens`` for an id range and
+              packs them with ``quant.ptq.quantize_table``.
+  scorer.py   CorpusScorer — exact top-k over the packed corpus with three
+              paths: the fused Pallas kernel (``kernels.retrieval_topk``),
+              the streaming pure-jnp fused path (scan over cache-resident
+              chunks, block-max selection + exact rescore), and the
+              brute-force oracle (``kernels.ref.retrieval_topk_ref``).
+              Also the shared executor/merge helpers (``chunk_topk``,
+              ``merge_topk``) used by the serving engine.
+  sharded.py  ShardedRetriever — contiguous corpus row ranges per device
+              over the ``data`` mesh axis via ``shard_map``; per-shard
+              exact top-k, stable lower-index-wins merge on host.
+
+Serving integration lives in ``serving.engine``: ``RetrieveRequest`` ->
+cached pooled user embedding (``encode_user`` + ContextCache) -> bucketed
+corpus-chunk executors in the ExecutorRegistry -> host merge; covered by
+``ServingEngine.warmup()`` so steady-state retrieval never recompiles.
+"""
+from repro.retrieval.index import IndexBuilder, ItemIndex
+from repro.retrieval.scorer import (CorpusScorer, chunk_topk, fused_topk,
+                                    merge_topk, unpack_codes)
+from repro.retrieval.sharded import ShardedRetriever

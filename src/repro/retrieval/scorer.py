@@ -1,0 +1,202 @@
+"""CorpusScorer: exact top-k over a packed int4/int8 item corpus.
+
+Three interchangeable execution paths, all returning (scores (Q, k),
+rows (Q, k)) with ties broken by lower row index:
+
+  * ``pallas`` — the fused TPU kernel (``kernels.retrieval_topk``):
+    in-register dequant + score + running top-k carried across corpus
+    blocks.  Interpret mode on CPU.
+  * ``fused``  — the pure-jnp analogue of the kernel, shaped for CPU/XLA:
+    a ``lax.scan`` over corpus chunks streams dequant + score entirely in
+    cache (no (Q, R) score matrix), emitting only per-block score maxima;
+    the top-k *blocks* are then rescored exactly.  This is the fast path
+    the benchmark runs and what each shard of the ShardedRetriever runs.
+  * ``ref``    — the brute-force oracle (``kernels.ref.retrieval_topk_ref``).
+
+Why block-max selection is exact (including index ties): corpus blocks
+partition the row range in index order.  If row x in block E is excluded,
+stable top-k kept k blocks, each with max > max_E, or max == max_E and a
+lower block index.  Each kept block therefore contributes at least one
+item that beats x — strictly, or by tying with a lower row index (block
+index order == row index order).  So at least k items rank ahead of x and
+x cannot be in the true top-k.
+
+The argument compares phase-1 maxima with phase-2 rescored values, so both
+phases evaluate the SAME fp operands (dequantize row, dot with query) —
+any divergence is limited to XLA reduction-order ulps, which the lattice
+parity tests pin to zero by construction.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.ref import retrieval_topk_ref
+from repro.kernels.retrieval_topk import retrieval_topk
+from repro.retrieval.index import ItemIndex
+
+MODES = ("fused", "pallas", "ref")
+
+
+def unpack_codes(packed, bits: int):
+    """(..., W) int32 packed words -> (..., W * 32/bits) fp32 codes."""
+    per_word = 32 // bits
+    shifts = jnp.arange(per_word, dtype=jnp.int32) * bits
+    nib = (packed[..., None] >> shifts) & ((1 << bits) - 1)
+    return nib.astype(jnp.float32).reshape(
+        *packed.shape[:-1], packed.shape[-1] * per_word)
+
+
+def fused_topk(queries, packed, scale, bias, *, k: int, bits: int = 4,
+               chunk_rows: int = 32768, block_rows: int = 32,
+               n_valid=None, row_offset=0):
+    """Two-phase exact top-k, jnp only (jit-friendly; shard_map-friendly).
+
+    queries: (Q, D) fp32; packed: (R, W) int32 with R % chunk_rows == 0
+    and chunk_rows % block_rows == 0; scale/bias: (R, 1) fp16.
+    ``n_valid`` (traced ok) masks trailing padded rows; ``row_offset``
+    (traced ok) shifts the returned row indices (sharding).
+    """
+    Q, D = queries.shape
+    R, W = packed.shape
+    assert R % chunk_rows == 0 and chunk_rows % block_rows == 0
+    nch, nb = R // chunk_rows, chunk_rows // block_rows
+    nb_total = nch * nb
+    n_sel = min(k, nb_total)
+    if n_valid is None:
+        n_valid = R
+    n_valid = jnp.asarray(n_valid, jnp.int32)
+    q32 = queries.astype(jnp.float32)
+    qT = q32.T
+
+    # phase 1: stream chunks, emit per-block score maxima only
+    def body(chunk_idx, inp):
+        pk, sc, bs = inp
+        deq = (unpack_codes(pk, bits) * sc.astype(jnp.float32)
+               + bs.astype(jnp.float32))                      # (CH, D)
+        s = jnp.dot(deq, qT, preferred_element_type=jnp.float32)  # (CH, Q)
+        ridx = chunk_idx * chunk_rows + jnp.arange(chunk_rows, dtype=jnp.int32)
+        s = jnp.where((ridx < n_valid)[:, None], s, -jnp.inf)
+        return chunk_idx + 1, jnp.max(s.reshape(nb, block_rows, Q), axis=1)
+
+    _, bms = jax.lax.scan(
+        body, jnp.int32(0),
+        (packed.reshape(nch, chunk_rows, W),
+         scale.reshape(nch, chunk_rows, 1),
+         bias.reshape(nch, chunk_rows, 1)))
+    bm = bms.reshape(nb_total, Q).T                           # (Q, nb_total)
+
+    # phase 2: pick the top blocks (stable => lower block index on ties),
+    # rescore just their rows, final stable top-k over index-ordered rows
+    _, blk = jax.lax.top_k(bm, n_sel)
+    blk = jnp.sort(blk, axis=1)
+    rows = (blk[:, :, None] * block_rows
+            + jnp.arange(block_rows, dtype=jnp.int32)[None, None, :]
+            ).reshape(Q, n_sel * block_rows)
+    flat = rows.reshape(-1)
+    pk_r = jnp.take(packed, flat, axis=0).reshape(Q, -1, W)
+    sc_r = jnp.take(scale, flat, axis=0).reshape(Q, -1, 1).astype(jnp.float32)
+    bs_r = jnp.take(bias, flat, axis=0).reshape(Q, -1, 1).astype(jnp.float32)
+    # same dequant-then-dot formula as phase 1 — a factored rescore
+    # (codes.q * scale + sum(q) * bias) rounds differently and could flip
+    # a block-boundary decision on non-lattice data
+    deq_r = unpack_codes(pk_r, bits) * sc_r + bs_r
+    s = jnp.einsum('qnd,qd->qn', deq_r, q32)
+    s = jnp.where(rows < n_valid, s, -jnp.inf)
+    top_s, top_p = jax.lax.top_k(s, k)
+    top_rows = jnp.take_along_axis(rows, top_p, axis=1)
+    return top_s, top_rows + jnp.asarray(row_offset, jnp.int32)
+
+
+def chunk_topk(queries, packed, scale, bias, base_row, n_valid, *, k: int,
+               bits: int = 4):
+    """Single-chunk executor body for the serving engine: dequantize one
+    corpus chunk, score, return its top-k with GLOBAL row indices.  Chunk
+    shape is static (one jit per query bucket); ``base_row`` / ``n_valid``
+    are traced scalars so every chunk of the corpus reuses the executor."""
+    q32 = queries.astype(jnp.float32)
+    deq = (unpack_codes(packed, bits) * scale.astype(jnp.float32)
+           + bias.astype(jnp.float32))
+    s = jnp.dot(q32, deq.T, preferred_element_type=jnp.float32)   # (Q, CH)
+    local = jnp.arange(packed.shape[0], dtype=jnp.int32)
+    s = jnp.where((local < n_valid)[None, :], s, -jnp.inf)
+    top_s, top_i = jax.lax.top_k(s, k)
+    return top_s, top_i + jnp.asarray(base_row, jnp.int32)
+
+
+def merge_topk(scores, rows, k: int):
+    """Host-side merge of per-shard/per-chunk partial top-ks.
+
+    scores/rows: (..., Q, k_part) numpy, candidate groups ordered by
+    ascending row range (chunks/shards in index order, each group sorted by
+    score with ties already index-ordered) — a stable sort on the
+    concatenation then preserves the global lower-index-wins tie-break."""
+    s = np.concatenate([np.asarray(x) for x in scores], axis=-1)
+    r = np.concatenate([np.asarray(x) for x in rows], axis=-1)
+    order = np.argsort(-s, axis=-1, kind="stable")[..., :k]
+    return (np.take_along_axis(s, order, axis=-1),
+            np.take_along_axis(r, order, axis=-1))
+
+
+class CorpusScorer:
+    """Exact corpus top-k against an :class:`ItemIndex`."""
+
+    def __init__(self, index: ItemIndex, *, mode: str = "fused",
+                 chunk_rows: int = 32768, block_rows: int = 32,
+                 kernel_block_rows: int = 512,
+                 interpret: Optional[bool] = None):
+        assert mode in MODES, f"mode {mode!r} not in {MODES}"
+        self.index = index
+        self.mode = mode
+        self.block_rows = block_rows
+        self.kernel_block_rows = kernel_block_rows
+        # run the Pallas kernel compiled on TPU, interpreted elsewhere
+        self.interpret = (jax.default_backend() != "tpu"
+                          if interpret is None else interpret)
+        qt = index.qt
+        self.bits, self.dim = qt.bits, qt.dim
+        R = qt.packed.shape[0]
+        self.chunk_rows = min(chunk_rows, _round_up(R, block_rows))
+        if mode == "fused":       # ref/pallas read the unpadded index as-is
+            pad = -R % self.chunk_rows
+            self.packed = jnp.pad(jnp.asarray(qt.packed), ((0, pad), (0, 0)))
+            self.scale = jnp.pad(jnp.asarray(qt.scale, jnp.float16),
+                                 ((0, pad), (0, 0)))
+            self.bias = jnp.pad(jnp.asarray(qt.bias, jnp.float16),
+                                ((0, pad), (0, 0)))
+        self._jitted = {}
+
+    def topk(self, queries, k: int):
+        """queries: (Q, dim) -> (scores (Q, k) fp32, rows (Q, k) int32)."""
+        assert 0 < k <= self.index.n_items
+        queries = jnp.asarray(queries, jnp.float32)
+        assert queries.ndim == 2 and queries.shape[1] == self.dim
+        if self.mode == "ref":
+            return retrieval_topk_ref(
+                self.index.qt.packed, self.index.qt.scale, self.index.qt.bias,
+                queries, k=k, bits=self.bits)
+        if self.mode == "pallas":
+            return retrieval_topk(
+                self.index.qt.packed, self.index.qt.scale, self.index.qt.bias,
+                queries, k=k, bits=self.bits,
+                block_rows=self.kernel_block_rows, interpret=self.interpret)
+        fn = self._jitted.get(k)
+        if fn is None:
+            fn = jax.jit(functools.partial(
+                fused_topk, k=k, bits=self.bits, chunk_rows=self.chunk_rows,
+                block_rows=self.block_rows, n_valid=self.index.n_items))
+            self._jitted[k] = fn
+        return fn(queries, self.packed, self.scale, self.bias)
+
+    def retrieve(self, queries, k: int):
+        """Like :meth:`topk` but maps rows to item ids (numpy)."""
+        scores, rows = self.topk(queries, k)
+        return np.asarray(scores), self.index.item_ids(rows)
+
+
+def _round_up(n: int, m: int) -> int:
+    return n + (-n % m)

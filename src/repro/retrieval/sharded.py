@@ -1,0 +1,102 @@
+"""ShardedRetriever: corpus top-k over a device mesh.
+
+The packed corpus is split into contiguous row ranges, one per device along
+the ``data`` mesh axis (the same axis ``distributed.sharding`` uses for the
+row-sharded id tables).  Each shard runs the fused scorer locally over its
+rows (queries replicated), producing a per-shard exact top-k with GLOBAL
+row indices (shard offset via ``lax.axis_index``); the tiny (n_dev, Q, k)
+partials are merged on host with the stable lower-index-wins rule.
+
+Per-device work and memory drop by n_dev; the only cross-device traffic is
+the replicated (Q, D) query block in and (Q, k) partials out — no score
+matrix, no corpus movement.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.retrieval.index import ItemIndex
+from repro.retrieval.scorer import fused_topk, merge_topk, _round_up
+
+
+class ShardedRetriever:
+    """Splits an :class:`ItemIndex` across the ``data`` axis of a mesh."""
+
+    def __init__(self, index: ItemIndex, mesh: Optional[Mesh] = None, *,
+                 devices: Optional[Sequence] = None,
+                 chunk_rows: int = 32768, block_rows: int = 32):
+        if mesh is None:
+            devices = list(devices if devices is not None else jax.devices())
+            mesh = Mesh(np.asarray(devices), ("data",))
+        assert "data" in mesh.axis_names
+        self.mesh = mesh
+        self.index = index
+        self.n_shards = mesh.shape["data"]
+        qt = index.qt
+        R = qt.packed.shape[0]
+        self.block_rows = block_rows
+        # every shard must hold the same whole number of scan chunks
+        self.chunk_rows = min(chunk_rows, _round_up(
+            _round_up(R, self.n_shards) // self.n_shards, block_rows))
+        self.rows_per_shard = _round_up(
+            _round_up(R, self.n_shards) // self.n_shards, self.chunk_rows)
+        pad = self.rows_per_shard * self.n_shards - R
+        # committed to the mesh layout once — otherwise every topk() call
+        # would reshard (copy) the whole corpus into P("data")
+        shard = NamedSharding(self.mesh, P("data", None))
+        self.packed = jax.device_put(
+            jnp.pad(jnp.asarray(qt.packed), ((0, pad), (0, 0))), shard)
+        self.scale = jax.device_put(
+            jnp.pad(jnp.asarray(qt.scale, jnp.float16), ((0, pad), (0, 0))),
+            shard)
+        self.bias = jax.device_put(
+            jnp.pad(jnp.asarray(qt.bias, jnp.float16), ((0, pad), (0, 0))),
+            shard)
+        self._jitted = {}
+
+    def _build(self, k: int):
+        rps = self.rows_per_shard
+        # a shard can contribute at most its own rows to the global top-k,
+        # so clipping the per-shard k keeps the merge exact while letting
+        # k exceed rows_per_shard (small shards, large k)
+        k_local = min(k, rps)
+
+        def local(q, pk, sc, bs):
+            shard = jax.lax.axis_index("data")
+            off = shard * rps
+            n_valid = jnp.clip(self.index.n_items - off, 0, rps)
+            s, r = fused_topk(q, pk, sc, bs, k=k_local, bits=self.index.bits,
+                              chunk_rows=self.chunk_rows,
+                              block_rows=self.block_rows,
+                              n_valid=n_valid, row_offset=off)
+            return s[None], r[None]               # (1, Q, k_local) per shard
+
+        fn = shard_map(local, mesh=self.mesh,
+                       in_specs=(P(None, None), P("data", None),
+                                 P("data", None), P("data", None)),
+                       out_specs=(P("data", None, None),
+                                  P("data", None, None)),
+                       check_rep=False)
+        return jax.jit(fn)
+
+    def topk(self, queries, k: int):
+        """-> (scores (Q, k), rows (Q, k)) — identical to the single-device
+        scorer, including index tie-breaks (shards are index-ordered)."""
+        assert 0 < k <= self.index.n_items
+        queries = jnp.asarray(queries, jnp.float32)
+        fn = self._jitted.get(k)
+        if fn is None:
+            fn = self._jitted[k] = self._build(k)
+        s, r = fn(queries, self.packed, self.scale, self.bias)
+        s, r = np.asarray(s), np.asarray(r)             # (n_dev, Q, k)
+        return merge_topk(list(s), list(r), k)
+
+    def retrieve(self, queries, k: int):
+        scores, rows = self.topk(queries, k)
+        return scores, self.index.item_ids(rows)

@@ -4,5 +4,6 @@ from repro.serving.executors import ExecutorRegistry
 from repro.serving.generate import GenerateConfig, Generator
 from repro.serving.microbatch import MicroBatcher, Ticket
 from repro.serving.plan import (BatchPlan, BucketLadder, RankRequest,
-                                build_plan, request_key, split_requests)
+                                RetrieveRequest, build_plan, request_key,
+                                split_requests)
 from repro.serving.router import InferenceRouter, UserEmbeddingCache

@@ -38,7 +38,8 @@ from repro.core.finetune import PinFMRankingModel
 from repro.serving.context_cache import ContextCache
 from repro.serving.executors import ExecutorRegistry
 from repro.serving.plan import (BatchPlan, BucketLadder, RankRequest,
-                                _pad_rows, build_plan, split_requests)
+                                RetrieveRequest, _pad_rows, build_plan,
+                                request_key, split_requests)
 
 LITE_VARIANTS = ("lite-mean", "lite-last")
 _CROSS_KEYS = ("inverse_idx", "cand_ids", "cand_feats", "user_feats")
@@ -63,6 +64,12 @@ class ServingEngine:
         self._key_fn = key_fn
         self.registry = ExecutorRegistry()
         self.stats: List[dict] = []
+        self.index = None                 # retrieval corpus (attach_index)
+        self._corpus = None               # padded device-resident corpus
+        self._chunks = None               # per-chunk (base, n_valid) scalars
+        self.retrieve_k = 0
+        self._warmed_up = False
+        self._warm_L = None
         self._register_executors()
 
     # ------------------------------------------------------------------
@@ -184,33 +191,35 @@ class ServingEngine:
             off += c
         return out
 
-    # -- early-fusion path: per-user context-KV cache -----------------------
-    def _lookup_users(self, plan: BatchPlan):
+    # -- per-user context/embedding cache protocol (rank + retrieve) --------
+    def _lookup_users(self, user_keys: Sequence[bytes]):
+        """Cache lookup per unique user key -> (hit values, miss rows)."""
         values: Dict[int, object] = {}
         miss_rows: List[int] = []
-        for u, key in enumerate(plan.user_keys):
-            v = self.cache.get(key)
+        for u, key in enumerate(user_keys):
+            v = self.cache.get(key) if self.cache is not None else None
             if v is None:
                 miss_rows.append(u)
             else:
                 values[u] = v
         return values, miss_rows
 
-    def _encode_missing(self, plan: BatchPlan, miss_rows: List[int], kind: str):
-        """Run the context/encode executor over just the cache-missing users
-        (padded to their own bucket) -> device output batched over misses."""
-        b_m = self.ladder_u.fit(len(miss_rows))
-
-        def gather_pad(name):
-            return jnp.asarray(_pad_rows(plan.batch[name][miss_rows], b_m))
-
+    def _encode_rows(self, kind: str, seq_ids, seq_actions, seq_surfaces):
+        """Run the context/encode executor over (n, L) user-sequence rows,
+        padded to their own bucket -> device output batched over rows."""
+        b_m = self.ladder_u.fit(len(seq_ids))
+        dev = lambda x: jnp.asarray(_pad_rows(np.asarray(x, np.int32), b_m))
         return self.registry(
-            kind, (b_m, plan.seq_len), self.params,
-            gather_pad("seq_ids"), gather_pad("seq_actions"),
-            gather_pad("seq_surfaces"))
+            kind, (b_m, seq_ids.shape[1]), self.params,
+            dev(seq_ids), dev(seq_actions), dev(seq_surfaces))
+
+    def _encode_missing(self, plan: BatchPlan, miss_rows: List[int], kind: str):
+        return self._encode_rows(kind, plan.batch["seq_ids"][miss_rows],
+                                 plan.batch["seq_actions"][miss_rows],
+                                 plan.batch["seq_surfaces"][miss_rows])
 
     def _score_early_cached(self, plan: BatchPlan) -> np.ndarray:
-        values, miss_rows = self._lookup_users(plan)
+        values, miss_rows = self._lookup_users(plan.user_keys)
         if miss_rows:
             ctxs = self._encode_missing(plan, miss_rows, "context")
             for j, u in enumerate(miss_rows):
@@ -225,7 +234,7 @@ class ServingEngine:
 
     # -- lite path: pooled-embedding cache (now dedup-aware) ----------------
     def _score_lite_cached(self, plan: BatchPlan) -> np.ndarray:
-        values, miss_rows = self._lookup_users(plan)
+        values, miss_rows = self._lookup_users(plan.user_keys)
         if miss_rows:
             fresh = np.asarray(self._encode_missing(plan, miss_rows, "encode"))
             for j, u in enumerate(miss_rows):
@@ -240,6 +249,157 @@ class ServingEngine:
             jnp.asarray(user_emb),
             self._device(self._cross_batch(plan.batch))))
 
+    # -- retrieval path: corpus top-k from the cached pooled embedding ------
+    def attach_index(self, index, *, k: int = 100,
+                     chunk_rows: int = 65536) -> None:
+        """Attach an ``ItemIndex`` as the retrieval corpus.  The corpus is
+        cut into FIXED-SHAPE device chunks so a single jitted executor per
+        query bucket covers any corpus size — chunk base/valid-count ride
+        along as traced scalars, never as fresh shapes."""
+        if not self.lite:
+            raise ValueError("retrieval needs a lite variant (pooled user "
+                             f"embedding); got {self.variant!r}")
+        assert 0 < k <= index.n_items
+        assert index.dim == self.model.pcfg.id_dim, \
+            (index.dim, self.model.pcfg.id_dim)
+        self.index, self.retrieve_k = index, k
+        R = index.qt.packed.shape[0]
+        ch = min(chunk_rows, R + (-R % 8))
+        assert k <= ch, f"k={k} exceeds chunk_rows={ch}"
+        pad = -R % ch
+        if pad:
+            packed = jnp.pad(jnp.asarray(index.qt.packed), ((0, pad), (0, 0)))
+            scale = jnp.pad(jnp.asarray(index.qt.scale, jnp.float16),
+                            ((0, pad), (0, 0)))
+            bias = jnp.pad(jnp.asarray(index.qt.bias, jnp.float16),
+                           ((0, pad), (0, 0)))
+        else:              # reuse the index arrays — no second corpus copy
+            packed = jnp.asarray(index.qt.packed)
+            scale = jnp.asarray(index.qt.scale, jnp.float16)
+            bias = jnp.asarray(index.qt.bias, jnp.float16)
+        self._corpus = (packed, scale, bias)
+        self._chunks = [(jnp.asarray(base, jnp.int32),
+                         jnp.asarray(min(index.n_items - base, ch), jnp.int32))
+                        for base in range(0, packed.shape[0], ch)]
+        bits = index.bits
+
+        def retrieve_factory(key):
+            from repro.retrieval.scorer import chunk_topk
+
+            def fn(queries, packed, scale, bias, base, n_valid):
+                # the corpus stays resident once; the executor carves its
+                # fixed-shape chunk out with a traced-offset dynamic slice
+                sl = lambda x: jax.lax.dynamic_slice_in_dim(x, base, ch)
+                return chunk_topk(queries, sl(packed), sl(scale), sl(bias),
+                                  base, n_valid, k=k, bits=bits)
+            return fn
+
+        # a re-attach (refreshed index, new k/bits) must not serve
+        # executors that closed over the previous index's parameters
+        self.registry.invalidate("retrieve")
+        self.registry.register("retrieve", retrieve_factory)
+        if self._warmed_up:   # keep the zero-recompile steady-state promise
+            self._warm_retrieval()
+
+    def _warm_retrieval(self):
+        """Warm (or re-warm) just the retrieval ladder — called when an
+        index is attached to an ALREADY-warmed engine, so the steady-state
+        zero-recompile contract survives warmup-then-attach orderings and
+        index refreshes without a full warmup() pass."""
+        L = int(self._warm_L if self._warm_L is not None
+                else self.model.cfg.seq_len)
+        d = self.model.pcfg.id_dim
+        zi = lambda *s: jnp.zeros(s, jnp.int32)
+        for b_u in self.ladder_u.sizes():
+            if self.cache is None:     # not covered by the warmup() pass
+                self.registry.warm("encode", (b_u, L), self.params,
+                                   zi(b_u, L), zi(b_u, L), zi(b_u, L))
+            self.registry.warm("retrieve", (b_u,),
+                               jnp.zeros((b_u, d), jnp.float32),
+                               *self._corpus, *self._chunks[0])
+
+    def retrieve(self, requests: Sequence[RetrieveRequest]):
+        """-> per-request (item_ids (k,), scores (k,)) numpy pairs.  The
+        pooled user embedding comes from the ContextCache when present
+        (shared with the lite ranking path); misses run the bucketed
+        ``encode`` executor.  Unique users beyond max_unique are processed
+        in bucket-sized groups."""
+        if self._chunks is None:
+            raise ValueError("no retrieval corpus: call attach_index() first")
+        for i, r in enumerate(requests):
+            if r.k > self.retrieve_k:
+                raise ValueError(
+                    f"request {i} wants k={r.k} but the attached index "
+                    f"serves k<={self.retrieve_k}; re-attach with a larger k")
+        out: List[Optional[tuple]] = [None] * len(requests)
+        key_fn = self._key_fn or request_key   # same namespace as ranking
+        keys = [key_fn(r) for r in requests]
+        uniq: Dict[bytes, int] = {}
+        owners: List[List[int]] = []        # unique row -> request indices
+        for i, key in enumerate(keys):
+            u = uniq.setdefault(key, len(owners))
+            if u == len(owners):
+                owners.append([])
+            owners[u].append(i)
+        order = list(range(len(owners)))
+        for g0 in range(0, len(order), self.max_unique):
+            group = order[g0:g0 + self.max_unique]
+            emb, tel_extra = self._user_embeddings(
+                [requests[owners[u][0]] for u in group],
+                [keys[owners[u][0]] for u in group])
+            scores, rows = self._corpus_topk(emb, len(group), tel_extra)
+            for j, u in enumerate(group):
+                ids = self.index.item_ids(rows[j])
+                for i in owners[u]:
+                    kk = requests[i].k
+                    out[i] = (ids[:kk], scores[j, :kk])
+        return out
+
+    def _user_embeddings(self, reqs, keys):
+        """Pooled embeddings for <= max_unique deduplicated users — the
+        same cache + bucketed-encode protocol as the lite scoring path
+        (``_lookup_users``/``_encode_rows``), fed from raw requests instead
+        of a BatchPlan.  -> ((n, id_dim) np, telemetry)."""
+        values, miss_rows = self._lookup_users(keys)
+        if miss_rows:
+            def gather(name):
+                return np.stack([np.asarray(getattr(reqs[u], name), np.int32)
+                                 for u in miss_rows])
+
+            fresh = np.asarray(self._encode_rows(
+                "encode", gather("seq_ids"), gather("seq_actions"),
+                gather("seq_surfaces")))
+            for j, u in enumerate(miss_rows):
+                values[u] = fresh[j]
+                if self.cache is not None:
+                    self.cache.put(keys[u], fresh[j])
+        emb = np.stack([values[u] for u in range(len(reqs))])
+        return emb, {"encode_misses": len(miss_rows)}
+
+    def _corpus_topk(self, emb, n_users, tel_extra):
+        """Run the bucketed chunk executors over the corpus, merge on host.
+        -> (scores (n_users, k), rows (n_users, k))."""
+        from repro.retrieval.scorer import merge_topk
+        t0 = time.time()
+        b_q = self.ladder_u.fit(n_users)
+        q = jnp.asarray(_pad_rows(emb.astype(np.float32), b_q))
+        parts = [self.registry("retrieve", (b_q,), q, *self._corpus,
+                               base, n_valid)
+                 for base, n_valid in self._chunks]
+        scores, rows = merge_topk([p[0] for p in parts],
+                                  [p[1] for p in parts], self.retrieve_k)
+        entry = {"retrieve_users": n_users, "b_q": b_q,
+                 "corpus_items": self.index.n_items,
+                 "corpus_chunks": len(self._chunks),
+                 "latency_s": time.time() - t0, **tel_extra,
+                 **{f"exec_{k}": v for k, v in
+                    self.registry.telemetry().items()}}
+        if self.cache is not None:
+            entry["cache_hits"] = self.cache.hits
+            entry["cache_misses"] = self.cache.misses
+        self.stats.append(entry)
+        return scores[:n_users], rows[:n_users]
+
     # ------------------------------------------------------------------
     def warmup(self, *, seq_len: Optional[int] = None) -> dict:
         """Precompile every executor reachable from the bucket ladder, so
@@ -251,10 +411,16 @@ class ServingEngine:
         zi = lambda *s: jnp.zeros(s, jnp.int32)
 
         for b_u in self.ladder_u.sizes():
-            if self.cache is not None:
+            if self.cache is not None or (self.lite and
+                                          self._chunks is not None):
                 kind = "encode" if self.lite else "context"
                 ctxs = self.registry.warm(kind, (b_u, L), params,
                                           zi(b_u, L), zi(b_u, L), zi(b_u, L))
+            if self._chunks is not None:
+                d = self.model.pcfg.id_dim
+                self.registry.warm("retrieve", (b_u,),
+                                   jnp.zeros((b_u, d), jnp.float32),
+                                   *self._corpus, *self._chunks[0])
             for b_c in self.ladder_c.sizes():
                 batch = self._dummy_batch(b_u, b_c, L)
                 if self.cache is None:
@@ -270,6 +436,7 @@ class ServingEngine:
                     self.registry.warm(
                         "cross", (b_u, b_c, L), params,
                         self._device(self._cross_batch(batch)), ctxs)
+        self._warmed_up, self._warm_L = True, L
         tel = self.registry.telemetry()
         tel["warmup_s"] = time.time() - t0
         return tel

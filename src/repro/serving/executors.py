@@ -33,6 +33,17 @@ class ExecutorRegistry:
     def register(self, kind: str, factory: Callable):
         self._factories[kind] = factory
 
+    def invalidate(self, kind: str):
+        """Drop every jitted executor of ``kind`` — required when a factory
+        is re-registered with new closed-over state (e.g. a refreshed
+        retrieval index), otherwise stale executors keep serving.  The
+        cumulative compile/hit counters are left untouched; dropped keys
+        count as fresh compiles again until re-warmed."""
+        for k in [k for k in self._jitted if k[0] == kind]:
+            del self._jitted[k]
+            self._executed.discard(k)
+            self._warmed.discard(k)
+
     @property
     def kinds(self):
         return tuple(self._factories)

@@ -30,9 +30,21 @@ class RankRequest:
     graphsage: Optional[np.ndarray] = None
 
 
-def request_key(r: RankRequest) -> bytes:
+@dataclasses.dataclass
+class RetrieveRequest:
+    """Candidate-generation request: top-k corpus retrieval for one user
+    sequence (no candidates — the corpus IS the candidate set)."""
+    seq_ids: np.ndarray          # (L,)
+    seq_actions: np.ndarray
+    seq_surfaces: np.ndarray
+    k: int = 100
+
+
+def request_key(r) -> bytes:
     """ContextCache key: the full user-sequence identity (ids + actions +
-    surfaces) — anything that feeds the context component."""
+    surfaces) — anything that feeds the context component.  Shared between
+    Rank and Retrieve requests, so a user encoded for ranking is a cache
+    hit for retrieval and vice versa."""
     return (np.asarray(r.seq_ids).tobytes()
             + np.asarray(r.seq_actions).tobytes()
             + np.asarray(r.seq_surfaces).tobytes())

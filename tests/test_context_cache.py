@@ -1,0 +1,82 @@
+"""ContextCache unit tests: LRU eviction order, hit/miss telemetry, and
+byte accounting under capacity pressure (previously only exercised
+indirectly through the engine tests)."""
+import numpy as np
+import pytest
+
+from repro.serving.context_cache import ContextCache
+
+
+def _val(i, n=4):
+    return np.full(n, i, np.float32)
+
+
+def test_eviction_is_lru_ordered():
+    c = ContextCache(capacity=3)
+    for i in range(3):
+        c.put(i, _val(i))
+    c.put(3, _val(3))                       # evicts 0 (oldest insert)
+    assert c.peek(0) is None
+    assert [k for k in (1, 2, 3) if c.peek(k) is not None] == [1, 2, 3]
+    # a get() refreshes recency: 1 survives the next eviction, 2 does not
+    assert c.get(1) is not None
+    c.put(4, _val(4))
+    assert c.peek(2) is None
+    assert c.peek(1) is not None and c.peek(4) is not None
+    assert len(c) == 3
+
+
+def test_put_refreshes_recency_and_updates_value():
+    c = ContextCache(capacity=2)
+    c.put("a", _val(1))
+    c.put("b", _val(2))
+    c.put("a", _val(7))                     # update -> most recent
+    c.put("c", _val(3))                     # evicts "b"
+    assert c.peek("b") is None
+    np.testing.assert_array_equal(c.peek("a"), _val(7))
+    assert len(c) == 2
+
+
+def test_hit_miss_telemetry_under_pressure():
+    c = ContextCache(capacity=2)
+    assert c.get("x") is None
+    assert (c.hits, c.misses) == (0, 1)
+    c.put("x", _val(0))
+    assert c.get("x") is not None
+    assert (c.hits, c.misses) == (1, 1)
+    c.put("y", _val(1))
+    c.put("z", _val(2))                     # "x" evicted
+    assert c.get("x") is None               # post-eviction lookup is a miss
+    assert (c.hits, c.misses) == (1, 2)
+    # peek never touches the counters or the LRU order
+    c.peek("y")
+    c.peek("nope")
+    assert (c.hits, c.misses) == (1, 2)
+    assert c.stats() == {"entries": 2, "hits": 1, "misses": 2,
+                         "nbytes": c.nbytes}
+
+
+def test_nbytes_tracks_evictions_and_updates():
+    c = ContextCache(capacity=2)
+    c.put("a", _val(0, n=8))                # 32 bytes
+    c.put("b", _val(1, n=16))               # 64 bytes
+    assert c.nbytes == 32 + 64
+    c.put("a", _val(2, n=2))                # update shrinks to 8 bytes
+    assert c.nbytes == 8 + 64
+    c.put("c", _val(3, n=4))                # evicts "b"
+    assert c.peek("b") is None
+    assert c.nbytes == 8 + 16
+    # pytree values (the early-fusion ctx case) are byte-counted too
+    c.put("d", {"k": _val(0, n=4), "v": _val(1, n=4)})   # 32 bytes
+    assert c.peek("a") is None              # evicted (capacity 2)
+    assert c.nbytes == 16 + 32
+
+
+def test_key_helper_distinguishes_sequences():
+    ids = np.arange(8, dtype=np.int32)
+    act = np.ones(8, np.int32)
+    k1 = ContextCache.key(ids, act)
+    k2 = ContextCache.key(ids, act + 1)
+    k3 = ContextCache.key(ids, act, np.zeros(8, np.int32))
+    assert k1 != k2 and k1 != k3
+    assert k1 == ContextCache.key(ids.copy(), act.copy())

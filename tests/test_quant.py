@@ -68,3 +68,63 @@ def test_int8_better_than_int4():
     e8 = relative_l2_error(table, quantize_table(table, 8))
     e4 = relative_l2_error(table, quantize_table(table, 4))
     assert e8 < e4 / 4
+
+
+# ---------------------------------------------------------------------------
+# degenerate rows: constant, single-row, and +-extreme-value tables must
+# round-trip exactly at serving (fp16 scale/bias) precision — a constant
+# row has scale == 0, which used to push every code through a 1e-12
+# division instead of pinning them to 0.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("value", [0.0, 1.0, -3.25, 1e-5, 300.0])
+def test_constant_rows_round_trip_exactly(bits, value):
+    table = jnp.full((5, 32), value, jnp.float32)
+    qt = quantize_table(table, bits)
+    assert np.all(np.asarray(qt.scale) == 0)
+    deq = np.asarray(dequantize_table(qt))
+    np.testing.assert_array_equal(deq, np.float32(np.float16(value)))
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_single_row_table_round_trip(bits):
+    row = jnp.asarray([[-1.0, 0.0, 0.5, 1.0] * 8], jnp.float32)
+    qt = quantize_table(row, bits)
+    deq = np.asarray(dequantize_table(qt))
+    assert deq.shape == (1, 32)
+    # min/max map to the end codes; everything within a half-step + fp16
+    step = float(np.asarray(qt.scale)[0, 0])
+    assert np.abs(deq - np.asarray(row)).max() <= step / 2 + 2e-3
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_extreme_values_stay_finite(bits):
+    """Values beyond the fp16 range used to overflow scale/bias to inf and
+    dequantize the whole row to inf/nan; now extrema clamp to +-65504."""
+    table = jnp.asarray([[-1e9, 1e9] * 16,
+                         [0.0, 1e30] * 16,
+                         [-1e30, -5.0] * 16], jnp.float32)
+    qt = quantize_table(table, bits)
+    assert np.isfinite(np.asarray(qt.scale, np.float32)).all()
+    assert np.isfinite(np.asarray(qt.bias, np.float32)).all()
+    deq = np.asarray(dequantize_table(qt))
+    assert np.isfinite(deq).all()
+    # clamped extrema still land on the fp16 endpoints
+    np.testing.assert_allclose(deq[0].min(), -65504.0, rtol=1e-3)
+    np.testing.assert_allclose(deq[0].max(), 65504.0, rtol=1e-3)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_mixed_degenerate_and_normal_rows(bits):
+    key = jax.random.PRNGKey(5)
+    normal = 0.05 * jax.random.normal(key, (3, 32))
+    table = jnp.concatenate([jnp.zeros((1, 32)), normal,
+                             jnp.full((1, 32), 2.5)], axis=0)
+    qt = quantize_table(table, bits)
+    deq = np.asarray(dequantize_table(qt))
+    np.testing.assert_array_equal(deq[0], 0.0)
+    np.testing.assert_array_equal(deq[-1], np.float32(np.float16(2.5)))
+    err = np.abs(deq[1:-1] - np.asarray(normal))
+    tol = np.asarray(qt.scale, np.float32)[1:-1] / 2 + 2e-3
+    assert (err <= tol).all()

@@ -1,0 +1,377 @@
+"""Retrieval subsystem: int4 item index, fused score/top-k kernel, sharded
+retriever, and the engine's RetrieveRequest path.
+
+Parity tests use LATTICE data — every table value and query coordinate is
+an exact multiple of a power of two, so all fp32 arithmetic is exact and
+any summation order yields bit-identical scores.  That makes "exact top-k
+parity, ties broken by index" a meaningful assertion (ties genuinely occur
+on a lattice) instead of an accident of float rounding.
+"""
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCAT
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.kernels.ref import retrieval_topk_ref
+from repro.kernels.retrieval_topk import retrieval_topk
+from repro.models.config import get_config
+from repro.quant import quantize_table
+from repro.retrieval import (CorpusScorer, IndexBuilder, ItemIndex,
+                             ShardedRetriever)
+from repro.serving import ContextCache, RankRequest, RetrieveRequest, \
+    ServingEngine
+
+L = 16
+
+
+def lattice_corpus(R, D, seed=0, bits=4):
+    """Quantization-exact corpus + queries: codes already on the intN grid,
+    scale/bias powers of two -> quantize_table round-trips exactly."""
+    rng = np.random.RandomState(seed)
+    hi = 2 ** bits
+    table = rng.randint(0, hi, (R, D)).astype(np.float32) / hi - 0.5
+    qt = quantize_table(jnp.asarray(table), bits)
+    q = rng.randint(-8, 8, (8, D)).astype(np.float32) / 16
+    return qt, jnp.asarray(q)
+
+
+# ---------------------------------------------------------------------------
+# kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_kernel_parity_64k():
+    """Acceptance: exact top-k parity on a >= 64k-row corpus."""
+    qt, q = lattice_corpus(65536, 32)
+    rs, rr = retrieval_topk_ref(qt.packed, qt.scale, qt.bias, q, k=64)
+    ks, kr = retrieval_topk(qt.packed, qt.scale, qt.bias, q, k=64,
+                            block_rows=2048)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+
+
+@pytest.mark.parametrize("bits,R,k,block_rows", [
+    (4, 4096, 37, 256), (4, 3001, 17, 512), (8, 2048, 100, 256),
+    (4, 100, 100, 64),
+])
+def test_kernel_parity_sweep(bits, R, k, block_rows):
+    qt, q = lattice_corpus(R, 32, seed=R, bits=bits)
+    rs, rr = retrieval_topk_ref(qt.packed, qt.scale, qt.bias, q, k=k,
+                                bits=bits)
+    ks, kr = retrieval_topk(qt.packed, qt.scale, qt.bias, q, k=k, bits=bits,
+                            block_rows=block_rows)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(rr))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(rs))
+
+
+def test_tie_break_by_index():
+    """Duplicate rows score identically; every path must return the LOWEST
+    row indices, in index order."""
+    rng = np.random.RandomState(3)
+    base = rng.randint(0, 16, (64, 32)).astype(np.float32) / 16
+    table = np.tile(base, (8, 1))                   # row r == row r % 64
+    qt = quantize_table(jnp.asarray(table), 4)
+    q = jnp.asarray(rng.randint(-8, 8, (4, 32)).astype(np.float32) / 16)
+    k = 96                                          # forces tied groups
+    rs, rr = retrieval_topk_ref(qt.packed, qt.scale, qt.bias, q, k=k)
+    ks, kr = retrieval_topk(qt.packed, qt.scale, qt.bias, q, k=k,
+                            block_rows=128)
+    np.testing.assert_array_equal(np.asarray(kr), np.asarray(rr))
+    idx = ItemIndex(qt=qt, start_id=0, n_items=512)
+    for mode in ("fused", "ref"):
+        sc = CorpusScorer(idx, mode=mode, chunk_rows=128, block_rows=16)
+        _, r = sc.topk(q, k)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rr))
+    sh = ShardedRetriever(idx, chunk_rows=128, block_rows=16)
+    np.testing.assert_array_equal(sh.topk(q, k)[1], np.asarray(rr))
+    # within a tied score group the indices must be ascending
+    rr_np, rs_np = np.asarray(rr), np.asarray(rs)
+    for qi in range(rr_np.shape[0]):
+        for j in range(1, k):
+            if rs_np[qi, j] == rs_np[qi, j - 1]:
+                assert rr_np[qi, j] > rr_np[qi, j - 1]
+
+
+# ---------------------------------------------------------------------------
+# CorpusScorer / ShardedRetriever
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,chunk,block", [(4096, 1024, 32), (3001, 512, 16),
+                                           (777, 4096, 32), (50, 64, 8)])
+def test_scorer_modes_agree(R, chunk, block):
+    qt, q = lattice_corpus(R, 32, seed=R)
+    idx = ItemIndex(qt=qt, start_id=10, n_items=R)
+    k = min(40, R)
+    rs, rr = retrieval_topk_ref(qt.packed, qt.scale, qt.bias, q, k=k)
+    for mode in ("fused", "pallas"):
+        sc = CorpusScorer(idx, mode=mode, chunk_rows=chunk, block_rows=block)
+        s, r = sc.topk(q, k)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rr))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(rs))
+    sh = ShardedRetriever(idx, chunk_rows=chunk, block_rows=block)
+    ss, sr = sh.topk(q, k)
+    np.testing.assert_array_equal(sr, np.asarray(rr))
+    # id mapping
+    s, ids = CorpusScorer(idx, mode="fused", chunk_rows=chunk,
+                          block_rows=block).retrieve(q, k)
+    np.testing.assert_array_equal(ids, np.asarray(rr) + 10)
+
+
+def test_sharded_matches_single_device_multihost():
+    """Sharded == single-device on a virtual 2-device mesh (subprocess: the
+    device count must be set before jax initializes)."""
+    src = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import sys; sys.path.insert(0, r"%s")
+import numpy as np, jax, jax.numpy as jnp
+from repro.quant import quantize_table
+from repro.retrieval import CorpusScorer, ItemIndex, ShardedRetriever
+assert jax.device_count() == 2
+rng = np.random.RandomState(0)
+R, D, k = 3333, 32, 50
+table = rng.randint(0, 16, (R, D)).astype(np.float32) / 16 - 0.5
+qt = quantize_table(jnp.asarray(table), 4)
+q = jnp.asarray(rng.randint(-8, 8, (4, D)).astype(np.float32) / 16)
+idx = ItemIndex(qt=qt, start_id=0, n_items=R)
+s1, r1 = CorpusScorer(idx, mode="fused", chunk_rows=512,
+                      block_rows=16).topk(q, k)
+sh = ShardedRetriever(idx, chunk_rows=512, block_rows=16)
+assert sh.n_shards == 2
+s2, r2 = sh.topk(q, k)
+assert np.array_equal(np.asarray(r1), r2), (np.asarray(r1), r2)
+assert np.array_equal(np.asarray(s1), s2)
+# k larger than rows_per_shard: per-shard k clips, merge stays exact
+small = ItemIndex(qt=quantize_table(jnp.asarray(table[:120]), 4),
+                  start_id=0, n_items=120)
+s3, r3 = CorpusScorer(small, mode="ref").topk(q, 96)
+shs = ShardedRetriever(small, chunk_rows=64, block_rows=16)
+assert shs.rows_per_shard < 96
+s4, r4 = shs.topk(q, 96)
+assert np.array_equal(np.asarray(r3), r4), (np.asarray(r3), r4)
+print("OK")
+""" % __import__("os").path.join(__import__("os").path.dirname(__file__),
+                                 "..", "src")
+    out = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                         text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "OK" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# IndexBuilder + ItemIndex persistence
+# ---------------------------------------------------------------------------
+
+def _lite_model():
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    cfg = FinetuneConfig(variant="lite-last", seq_len=L)
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def lite_model():
+    return _lite_model()
+
+
+def test_index_builder(lite_model, tmp_path):
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=128, bits=4)
+    index = builder.build(start_id=5, n_items=300)     # forces a padded tail
+    assert index.n_items == 300 and index.dim == model.pcfg.id_dim
+    assert index.qt.packed.shape[0] == 300
+    # embeddings match the candidate tower directly
+    ids = np.asarray([5, 50, 304], np.int32)
+    emb = builder.item_embeddings(ids)
+    _, e_c, _ = model._candidate_tokens(params, jnp.asarray(ids), None)
+    np.testing.assert_allclose(emb, np.asarray(e_c, np.float32), atol=1e-6)
+    # int4 packing is lossy but close after the l2-normalized embed
+    deq = np.asarray(index.dequantize())
+    assert np.abs(deq - builder.item_embeddings(5 + np.arange(300))).max() < 0.1
+    # round-trip through npz
+    p = str(tmp_path / "index.npz")
+    index.save(p)
+    back = ItemIndex.load(p)
+    assert back.start_id == 5 and back.n_items == 300
+    assert back.bits == 4 and back.dim == index.dim
+    np.testing.assert_array_equal(np.asarray(back.qt.packed),
+                                  np.asarray(index.qt.packed))
+    np.testing.assert_array_equal(np.asarray(back.qt.scale),
+                                  np.asarray(index.qt.scale))
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine retrieval path
+# ---------------------------------------------------------------------------
+
+def _mk_retrieve(seed, k=10):
+    r = np.random.RandomState(seed)
+    return RetrieveRequest(seq_ids=r.randint(0, 500, L),
+                           seq_actions=r.randint(0, 6, L),
+                           seq_surfaces=r.randint(0, 3, L), k=k)
+
+
+def test_engine_retrieve(lite_model):
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=256)
+    index = builder.build(0, 1000)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=ContextCache(capacity=64))
+    engine.attach_index(index, k=20, chunk_rows=256)
+    tel = engine.warmup()
+    assert tel["compiles_after_warmup"] == 0
+
+    reqs = [_mk_retrieve(1), _mk_retrieve(2), _mk_retrieve(1, k=5),
+            _mk_retrieve(3), _mk_retrieve(4), _mk_retrieve(5),
+            _mk_retrieve(6)]                 # 6 unique users > max_unique
+    res = engine.retrieve(reqs)
+    assert engine.registry.compiles_after_warmup == 0
+    assert all(len(ids) == r.k and len(s) == r.k
+               for (ids, s), r in zip(res, reqs))
+    # duplicate user -> identical prefix
+    np.testing.assert_array_equal(res[0][0][:5], res[2][0])
+
+    # parity with the reference scorer fed by encode_user directly
+    emb = np.stack([np.asarray(model.encode_user(
+        params, jnp.asarray(r.seq_ids)[None], jnp.asarray(r.seq_actions)[None],
+        jnp.asarray(r.seq_surfaces)[None]))[0] for r in reqs[:2]])
+    s_ref, ids_ref = CorpusScorer(index, mode="ref").retrieve(emb, 10)
+    np.testing.assert_array_equal(res[0][0], ids_ref[0])
+    np.testing.assert_array_equal(res[1][0], ids_ref[1])
+    np.testing.assert_allclose(res[0][1], s_ref[0], atol=1e-5)
+
+    # steady state: repeat traffic is all cache hits, zero fresh compiles
+    before = engine.cache.misses
+    engine.retrieve(reqs)
+    assert engine.cache.misses == before
+    assert engine.registry.compiles_after_warmup == 0
+
+
+def test_engine_retrieve_shares_cache_with_ranking(lite_model):
+    """A user encoded for ranking must be a ContextCache hit for retrieval
+    (same key), and retrieval without a cache still works."""
+    model, params = lite_model
+    index = IndexBuilder(model, params, batch_size=256).build(0, 500)
+    engine = ServingEngine(model, params, max_unique=2, max_candidates=8,
+                           cache=ContextCache(capacity=16))
+    engine.attach_index(index, k=8, chunk_rows=256)
+    u = _mk_retrieve(7, k=8)
+    rng = np.random.RandomState(0)
+    rank = RankRequest(
+        seq_ids=u.seq_ids, seq_actions=u.seq_actions,
+        seq_surfaces=u.seq_surfaces, cand_ids=rng.randint(0, 500, 4),
+        cand_feats=rng.randn(4, 32).astype(np.float32),
+        user_feats=rng.randn(32).astype(np.float32))
+    engine.score([rank])
+    misses = engine.cache.misses
+    engine.retrieve([u])                     # same sequence -> hit
+    assert engine.cache.misses == misses
+
+    bare = ServingEngine(model, params, max_unique=2, max_candidates=8)
+    bare.attach_index(index, k=8, chunk_rows=256)
+    ids_a, _ = bare.retrieve([u])[0]
+    ids_b, _ = engine.retrieve([u])[0]
+    np.testing.assert_array_equal(ids_a, ids_b)
+
+
+def test_engine_reattach_invalidates_executors(lite_model):
+    """A refreshed index (different k / bits) must not be served by stale
+    jitted executors that closed over the old parameters."""
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=256)
+    engine = ServingEngine(model, params, max_unique=2, max_candidates=8)
+    engine.attach_index(builder.build(0, 200), k=8, chunk_rows=256)
+    req = _mk_retrieve(9, k=8)
+    ids_a, _ = engine.retrieve([req])[0]
+    assert len(ids_a) == 8
+
+    builder8 = IndexBuilder(model, params, batch_size=256, bits=8)
+    engine.attach_index(builder8.build(0, 200), k=12, chunk_rows=256)
+    ids_b, scores_b = engine.retrieve([_mk_retrieve(9, k=12)])[0]
+    assert len(ids_b) == 12                 # new k actually served
+    # int8 index scored as int8: matches the reference scorer exactly
+    import jax.numpy as jnp
+    emb = np.asarray(model.encode_user(
+        params, jnp.asarray(req.seq_ids)[None],
+        jnp.asarray(req.seq_actions)[None],
+        jnp.asarray(req.seq_surfaces)[None]))
+    _, ids_ref = CorpusScorer(builder8.build(0, 200),
+                              mode="ref").retrieve(emb, 12)
+    np.testing.assert_array_equal(ids_b, ids_ref[0])
+
+    # oversized per-request k is an error, not a silent truncation
+    with pytest.raises(ValueError, match="k<=12"):
+        engine.retrieve([_mk_retrieve(9, k=13)])
+
+
+def test_engine_attach_after_warmup_stays_warm(lite_model):
+    """warmup() then attach_index() (and re-attach) must keep steady-state
+    recompiles at zero — attach re-warms the retrieval ladder itself."""
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=256)
+    engine = ServingEngine(model, params, max_unique=2, max_candidates=8)
+    engine.warmup()                          # no index yet, cache is None
+    engine.attach_index(builder.build(0, 200), k=8, chunk_rows=256)
+    engine.retrieve([_mk_retrieve(11, k=8)])
+    assert engine.registry.compiles_after_warmup == 0
+    engine.attach_index(builder.build(0, 300), k=8, chunk_rows=256)
+    engine.retrieve([_mk_retrieve(12, k=8)])
+    assert engine.registry.compiles_after_warmup == 0
+
+
+def test_engine_retrieve_respects_key_fn(lite_model):
+    """A custom key_fn (the router-style ids+actions key) must key the
+    retrieval cache too, or rank/retrieve stop sharing entries."""
+    model, params = lite_model
+    index = IndexBuilder(model, params, batch_size=256).build(0, 200)
+    cache = ContextCache(capacity=16)
+    engine = ServingEngine(
+        model, params, max_unique=2, max_candidates=8, cache=cache,
+        key_fn=lambda r: ContextCache.key(r.seq_ids, r.seq_actions))
+    engine.attach_index(index, k=8, chunk_rows=256)
+    u = _mk_retrieve(13, k=8)
+    rng = np.random.RandomState(0)
+    engine.score([RankRequest(
+        seq_ids=u.seq_ids, seq_actions=u.seq_actions,
+        seq_surfaces=u.seq_surfaces, cand_ids=rng.randint(0, 200, 4),
+        cand_feats=rng.randn(4, 32).astype(np.float32),
+        user_feats=rng.randn(32).astype(np.float32))])
+    misses, entries = cache.misses, len(cache)
+    engine.retrieve([u])                     # same user -> same key -> hit
+    assert cache.misses == misses and len(cache) == entries
+
+
+def test_engine_retrieve_requires_lite(lite_model):
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    cfg = FinetuneConfig(variant="base", seq_len=L)
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServingEngine(model, params)
+    qt, _ = lattice_corpus(64, 16)
+    with pytest.raises(ValueError, match="lite"):
+        engine.attach_index(ItemIndex(qt=qt, start_id=0, n_items=64))
+    lmodel, lparams = lite_model
+    with pytest.raises(ValueError, match="attach_index"):
+        ServingEngine(lmodel, lparams).retrieve([_mk_retrieve(0)])
