@@ -1,16 +1,25 @@
-"""Two-stage serving demo: corpus retrieval feeding the ranking engine.
+"""Two-stage serving demo: filtered corpus retrieval feeding the ranking
+engine, plus a live index refresh.
 
 Stage 1 — candidate generation: the user's pooled PinFM embedding (lite
 variant, ContextCache-shared with ranking) is scored against an int4-packed
 ItemIndex of the WHOLE item corpus; the engine's bucketed corpus-chunk
-executors return the exact top-k item ids.
+executors return the exact top-k item ids.  Each request also carries the
+user's already-seen items as ``exclude_ids`` (and optionally an
+``allow_surfaces`` constraint) — the engine packs them into per-chunk
+bitmasks so seen items can never be retrieved again.
 
 Stage 2 — ranking: the retrieved ids become the candidate set of a
 RankRequest and go through the usual scoring path (same engine, same cache,
 so the user's embedding is encoded exactly once across both stages).
 
-Run:  PYTHONPATH=src python examples/retrieve_topk.py
+Refresh — new items are appended to the index with ``IndexBuilder.append``
+(only the new rows are quantized) and re-attached to the warmed engine with
+ZERO new XLA compiles; the fresh items are immediately retrievable.
+
+Run:  PYTHONPATH=src python examples/retrieve_topk.py [--smoke]
 """
+import dataclasses
 import os
 import sys
 
@@ -25,8 +34,11 @@ from repro.retrieval import IndexBuilder
 from repro.serving import (ContextCache, RankRequest, RetrieveRequest,
                            ServingEngine)
 
-N_ITEMS = 4096
-TOP_K = 16
+SMOKE = "--smoke" in sys.argv
+N_ITEMS = 1024 if SMOKE else 4096
+N_NEW = 256 if SMOKE else 1024
+TOP_K = 8 if SMOKE else 16
+N_SURFACES = 3
 
 
 def main():
@@ -38,7 +50,8 @@ def main():
 
     # -- stage 0: build the int4 item index from the candidate tower -------
     builder = IndexBuilder(model, params, batch_size=1024, bits=4)
-    index = builder.build(start_id=0, n_items=N_ITEMS)
+    surfaces = np.arange(N_ITEMS) % N_SURFACES     # per-item surface tag
+    index = builder.build(start_id=0, n_items=N_ITEMS, surfaces=surfaces)
     fp32_bytes = N_ITEMS * index.dim * 4
     print(f"item index: {N_ITEMS} items x {index.dim} dims, "
           f"{index.nbytes / 2**10:.0f} KiB int4 "
@@ -59,20 +72,29 @@ def main():
         return (r.randint(0, N_ITEMS, L), r.randint(0, 6, L),
                 r.randint(0, 3, L))
 
-    # -- stage 1: retrieval -------------------------------------------------
+    # -- stage 1: filtered retrieval ---------------------------------------
+    # each user excludes their own sequence ids (already-seen items);
+    # user 2 additionally only accepts surface-0 items
     users = [user_seq(s) for s in (1, 2, 3)]
-    retrieved = engine.retrieve(
-        [RetrieveRequest(seq_ids=i, seq_actions=a, seq_surfaces=srf, k=TOP_K)
-         for i, a, srf in users])
+    reqs = [RetrieveRequest(seq_ids=i, seq_actions=a, seq_surfaces=srf,
+                            k=TOP_K, exclude_ids=np.unique(i))
+            for i, a, srf in users]
+    reqs[2] = dataclasses.replace(reqs[2], allow_surfaces=(0,))
+    retrieved = engine.retrieve(reqs)
     stats = engine.stats[-1]
     print(f"retrieved top-{TOP_K} of {stats['corpus_items']} items for "
-          f"{stats['retrieve_users']} users in "
+          f"{stats['retrieve_users']} users "
+          f"({stats['filtered_users']} filtered) in "
           f"{stats['latency_s'] * 1e3:.1f} ms "
           f"({stats['corpus_chunks']} corpus chunks, "
           f"recompiles {stats['exec_compiles_after_warmup']})")
     for u, (ids, scores) in enumerate(retrieved):
+        seen = np.isin(ids, np.unique(users[u][0])).sum()
         print(f"  user {u}: items {ids[:5]}... "
-              f"scores {np.round(scores[:5], 3)}")
+              f"scores {np.round(scores[:5], 3)} (seen-overlap: {seen})")
+        assert seen == 0, "a seen item leaked through the filter"
+    assert (retrieved[2][0] % N_SURFACES == 0).all(), \
+        "surface constraint violated"
 
     # -- stage 2: rank the retrieved candidates (cache hit on the user) ----
     requests = [RankRequest(
@@ -90,6 +112,21 @@ def main():
     print(f"user 0 final ranking (by save-prob): items "
           f"{retrieved[0][0][order][:5]} "
           f"p={np.round(probs[0][order, 0][:5], 3)}")
+
+    # -- refresh: append new items, re-attach, retrieve them ---------------
+    grown = builder.append(index, N_NEW,
+                           surfaces=np.arange(N_NEW) % N_SURFACES)
+    engine.attach_index(grown, k=TOP_K, chunk_rows=2048)
+    fresh_only = engine.retrieve([RetrieveRequest(
+        seq_ids=users[0][0], seq_actions=users[0][1],
+        seq_surfaces=users[0][2], k=TOP_K,
+        exclude_ids=np.arange(N_ITEMS))])[0]     # old corpus excluded
+    assert (fresh_only[0] >= N_ITEMS).all()
+    print(f"refresh: appended {N_NEW} items "
+          f"({grown.n_items} total, only new rows quantized), "
+          f"re-attach recompiles: "
+          f"{engine.registry.compiles_after_warmup} — fresh items "
+          f"{fresh_only[0][:5]}... retrievable immediately")
 
 
 if __name__ == "__main__":

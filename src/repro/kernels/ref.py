@@ -47,16 +47,25 @@ def int8_dequant_ref(packed, scale, bias):
     return codes * scale.astype(jnp.float32) + bias.astype(jnp.float32)
 
 
-def retrieval_topk_ref(packed, scale, bias, queries, *, k, bits=4):
+def retrieval_topk_ref(packed, scale, bias, queries, *, k, bits=4,
+                       mask=None):
     """Corpus retrieval oracle: dequantize the WHOLE packed corpus to fp32,
     score every row against every query, one big stable top_k.
 
-    packed: (R, D*bits/32) int32; scale/bias: (R, 1); queries: (Q, D).
+    packed: (R, D*bits/32) int32; scale/bias: (R, 1); queries: (Q, D);
+    mask: optional (Q, ceil(R/32)) int32 packed row bitmask (bit r&31 of
+    word r>>5; bit 1 = row excluded — see ``retrieval.filters``), whose
+    scores are pinned to -inf before selection.
     -> (scores (Q, k) fp32, rows (Q, k) int32), ties broken by lower row
-    index (``jax.lax.top_k`` is stable)."""
+    index (``jax.lax.top_k`` is stable); when fewer than k rows survive a
+    mask, the tail is (-inf, lowest excluded row indices)."""
     ref = int4_dequant_ref if bits == 4 else int8_dequant_ref
     deq = ref(packed, scale, bias)                           # (R, D)
     s = jnp.dot(queries.astype(jnp.float32), deq.T,
                 preferred_element_type=jnp.float32)          # (Q, R)
+    if mask is not None:
+        r = jnp.arange(s.shape[1], dtype=jnp.int32)
+        bit = (jnp.asarray(mask, jnp.int32)[:, r >> 5] >> (r & 31)) & 1
+        s = jnp.where(bit == 1, -jnp.inf, s)
     scores, rows = jax.lax.top_k(s, k)
     return scores, rows.astype(jnp.int32)

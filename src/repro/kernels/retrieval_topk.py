@@ -3,18 +3,24 @@
 
 One grid step processes one block of packed corpus rows:
 
-  HBM -> VMEM:  packed codes (TR, W) int32, fp16 scale/bias (TR, 1)
+  HBM -> VMEM:  packed codes (TR, W) int32, fp16 scale/bias (TR, 1),
+                and optionally one (Q, TR/32) block of the packed
+                per-query row bitmask (seen-item / surface filtering)
   in-register:  unpack nibbles/bytes -> codes (TR, D), dequantize
                 (FBGEMM min-max: code * scale + bias), score the block
-                against the resident query block:  s = Q . deq^T
+                against the resident query block:  s = Q . deq^T; rows
+                whose filter bit is set are pinned to -inf before select
   carry:        the (Q, K) running top-k scores + global row indices live
                 in the output block (constant index map), merged with the
-                freshly scored block via a stable top_k each step.
+                freshly scored block each step.
 
-The merge preserves the global tie-break contract "equal scores -> lower
-row index wins": corpus blocks arrive in index order, every carried entry
-comes from an earlier (lower-index) block, and ``jax.lax.top_k`` is stable,
-so equal-score entries keep carried-before-fresh == index order.
+The merge is an explicitly LEXICOGRAPHIC sort on (-score, row index), so
+the global tie-break contract "equal scores -> lower row index wins" holds
+even when -inf ties are common (a fully filtered corpus block ties with
+the carry's -inf init sentinel; the sentinel's INT32_MAX index makes it
+lose to every real row).  ``jax.lax.sort`` with two operands is the
+Mosaic-portable way to express this; replacing it with an in-register
+bitonic merge is tracked on the ROADMAP.
 
 One HBM read of the packed corpus, no (Q, R) score matrix in HBM — the
 score block never leaves VMEM.  The pure-jnp oracle (dequantize the whole
@@ -28,15 +34,21 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+_SENTINEL_IDX = 2**31 - 1   # carry init: loses every (-score, index) tie
 
-def _topk_kernel(packed_ref, scale_ref, bias_ref, q_ref, os_ref, oi_ref, *,
+
+def _topk_kernel(packed_ref, scale_ref, bias_ref, q_ref, *rest,
                  bits: int, per_word: int, n_items: int, block_rows: int):
+    if len(rest) == 3:
+        mask_ref, os_ref, oi_ref = rest
+    else:
+        mask_ref, (os_ref, oi_ref) = None, rest
     r = pl.program_id(0)
 
     @pl.when(r == 0)
     def _init():
         os_ref[...] = jnp.full_like(os_ref, -jnp.inf)
-        oi_ref[...] = jnp.zeros_like(oi_ref)
+        oi_ref[...] = jnp.full_like(oi_ref, _SENTINEL_IDX)
 
     words = packed_ref[...]                                  # (TR, W) int32
     tr, w = words.shape
@@ -49,23 +61,37 @@ def _topk_kernel(packed_ref, scale_ref, bias_ref, q_ref, os_ref, oi_ref, *,
                 preferred_element_type=jnp.float32)          # (Q, TR)
     ridx = r * block_rows + jax.lax.broadcasted_iota(jnp.int32, (1, tr), 1)
     s = jnp.where(ridx < n_items, s, -jnp.inf)
+    if mask_ref is not None:
+        mwords = mask_ref[...]                               # (Q, TR/32)
+        mbits = ((mwords[:, :, None]
+                  >> jax.lax.broadcasted_iota(jnp.int32, (1, 1, 32), 2)) & 1)
+        s = jnp.where(mbits.reshape(s.shape[0], tr) == 1, -jnp.inf, s)
 
     cat_s = jnp.concatenate([os_ref[...], s], axis=1)        # (Q, K+TR)
     cat_i = jnp.concatenate(
         [oi_ref[...], jnp.broadcast_to(ridx, s.shape)], axis=1)
     k = os_ref.shape[1]
-    top_s, top_p = jax.lax.top_k(cat_s, k)                   # stable
-    os_ref[...] = top_s
-    oi_ref[...] = jnp.take_along_axis(cat_i, top_p, axis=1)
+    # lexicographic (-score asc, index asc) == (score desc, index asc)
+    neg_s, idx = jax.lax.sort((-cat_s, cat_i), num_keys=2)
+    os_ref[...] = -neg_s[:, :k]
+    oi_ref[...] = idx[:, :k]
 
 
 def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
-                   block_rows: int = 512, interpret: bool = True):
+                   block_rows: int = 512, interpret: bool = True,
+                   mask=None):
     """Fused dequant + score + running top-k over a packed corpus.
 
     packed: (R, D*bits/32) int32; scale/bias: (R, 1) fp16;
-    queries: (Q, D) fp32.  -> (scores (Q, k) fp32, rows (Q, k) int32),
-    sorted by score descending, ties broken by lower row index.
+    queries: (Q, D) fp32; mask: optional (Q, >= ceil(R/32)) int32 packed
+    per-query row bitmask (bit r&31 of word r>>5; 1 = row excluded — see
+    ``retrieval.filters``), streamed blockwise alongside the corpus and
+    applied in-register.  -> (scores (Q, k) fp32, rows (Q, k) int32),
+    sorted by score descending, ties broken by lower row index; rows that
+    survive the mask fewer than k deep are filled with (-inf, lowest
+    excluded row index), matching ``retrieval_topk_ref``.
+    ``block_rows`` must be a multiple of 32 when a mask is passed (one
+    mask word covers 32 corpus rows).
     """
     assert bits in (4, 8)
     per_word = 32 // bits
@@ -74,7 +100,12 @@ def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
     assert queries.shape[-1] == D, (queries.shape, D)
     assert 0 < k <= R, f"k={k} must be in (0, {R}]"
     Q = queries.shape[0]
-    tr = min(block_rows, R)
+    if mask is None:
+        tr = min(block_rows, R)
+    else:
+        tr = min(block_rows, R + (-R % 32))
+        assert tr % 32 == 0, \
+            f"block_rows={block_rows} must be a multiple of 32 with a mask"
     pad = -R % tr
     packed = jnp.pad(packed, ((0, pad), (0, 0)))
     scale = jnp.pad(scale.astype(jnp.float16), ((0, pad), (0, 0)))
@@ -83,15 +114,25 @@ def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
 
     kernel = functools.partial(_topk_kernel, bits=bits, per_word=per_word,
                                n_items=R, block_rows=tr)
+    in_specs = [
+        pl.BlockSpec((tr, W), lambda r: (r, 0)),
+        pl.BlockSpec((tr, 1), lambda r: (r, 0)),
+        pl.BlockSpec((tr, 1), lambda r: (r, 0)),
+        pl.BlockSpec((Q, D), lambda r: (0, 0)),
+    ]
+    operands = [packed, scale, bias, queries.astype(jnp.float32)]
+    if mask is not None:
+        mw = nr * tr // 32
+        mask = jnp.asarray(mask, jnp.int32)
+        assert mask.shape == (Q, mask.shape[1]) and mask.shape[1] * 32 >= R, \
+            (mask.shape, R)
+        mask = jnp.pad(mask, ((0, 0), (0, mw - mask.shape[1])))
+        in_specs.append(pl.BlockSpec((Q, tr // 32), lambda r: (0, r)))
+        operands.append(mask)
     return pl.pallas_call(
         kernel,
         grid=(nr,),
-        in_specs=[
-            pl.BlockSpec((tr, W), lambda r: (r, 0)),
-            pl.BlockSpec((tr, 1), lambda r: (r, 0)),
-            pl.BlockSpec((tr, 1), lambda r: (r, 0)),
-            pl.BlockSpec((Q, D), lambda r: (0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((Q, k), lambda r: (0, 0)),
             pl.BlockSpec((Q, k), lambda r: (0, 0)),
@@ -101,4 +142,4 @@ def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
             jax.ShapeDtypeStruct((Q, k), jnp.int32),
         ],
         interpret=interpret,
-    )(packed, scale, bias, queries.astype(jnp.float32))
+    )(*operands)

@@ -5,10 +5,17 @@ dot-product retrieval over an int4/int8-packed item index).
 Module map:
 
   index.py    ItemIndex — packed item-embedding corpus (int4/int8 codes +
-              fp16 scale/bias, pytree-registered, npz save/load) and
-              IndexBuilder — exports candidate-tower embeddings from
-              ``PinFMRankingModel._candidate_tokens`` for an id range and
-              packs them with ``quant.ptq.quantize_table``.
+              fp16 scale/bias, optional per-item surface metadata,
+              pytree-registered, npz save/load) and IndexBuilder — exports
+              candidate-tower embeddings from
+              ``PinFMRankingModel._candidate_tokens`` for an id range,
+              packs them with ``quant.ptq.quantize_table``, and appends
+              new id ranges incrementally (``append``) without
+              re-quantizing existing rows.
+  filters.py  ItemFilter — per-request retrieval constraints (already-seen
+              item ids, surface targeting) and their conversion to packed
+              per-row bitmasks (bit 1 = excluded) applied by every scorer
+              path as -inf score pins before top-k selection.
   scorer.py   CorpusScorer — exact top-k over the packed corpus with three
               paths: the fused Pallas kernel (``kernels.retrieval_topk``),
               the streaming pure-jnp fused path (scan over cache-resident
@@ -25,6 +32,8 @@ cached pooled user embedding (``encode_user`` + ContextCache) -> bucketed
 corpus-chunk executors in the ExecutorRegistry -> host merge; covered by
 ``ServingEngine.warmup()`` so steady-state retrieval never recompiles.
 """
+from repro.retrieval.filters import (ItemFilter, as_filter_list,
+                                     filter_masks, pack_bits, unpack_bits)
 from repro.retrieval.index import IndexBuilder, ItemIndex
 from repro.retrieval.scorer import (CorpusScorer, chunk_topk, fused_topk,
                                     merge_topk, unpack_codes)

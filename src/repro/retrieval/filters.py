@@ -1,0 +1,155 @@
+"""Per-request item filtering for corpus retrieval.
+
+Production retrieval never serves the raw corpus top-k: candidates the user
+has already seen must be excluded at scoring time (TransAct V2's seen-item
+filtering on the hot path), and a request may be constrained to a surface
+(e.g. only video items on the video feed).  Both constraints reduce to the
+same primitive — a per-query set of *excluded corpus rows* — which this
+module represents as a packed little-endian bitmask:
+
+    word w of query q, bit j  <->  corpus row 32*w + j;  bit 1 = EXCLUDED
+
+so an all-zeros mask means "no filtering" (the padding default), and a
+(Q, ceil(R/32)) int32 array covers a corpus window of R rows in R/8 bytes
+per query.  Every scorer path applies the mask by pinning excluded scores
+to ``-inf`` BEFORE top-k selection, in both the block-max phase and the
+rescore phase of the fused path, so the exactness proof in
+``retrieval.scorer`` carries over unchanged (masked rows behave exactly
+like the padded rows ``n_valid`` already excludes).
+
+Tie-break contract: an excluded row is indistinguishable from a padded row;
+when fewer than k rows survive, every path fills the remaining slots with
+``-inf`` scores and the LOWEST excluded/padded row indices, matching the
+``retrieval_topk_ref`` oracle bit-for-bit (lower index wins on ties).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ItemFilter:
+    """One request's retrieval constraints.
+
+    Args:
+      exclude_ids: item IDS (not corpus rows) to drop — typically the
+        user's already-seen items.  Ids outside the index id range are
+        ignored.
+      allow_surfaces: when set, keep ONLY items whose surface id (from
+        ``ItemIndex.surfaces``) is in this collection; requires the index
+        to carry per-item surface metadata.
+    """
+    exclude_ids: Optional[Sequence[int]] = None
+    allow_surfaces: Optional[Tuple[int, ...]] = None
+
+    def is_empty(self) -> bool:
+        return ((self.exclude_ids is None or len(self.exclude_ids) == 0)
+                and self.allow_surfaces is None)
+
+    def fingerprint(self) -> bytes:
+        """Order-independent identity bytes — requests with the same user
+        AND the same fingerprint may share one retrieval execution."""
+        if self.is_empty():
+            return b""
+        parts = []
+        if self.exclude_ids is not None and len(self.exclude_ids):
+            parts.append(np.unique(np.asarray(self.exclude_ids,
+                                              np.int64)).tobytes())
+        parts.append(b"|")
+        if self.allow_surfaces is not None:
+            parts.append(np.unique(np.asarray(self.allow_surfaces,
+                                              np.int64)).tobytes())
+        return b"".join(parts)
+
+
+def mask_bit(words, rows):
+    """Device-side mask probe shared by the jnp scorer paths: words is a
+    (Q, W) int32 packed mask, rows a (Q, N) int32 array of LOCAL row
+    indices -> (Q, N) int32, 1 where the row is excluded.  Rows past the
+    mask width clamp to the last word — callers must already be dropping
+    them via their ``n_valid`` padding mask.  (The Pallas kernel and the
+    ``retrieval_topk_ref`` oracle intentionally re-implement this layout
+    in their own idiom; the lattice parity tests pin all of them to the
+    same contract.)"""
+    import jax.numpy as jnp
+    words = jnp.asarray(words, jnp.int32)
+    mw = jnp.take_along_axis(words, rows >> 5, axis=1, mode="clip")
+    return (mw >> (rows & 31)) & 1
+
+
+def pack_bits(excluded: np.ndarray) -> np.ndarray:
+    """(n,) bool -> (ceil(n/32),) int32, little-endian bit order: row r of
+    the window maps to word r >> 5, bit r & 31 (bit set = excluded)."""
+    excluded = np.asarray(excluded, bool)
+    pad = -len(excluded) % 32
+    if pad:
+        excluded = np.concatenate([excluded, np.zeros(pad, bool)])
+    return np.packbits(excluded, bitorder="little").view(np.int32)
+
+
+def unpack_bits(words: np.ndarray, n: int) -> np.ndarray:
+    """Inverse of :func:`pack_bits`: (..., W) int32 -> (..., n) bool."""
+    w = np.asarray(words).astype(np.int32).view(np.uint8)
+    return np.unpackbits(w, axis=-1, bitorder="little")[..., :n].astype(bool)
+
+
+def excluded_rows(f: Optional[ItemFilter], index, row_start: int,
+                  n_rows: int) -> np.ndarray:
+    """Resolve one filter against the corpus window
+    [row_start, row_start + n_rows) -> (n_rows,) bool, True = excluded.
+    Rows past ``index.n_items`` stay False — they are already dropped by
+    the scorers' ``n_valid`` padding mask."""
+    excl = np.zeros(n_rows, bool)
+    if f is None or f.is_empty():
+        return excl
+    if f.allow_surfaces is not None:
+        if index.surfaces is None:
+            raise ValueError("filter has allow_surfaces but the ItemIndex "
+                             "carries no per-item surfaces metadata")
+        sl = np.asarray(index.surfaces)[row_start:row_start + n_rows]
+        excl[:len(sl)] = ~np.isin(sl, np.asarray(f.allow_surfaces))
+    if f.exclude_ids is not None and len(f.exclude_ids):
+        rows = (np.asarray(f.exclude_ids, np.int64)
+                - index.start_id - row_start)
+        rows = rows[(rows >= 0) & (rows < n_rows)]
+        excl[rows] = True
+    return excl
+
+
+def filter_masks(filters, index, *, row_start: int = 0,
+                 n_rows: Optional[int] = None) -> Optional[np.ndarray]:
+    """Convert per-query filters into the packed row bitmask of a corpus
+    window.
+
+    Args:
+      filters: sequence of ``Optional[ItemFilter]``, one per query row.
+      index: the ``ItemIndex`` (supplies ``start_id`` / ``surfaces``).
+      row_start / n_rows: the corpus row window, in the index's local row
+        space (``n_rows`` defaults to the whole corpus).  Sharded and
+        chunked executors pass their own window so the returned bits are
+        already in shard/chunk-local coordinates.
+
+    Returns:
+      (len(filters), ceil(n_rows/32)) int32, bit 1 = excluded — or ``None``
+      when every filter is empty (callers keep their unmasked fast path).
+    """
+    if filters is None or all(f is None or f.is_empty() for f in filters):
+        return None
+    if n_rows is None:
+        n_rows = index.n_items - row_start
+    return np.stack([pack_bits(excluded_rows(f, index, row_start, n_rows))
+                     for f in filters])
+
+
+def as_filter_list(filters, n_queries: int):
+    """Normalize the user-facing ``filters`` argument: a single ItemFilter
+    broadcasts to every query; a sequence must match the query count."""
+    if filters is None or isinstance(filters, ItemFilter):
+        return [filters] * n_queries
+    filters = list(filters)
+    if len(filters) != n_queries:
+        raise ValueError(f"{len(filters)} filters for {n_queries} queries")
+    return filters

@@ -5,10 +5,18 @@ range, packed with the serving PTQ scheme (``quant.ptq.quantize_table``):
 int4/int8 codes bitpacked into int32 words + one fp16 scale/bias pair per
 row.  At 1M items x 64 dims that is 32 MiB of packed codes instead of
 256 MiB fp32 — cheap enough to keep device-resident per shard.
+
+Because quantization is strictly per-row, the corpus is INCREMENTALLY
+refreshable: :meth:`IndexBuilder.append` quantizes only the new id range
+and concatenates it below the existing rows — already-packed rows are
+never re-quantized, so a grown index is byte-identical to the old one on
+its original row range (the property that lets ``ServingEngine`` keep its
+warmed executors across a refresh).
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +30,13 @@ class ItemIndex:
     """Packed item-embedding corpus for ids [start_id, start_id + n_items).
 
     Corpus row r holds item id ``start_id + r`` — retrieval returns row
-    indices; :meth:`item_ids` maps them back to ids."""
+    indices; :meth:`item_ids` maps them back to ids.  ``surfaces`` is
+    optional per-item metadata ((n_items,) int, host numpy) consumed by
+    surface-targeting :class:`~repro.retrieval.filters.ItemFilter`s."""
     qt: QuantizedTable
     start_id: int
     n_items: int
+    surfaces: Optional[np.ndarray] = None
 
     @property
     def dim(self) -> int:
@@ -40,6 +51,7 @@ class ItemIndex:
         return self.qt.nbytes
 
     def item_ids(self, rows):
+        """Map retrieval row indices (any shape) back to item ids."""
         return np.asarray(rows) + self.start_id
 
     def dequantize(self, *, out_dtype=jnp.float32):
@@ -48,12 +60,15 @@ class ItemIndex:
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
+        """npz snapshot (codes + scale/bias + id range + surfaces)."""
+        extra = ({"surfaces": np.asarray(self.surfaces)}
+                 if self.surfaces is not None else {})
         np.savez(path,
                  packed=np.asarray(self.qt.packed),
                  scale=np.asarray(self.qt.scale),
                  bias=np.asarray(self.qt.bias),
                  bits=self.qt.bits, dim=self.qt.dim,
-                 start_id=self.start_id, n_items=self.n_items)
+                 start_id=self.start_id, n_items=self.n_items, **extra)
 
     @classmethod
     def load(cls, path: str) -> "ItemIndex":
@@ -63,11 +78,14 @@ class ItemIndex:
                                 bias=jnp.asarray(z["bias"]),
                                 bits=int(z["bits"]), dim=int(z["dim"]))
             return cls(qt=qt, start_id=int(z["start_id"]),
-                       n_items=int(z["n_items"]))
+                       n_items=int(z["n_items"]),
+                       surfaces=(z["surfaces"] if "surfaces" in z.files
+                                 else None))
 
 
 jax.tree_util.register_dataclass(
-    ItemIndex, data_fields=["qt"], meta_fields=["start_id", "n_items"])
+    ItemIndex, data_fields=["qt", "surfaces"],
+    meta_fields=["start_id", "n_items"])
 
 
 class IndexBuilder:
@@ -106,8 +124,54 @@ class IndexBuilder:
                                               jnp.asarray(chunk)))[:n])
         return np.concatenate(out, axis=0)
 
-    def build(self, start_id: int = 0, n_items: int = None) -> ItemIndex:
-        assert n_items is not None and n_items > 0
+    def _quantize(self, start_id: int, n_items: int, bits: int):
         emb = self.item_embeddings(start_id + np.arange(n_items))
-        qt = quantize_table(jnp.asarray(emb), bits=self.bits)
-        return ItemIndex(qt=qt, start_id=int(start_id), n_items=int(n_items))
+        return quantize_table(jnp.asarray(emb), bits=bits)
+
+    def build(self, start_id: int = 0, n_items: int = None, *,
+              surfaces=None) -> ItemIndex:
+        """Embed + quantize ids [start_id, start_id + n_items).  Optional
+        ``surfaces`` ((n_items,) int) attaches per-item surface metadata
+        for surface-constrained filtering."""
+        assert n_items is not None and n_items > 0
+        if surfaces is not None:
+            surfaces = np.asarray(surfaces)
+            assert surfaces.shape == (n_items,), surfaces.shape
+        qt = self._quantize(start_id, n_items, self.bits)
+        return ItemIndex(qt=qt, start_id=int(start_id), n_items=int(n_items),
+                         surfaces=surfaces)
+
+    def append(self, index: ItemIndex, n_new: int, *,
+               surfaces=None) -> ItemIndex:
+        """Incremental index refresh: embed + quantize ONLY the next
+        ``n_new`` ids after ``index`` and append them as new rows.
+
+        Existing packed rows, scales, and biases are reused as-is (per-row
+        quantization makes the append exact — the returned index is
+        byte-identical to ``index`` on rows [0, index.n_items)), so
+        refreshing a corpus costs O(n_new), not O(n_items), and an engine
+        holding the old index can re-attach the grown one with zero new
+        XLA compiles (see ``ServingEngine.attach_index``).
+
+        ``surfaces`` is required iff ``index`` carries surfaces (the
+        metadata must stay aligned with the rows)."""
+        assert n_new > 0
+        new_start = index.start_id + index.n_items
+        qt_new = self._quantize(new_start, n_new, index.bits)
+        qt = QuantizedTable(
+            packed=jnp.concatenate([index.qt.packed, qt_new.packed]),
+            scale=jnp.concatenate([index.qt.scale, qt_new.scale]),
+            bias=jnp.concatenate([index.qt.bias, qt_new.bias]),
+            bits=index.bits, dim=index.dim)
+        if index.surfaces is not None:
+            if surfaces is None:
+                raise ValueError("index has surfaces metadata; append() "
+                                 "needs surfaces for the new items")
+            surfaces = np.concatenate([np.asarray(index.surfaces),
+                                       np.asarray(surfaces)])
+            assert len(surfaces) == index.n_items + n_new
+        elif surfaces is not None:
+            raise ValueError("cannot add surfaces on append to an index "
+                             "built without them")
+        return ItemIndex(qt=qt, start_id=index.start_id,
+                         n_items=index.n_items + n_new, surfaces=surfaces)

@@ -25,6 +25,12 @@ The argument compares phase-1 maxima with phase-2 rescored values, so both
 phases evaluate the SAME fp operands (dequantize row, dot with query) —
 any divergence is limited to XLA reduction-order ulps, which the lattice
 parity tests pin to zero by construction.
+
+Filtering: every path accepts a packed per-query row bitmask (see
+``retrieval.filters``) and pins excluded scores to -inf before selection —
+in BOTH phases of the fused path, so the proof above applies with "masked"
+read as "padded".  All-paths parity under masks (including -inf tie fills
+when fewer than k rows survive) is pinned by tests/test_retrieval_filters.
 """
 from __future__ import annotations
 
@@ -37,6 +43,7 @@ import numpy as np
 
 from repro.kernels.ref import retrieval_topk_ref
 from repro.kernels.retrieval_topk import retrieval_topk
+from repro.retrieval.filters import as_filter_list, filter_masks, mask_bit
 from repro.retrieval.index import ItemIndex
 
 MODES = ("fused", "pallas", "ref")
@@ -53,13 +60,17 @@ def unpack_codes(packed, bits: int):
 
 def fused_topk(queries, packed, scale, bias, *, k: int, bits: int = 4,
                chunk_rows: int = 32768, block_rows: int = 32,
-               n_valid=None, row_offset=0):
+               n_valid=None, row_offset=0, mask=None):
     """Two-phase exact top-k, jnp only (jit-friendly; shard_map-friendly).
 
     queries: (Q, D) fp32; packed: (R, W) int32 with R % chunk_rows == 0
     and chunk_rows % block_rows == 0; scale/bias: (R, 1) fp16.
     ``n_valid`` (traced ok) masks trailing padded rows; ``row_offset``
-    (traced ok) shifts the returned row indices (sharding).
+    (traced ok) shifts the returned row indices (sharding); ``mask``
+    (traced ok) is an optional (Q, >= ceil(n_valid/32)) int32 packed row
+    bitmask in LOCAL (pre-offset) row space — bit 1 = row excluded, scores
+    pinned to -inf in BOTH phases, so the block-max exactness proof above
+    applies verbatim (an excluded row is exactly a padded row).
     """
     Q, D = queries.shape
     R, W = packed.shape
@@ -70,6 +81,8 @@ def fused_topk(queries, packed, scale, bias, *, k: int, bits: int = 4,
     if n_valid is None:
         n_valid = R
     n_valid = jnp.asarray(n_valid, jnp.int32)
+    if mask is not None:
+        mask = jnp.asarray(mask, jnp.int32)
     q32 = queries.astype(jnp.float32)
     qT = q32.T
 
@@ -81,6 +94,10 @@ def fused_topk(queries, packed, scale, bias, *, k: int, bits: int = 4,
         s = jnp.dot(deq, qT, preferred_element_type=jnp.float32)  # (CH, Q)
         ridx = chunk_idx * chunk_rows + jnp.arange(chunk_rows, dtype=jnp.int32)
         s = jnp.where((ridx < n_valid)[:, None], s, -jnp.inf)
+        if mask is not None:
+            bit = mask_bit(mask, jnp.broadcast_to(ridx[None, :],
+                                                  (Q, chunk_rows)))  # (Q, CH)
+            s = jnp.where(bit.T == 1, -jnp.inf, s)
         return chunk_idx + 1, jnp.max(s.reshape(nb, block_rows, Q), axis=1)
 
     _, bms = jax.lax.scan(
@@ -107,23 +124,33 @@ def fused_topk(queries, packed, scale, bias, *, k: int, bits: int = 4,
     deq_r = unpack_codes(pk_r, bits) * sc_r + bs_r
     s = jnp.einsum('qnd,qd->qn', deq_r, q32)
     s = jnp.where(rows < n_valid, s, -jnp.inf)
+    if mask is not None:
+        s = jnp.where(mask_bit(mask, rows) == 1, -jnp.inf, s)
     top_s, top_p = jax.lax.top_k(s, k)
     top_rows = jnp.take_along_axis(rows, top_p, axis=1)
     return top_s, top_rows + jnp.asarray(row_offset, jnp.int32)
 
 
 def chunk_topk(queries, packed, scale, bias, base_row, n_valid, *, k: int,
-               bits: int = 4):
+               bits: int = 4, mask=None):
     """Single-chunk executor body for the serving engine: dequantize one
     corpus chunk, score, return its top-k with GLOBAL row indices.  Chunk
     shape is static (one jit per query bucket); ``base_row`` / ``n_valid``
-    are traced scalars so every chunk of the corpus reuses the executor."""
+    are traced scalars so every chunk of the corpus — including chunks
+    appended later by an index refresh — reuses the executor with zero new
+    compiles.  ``mask`` is an optional (Q, CH/32) int32 packed bitmask in
+    CHUNK-LOCAL row space (bit 1 = excluded -> score pinned to -inf); its
+    shape is chunk-static too, so the filtered and unfiltered hot paths
+    share one executor (an empty filter is the all-zeros mask)."""
     q32 = queries.astype(jnp.float32)
     deq = (unpack_codes(packed, bits) * scale.astype(jnp.float32)
            + bias.astype(jnp.float32))
     s = jnp.dot(q32, deq.T, preferred_element_type=jnp.float32)   # (Q, CH)
     local = jnp.arange(packed.shape[0], dtype=jnp.int32)
     s = jnp.where((local < n_valid)[None, :], s, -jnp.inf)
+    if mask is not None:
+        rows2d = jnp.broadcast_to(local[None, :], s.shape)
+        s = jnp.where(mask_bit(mask, rows2d) == 1, -jnp.inf, s)
     top_s, top_i = jax.lax.top_k(s, k)
     return top_s, top_i + jnp.asarray(base_row, jnp.int32)
 
@@ -143,7 +170,16 @@ def merge_topk(scores, rows, k: int):
 
 
 class CorpusScorer:
-    """Exact corpus top-k against an :class:`ItemIndex`."""
+    """Exact corpus top-k against an :class:`ItemIndex`.
+
+    Invariants shared by every mode:
+      * results are sorted by score descending, equal scores broken by
+        LOWER row index (all paths match ``retrieval_topk_ref`` exactly);
+      * per-query :class:`~repro.retrieval.filters.ItemFilter` constraints
+        (already-seen ids, surface targeting) pin excluded rows to -inf
+        before selection — when fewer than k rows survive, the tail slots
+        are (-inf, lowest excluded/padded row index).
+    """
 
     def __init__(self, index: ItemIndex, *, mode: str = "fused",
                  chunk_rows: int = 32768, block_rows: int = 32,
@@ -170,31 +206,49 @@ class CorpusScorer:
                                 ((0, pad), (0, 0)))
         self._jitted = {}
 
-    def topk(self, queries, k: int):
-        """queries: (Q, dim) -> (scores (Q, k) fp32, rows (Q, k) int32)."""
+    def topk(self, queries, k: int, *, filters=None, mask=None):
+        """queries: (Q, dim) -> (scores (Q, k) fp32, rows (Q, k) int32).
+
+        ``filters`` is a single :class:`ItemFilter` (broadcast to every
+        query) or a sequence of Q of them; ``mask`` is the pre-packed
+        (Q, ceil(n_items/32)) int32 row bitmask for callers that build
+        their own (mutually exclusive with ``filters``).  Passing a mask
+        re-traces the jitted fused path once per (k, Q) — warm both
+        variants if steady-state traffic mixes them."""
         assert 0 < k <= self.index.n_items
         queries = jnp.asarray(queries, jnp.float32)
         assert queries.ndim == 2 and queries.shape[1] == self.dim
+        if filters is not None:
+            assert mask is None, "pass filters or mask, not both"
+            mask = filter_masks(as_filter_list(filters, queries.shape[0]),
+                                self.index)
+        if mask is not None:
+            mask = jnp.asarray(mask, jnp.int32)
+            assert mask.shape[0] == queries.shape[0], \
+                (mask.shape, queries.shape)
         if self.mode == "ref":
             return retrieval_topk_ref(
                 self.index.qt.packed, self.index.qt.scale, self.index.qt.bias,
-                queries, k=k, bits=self.bits)
+                queries, k=k, bits=self.bits, mask=mask)
         if self.mode == "pallas":
             return retrieval_topk(
                 self.index.qt.packed, self.index.qt.scale, self.index.qt.bias,
                 queries, k=k, bits=self.bits,
-                block_rows=self.kernel_block_rows, interpret=self.interpret)
+                block_rows=self.kernel_block_rows, interpret=self.interpret,
+                mask=mask)
         fn = self._jitted.get(k)
         if fn is None:
             fn = jax.jit(functools.partial(
                 fused_topk, k=k, bits=self.bits, chunk_rows=self.chunk_rows,
                 block_rows=self.block_rows, n_valid=self.index.n_items))
             self._jitted[k] = fn
-        return fn(queries, self.packed, self.scale, self.bias)
+        if mask is None:
+            return fn(queries, self.packed, self.scale, self.bias)
+        return fn(queries, self.packed, self.scale, self.bias, mask=mask)
 
-    def retrieve(self, queries, k: int):
+    def retrieve(self, queries, k: int, *, filters=None, mask=None):
         """Like :meth:`topk` but maps rows to item ids (numpy)."""
-        scores, rows = self.topk(queries, k)
+        scores, rows = self.topk(queries, k, filters=filters, mask=mask)
         return np.asarray(scores), self.index.item_ids(rows)
 
 

@@ -21,12 +21,20 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.retrieval.filters import as_filter_list, filter_masks
 from repro.retrieval.index import ItemIndex
 from repro.retrieval.scorer import fused_topk, merge_topk, _round_up
 
 
 class ShardedRetriever:
-    """Splits an :class:`ItemIndex` across the ``data`` axis of a mesh."""
+    """Splits an :class:`ItemIndex` across the ``data`` axis of a mesh.
+
+    Per-request :class:`~repro.retrieval.filters.ItemFilter` constraints
+    are resolved on host into one packed row bitmask PER SHARD (each in
+    shard-local row coordinates), stacked along the ``data`` axis and
+    applied inside each shard's fused scorer — excluded rows are pinned to
+    -inf before the per-shard top-k, and the stable lower-index-wins merge
+    then matches the single-device filtered result exactly."""
 
     def __init__(self, index: ItemIndex, mesh: Optional[Mesh] = None, *,
                  devices: Optional[Sequence] = None,
@@ -60,43 +68,63 @@ class ShardedRetriever:
             shard)
         self._jitted = {}
 
-    def _build(self, k: int):
+    def _build(self, k: int, masked: bool):
         rps = self.rows_per_shard
         # a shard can contribute at most its own rows to the global top-k,
         # so clipping the per-shard k keeps the merge exact while letting
         # k exceed rows_per_shard (small shards, large k)
         k_local = min(k, rps)
 
-        def local(q, pk, sc, bs):
+        def local(q, pk, sc, bs, *m):
             shard = jax.lax.axis_index("data")
             off = shard * rps
             n_valid = jnp.clip(self.index.n_items - off, 0, rps)
             s, r = fused_topk(q, pk, sc, bs, k=k_local, bits=self.index.bits,
                               chunk_rows=self.chunk_rows,
                               block_rows=self.block_rows,
-                              n_valid=n_valid, row_offset=off)
+                              n_valid=n_valid, row_offset=off,
+                              mask=m[0][0] if m else None)
             return s[None], r[None]               # (1, Q, k_local) per shard
 
-        fn = shard_map(local, mesh=self.mesh,
-                       in_specs=(P(None, None), P("data", None),
-                                 P("data", None), P("data", None)),
+        in_specs = (P(None, None), P("data", None),
+                    P("data", None), P("data", None))
+        if masked:   # stacked per-shard masks ride the same data axis
+            in_specs += (P("data", None, None),)
+        fn = shard_map(local, mesh=self.mesh, in_specs=in_specs,
                        out_specs=(P("data", None, None),
                                   P("data", None, None)),
                        check_rep=False)
         return jax.jit(fn)
 
-    def topk(self, queries, k: int):
+    def _shard_masks(self, filters, n_queries: int):
+        """-> (n_shards, Q, ceil(rows_per_shard/32)) int32 stacked
+        shard-local packed bitmasks, or None when every filter is empty."""
+        filters = as_filter_list(filters, n_queries)
+        rps = self.rows_per_shard
+        ms = [filter_masks(filters, self.index, row_start=s * rps,
+                           n_rows=rps) for s in range(self.n_shards)]
+        if ms[0] is None:     # emptiness is a global property of `filters`
+            return None
+        return jnp.asarray(np.stack(ms), jnp.int32)
+
+    def topk(self, queries, k: int, *, filters=None):
         """-> (scores (Q, k), rows (Q, k)) — identical to the single-device
-        scorer, including index tie-breaks (shards are index-ordered)."""
+        scorer, including index tie-breaks (shards are index-ordered) and
+        per-query ``filters`` (a single ItemFilter broadcasts)."""
         assert 0 < k <= self.index.n_items
         queries = jnp.asarray(queries, jnp.float32)
-        fn = self._jitted.get(k)
+        masks = (self._shard_masks(filters, queries.shape[0])
+                 if filters is not None else None)
+        key = (k, masks is not None)
+        fn = self._jitted.get(key)
         if fn is None:
-            fn = self._jitted[k] = self._build(k)
-        s, r = fn(queries, self.packed, self.scale, self.bias)
+            fn = self._jitted[key] = self._build(k, masks is not None)
+        args = (queries, self.packed, self.scale, self.bias)
+        s, r = fn(*args, masks) if masks is not None else fn(*args)
         s, r = np.asarray(s), np.asarray(r)             # (n_dev, Q, k)
         return merge_topk(list(s), list(r), k)
 
-    def retrieve(self, queries, k: int):
-        scores, rows = self.topk(queries, k)
+    def retrieve(self, queries, k: int, *, filters=None):
+        """Like :meth:`topk` but maps rows to item ids (numpy)."""
+        scores, rows = self.topk(queries, k, filters=filters)
         return scores, self.index.item_ids(rows)

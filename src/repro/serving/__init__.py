@@ -1,3 +1,12 @@
+"""Serving subsystem public surface.
+
+Layer map (request flow order): ``MicroBatcher`` -> ``build_plan`` /
+``BatchPlan`` -> ``ServingEngine`` dispatching jitted executors from the
+``ExecutorRegistry``, with ``ContextCache`` short-circuiting repeat users.
+``RankRequest`` / ``RetrieveRequest`` are the request types;
+``InferenceRouter`` is the legacy PR-0 facade kept for compatibility.
+See docs/architecture.md for lifecycles and the zero-recompile contract.
+"""
 from repro.serving.context_cache import ContextCache
 from repro.serving.engine import ServingEngine
 from repro.serving.executors import ExecutorRegistry

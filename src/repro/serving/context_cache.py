@@ -47,6 +47,8 @@ class ContextCache:
         return len(self._d)
 
     def get(self, key) -> Optional[Any]:
+        """-> cached value or None; counts a hit/miss and refreshes the
+        entry's LRU position on hit."""
         if key in self._d:
             self._d.move_to_end(key)
             self.hits += 1
@@ -59,6 +61,8 @@ class ContextCache:
         return self._d.get(key)
 
     def put(self, key, value):
+        """Insert/refresh ``key``; evicts least-recently-used entries past
+        ``capacity`` and keeps the byte-footprint gauge in sync."""
         if key in self._d:
             self.nbytes -= self._bytes.pop(key, 0)
         self._d[key] = value

@@ -10,6 +10,8 @@ seed's monolithic ``InferenceRouter``:
                  "cross"    DCAT crossing + ranker  (early fusion)
                  "encode"   pooled user embedding   (lite)
                  "score_emb" ranker from pooled emb (lite)
+                 "retrieve"  corpus-chunk top-k     (attach_index; chunk
+                             data + filter bitmask as traced operands)
                                    │
                ContextCache ───────┘  per-user ctx KV / pooled emb
 
@@ -46,7 +48,32 @@ _CROSS_KEYS = ("inverse_idx", "cand_ids", "cand_feats", "user_feats")
 
 
 class ServingEngine:
-    """Dedup-aware, shape-bucketed, cache-accelerated ranking engine."""
+    """Dedup-aware, shape-bucketed, cache-accelerated ranking + retrieval
+    engine.
+
+    Args:
+      model / params: a ``PinFMRankingModel`` (any variant) and its params.
+      max_unique / max_candidates: bucket-ladder maxima — one request chunk
+        never exceeds these; larger request lists are split transparently.
+      cache: optional ``ContextCache``; enables the split (cached) scoring
+        paths and the retrieve/rank embedding sharing.
+      key_fn: optional ``request -> bytes`` cache key override (default:
+        full sequence identity, ``plan.request_key``).
+
+    Invariants:
+      * ZERO-RECOMPILE CONTRACT — after :meth:`warmup` (plus
+        :meth:`attach_index` for retrieval), steady-state traffic of ANY
+        request mix compiles nothing: every executor shape is drawn from
+        the finite bucket ladder and precompiled;
+        ``registry.compiles_after_warmup`` stays 0 and is asserted in
+        tests.  Anything dynamic per call (corpus chunk contents, filter
+        bitmasks, chunk base/valid scalars) rides as traced operands.
+      * Cache-hit scoring is bit-identical to cache-miss scoring on the
+        same bucket (contexts round-trip through host slices both ways).
+      * Retrieval results are ordered by score descending; equal scores
+        break toward the LOWER item id (= lower corpus row), matching
+        ``kernels.ref.retrieval_topk_ref`` exactly.
+    """
 
     def __init__(self, model: PinFMRankingModel, params, *,
                  max_unique: int = 8, max_candidates: int = 64,
@@ -65,8 +92,10 @@ class ServingEngine:
         self.registry = ExecutorRegistry()
         self.stats: List[dict] = []
         self.index = None                 # retrieval corpus (attach_index)
-        self._corpus = None               # padded device-resident corpus
-        self._chunks = None               # per-chunk (base, n_valid) scalars
+        self._chunks = None               # fixed-shape device corpus chunks
+        self._chunk_size = 0              # rows per chunk (static, mult. 32)
+        self._attach_key = None           # (k, bits, dim, chunk_rows)
+        self._zero_masks: Dict[int, jnp.ndarray] = {}   # b_q -> zeros mask
         self.retrieve_k = 0
         self._warmed_up = False
         self._warm_L = None
@@ -252,54 +281,86 @@ class ServingEngine:
     # -- retrieval path: corpus top-k from the cached pooled embedding ------
     def attach_index(self, index, *, k: int = 100,
                      chunk_rows: int = 65536) -> None:
-        """Attach an ``ItemIndex`` as the retrieval corpus.  The corpus is
-        cut into FIXED-SHAPE device chunks so a single jitted executor per
-        query bucket covers any corpus size — chunk base/valid-count ride
-        along as traced scalars, never as fresh shapes."""
+        """Attach an ``ItemIndex`` as the retrieval corpus.
+
+        The corpus is cut into FIXED-SHAPE device chunks so a single jitted
+        executor per query bucket covers any corpus size — chunk data and
+        base/valid-count scalars ride along as traced operands, never as
+        fresh shapes.  That makes an index REFRESH free: re-attaching an
+        index with the same (k, bits, dim, chunk_rows) — e.g. one grown by
+        ``IndexBuilder.append`` — keeps every warmed executor, so new items
+        become retrievable with ZERO new XLA compiles (the appended rows
+        simply fill the tail chunk's padding and/or arrive as extra chunk
+        operands).  An INCOMPATIBLE re-attach (different k/bits/dim/chunk
+        size) invalidates the retrieval executors and, on an already-warmed
+        engine, re-warms them before returning."""
         if not self.lite:
             raise ValueError("retrieval needs a lite variant (pooled user "
                              f"embedding); got {self.variant!r}")
         assert 0 < k <= index.n_items
         assert index.dim == self.model.pcfg.id_dim, \
             (index.dim, self.model.pcfg.id_dim)
-        self.index, self.retrieve_k = index, k
+        assert chunk_rows % 32 == 0, \
+            f"chunk_rows={chunk_rows} must be a multiple of 32 (one packed " \
+            "filter-mask word covers 32 rows)"
         R = index.qt.packed.shape[0]
-        ch = min(chunk_rows, R + (-R % 8))
+        attach_key = (k, index.bits, index.dim, chunk_rows)
+        compatible = (self._attach_key == attach_key
+                      and self.retrieve_k <= self._chunk_size)
+        ch = (self._chunk_size if compatible
+              else min(chunk_rows, R + (-R % 32)))
         assert k <= ch, f"k={k} exceeds chunk_rows={ch}"
-        pad = -R % ch
-        if pad:
-            packed = jnp.pad(jnp.asarray(index.qt.packed), ((0, pad), (0, 0)))
-            scale = jnp.pad(jnp.asarray(index.qt.scale, jnp.float16),
-                            ((0, pad), (0, 0)))
-            bias = jnp.pad(jnp.asarray(index.qt.bias, jnp.float16),
-                           ((0, pad), (0, 0)))
-        else:              # reuse the index arrays — no second corpus copy
-            packed = jnp.asarray(index.qt.packed)
-            scale = jnp.asarray(index.qt.scale, jnp.float16)
-            bias = jnp.asarray(index.qt.bias, jnp.float16)
-        self._corpus = (packed, scale, bias)
-        self._chunks = [(jnp.asarray(base, jnp.int32),
-                         jnp.asarray(min(index.n_items - base, ch), jnp.int32))
-                        for base in range(0, packed.shape[0], ch)]
+        self.index, self.retrieve_k = index, k
+        self._attach_key, self._chunk_size = attach_key, ch
+
+        # one (ch, .) device slice per chunk + its base/valid traced scalars
+        # (base also kept as a host int for chunk-local mask building);
+        # only the tail chunk pays a pad copy — no transient whole-corpus
+        # padded duplicate on attach/refresh
+        def chunk(arr, base, dtype=None):
+            sl = jnp.asarray(arr[base:min(base + ch, R)])
+            if dtype is not None:
+                sl = sl.astype(dtype)
+            if sl.shape[0] < ch:
+                sl = jnp.pad(sl, ((0, ch - sl.shape[0]), (0, 0)))
+            return sl
+
+        self._chunks = [
+            (chunk(index.qt.packed, base),
+             chunk(index.qt.scale, base, jnp.float16),
+             chunk(index.qt.bias, base, jnp.float16),
+             jnp.asarray(base, jnp.int32),
+             jnp.asarray(min(index.n_items - base, ch), jnp.int32), base)
+            for base in range(0, R, ch)]
+        self._zero_masks = {}
+        if compatible:          # warmed executors stay valid: same shapes,
+            return              # same closed-over (k, bits, ch)
         bits = index.bits
 
         def retrieve_factory(key):
             from repro.retrieval.scorer import chunk_topk
 
-            def fn(queries, packed, scale, bias, base, n_valid):
-                # the corpus stays resident once; the executor carves its
-                # fixed-shape chunk out with a traced-offset dynamic slice
-                sl = lambda x: jax.lax.dynamic_slice_in_dim(x, base, ch)
-                return chunk_topk(queries, sl(packed), sl(scale), sl(bias),
-                                  base, n_valid, k=k, bits=bits)
+            def fn(queries, packed, scale, bias, base, n_valid, mask):
+                return chunk_topk(queries, packed, scale, bias,
+                                  base, n_valid, k=k, bits=bits, mask=mask)
             return fn
 
-        # a re-attach (refreshed index, new k/bits) must not serve
+        # an incompatible re-attach (new k/bits/chunk shape) must not serve
         # executors that closed over the previous index's parameters
         self.registry.invalidate("retrieve")
         self.registry.register("retrieve", retrieve_factory)
         if self._warmed_up:   # keep the zero-recompile steady-state promise
             self._warm_retrieval()
+
+    def _zero_mask(self, b_q: int):
+        """All-zeros (= nothing excluded) chunk mask for bucket ``b_q`` —
+        the shared operand that lets filtered and unfiltered requests run
+        the same executor."""
+        m = self._zero_masks.get(b_q)
+        if m is None:
+            m = self._zero_masks[b_q] = jnp.zeros(
+                (b_q, self._chunk_size // 32), jnp.int32)
+        return m
 
     def _warm_retrieval(self):
         """Warm (or re-warm) just the retrieval ladder — called when an
@@ -316,28 +377,44 @@ class ServingEngine:
                                    zi(b_u, L), zi(b_u, L), zi(b_u, L))
             self.registry.warm("retrieve", (b_u,),
                                jnp.zeros((b_u, d), jnp.float32),
-                               *self._corpus, *self._chunks[0])
+                               *self._chunks[0][:5], self._zero_mask(b_u))
 
     def retrieve(self, requests: Sequence[RetrieveRequest]):
-        """-> per-request (item_ids (k,), scores (k,)) numpy pairs.  The
-        pooled user embedding comes from the ContextCache when present
+        """-> per-request (item_ids (k,), scores (k,)) numpy pairs.
+
+        The pooled user embedding comes from the ContextCache when present
         (shared with the lite ranking path); misses run the bucketed
-        ``encode`` executor.  Unique users beyond max_unique are processed
-        in bucket-sized groups."""
+        ``encode`` executor.  Unique (user, filter) pairs beyond max_unique
+        are processed in bucket-sized groups.  Per-request ``exclude_ids``
+        / ``allow_surfaces`` become packed chunk bitmasks applied inside
+        the corpus executors — the same warmed executor serves filtered
+        and unfiltered traffic (an empty filter is the all-zeros mask), so
+        filters never cost a compile.  Requests from the same user with
+        DIFFERENT filters are distinct retrieval groups but still share
+        one cached user embedding; when fewer than k items survive a
+        filter, the tail scores are -inf."""
         if self._chunks is None:
             raise ValueError("no retrieval corpus: call attach_index() first")
+        from repro.retrieval.filters import ItemFilter
+        filts: List[Optional[ItemFilter]] = []
         for i, r in enumerate(requests):
             if r.k > self.retrieve_k:
                 raise ValueError(
                     f"request {i} wants k={r.k} but the attached index "
                     f"serves k<={self.retrieve_k}; re-attach with a larger k")
+            f = ItemFilter(
+                exclude_ids=r.exclude_ids,
+                allow_surfaces=(None if r.allow_surfaces is None
+                                else tuple(r.allow_surfaces)))
+            filts.append(None if f.is_empty() else f)
         out: List[Optional[tuple]] = [None] * len(requests)
         key_fn = self._key_fn or request_key   # same namespace as ranking
         keys = [key_fn(r) for r in requests]
-        uniq: Dict[bytes, int] = {}
-        owners: List[List[int]] = []        # unique row -> request indices
+        uniq: Dict[tuple, int] = {}
+        owners: List[List[int]] = []   # unique (user, filter) -> request idx
         for i, key in enumerate(keys):
-            u = uniq.setdefault(key, len(owners))
+            fkey = filts[i].fingerprint() if filts[i] is not None else b""
+            u = uniq.setdefault((key, fkey), len(owners))
             if u == len(owners):
                 owners.append([])
             owners[u].append(i)
@@ -347,7 +424,9 @@ class ServingEngine:
             emb, tel_extra = self._user_embeddings(
                 [requests[owners[u][0]] for u in group],
                 [keys[owners[u][0]] for u in group])
-            scores, rows = self._corpus_topk(emb, len(group), tel_extra)
+            scores, rows = self._corpus_topk(
+                emb, len(group), tel_extra,
+                [filts[owners[u][0]] for u in group])
             for j, u in enumerate(group):
                 ids = self.index.item_ids(rows[j])
                 for i in owners[u]:
@@ -359,38 +438,64 @@ class ServingEngine:
         """Pooled embeddings for <= max_unique deduplicated users — the
         same cache + bucketed-encode protocol as the lite scoring path
         (``_lookup_users``/``_encode_rows``), fed from raw requests instead
-        of a BatchPlan.  -> ((n, id_dim) np, telemetry)."""
+        of a BatchPlan.  Cache misses are deduplicated by user key before
+        encoding, so the same user appearing in several rows (e.g. one per
+        filter variant) is encoded exactly once.
+        -> ((n, id_dim) np, telemetry)."""
         values, miss_rows = self._lookup_users(keys)
         if miss_rows:
+            slot: Dict[bytes, int] = {}       # key -> row in the encode batch
+            enc_rows: List[int] = []          # first missing row per key
+            for u in miss_rows:
+                if keys[u] not in slot:
+                    slot[keys[u]] = len(enc_rows)
+                    enc_rows.append(u)
+
             def gather(name):
                 return np.stack([np.asarray(getattr(reqs[u], name), np.int32)
-                                 for u in miss_rows])
+                                 for u in enc_rows])
 
             fresh = np.asarray(self._encode_rows(
                 "encode", gather("seq_ids"), gather("seq_actions"),
                 gather("seq_surfaces")))
-            for j, u in enumerate(miss_rows):
-                values[u] = fresh[j]
-                if self.cache is not None:
-                    self.cache.put(keys[u], fresh[j])
+            for u in miss_rows:
+                values[u] = fresh[slot[keys[u]]]
+            if self.cache is not None:
+                for key, j in slot.items():
+                    self.cache.put(key, fresh[j])
+            miss_rows = enc_rows
         emb = np.stack([values[u] for u in range(len(reqs))])
         return emb, {"encode_misses": len(miss_rows)}
 
-    def _corpus_topk(self, emb, n_users, tel_extra):
+    def _corpus_topk(self, emb, n_users, tel_extra, filters=None):
         """Run the bucketed chunk executors over the corpus, merge on host.
-        -> (scores (n_users, k), rows (n_users, k))."""
+        -> (scores (n_users, k), rows (n_users, k)).  ``filters`` (one
+        Optional[ItemFilter] per user row) is resolved per chunk into a
+        packed (b_q, chunk/32) bitmask — chunks no filter touches reuse
+        the cached all-zeros mask, so the common case ships no bytes."""
+        from repro.retrieval.filters import filter_masks
         from repro.retrieval.scorer import merge_topk
         t0 = time.time()
         b_q = self.ladder_u.fit(n_users)
         q = jnp.asarray(_pad_rows(emb.astype(np.float32), b_q))
-        parts = [self.registry("retrieve", (b_q,), q, *self._corpus,
-                               base, n_valid)
-                 for base, n_valid in self._chunks]
+        filtered = filters is not None and any(f is not None for f in filters)
+        parts = []
+        for pk, sc, bs, base, n_valid, base_host in self._chunks:
+            mask = self._zero_mask(b_q)
+            if filtered:
+                m = filter_masks(filters, self.index, row_start=base_host,
+                                 n_rows=self._chunk_size)
+                if m is not None and m.any():
+                    mask = jnp.asarray(_pad_rows(m, b_q))
+            parts.append(self.registry("retrieve", (b_q,), q, pk, sc, bs,
+                                       base, n_valid, mask))
         scores, rows = merge_topk([p[0] for p in parts],
                                   [p[1] for p in parts], self.retrieve_k)
         entry = {"retrieve_users": n_users, "b_q": b_q,
                  "corpus_items": self.index.n_items,
                  "corpus_chunks": len(self._chunks),
+                 "filtered_users": (sum(f is not None for f in filters)
+                                    if filters else 0),
                  "latency_s": time.time() - t0, **tel_extra,
                  **{f"exec_{k}": v for k, v in
                     self.registry.telemetry().items()}}
@@ -420,7 +525,7 @@ class ServingEngine:
                 d = self.model.pcfg.id_dim
                 self.registry.warm("retrieve", (b_u,),
                                    jnp.zeros((b_u, d), jnp.float32),
-                                   *self._corpus, *self._chunks[0])
+                                   *self._chunks[0][:5], self._zero_mask(b_u))
             for b_c in self.ladder_c.sizes():
                 batch = self._dummy_batch(b_u, b_c, L)
                 if self.cache is None:

@@ -53,6 +53,10 @@ class ExecutorRegistry:
         return tuple(self._jitted)
 
     def __call__(self, kind: str, key: Hashable, *args):
+        """Execute executor ``(kind, key)`` on ``args``, jitting it on
+        first use.  First executions count toward ``compiles`` (and, if
+        outside :meth:`warm`, toward ``compiles_after_warmup`` — the
+        number the zero-recompile serving contract pins at 0)."""
         k = (kind, key)
         fn = self._jitted.get(k)
         if fn is None:

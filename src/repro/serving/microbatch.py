@@ -53,6 +53,17 @@ class Ticket:
 
 
 class MicroBatcher:
+    """Queue-and-coalesce front-end over a ``ServingEngine``.
+
+    Args:
+      engine: the engine whose ``score`` handles flushed batches.
+      max_requests / max_candidates: flush thresholds (candidates default
+        to the engine's bucket maximum).
+      max_wait_s: age bound enforced by ``poll()``.
+
+    Invariant: every submitted request's ticket resolves exactly once —
+    with the result, or with the engine's exception if a flush fails."""
+
     def __init__(self, engine, *, max_requests: int = 32,
                  max_candidates: Optional[int] = None,
                  max_wait_s: float = 0.01):
@@ -72,6 +83,9 @@ class MicroBatcher:
         self.coalesced = 0
 
     def submit(self, request: RankRequest) -> Ticket:
+        """Enqueue one request -> ticket.  Flushes inline when a size
+        threshold trips; otherwise the batch waits for ``poll()``,
+        ``flush()``, or a ``ticket.result()``."""
         with self._lock:
             t = Ticket(self)
             self._pending.append(request)
@@ -94,6 +108,8 @@ class MicroBatcher:
             self.flush()
 
     def flush(self):
+        """Drain the queue through one ``engine.score`` call (one Ψ pass
+        over every pending caller's requests) and resolve the tickets."""
         with self._lock:
             pending, tickets = self._pending, self._tickets
             self._pending, self._tickets, self._oldest = [], [], None

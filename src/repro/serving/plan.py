@@ -21,6 +21,10 @@ from repro.core.dcat import dedup_with_first
 
 @dataclasses.dataclass
 class RankRequest:
+    """One caller's scoring request: a user activity sequence plus the
+    candidate set to score against it.  Requests sharing the exact same
+    (ids, actions, surfaces) sequence are Ψ-deduplicated by the planner
+    and share one context encode / cache entry."""
     seq_ids: np.ndarray          # (L,)
     seq_actions: np.ndarray
     seq_surfaces: np.ndarray
@@ -33,11 +37,22 @@ class RankRequest:
 @dataclasses.dataclass
 class RetrieveRequest:
     """Candidate-generation request: top-k corpus retrieval for one user
-    sequence (no candidates — the corpus IS the candidate set)."""
+    sequence (no candidates — the corpus IS the candidate set).
+
+    ``exclude_ids`` (typically the user's already-seen items) and
+    ``allow_surfaces`` (serve only items of these surfaces; needs an index
+    built with per-item surface metadata) are converted by the engine into
+    packed per-chunk row bitmasks and applied inside the corpus-chunk
+    executors — excluded items can never appear in the result, and two
+    requests from the same user with different filters are planned as
+    distinct retrieval groups (the pooled-embedding cache entry is still
+    shared: filters do not enter the ContextCache key)."""
     seq_ids: np.ndarray          # (L,)
     seq_actions: np.ndarray
     seq_surfaces: np.ndarray
     k: int = 100
+    exclude_ids: Optional[np.ndarray] = None
+    allow_surfaces: Optional[Tuple[int, ...]] = None
 
 
 def request_key(r) -> bytes:

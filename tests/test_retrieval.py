@@ -157,6 +157,15 @@ shs = ShardedRetriever(small, chunk_rows=64, block_rows=16)
 assert shs.rows_per_shard < 96
 s4, r4 = shs.topk(q, 96)
 assert np.array_equal(np.asarray(r3), r4), (np.asarray(r3), r4)
+# filtered: per-shard mask slices + merge must match the masked oracle,
+# including exclusions that straddle the shard boundary
+from repro.retrieval import ItemFilter
+filts = [ItemFilter(exclude_ids=rng.choice(R, 800, replace=False))
+         for _ in range(4)]
+s5, r5 = CorpusScorer(idx, mode="ref").topk(q, k, filters=filts)
+s6, r6 = sh.topk(q, k, filters=filts)
+assert np.array_equal(np.asarray(r5), r6), (np.asarray(r5), r6)
+assert np.array_equal(np.asarray(s5), s6)
 print("OK")
 """ % __import__("os").path.join(__import__("os").path.dirname(__file__),
                                  "..", "src")

@@ -1,0 +1,318 @@
+"""Filtered retrieval + incremental index refresh.
+
+Parity strategy mirrors tests/test_retrieval.py: LATTICE corpora make all
+fp32 arithmetic exact, so "every path matches the masked oracle bit-for-bit,
+ties broken by lower row index" is a meaningful assertion.  Filters add two
+new tie regimes the unfiltered tests never hit — -inf ties from excluded
+rows, and k exceeding the surviving-row count — both pinned here against
+``retrieval_topk_ref`` with the same mask.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.ref import retrieval_topk_ref
+from repro.quant import quantize_table
+from repro.retrieval import (CorpusScorer, IndexBuilder, ItemFilter,
+                             ItemIndex, ShardedRetriever, filter_masks,
+                             pack_bits, unpack_bits)
+from repro.serving import ContextCache, RetrieveRequest, ServingEngine
+
+from test_retrieval import _lite_model, _mk_retrieve, lattice_corpus
+
+
+@pytest.fixture(scope="module")
+def lite_model():
+    return _lite_model()
+
+
+# ---------------------------------------------------------------------------
+# mask packing + ItemFilter basics
+# ---------------------------------------------------------------------------
+
+def test_pack_bits_round_trip():
+    rng = np.random.RandomState(0)
+    for n in (1, 31, 32, 33, 100, 777):
+        b = rng.rand(n) < 0.3
+        words = pack_bits(b)
+        assert words.dtype == np.int32 and len(words) == -(-n // 32)
+        np.testing.assert_array_equal(unpack_bits(words, n), b)
+        # bit r of word r>>5 — the layout every scorer path assumes
+        for r in np.flatnonzero(b)[:5]:
+            assert (words[r >> 5] >> (r & 31)) & 1
+
+
+def test_filter_masks_windows():
+    """Window-local coordinates: the same filter resolved per shard/chunk
+    window must tile the whole-corpus mask."""
+    idx = ItemIndex(qt=quantize_table(jnp.zeros((96, 32)), 4),
+                    start_id=50, n_items=96,
+                    surfaces=np.arange(96) % 4)
+    f = ItemFilter(exclude_ids=[50, 83, 145, 9999], allow_surfaces=(0, 1))
+    full = filter_masks([f], idx)
+    assert full.shape == (1, 3)
+    parts = [unpack_bits(filter_masks([f], idx, row_start=s, n_rows=32)[0], 32)
+             for s in (0, 32, 64)]
+    np.testing.assert_array_equal(np.concatenate(parts),
+                                  unpack_bits(full[0], 96))
+    excl = unpack_bits(full[0], 96)
+    assert excl[0] and excl[33] and excl[95]        # ids 50, 83, 145
+    assert excl[2] and not excl[1]                  # surface 2 out, 1 in
+    assert filter_masks([None, ItemFilter()], idx) is None
+
+
+def test_filter_fingerprint():
+    a = ItemFilter(exclude_ids=[3, 1, 2], allow_surfaces=(1, 0))
+    b = ItemFilter(exclude_ids=[1, 2, 3, 3], allow_surfaces=(0, 1))
+    assert a.fingerprint() == b.fingerprint() != b""
+    assert ItemFilter().is_empty() and ItemFilter().fingerprint() == b""
+    assert a.fingerprint() != ItemFilter(exclude_ids=[1, 2, 3]).fingerprint()
+
+
+def test_surface_filter_requires_metadata():
+    idx = ItemIndex(qt=quantize_table(jnp.zeros((64, 32)), 4),
+                    start_id=0, n_items=64)
+    with pytest.raises(ValueError, match="surfaces"):
+        filter_masks([ItemFilter(allow_surfaces=(1,))], idx)
+
+
+# ---------------------------------------------------------------------------
+# cross-path parity under random masks (incl. the edge regimes)
+# ---------------------------------------------------------------------------
+
+def _assert_all_paths_match(idx, q, k, filts, *, chunk=128, block=16,
+                            kernel_block=64):
+    mask = filter_masks(filts, idx)
+    rs, rr = retrieval_topk_ref(
+        idx.qt.packed, idx.qt.scale, idx.qt.bias, q, k=k, bits=idx.bits,
+        mask=None if mask is None else jnp.asarray(mask))
+    for mode in ("fused", "pallas", "ref"):
+        sc = CorpusScorer(idx, mode=mode, chunk_rows=chunk, block_rows=block,
+                          kernel_block_rows=kernel_block)
+        s, r = sc.topk(q, k, filters=filts)
+        np.testing.assert_array_equal(np.asarray(r), np.asarray(rr),
+                                      err_msg=mode)
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(rs),
+                                      err_msg=mode)
+    sh = ShardedRetriever(idx, chunk_rows=chunk, block_rows=block)
+    ss, sr = sh.topk(q, k, filters=filts)
+    np.testing.assert_array_equal(sr, np.asarray(rr), err_msg="sharded")
+    np.testing.assert_array_equal(ss, np.asarray(rs), err_msg="sharded")
+    return np.asarray(rs), np.asarray(rr)
+
+
+@pytest.mark.parametrize("R,k,frac", [(777, 40, 0.3), (3001, 17, 0.7),
+                                      (512, 96, 0.5)])
+def test_random_mask_parity(R, k, frac):
+    qt, q = lattice_corpus(R, 32, seed=R)
+    idx = ItemIndex(qt=qt, start_id=7, n_items=R)
+    rng = np.random.RandomState(R)
+    filts = [ItemFilter(exclude_ids=7 + rng.choice(
+        R, int(frac * R), replace=False)) for _ in range(q.shape[0])]
+    _, rr = _assert_all_paths_match(idx, q, k, filts, chunk=256, block=32)
+    for qi, f in enumerate(filts):
+        assert not np.isin(rr[qi], np.asarray(f.exclude_ids) - 7).any()
+
+
+def test_whole_chunk_filtered():
+    """Every row of an entire scan chunk excluded — the block-max select
+    must skip it without disturbing neighbours."""
+    qt, q = lattice_corpus(512, 32, seed=2)
+    idx = ItemIndex(qt=qt, start_id=0, n_items=512)
+    filts = [ItemFilter(exclude_ids=np.arange(128, 256))] * q.shape[0]
+    _, rr = _assert_all_paths_match(idx, q, 50, filts)
+    assert not ((rr >= 128) & (rr < 256)).any()
+
+
+def test_k_exceeds_survivors():
+    """Fewer surviving rows than k: the tail is (-inf, lowest excluded
+    row index) in every path — identical to the oracle."""
+    qt, q = lattice_corpus(300, 32, seed=3)
+    idx = ItemIndex(qt=qt, start_id=0, n_items=300)
+    filts = [ItemFilter(exclude_ids=np.arange(10, 300))] * q.shape[0]
+    rs, rr = _assert_all_paths_match(idx, q, 40, filts)
+    assert (rs[:, :10] > -np.inf).all() and (rr[:, :10] < 10).all()
+    assert (rs[:, 10:] == -np.inf).all()
+
+
+def test_everything_filtered():
+    qt, q = lattice_corpus(200, 32, seed=4)
+    idx = ItemIndex(qt=qt, start_id=0, n_items=200)
+    filts = [ItemFilter(exclude_ids=np.arange(200))] * q.shape[0]
+    rs, rr = _assert_all_paths_match(idx, q, 25, filts)
+    assert (rs == -np.inf).all()
+    np.testing.assert_array_equal(rr, np.tile(np.arange(25),
+                                              (q.shape[0], 1)))
+
+
+def test_surface_targeting_parity():
+    qt, q = lattice_corpus(400, 32, seed=5)
+    idx = ItemIndex(qt=qt, start_id=0, n_items=400,
+                    surfaces=np.arange(400) % 3)
+    filts = [ItemFilter(allow_surfaces=(0,)),
+             ItemFilter(allow_surfaces=(1, 2), exclude_ids=[1, 4, 7]),
+             None] + [ItemFilter()] * (q.shape[0] - 3)
+    _, rr = _assert_all_paths_match(idx, q, 30, filts)
+    assert (rr[0] % 3 == 0).all()
+    assert (rr[1] % 3 != 0).all()
+    assert not np.isin(rr[1], [1, 4, 7]).any()
+
+
+def test_single_filter_broadcasts():
+    qt, q = lattice_corpus(256, 32, seed=6)
+    idx = ItemIndex(qt=qt, start_id=0, n_items=256)
+    f = ItemFilter(exclude_ids=np.arange(0, 256, 2))
+    sc = CorpusScorer(idx, mode="fused", chunk_rows=128, block_rows=16)
+    _, r_bcast = sc.topk(q, 20, filters=f)
+    _, r_list = sc.topk(q, 20, filters=[f] * q.shape[0])
+    np.testing.assert_array_equal(np.asarray(r_bcast), np.asarray(r_list))
+    assert (np.asarray(r_bcast) % 2 == 1).all()
+    with pytest.raises(ValueError, match="filters"):
+        sc.topk(q, 20, filters=[f])
+
+
+# ---------------------------------------------------------------------------
+# incremental refresh: IndexBuilder.append
+# ---------------------------------------------------------------------------
+
+def test_append_preserves_existing_rows(lite_model, tmp_path):
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=128, bits=4)
+    surf = np.arange(300) % 3
+    index = builder.build(start_id=5, n_items=300, surfaces=surf)
+    grown = builder.append(index, 100, surfaces=np.arange(100) % 3)
+    assert grown.n_items == 400 and grown.start_id == 5
+    # already-packed rows are byte-identical — nothing was re-quantized
+    np.testing.assert_array_equal(np.asarray(grown.qt.packed[:300]),
+                                  np.asarray(index.qt.packed))
+    np.testing.assert_array_equal(np.asarray(grown.qt.scale[:300]),
+                                  np.asarray(index.qt.scale))
+    # the appended rows match a from-scratch build of the full range
+    full = builder.build(start_id=5, n_items=400)
+    np.testing.assert_array_equal(np.asarray(grown.qt.packed),
+                                  np.asarray(full.qt.packed))
+    # npz round-trip keeps the grown range + surfaces
+    p = str(tmp_path / "grown.npz")
+    grown.save(p)
+    back = ItemIndex.load(p)
+    assert back.n_items == 400
+    np.testing.assert_array_equal(back.surfaces, grown.surfaces)
+    np.testing.assert_array_equal(np.asarray(back.qt.packed),
+                                  np.asarray(grown.qt.packed))
+    # surfaces bookkeeping is enforced both ways
+    with pytest.raises(ValueError, match="surfaces"):
+        builder.append(grown, 10)
+    plain = builder.build(start_id=0, n_items=50)
+    with pytest.raises(ValueError, match="without"):
+        builder.append(plain, 10, surfaces=np.zeros(10))
+
+
+def test_append_then_retrieve_returns_new_items(lite_model):
+    """Acceptance: attach -> warmup -> append -> re-attach serves the new
+    items with compiles_after_warmup == 0 (the warmed query-bucket ladder
+    survives the refresh)."""
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=256)
+    index = builder.build(0, 300)
+    engine = ServingEngine(model, params, max_unique=2, max_candidates=8,
+                           cache=ContextCache(capacity=16))
+    engine.attach_index(index, k=12, chunk_rows=256)
+    tel = engine.warmup()
+    assert tel["compiles_after_warmup"] == 0
+    req = _mk_retrieve(21, k=12)
+    engine.retrieve([req])
+
+    grown = builder.append(index, 200)        # new ids 300..499
+    engine.attach_index(grown, k=12, chunk_rows=256)
+    res = engine.retrieve([req])[0]
+    assert engine.registry.compiles_after_warmup == 0, \
+        engine.registry.telemetry()
+    # parity with a cold reference scorer over the grown corpus
+    import jax.numpy as jnp
+    emb = np.asarray(model.encode_user(
+        params, jnp.asarray(req.seq_ids)[None],
+        jnp.asarray(req.seq_actions)[None],
+        jnp.asarray(req.seq_surfaces)[None]))
+    _, ids_ref = CorpusScorer(grown, mode="ref").retrieve(emb, 12)
+    np.testing.assert_array_equal(res[0], ids_ref[0])
+
+    # force the new items to the top: exclude every original item — every
+    # returned id must come from the appended range
+    only_new = engine.retrieve([RetrieveRequest(
+        seq_ids=req.seq_ids, seq_actions=req.seq_actions,
+        seq_surfaces=req.seq_surfaces, k=12,
+        exclude_ids=np.arange(300))])[0]
+    assert (only_new[0] >= 300).all()
+    assert engine.registry.compiles_after_warmup == 0
+
+
+# ---------------------------------------------------------------------------
+# engine filtered-retrieve path
+# ---------------------------------------------------------------------------
+
+def test_engine_filtered_retrieve(lite_model):
+    model, params = lite_model
+    index = IndexBuilder(model, params, batch_size=256).build(
+        0, 500, surfaces=np.arange(500) % 2)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=ContextCache(capacity=64))
+    engine.attach_index(index, k=16, chunk_rows=256)
+    engine.warmup()
+
+    base = _mk_retrieve(31, k=16)
+    plain = engine.retrieve([base])[0]
+    seen = plain[0][:8]
+    filtered = RetrieveRequest(
+        seq_ids=base.seq_ids, seq_actions=base.seq_actions,
+        seq_surfaces=base.seq_surfaces, k=16, exclude_ids=seen)
+    surface = RetrieveRequest(
+        seq_ids=base.seq_ids, seq_actions=base.seq_actions,
+        seq_surfaces=base.seq_surfaces, k=16, allow_surfaces=(1,))
+    # same user three ways in ONE batch: distinct filters must NOT collapse
+    # into one retrieval group, but the user embedding is encoded once
+    misses0 = engine.cache.misses
+    res = engine.retrieve([base, filtered, surface])
+    assert engine.cache.misses == misses0      # embedding cache hit all 3
+    assert engine.registry.compiles_after_warmup == 0
+    np.testing.assert_array_equal(res[0][0], plain[0])
+    assert not np.isin(res[1][0], seen).any()
+    assert (res[2][0] % 2 == 1).all()
+
+    # exact parity of every variant against the filtered reference scorer
+    import jax.numpy as jnp
+    emb = np.asarray(model.encode_user(
+        params, jnp.asarray(base.seq_ids)[None],
+        jnp.asarray(base.seq_actions)[None],
+        jnp.asarray(base.seq_surfaces)[None]))
+    ref = CorpusScorer(index, mode="ref")
+    for got, f in ((res[1], ItemFilter(exclude_ids=seen)),
+                   (res[2], ItemFilter(allow_surfaces=(1,)))):
+        s_ref, ids_ref = ref.retrieve(emb, 16, filters=f)
+        np.testing.assert_array_equal(got[0], ids_ref[0])
+        np.testing.assert_allclose(got[1], s_ref[0], atol=1e-5)
+
+    # duplicate (user, filter) pairs dedup into one execution
+    before = len(engine.stats)
+    res2 = engine.retrieve([filtered, filtered])
+    np.testing.assert_array_equal(res2[0][0], res2[1][0])
+    assert engine.stats[-1]["retrieve_users"] == 1
+    assert len(engine.stats) == before + 1
+
+
+def test_engine_filter_k_exceeds_survivors(lite_model):
+    """A filter that leaves fewer than k items: the tail is -inf-scored,
+    mirroring the scorer contract, and no recompile happens."""
+    model, params = lite_model
+    index = IndexBuilder(model, params, batch_size=256).build(0, 200)
+    engine = ServingEngine(model, params, max_unique=2, max_candidates=8)
+    engine.attach_index(index, k=10, chunk_rows=256)
+    engine.warmup()
+    req = _mk_retrieve(41, k=10)
+    ids, scores = engine.retrieve([RetrieveRequest(
+        seq_ids=req.seq_ids, seq_actions=req.seq_actions,
+        seq_surfaces=req.seq_surfaces, k=10,
+        exclude_ids=np.arange(4, 200))])[0]
+    assert engine.registry.compiles_after_warmup == 0
+    assert (scores[:4] > -np.inf).all() and (ids[:4] < 4).all()
+    assert (scores[4:] == -np.inf).all()

@@ -1,0 +1,62 @@
+#!/usr/bin/env python
+"""Docs link checker: every relative markdown link must resolve to a file
+or directory in the repo.
+
+Scans the repo's *.md files (git-tracked + untracked-but-not-ignored, so
+a local virtualenv's bundled READMEs are never scanned; falls back to a
+filesystem walk outside a git checkout) for inline links/images
+``[text](target)``, skips absolute URLs and pure anchors, and fails with
+a per-link report if any target is missing.
+Run from anywhere:  python tools/check_docs_links.py
+"""
+import pathlib
+import re
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def md_files():
+    try:
+        out = subprocess.run(
+            ["git", "ls-files", "--cached", "--others", "--exclude-standard",
+             "*.md"], cwd=ROOT, capture_output=True, text=True, check=True)
+        files = [ROOT / line for line in out.stdout.splitlines() if line]
+        if files:
+            return files
+    except (OSError, subprocess.CalledProcessError):
+        pass
+    return [p for p in ROOT.rglob("*.md")
+            if ".git" not in p.parts and "node_modules" not in p.parts]
+
+
+def check(md: pathlib.Path):
+    errors = []
+    for m in LINK.finditer(md.read_text()):
+        target = m.group(1)
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        path = target.split("#")[0]
+        if not path:
+            continue
+        resolved = (md.parent / path).resolve()
+        if not resolved.exists():
+            errors.append(f"{md.relative_to(ROOT)}: broken link -> {target}")
+    return errors
+
+
+def main():
+    files = md_files()
+    errors = [e for md in sorted(files) for e in check(md)]
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} markdown files: "
+          f"{'FAIL' if errors else 'ok'}")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
