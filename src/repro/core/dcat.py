@@ -106,8 +106,49 @@ def ctx_pack(user_ctxs: Sequence, b_u: Optional[int] = None):
 
 
 def ctx_nbytes(ctx) -> int:
-    """Approximate host memory footprint of one context pytree."""
-    return int(sum(np.asarray(l).nbytes for l in jax.tree.leaves(ctx)))
+    """Approximate memory footprint of one context pytree (host numpy or
+    device arrays — device leaves are NOT transferred, their ``nbytes``
+    attribute is used directly; non-array leaves such as layout tags count
+    as zero)."""
+    total = 0
+    for l in jax.tree.leaves(ctx):
+        if isinstance(l, (str, bytes)):
+            continue
+        nb = getattr(l, "nbytes", None)
+        if nb is None:
+            try:
+                nb = np.asarray(l).nbytes
+            except (TypeError, ValueError):
+                nb = 0
+        total += int(nb)
+    return total
+
+
+def ctx_rotate(ctxs, n_new: int, ctx_len: int):
+    """Pre-rotate a context pytree into the fixed-L ``rotate_replace``
+    serving layout: drop the OLDEST ``n_new`` KV slots from every
+    attention-KV leaf, so the crossing step can CONCAT the candidate KV
+    (restoring length ``ctx_len``) instead of performing the per-call
+    in-place rotation (``dynamic_update_slice`` over the full gathered
+    context).  Attention results are invariant to key order given explicit
+    key positions, so the rotated layout scores the same candidates
+    (up to floating-point summation order).
+
+    KV leaves are identified by shape: ``leaf.ndim >= 4`` and
+    ``leaf.shape[-3] == ctx_len`` (the (reps, [B,] L, K, D) layout emitted
+    by ``TransformerBody.forward(collect_ctx=True)``); recurrent / SSD
+    state leaves are returned untouched.  Callers gate on attention-only
+    bodies (see ``ServingEngine``) so a state axis can never alias
+    ``ctx_len``.  Works on batched ctxs and on per-user ``ctx_slice``
+    outputs alike, numpy or device leaves."""
+    assert 0 < n_new < ctx_len, (n_new, ctx_len)
+
+    def rot(leaf):
+        if getattr(leaf, "ndim", 0) >= 4 and leaf.shape[-3] == ctx_len:
+            return leaf[..., n_new:, :, :]
+        return leaf
+
+    return jax.tree.map(rot, ctxs)
 
 
 # ---------------------------------------------------------------------------
@@ -140,14 +181,33 @@ class DCAT:
                                  skip_last_self_attn=skip)
 
     def crossing(self, p_body, x_c, inverse_idx, ctxs, *, ctx_len: int,
-                 positions=None):
+                 positions=None, rotated: bool = False):
         """x_c: (B_c, S_c, d) embedded candidate tokens; inverse_idx: (B_c,)
         maps each candidate to its unique user row (Ψ⁻¹).
-        -> y_c: (B_c, S_c, d) final-normed crossing outputs."""
+        -> y_c: (B_c, S_c, d) final-normed crossing outputs.
+
+        rotated: ``ctxs`` is already in the :func:`ctx_rotate` fixed-L
+        layout (KV length ``ctx_len - S_c``, oldest slots dropped) — the
+        candidate KV is concatenated back to length ``ctx_len`` with
+        rotated key positions, skipping the per-call in-place rotation.
+        Only meaningful under ``rotate_replace=True`` serving; the cached
+        engine path pre-rotates once at ContextCache-insert time."""
         B_c, S_c = x_c.shape[0], x_c.shape[1]
         if positions is None:
             positions = jnp.broadcast_to(
                 jnp.arange(ctx_len, ctx_len + S_c), (B_c, S_c))
+        if rotated:
+            assert self.opts.rotate_replace, \
+                "rotated ctx layout requires DCATOptions(rotate_replace=True)"
+            # surviving slots keep positions [S_c, ctx_len); the concat
+            # restores a fixed ctx_len-key attention, same key SET as the
+            # in-place rotation (order differs, scores agree numerically)
+            y, aux = self.body.cross(
+                p_body, x_c, ctxs, positions,
+                ctx_pos=jnp.arange(S_c, ctx_len),
+                gather_idx=jnp.asarray(inverse_idx),
+                self_attend=True, rotate_replace=False)
+            return y, aux
         y, aux = self.body.cross(
             p_body, x_c, ctxs, positions,
             gather_idx=jnp.asarray(inverse_idx),

@@ -179,18 +179,27 @@ class PinFMRankingModel(Module):
         H_u = self.pinfm.phi_out(pf["phi_out"], y.astype(jnp.float32))
         return H_u, ctxs, aux
 
+    @property
+    def n_cand_tokens(self) -> int:
+        """Candidate-side token count S_c entering the crossing component
+        (the learnable token adds one for graphsage-lt) — also the number
+        of context slots ``rotate_replace`` overwrites per call, i.e. the
+        ``n_new`` of ``ctx_rotate``."""
+        return 2 if self.cfg.variant == "graphsage-lt" else 1
+
     def candidate_features(self, p, batch, ctxs, *, ctx_len: int,
-                           cand_ids=None):
+                           cand_ids=None, rotated: bool = False):
         """Crossing component: candidate tokens attend to precomputed
         context ``ctxs`` (early-fusion variants).  -> (features
-        (B_c, n_feat*id_dim), e_cand, gs_e)."""
+        (B_c, n_feat*id_dim), e_cand, gs_e).  ``rotated``: ctxs is in the
+        pre-rotated fixed-L serving layout (see ``core.dcat.ctx_rotate``)."""
         cfg, pf = self.cfg, p["pinfm"]
         if cand_ids is None:
             cand_ids = batch["cand_ids"]
         x_c, e_c, gs_e = self._candidate_tokens(
             p, cand_ids, batch.get("graphsage"))
         y_c, _ = self.dcat.crossing(pf["body"], x_c, batch["inverse_idx"],
-                                    ctxs, ctx_len=ctx_len)
+                                    ctxs, ctx_len=ctx_len, rotated=rotated)
         y_c = self.pinfm.phi_out(pf["phi_out"], y_c.astype(jnp.float32))
         feats = [y_c[:, -1], e_c]                                    # cand output
         if cfg.variant == "graphsage-lt":
@@ -287,15 +296,19 @@ class PinFMRankingModel(Module):
         return self._ranker_logits(p, batch, feats)
 
     # -- early-fusion serving split (context-KV cache path) --------------------
-    def score_with_ctxs(self, p, batch, ctxs, *, ctx_len: Optional[int] = None):
+    def score_with_ctxs(self, p, batch, ctxs, *, ctx_len: Optional[int] = None,
+                        rotated: bool = False):
         """Early-fusion scoring from a PRECOMPUTED context (the candidate-
         independent half of DCAT, cacheable per user exactly like the lite
         pooled embedding): crossing + feature crossing only, no context
-        transformer.  -> task logits (B_c, n_tasks)."""
+        transformer.  -> task logits (B_c, n_tasks).  ``rotated``: ctxs is
+        pre-rotated into the fixed-L ``rotate_replace`` serving layout, so
+        the crossing skips the per-call rotation."""
         assert self.cfg.variant not in ("lite-mean", "lite-last")
         feats, _, _ = self.candidate_features(
             p, batch, ctxs,
-            ctx_len=self.cfg.seq_len if ctx_len is None else ctx_len)
+            ctx_len=self.cfg.seq_len if ctx_len is None else ctx_len,
+            rotated=rotated)
         return self._ranker_logits(p, batch, feats)
 
     def forward(self, p, batch, *, train: bool = False, rng=None,

@@ -12,7 +12,7 @@ from repro.serving.engine import ServingEngine
 from repro.serving.executors import ExecutorRegistry
 from repro.serving.generate import GenerateConfig, Generator
 from repro.serving.microbatch import MicroBatcher, Ticket
-from repro.serving.plan import (BatchPlan, BucketLadder, RankRequest,
-                                RetrieveRequest, build_plan, request_key,
-                                split_requests)
+from repro.serving.plan import (BatchPlan, BucketLadder, PipelineStats,
+                                RankRequest, RetrieveRequest, build_plan,
+                                request_key, split_requests)
 from repro.serving.router import InferenceRouter, UserEmbeddingCache

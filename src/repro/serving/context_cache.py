@@ -8,15 +8,27 @@ So the cache stores, per user sequence:
   * lite variants:         the pooled user embedding (id_dim,)
   * early-fusion variants: the per-layer context KV / state pytree emitted
                            by ``DCAT.context`` (``ctx_slice`` of the batch),
+                           tagged with its layout ("full", or the
+                           pre-rotated ``rotate_replace`` layout)
 
 and repeat-user traffic skips the context transformer entirely, going
 straight to ``DCAT.crossing``.  Values are host-side numpy pytrees; the
 cache also tracks its approximate byte footprint for observability.
+
+On top of the per-user store sits the **device-side pack memo**: an LRU of
+PACKED DEVICE batches keyed by the ordered tuple of unique-user keys (plus
+the bucket shape).  An exact-repeat batch — the dominant steady-state case
+under micro-batched repeat-user traffic — then skips ``ctx_slice`` /
+``ctx_pack`` and the host->device transfer entirely and feeds the crossing
+executor the very same device buffers as the pass that created them
+(bit-identical scores for free).  Consistency invariant: ANY ``put`` or
+eviction of a user key drops every memo entry whose packed batch contains
+that user, so a memoized batch can never serve stale per-user context.
 """
 from __future__ import annotations
 
 from collections import OrderedDict
-from typing import Any, Optional
+from typing import Any, Dict, Optional, Sequence, Set
 
 import numpy as np
 
@@ -25,15 +37,30 @@ from repro.core.dcat import ctx_nbytes
 
 class ContextCache:
     """LRU keyed by the user-sequence identity bytes (see
-    ``plan.request_key``)."""
+    ``plan.request_key``), plus the device-side pack memo.
 
-    def __init__(self, capacity: int = 4096):
+    Args:
+      capacity: max per-user entries.
+      memo_capacity: max memoized packed device batches (0 disables the
+        memo — the PR-3 behaviour)."""
+
+    def __init__(self, capacity: int = 4096, memo_capacity: int = 32):
         self.capacity = capacity
         self._d: OrderedDict = OrderedDict()
         self._bytes: dict = {}
         self.hits = 0
         self.misses = 0
         self.nbytes = 0
+        # -- pack memo: memo_key -> packed device pytree ------------------
+        self.memo_capacity = memo_capacity
+        self._memo: OrderedDict = OrderedDict()
+        self._memo_users: Dict[Any, Set] = {}   # user key -> {memo keys}
+        self._memo_keys: dict = {}              # memo key -> its user keys
+        self._memo_bytes: dict = {}
+        self.memo_hits = 0
+        self.memo_misses = 0
+        self.memo_invalidations = 0
+        self.memo_nbytes = 0
 
     @staticmethod
     def key(seq_ids, seq_actions, seq_surfaces=None) -> bytes:
@@ -62,7 +89,10 @@ class ContextCache:
 
     def put(self, key, value):
         """Insert/refresh ``key``; evicts least-recently-used entries past
-        ``capacity`` and keeps the byte-footprint gauge in sync."""
+        ``capacity`` and keeps the byte-footprint gauge in sync.  Any memo
+        entry containing ``key`` (or an evicted key) is dropped — a packed
+        batch must never outlive one of its per-user constituents."""
+        self._invalidate_user_memos(key)
         if key in self._d:
             self.nbytes -= self._bytes.pop(key, 0)
         self._d[key] = value
@@ -73,7 +103,59 @@ class ContextCache:
         while len(self._d) > self.capacity:
             old, _ = self._d.popitem(last=False)
             self.nbytes -= self._bytes.pop(old, 0)
+            self._invalidate_user_memos(old)
+
+    # -- device-side pack memo ---------------------------------------------
+    def memo_get(self, memo_key) -> Optional[Any]:
+        """-> memoized packed device batch or None; LRU-refreshes on hit."""
+        if self.memo_capacity <= 0:
+            return None
+        if memo_key in self._memo:
+            self._memo.move_to_end(memo_key)
+            self.memo_hits += 1
+            return self._memo[memo_key]
+        self.memo_misses += 1
+        return None
+
+    def memo_put(self, memo_key, user_keys: Sequence, value):
+        """Memoize a packed device batch under ``memo_key`` and register it
+        against every constituent ``user_keys`` entry for invalidation."""
+        if self.memo_capacity <= 0:
+            return
+        if memo_key in self._memo:
+            self._drop_memo(memo_key)
+        self._memo[memo_key] = value
+        nb = ctx_nbytes(value)
+        self._memo_bytes[memo_key] = nb
+        self.memo_nbytes += nb
+        self._memo_keys[memo_key] = tuple(user_keys)
+        for uk in user_keys:
+            self._memo_users.setdefault(uk, set()).add(memo_key)
+        while len(self._memo) > self.memo_capacity:
+            old = next(iter(self._memo))
+            self._drop_memo(old)
+
+    def _drop_memo(self, memo_key):
+        self._memo.pop(memo_key, None)
+        self.memo_nbytes -= self._memo_bytes.pop(memo_key, 0)
+        for uk in self._memo_keys.pop(memo_key, ()):
+            s = self._memo_users.get(uk)
+            if s is not None:
+                s.discard(memo_key)
+                if not s:
+                    del self._memo_users[uk]
+
+    def _invalidate_user_memos(self, user_key):
+        """Drop every memoized packed batch containing ``user_key``."""
+        for mk in list(self._memo_users.get(user_key, ())):
+            self._drop_memo(mk)
+            self.memo_invalidations += 1
 
     def stats(self) -> dict:
         return {"entries": len(self._d), "hits": self.hits,
-                "misses": self.misses, "nbytes": self.nbytes}
+                "misses": self.misses, "nbytes": self.nbytes,
+                "memo_entries": len(self._memo),
+                "memo_hits": self.memo_hits,
+                "memo_misses": self.memo_misses,
+                "memo_invalidations": self.memo_invalidations,
+                "memo_nbytes": self.memo_nbytes}

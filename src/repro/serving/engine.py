@@ -24,27 +24,68 @@ The cached early-fusion path always round-trips contexts through per-user
 host slices (``ctx_slice``/``ctx_pack``), so a cache-hit pass feeds the
 crossing executor the exact same bytes as the pass that populated the
 cache: hit and miss scoring agree bit-for-bit on the same bucket.
+
+``score`` runs as a DEPTH-2 HOST/DEVICE PIPELINE: every chunk is split
+into prepare (host: plan + cache + pack + H2D dispatch) -> launch (async
+executor dispatch) -> finalize (device->host sync).  JAX dispatches
+executors asynchronously, so the host prepares chunk k+1 while the device
+executes chunk k; ``PipelineStats`` records per-stage ms and the overlap
+fraction, and ``pipeline_depth=1`` falls back to the fully synchronous
+prepare->launch->finalize order — bit-identical scores either way, since
+both orders feed identical operands to identical executors.  Three
+host-cost eliminations ride the same path: the ContextCache's device-side
+PACK MEMO short-circuits ``ctx_slice``/``ctx_pack``/H2D for exact-repeat
+batches, ``rotate_replace`` engines cache contexts in the pre-rotated
+fixed-L layout (``ctx_rotate``) so crossing skips the per-call rotation,
+and packed per-chunk retrieval filter masks are memoized per
+``ItemFilter`` fingerprint.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.dcat import ctx_pack, ctx_slice
+from repro.core.dcat import ctx_pack, ctx_rotate, ctx_slice
 from repro.core.finetune import PinFMRankingModel
 from repro.serving.context_cache import ContextCache
 from repro.serving.executors import ExecutorRegistry
-from repro.serving.plan import (BatchPlan, BucketLadder, RankRequest,
-                                RetrieveRequest, _pad_rows, build_plan,
-                                request_key, split_requests)
+from repro.serving.plan import (BatchPlan, BucketLadder, PipelineStats,
+                                RankRequest, RetrieveRequest, _pad_rows,
+                                build_plan, request_key, split_requests)
 
 LITE_VARIANTS = ("lite-mean", "lite-last")
 _CROSS_KEYS = ("inverse_idx", "cand_ids", "cand_feats", "user_feats")
+_MASK_CACHE_CAP = 1024     # (filter fingerprint, chunk base) mask rows
+
+
+def _is_ready(out) -> bool:
+    """True when a dispatched executor output has already materialized
+    (device idle); leaves without is_ready (plain numpy) count as ready."""
+    try:
+        return all(getattr(l, "is_ready", lambda: True)()
+                   for l in jax.tree.leaves(out))
+    except Exception:       # pragma: no cover - defensive, gauge-only
+        return True
+
+
+class _Inflight:
+    """One chunk's pipeline state between prepare and finalize."""
+    __slots__ = ("plan", "idxs", "kind", "key", "args", "out",
+                 "t0", "prepare_s", "launch_s")
+
+    def __init__(self, plan, kind, key, args, t0):
+        self.plan, self.kind, self.key, self.args = plan, kind, key, args
+        self.t0 = t0
+        self.idxs = None
+        self.out = None
+        self.prepare_s = 0.0
+        self.launch_s = 0.0
 
 
 class ServingEngine:
@@ -78,7 +119,8 @@ class ServingEngine:
     def __init__(self, model: PinFMRankingModel, params, *,
                  max_unique: int = 8, max_candidates: int = 64,
                  min_unique: int = 1, min_candidates: int = 8,
-                 cache: Optional[ContextCache] = None, key_fn=None):
+                 cache: Optional[ContextCache] = None, key_fn=None,
+                 pipeline_depth: int = 2):
         self.model, self.params = model, params
         self.variant = model.cfg.variant
         self.lite = self.variant in LITE_VARIANTS
@@ -89,6 +131,25 @@ class ServingEngine:
                                      min(min_candidates, max_candidates))
         self.cache = cache
         self._key_fn = key_fn
+        # 2 = host/device overlap, 1 = fully synchronous (bit-identical);
+        # deeper lookahead is future work (needs operand back-pressure) and
+        # silently clamping it would make lookahead experiments lie
+        if pipeline_depth not in (1, 2):
+            raise ValueError(f"pipeline_depth={pipeline_depth!r}: only 1 "
+                             "(synchronous) and 2 (depth-2 overlap) exist")
+        self.pipeline_depth = int(pipeline_depth)
+        self.pipeline_stats: List[PipelineStats] = []
+        # rotate_replace engines cache the PRE-ROTATED fixed-L KV layout
+        # (ctx_rotate) so crossing concats instead of rotating per call;
+        # gated on attention-only bodies — ctx_rotate identifies KV leaves
+        # by their length axis, which rec/ssm state tensors must not alias
+        self._n_new = model.n_cand_tokens
+        self._ctx_rot = (
+            not self.lite
+            and getattr(model.dcat.opts, "rotate_replace", False)
+            and all(k in ("attn", "moe")
+                    for k in model.pinfm.bb.block_kinds()))
+        self._ctx_tag = "rot" if self._ctx_rot else "full"
         self.registry = ExecutorRegistry()
         self.stats: List[dict] = []
         self.index = None                 # retrieval corpus (attach_index)
@@ -96,6 +157,10 @@ class ServingEngine:
         self._chunk_size = 0              # rows per chunk (static, mult. 32)
         self._attach_key = None           # (k, bits, dim, chunk_rows)
         self._zero_masks: Dict[int, jnp.ndarray] = {}   # b_q -> zeros mask
+        # packed per-chunk filter-mask rows, (fingerprint, chunk base) keyed
+        self._mask_cache: OrderedDict = OrderedDict()
+        self.mask_hits = 0
+        self.mask_misses = 0
         self.retrieve_k = 0
         self._warmed_up = False
         self._warm_L = None
@@ -128,13 +193,16 @@ class ServingEngine:
                     model.encode_context(p, ids, actions, surfaces,
                                          serving=True)[1])
 
+            rotated = self._ctx_rot
+
             def cross_factory(key):
                 ctx_len = key[2]             # (b_u, b_c, L)
 
                 def fn(p, batch, ctxs):
                     return jax.nn.sigmoid(
                         model.score_with_ctxs(p, batch, ctxs,
-                                              ctx_len=ctx_len)
+                                              ctx_len=ctx_len,
+                                              rotated=rotated)
                         .astype(jnp.float32))
                 return fn
 
@@ -154,18 +222,54 @@ class ServingEngine:
         """-> per-request (N_b, n_tasks) probabilities.  Oversized request
         lists are transparently split into bucket-sized chunks; a single
         request with more than max_candidates candidates is split by
-        candidate slice and reassembled."""
+        candidate slice and reassembled.
+
+        Chunks flow through the depth-2 pipeline: chunk k+1's host prepare
+        (plan, cache, pack, H2D) runs while chunk k's executor is still in
+        flight on the device; results land in request order regardless.
+        ``pipeline_depth=1`` processes each chunk fully before the next —
+        the escape hatch is bit-identical because both orders run the same
+        executors on the same operands and mutate the cache at the same
+        points (prepare), never at finalize."""
         pieces, owner = [], []               # flattened sub-requests
         for i, r in enumerate(requests):
             for part in self._split_candidates(r):
                 pieces.append(part)
                 owner.append(i)
         scored: List[Optional[np.ndarray]] = [None] * len(pieces)
+        ps = PipelineStats(depth=self.pipeline_depth)
+        t_all = time.perf_counter()
+        if self.cache is not None:
+            memo0 = (self.cache.memo_hits, self.cache.memo_misses)
+        prev: Optional[_Inflight] = None
         for idxs in split_requests(pieces, self.max_unique,
                                    self.max_candidates):
-            per_req = self._score_chunk([pieces[i] for i in idxs])
-            for i, p in zip(idxs, per_req):
-                scored[i] = p
+            # overlap gauge: only count this prepare as hidden work if the
+            # previous chunk is genuinely still executing when it starts
+            # (an already-ready output means the device beat the host and
+            # nothing is being hidden)
+            in_flight = prev is not None and not _is_ready(prev.out)
+            infl = self._prepare_chunk([pieces[i] for i in idxs])
+            infl.idxs = idxs
+            ps.chunks += 1
+            ps.prepare_ms += infl.prepare_s * 1e3
+            if in_flight:
+                ps.overlapped_ms += infl.prepare_s * 1e3
+            self._launch(infl)
+            ps.launch_ms += infl.launch_s * 1e3
+            if self.pipeline_depth >= 2:
+                if prev is not None:
+                    ps.wait_ms += self._finalize(prev, scored)
+                prev = infl
+            else:
+                ps.wait_ms += self._finalize(infl, scored)
+        if prev is not None:
+            ps.wait_ms += self._finalize(prev, scored)
+        ps.total_ms = (time.perf_counter() - t_all) * 1e3
+        if self.cache is not None:
+            ps.memo_hits = self.cache.memo_hits - memo0[0]
+            ps.memo_misses = self.cache.memo_misses - memo0[1]
+        self.pipeline_stats.append(ps)
         out: List[List[np.ndarray]] = [[] for _ in requests]
         for i, p in zip(owner, scored):
             out[i].append(p)
@@ -182,8 +286,14 @@ class ServingEngine:
                        else r.graphsage[o:o + self.max_candidates]))
             for o in range(0, n, self.max_candidates)]
 
-    def _score_chunk(self, chunk: Sequence[RankRequest]) -> List[np.ndarray]:
-        t0 = time.time()
+    # -- pipeline stages ----------------------------------------------------
+    def _prepare_chunk(self, chunk: Sequence[RankRequest]) -> _Inflight:
+        """HOST stage: plan the chunk, resolve caches, pack/memo contexts,
+        and dispatch the H2D transfers.  Returns the inflight record whose
+        (kind, key, args) the launch stage feeds to the executor registry.
+        The only device sync here is the cache-MISS path (fresh contexts /
+        embeddings must land host-side to populate the ContextCache)."""
+        t0 = time.perf_counter()
         plan = build_plan(chunk, self.ladder_u, self.ladder_c,
                           **({"key_fn": self._key_fn} if self._key_fn else {}))
         if not self.use_graphsage:
@@ -193,32 +303,53 @@ class ServingEngine:
                              "features on every request")
 
         if self.cache is None:
-            probs = np.asarray(self.registry(
-                "rank", (plan.b_u, plan.b_c, plan.seq_len),
-                self.params, self._device(plan.batch)))
+            kind, key = "rank", (plan.b_u, plan.b_c, plan.seq_len)
+            args = (self.params, self._device(plan.batch))
         elif self.lite:
-            probs = self._score_lite_cached(plan)
+            kind, key, args = self._prepare_lite(plan)
         else:
-            probs = self._score_early_cached(plan)
+            kind, key, args = self._prepare_early(plan)
+        infl = _Inflight(plan, kind, key, args, t0)
+        infl.prepare_s = time.perf_counter() - t0
+        return infl
 
+    def _launch(self, infl: _Inflight) -> None:
+        """Dispatch the executor — returns as soon as XLA has enqueued the
+        computation (JAX async dispatch); ``infl.out`` is a device future."""
+        t0 = time.perf_counter()
+        infl.out = self.registry(infl.kind, infl.key, *infl.args)
+        infl.args = None                 # drop operand refs early
+        infl.launch_s = time.perf_counter() - t0
+
+    def _finalize(self, infl: _Inflight, scored: List) -> float:
+        """Device->host sync: block on the chunk's output, record stats,
+        scatter per-request slices into ``scored``.  -> ms spent blocked."""
+        plan = infl.plan
+        t0 = time.perf_counter()
+        probs = np.asarray(infl.out)
+        wait_s = time.perf_counter() - t0
         probs = probs[:plan.n_candidates]
         entry = {"candidates": plan.n_candidates,
                  "unique_users": plan.n_unique,
                  "dedup_ratio": plan.dedup_ratio,
                  "b_u": plan.b_u, "b_c": plan.b_c,
-                 "latency_s": time.time() - t0,
+                 # host span of this chunk's stages (prepare+launch+wait);
+                 # under the pipeline this is NOT wall time — chunks overlap
+                 "latency_s": infl.prepare_s + infl.launch_s + wait_s,
                  **{f"exec_{k}": v for k, v in
                     self.registry.telemetry().items()}}
         if self.cache is not None:
             entry["cache_hits"] = self.cache.hits
             entry["cache_misses"] = self.cache.misses
+            entry["memo_hits"] = self.cache.memo_hits
+            entry["memo_misses"] = self.cache.memo_misses
         self.stats.append(entry)
 
-        out, off = [], 0
-        for c in plan.counts:
-            out.append(probs[off:off + c])
+        off = 0
+        for i, c in zip(infl.idxs, plan.counts):
+            scored[i] = probs[off:off + c]
             off += c
-        return out
+        return wait_s * 1e3
 
     # -- per-user context/embedding cache protocol (rank + retrieve) --------
     def _lookup_users(self, user_keys: Sequence[bytes]):
@@ -247,22 +378,45 @@ class ServingEngine:
                                  plan.batch["seq_actions"][miss_rows],
                                  plan.batch["seq_surfaces"][miss_rows])
 
-    def _score_early_cached(self, plan: BatchPlan) -> np.ndarray:
+    def _prepare_early(self, plan: BatchPlan):
+        """Early-fusion prepare: per-user ctx KV from the ContextCache
+        (tagged with the layout: "full", or "rot" = pre-rotated fixed-L
+        ``rotate_replace`` layout), packed into the bucket batch — or the
+        whole packed DEVICE batch straight from the pack memo when this
+        exact unique-user tuple was packed before (skipping ctx_slice,
+        ctx_pack AND the H2D transfer)."""
         values, miss_rows = self._lookup_users(plan.user_keys)
-        if miss_rows:
-            ctxs = self._encode_missing(plan, miss_rows, "context")
-            for j, u in enumerate(miss_rows):
-                sl = ctx_slice(ctxs, j)
-                self.cache.put(plan.user_keys[u], sl)
-                values[u] = sl
-        packed = ctx_pack([values[u] for u in range(plan.n_unique)], plan.b_u)
-        return np.asarray(self.registry(
-            "cross", (plan.b_u, plan.b_c, plan.seq_len), self.params,
-            self._device(self._cross_batch(plan.batch)),
-            self._device(packed)))
+        # layout discipline: entries written by an engine with a different
+        # ctx layout (or a pre-layout cache) re-encode rather than mis-score
+        for u in list(values):
+            v = values[u]
+            if not (isinstance(v, tuple) and len(v) == 2
+                    and v[0] == self._ctx_tag):
+                del values[u]
+                miss_rows.append(u)
+        miss_rows.sort()
+        memo_key = (self._ctx_tag, plan.b_u, plan.seq_len,
+                    tuple(plan.user_keys))
+        packed_dev = self.cache.memo_get(memo_key)
+        if packed_dev is None:
+            if miss_rows:
+                ctxs = self._encode_missing(plan, miss_rows, "context")
+                for j, u in enumerate(miss_rows):
+                    sl = ctx_slice(ctxs, j)          # device sync (miss)
+                    if self._ctx_rot:
+                        sl = ctx_rotate(sl, self._n_new, plan.seq_len)
+                    self.cache.put(plan.user_keys[u], (self._ctx_tag, sl))
+                    values[u] = (self._ctx_tag, sl)
+            packed = ctx_pack([values[u][1] for u in range(plan.n_unique)],
+                              plan.b_u)
+            packed_dev = self._device(packed)
+            self.cache.memo_put(memo_key, plan.user_keys, packed_dev)
+        return ("cross", (plan.b_u, plan.b_c, plan.seq_len),
+                (self.params, self._device(self._cross_batch(plan.batch)),
+                 packed_dev))
 
-    # -- lite path: pooled-embedding cache (now dedup-aware) ----------------
-    def _score_lite_cached(self, plan: BatchPlan) -> np.ndarray:
+    # -- lite path: pooled-embedding cache (dedup-aware) --------------------
+    def _prepare_lite(self, plan: BatchPlan):
         values, miss_rows = self._lookup_users(plan.user_keys)
         if miss_rows:
             fresh = np.asarray(self._encode_missing(plan, miss_rows, "encode"))
@@ -273,10 +427,9 @@ class ServingEngine:
         for u in range(plan.n_unique):
             emb_u[u] = values[u]
         user_emb = emb_u[plan.batch["inverse_idx"]]          # Ψ⁻¹ on host
-        return np.asarray(self.registry(
-            "score_emb", (plan.b_u, plan.b_c), self.params,
-            jnp.asarray(user_emb),
-            self._device(self._cross_batch(plan.batch))))
+        return ("score_emb", (plan.b_u, plan.b_c),
+                (self.params, jnp.asarray(user_emb),
+                 self._device(self._cross_batch(plan.batch))))
 
     # -- retrieval path: corpus top-k from the cached pooled embedding ------
     def attach_index(self, index, *, k: int = 100,
@@ -333,6 +486,10 @@ class ServingEngine:
              jnp.asarray(min(index.n_items - base, ch), jnp.int32), base)
             for base in range(0, R, ch)]
         self._zero_masks = {}
+        # cached packed mask rows are chunk-window- and corpus-relative:
+        # any (re-)attach invalidates them (start_id / surfaces / chunking
+        # may all have changed); hit/miss counters stay cumulative
+        self._mask_cache.clear()
         if compatible:          # warmed executors stay valid: same shapes,
             return              # same closed-over (k, bits, ch)
         bits = index.bits
@@ -467,25 +624,65 @@ class ServingEngine:
         emb = np.stack([values[u] for u in range(len(reqs))])
         return emb, {"encode_misses": len(miss_rows)}
 
+    def _chunk_mask_rows(self, filters, fps, base_host: int):
+        """Per-chunk packed mask rows with fingerprint memoization: the
+        (W,) row a filter packs for a chunk window depends only on the
+        filter's fingerprint and the window, and seen-lists repeat across a
+        session's requests — so rows are served from an LRU keyed by
+        (fingerprint, chunk base) and only packed on first sight.  ``fps``
+        carries the per-filter fingerprints precomputed ONCE per call (a
+        fingerprint re-sorts the whole seen-list — per-chunk recomputation
+        would dwarf the packing the cache saves).
+        -> (n, W) int32 stack, or None when nothing in this chunk is
+        excluded."""
+        from repro.retrieval.filters import excluded_rows, pack_bits
+        W = self._chunk_size // 32
+        zero_row = None
+        rows, any_set = [], False
+        for f, fp in zip(filters, fps):
+            if fp is None:
+                if zero_row is None:
+                    zero_row = np.zeros(W, np.int32)
+                rows.append(zero_row)
+                continue
+            ck = (fp, base_host)
+            row = self._mask_cache.get(ck)
+            if row is None:
+                self.mask_misses += 1
+                row = pack_bits(excluded_rows(f, self.index, base_host,
+                                              self._chunk_size))
+                self._mask_cache[ck] = row
+                while len(self._mask_cache) > _MASK_CACHE_CAP:
+                    self._mask_cache.popitem(last=False)
+            else:
+                self._mask_cache.move_to_end(ck)
+                self.mask_hits += 1
+            if row.any():
+                any_set = True
+            rows.append(row)
+        return np.stack(rows) if any_set else None
+
     def _corpus_topk(self, emb, n_users, tel_extra, filters=None):
         """Run the bucketed chunk executors over the corpus, merge on host.
         -> (scores (n_users, k), rows (n_users, k)).  ``filters`` (one
         Optional[ItemFilter] per user row) is resolved per chunk into a
-        packed (b_q, chunk/32) bitmask — chunks no filter touches reuse
-        the cached all-zeros mask, so the common case ships no bytes."""
-        from repro.retrieval.filters import filter_masks
+        packed (b_q, chunk/32) bitmask — rows are memoized per filter
+        fingerprint (``_chunk_mask_rows``), and chunks no filter touches
+        reuse the cached all-zeros mask, so the common case ships no
+        bytes."""
         from repro.retrieval.scorer import merge_topk
-        t0 = time.time()
+        t0 = time.perf_counter()
         b_q = self.ladder_u.fit(n_users)
         q = jnp.asarray(_pad_rows(emb.astype(np.float32), b_q))
         filtered = filters is not None and any(f is not None for f in filters)
+        fps = ([None if f is None or f.is_empty() else f.fingerprint()
+                for f in filters] if filtered else None)
         parts = []
         for pk, sc, bs, base, n_valid, base_host in self._chunks:
             mask = self._zero_mask(b_q)
             if filtered:
-                m = filter_masks(filters, self.index, row_start=base_host,
-                                 n_rows=self._chunk_size)
-                if m is not None and m.any():
+                m = self._chunk_mask_rows(filters, fps, base_host)
+                if m is not None:
                     mask = jnp.asarray(_pad_rows(m, b_q))
             parts.append(self.registry("retrieve", (b_q,), q, pk, sc, bs,
                                        base, n_valid, mask))
@@ -496,7 +693,9 @@ class ServingEngine:
                  "corpus_chunks": len(self._chunks),
                  "filtered_users": (sum(f is not None for f in filters)
                                     if filters else 0),
-                 "latency_s": time.time() - t0, **tel_extra,
+                 "mask_hits": self.mask_hits,
+                 "mask_misses": self.mask_misses,
+                 "latency_s": time.perf_counter() - t0, **tel_extra,
                  **{f"exec_{k}": v for k, v in
                     self.registry.telemetry().items()}}
         if self.cache is not None:
@@ -511,7 +710,7 @@ class ServingEngine:
         steady-state traffic never pays an XLA compile.  Returns registry
         telemetry (incl. wall time)."""
         L = int(seq_len if seq_len is not None else self.model.cfg.seq_len)
-        t0 = time.time()
+        t0 = time.perf_counter()
         params = self.params
         zi = lambda *s: jnp.zeros(s, jnp.int32)
 
@@ -521,6 +720,9 @@ class ServingEngine:
                 kind = "encode" if self.lite else "context"
                 ctxs = self.registry.warm(kind, (b_u, L), params,
                                           zi(b_u, L), zi(b_u, L), zi(b_u, L))
+                if self._ctx_rot and not self.lite:
+                    # the cross executors consume the PRE-ROTATED layout
+                    ctxs = ctx_rotate(ctxs, self._n_new, L)
             if self._chunks is not None:
                 d = self.model.pcfg.id_dim
                 self.registry.warm("retrieve", (b_u,),
@@ -543,7 +745,7 @@ class ServingEngine:
                         self._device(self._cross_batch(batch)), ctxs)
         self._warmed_up, self._warm_L = True, L
         tel = self.registry.telemetry()
-        tel["warmup_s"] = time.time() - t0
+        tel["warmup_s"] = time.perf_counter() - t0
         return tel
 
     def _dummy_batch(self, b_u: int, b_c: int, L: int) -> dict:

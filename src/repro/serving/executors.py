@@ -8,6 +8,7 @@ it: ``compiles`` counts first executions (each one paid a compile),
 """
 from __future__ import annotations
 
+import threading
 from typing import Callable, Dict, Hashable, Tuple
 
 import jax
@@ -20,6 +21,13 @@ class ExecutorRegistry:
     key is the shape-bucket tuple (plus any static config such as the
     context length), so the factory can close over static values instead of
     threading them through jit as traced arguments.
+
+    Bookkeeping (executor dicts, compile/hit counters) is guarded by an
+    RLock: with a ``MicroBatcher`` background flusher, executions arrive
+    from the flusher thread as well as from callers blocked in
+    ``result()``.  The jitted call itself runs OUTSIDE the lock — jit
+    dispatch is thread-safe and holding the lock across device dispatch
+    would serialize the very overlap the pipeline exists for.
     """
 
     def __init__(self):
@@ -27,11 +35,13 @@ class ExecutorRegistry:
         self._jitted: Dict[Tuple[str, Hashable], Callable] = {}
         self._executed: set = set()
         self._warmed: set = set()
+        self._lock = threading.RLock()
         self.compiles = 0
         self.hits = 0
 
     def register(self, kind: str, factory: Callable):
-        self._factories[kind] = factory
+        with self._lock:
+            self._factories[kind] = factory
 
     def invalidate(self, kind: str):
         """Drop every jitted executor of ``kind`` — required when a factory
@@ -39,10 +49,11 @@ class ExecutorRegistry:
         retrieval index), otherwise stale executors keep serving.  The
         cumulative compile/hit counters are left untouched; dropped keys
         count as fresh compiles again until re-warmed."""
-        for k in [k for k in self._jitted if k[0] == kind]:
-            del self._jitted[k]
-            self._executed.discard(k)
-            self._warmed.discard(k)
+        with self._lock:
+            for k in [k for k in self._jitted if k[0] == kind]:
+                del self._jitted[k]
+                self._executed.discard(k)
+                self._warmed.discard(k)
 
     @property
     def kinds(self):
@@ -58,15 +69,16 @@ class ExecutorRegistry:
         outside :meth:`warm`, toward ``compiles_after_warmup`` — the
         number the zero-recompile serving contract pins at 0)."""
         k = (kind, key)
-        fn = self._jitted.get(k)
-        if fn is None:
-            fn = jax.jit(self._factories[kind](key))
-            self._jitted[k] = fn
-        if k in self._executed:
-            self.hits += 1
-        else:
-            self._executed.add(k)
-            self.compiles += 1
+        with self._lock:
+            fn = self._jitted.get(k)
+            if fn is None:
+                fn = jax.jit(self._factories[kind](key))
+                self._jitted[k] = fn
+            if k in self._executed:
+                self.hits += 1
+            else:
+                self._executed.add(k)
+                self.compiles += 1
         return fn(*args)
 
     def warm(self, kind: str, key: Hashable, *args):
@@ -74,16 +86,20 @@ class ExecutorRegistry:
         warmup compile is excluded from steady-state telemetry questions via
         ``compiles_after_warmup``."""
         out = self(kind, key, *args)
-        self._warmed.add((kind, key))
+        with self._lock:
+            self._warmed.add((kind, key))
         return out
 
     @property
     def compiles_after_warmup(self) -> int:
         """Executors that compiled OUTSIDE warmup — the number a production
         deployment wants pinned at zero."""
-        return len(self._executed - self._warmed)
+        with self._lock:
+            return len(self._executed - self._warmed)
 
     def telemetry(self) -> dict:
-        return {"executors": len(self._jitted), "compiles": self.compiles,
-                "hits": self.hits, "warmed": len(self._warmed),
-                "compiles_after_warmup": self.compiles_after_warmup}
+        with self._lock:
+            return {"executors": len(self._jitted),
+                    "compiles": self.compiles,
+                    "hits": self.hits, "warmed": len(self._warmed),
+                    "compiles_after_warmup": self.compiles_after_warmup}

@@ -3,11 +3,26 @@ planning, so concurrent low-fanout callers share one device batch (and one
 Ψ pass — duplicate users ACROSS callers dedup too, which is where the
 paper's 1:1000 serving ratio comes from).
 
-Synchronous-friendly design: ``submit`` enqueues and returns a ticket;
-the queue flushes when ``max_requests`` or ``max_candidates`` worth of work
-has accumulated, when ``max_wait_s`` has elapsed since the oldest pending
-request, or on demand (``flush()`` / ``ticket.result()``).  No background
-thread — deterministic for tests; a server loop calls ``poll()``.
+Two operating modes:
+
+  * synchronous (default, ``max_wait_ms=None``) — no threads: the queue
+    flushes when ``max_requests`` or ``max_candidates`` worth of work has
+    accumulated, on demand (``flush()`` / ``ticket.result()``), or when a
+    server loop calls ``poll()`` past ``max_wait_s``.  Deterministic for
+    tests.
+  * background flusher (``max_wait_ms=<float>``) — a daemon thread bounds
+    the age of the oldest pending request, so the engine's depth-2
+    pipeline is fed continuously WITHOUT any caller blocking in
+    ``result()``: callers submit and pick results up later; the flusher
+    drains the queue behind them.  ``close()`` (or the context manager)
+    stops the thread.
+
+Flush/result race contract: a ticket whose request was already picked up
+by an in-flight flush (another caller's, or the background flusher's) must
+NOT trigger a redundant flush from ``result()`` — the membership check and
+the queue swap happen atomically under the queue lock, so ``result()``
+either drains the batch its request is actually in, or just waits for the
+in-flight one to land.
 """
 from __future__ import annotations
 
@@ -21,8 +36,9 @@ from repro.serving.plan import RankRequest
 
 
 class Ticket:
-    """Handle for one submitted request; ``result()`` forces a flush if the
-    batch has not gone out yet."""
+    """Handle for one submitted request; ``result()`` flushes only if the
+    request is still queued — if an in-flight flush already picked it up,
+    it waits for that batch instead of triggering a redundant one."""
 
     def __init__(self, batcher: "MicroBatcher"):
         self._batcher = batcher
@@ -35,9 +51,9 @@ class Ticket:
 
     def result(self) -> np.ndarray:
         if not self._done.is_set():
-            self._batcher.flush()
-            # another caller's flush may have picked this request up and
-            # still be inside engine.score — wait for it to land
+            # targeted flush: atomically checks whether THIS request is
+            # still pending; a no-op when another flush has it in flight
+            self._batcher._flush(only_if_pending=self)
             self._done.wait()
         if self._error is not None:
             raise self._error
@@ -60,32 +76,89 @@ class MicroBatcher:
       max_requests / max_candidates: flush thresholds (candidates default
         to the engine's bucket maximum).
       max_wait_s: age bound enforced by ``poll()``.
+      max_wait_ms: when set, starts the BACKGROUND FLUSHER: a daemon
+        thread that flushes whenever the oldest pending request has waited
+        this long, feeding the engine pipeline without a caller blocking
+        in ``result()``.  Overrides ``max_wait_s``.
 
     Invariant: every submitted request's ticket resolves exactly once —
-    with the result, or with the engine's exception if a flush fails."""
+    with the result, or with the engine's exception if a flush fails.
+
+    Concurrency contract: the engine itself (ContextCache, stats lists,
+    mask cache) is NOT thread-safe; the batcher serializes all flush-driven
+    ``engine.score`` calls through ``engine_lock``.  With a background
+    flusher running, any DIRECT engine use from another thread
+    (``engine.retrieve``, ad-hoc ``engine.score``) must hold that same
+    lock::
+
+        with mb.engine_lock:
+            engine.retrieve(reqs)
+    """
 
     def __init__(self, engine, *, max_requests: int = 32,
                  max_candidates: Optional[int] = None,
-                 max_wait_s: float = 0.01):
+                 max_wait_s: float = 0.01,
+                 max_wait_ms: Optional[float] = None):
         self.engine = engine
         self.max_requests = max_requests
         self.max_candidates = (max_candidates if max_candidates is not None
                                else engine.max_candidates)
-        self.max_wait_s = max_wait_s
+        self.max_wait_s = (max_wait_ms / 1e3 if max_wait_ms is not None
+                           else max_wait_s)
         self._lock = threading.Lock()
-        # the engine (ContextCache LRU, ExecutorRegistry dicts, stats list)
-        # is not thread-safe: serialize engine.score across flushing callers
-        self._engine_lock = threading.Lock()
+        # the engine (ContextCache LRU, stats lists) is not thread-safe:
+        # serialize engine.score across flushing callers + the flusher;
+        # public so direct engine users can join the serialization
+        self.engine_lock = threading.Lock()
         self._pending: List[RankRequest] = []
         self._tickets: List[Ticket] = []
         self._oldest: Optional[float] = None
         self.flushes = 0
         self.coalesced = 0
+        self._stop = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        if max_wait_ms is not None:
+            tick = min(max(self.max_wait_s / 4, 5e-4), 0.05)
+            self._flusher = threading.Thread(
+                target=self._flusher_loop, args=(tick,),
+                name="microbatch-flusher", daemon=True)
+            self._flusher.start()
 
+    # -- background flusher -------------------------------------------------
+    def _flusher_loop(self, tick: float):
+        while not self._stop.wait(tick):
+            try:
+                self.poll()
+            except BaseException:
+                # the failing batch's tickets already carry the exception
+                # (flush resolves them before re-raising); the flusher
+                # itself must survive to serve subsequent batches
+                pass
+
+    def close(self):
+        """Stop the background flusher (if any) after draining the queue.
+        Idempotent; the batcher remains usable in synchronous mode."""
+        self._stop.set()
+        if self._flusher is not None:
+            self._flusher.join()
+            self._flusher = None
+        try:
+            self.flush()
+        except BaseException:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- submit / flush -----------------------------------------------------
     def submit(self, request: RankRequest) -> Ticket:
         """Enqueue one request -> ticket.  Flushes inline when a size
-        threshold trips; otherwise the batch waits for ``poll()``,
-        ``flush()``, or a ``ticket.result()``."""
+        threshold trips; otherwise the batch waits for the background
+        flusher, ``poll()``, ``flush()``, or a ``ticket.result()``."""
         with self._lock:
             t = Ticket(self)
             self._pending.append(request)
@@ -110,7 +183,13 @@ class MicroBatcher:
     def flush(self):
         """Drain the queue through one ``engine.score`` call (one Ψ pass
         over every pending caller's requests) and resolve the tickets."""
+        self._flush()
+
+    def _flush(self, only_if_pending: Optional[Ticket] = None):
         with self._lock:
+            if (only_if_pending is not None
+                    and only_if_pending not in self._tickets):
+                return      # picked up by an in-flight flush: just wait
             pending, tickets = self._pending, self._tickets
             self._pending, self._tickets, self._oldest = [], [], None
             if pending:
@@ -119,7 +198,7 @@ class MicroBatcher:
         if not pending:
             return
         try:
-            with self._engine_lock:
+            with self.engine_lock:
                 results = self.engine.score(pending)
         except BaseException as exc:
             # never orphan a ticket: a caller blocked in result() must see

@@ -105,6 +105,43 @@ class BucketLadder:
 # ---------------------------------------------------------------------------
 
 @dataclasses.dataclass
+class PipelineStats:
+    """Telemetry for one ``ServingEngine.score`` call under the depth-2
+    host/device pipeline (host prepares chunk k+1 while the device runs
+    chunk k).  All times are milliseconds of HOST wall clock:
+
+      prepare_ms — plan build, cache lookups, ctx pack / memo, H2D dispatch
+      launch_ms  — executor dispatch (async; returns before device work)
+      wait_ms    — blocked on device output in finalize (device->host sync)
+      overlapped_ms — the subset of prepare_ms spent while a previous
+        chunk's executor was still in flight on the device; 0 at
+        ``pipeline_depth=1`` and for single-chunk calls.  A prepare whose
+        predecessor already finished (output ready) counts zero; one whose
+        predecessor is still running counts in full, so this is an UPPER
+        bound when the predecessor completes mid-prepare.
+    """
+    depth: int
+    chunks: int = 0
+    prepare_ms: float = 0.0
+    launch_ms: float = 0.0
+    wait_ms: float = 0.0
+    overlapped_ms: float = 0.0
+    total_ms: float = 0.0
+    memo_hits: int = 0
+    memo_misses: int = 0
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Share of host prepare work hidden behind device execution."""
+        return (self.overlapped_ms / self.prepare_ms
+                if self.prepare_ms > 0 else 0.0)
+
+    def as_dict(self) -> dict:
+        return {**dataclasses.asdict(self),
+                "overlap_fraction": self.overlap_fraction}
+
+
+@dataclasses.dataclass
 class BatchPlan:
     """One fixed-shape device batch plus the host-side bookkeeping needed to
     route results back to requests and to key the ContextCache."""
@@ -186,7 +223,10 @@ def split_requests(requests: Sequence[RankRequest], max_unique: int,
                    max_candidates: int) -> List[List[int]]:
     """Greedily chunk a request list so every chunk fits the bucket maxima
     (<= max_unique distinct user sequences, <= max_candidates total
-    candidates).  Returns lists of request indices; order is preserved."""
+    candidates).  Returns lists of request indices; order is preserved.
+    Uniqueness is counted on FULL sequence identity (``request_key``) so it
+    mirrors ``build_plan``'s Ψ exactly — a custom engine cache ``key_fn``
+    never changes how many unique rows the planner will emit."""
     chunks: List[List[int]] = []
     cur: List[int] = []
     cur_keys: set = set()

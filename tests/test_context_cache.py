@@ -52,8 +52,10 @@ def test_hit_miss_telemetry_under_pressure():
     c.peek("y")
     c.peek("nope")
     assert (c.hits, c.misses) == (1, 2)
-    assert c.stats() == {"entries": 2, "hits": 1, "misses": 2,
-                         "nbytes": c.nbytes}
+    stats = c.stats()
+    assert stats["entries"] == 2 and stats["hits"] == 1
+    assert stats["misses"] == 2 and stats["nbytes"] == c.nbytes
+    assert stats["memo_entries"] == 0          # memo untouched so far
 
 
 def test_nbytes_tracks_evictions_and_updates():
@@ -70,6 +72,66 @@ def test_nbytes_tracks_evictions_and_updates():
     c.put("d", {"k": _val(0, n=4), "v": _val(1, n=4)})   # 32 bytes
     assert c.peek("a") is None              # evicted (capacity 2)
     assert c.nbytes == 16 + 32
+
+
+# ---------------------------------------------------------------------------
+# device-side pack memo
+# ---------------------------------------------------------------------------
+
+def test_pack_memo_hit_miss_and_lru():
+    c = ContextCache(capacity=8, memo_capacity=2)
+    for u in ("u1", "u2", "u3"):
+        c.put(u, _val(1))
+    assert c.memo_get(("b", 4)) is None         # cold -> miss
+    c.memo_put(("b", 4), ["u1", "u2"], {"k": _val(9)})
+    got = c.memo_get(("b", 4))
+    np.testing.assert_array_equal(got["k"], _val(9))
+    assert (c.memo_hits, c.memo_misses) == (1, 1)
+    assert c.memo_nbytes > 0
+    # LRU bound: a third entry evicts the least-recently-used one
+    c.memo_put(("b2", 4), ["u2", "u3"], _val(2))
+    c.memo_get(("b", 4))                        # refresh ("b",4)
+    c.memo_put(("b3", 4), ["u3"], _val(3))      # evicts ("b2",4)
+    assert c.memo_get(("b2", 4)) is None
+    assert c.memo_get(("b", 4)) is not None
+    assert c.memo_get(("b3", 4)) is not None
+
+
+def test_pack_memo_invalidated_by_user_eviction():
+    """The core staleness invariant: evicting a user from the per-user LRU
+    must drop EVERY memoized packed batch containing that user — a memo hit
+    may never serve context for a user the cache no longer holds."""
+    c = ContextCache(capacity=2, memo_capacity=8)
+    c.put("u1", _val(1))
+    c.put("u2", _val(2))
+    c.memo_put(("batch12",), ["u1", "u2"], _val(12))
+    c.memo_put(("batch2",), ["u2"], _val(2))
+    c.put("u3", _val(3))                        # evicts u1 (capacity 2)
+    assert c.peek("u1") is None
+    assert c.memo_get(("batch12",)) is None     # contained u1 -> dropped
+    assert c.memo_get(("batch2",)) is not None  # u2 still cached -> survives
+    assert c.memo_invalidations == 1
+    assert c.stats()["memo_entries"] == 1
+
+
+def test_pack_memo_invalidated_by_user_put():
+    """A put (re-insert/update) of a user also drops its memo entries —
+    conservative, but guarantees a memoized batch never disagrees with the
+    per-user store it was packed from."""
+    c = ContextCache(capacity=8, memo_capacity=8)
+    c.put("u1", _val(1))
+    c.memo_put(("b",), ["u1"], _val(5))
+    c.put("u1", _val(7))
+    assert c.memo_get(("b",)) is None
+    # byte gauge returns to zero once everything is invalidated
+    assert c.memo_nbytes == 0
+
+
+def test_pack_memo_capacity_zero_disables():
+    c = ContextCache(capacity=4, memo_capacity=0)
+    c.memo_put(("b",), ["u"], _val(1))
+    assert c.memo_get(("b",)) is None
+    assert (c.memo_hits, c.memo_misses) == (0, 0)   # fully inert
 
 
 def test_key_helper_distinguishes_sequences():

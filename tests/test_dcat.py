@@ -82,6 +82,41 @@ def test_rotate_replace_equals_masked_concat():
                                atol=1e-5)
 
 
+def test_ctx_rotate_crossing_matches_inplace_rotation():
+    """The pre-rotated fixed-L serving layout (ctx_rotate + rotated
+    crossing) scores the same candidates as the per-call in-place rotation
+    — same key SET {surviving ctx slots, candidate KV}, only the slot
+    order differs, so results agree to fp summation order."""
+    from repro.core.dcat import ctx_rotate
+    body, p, x_u, x_c, inv, L = _setup("pinfm-20b")
+    Sc = x_c.shape[1]
+    dcat = DCAT(body, DCATOptions(rotate_replace=True))
+    _, _, ctxs = dcat.context(p, x_u)
+    y_inplace, _ = dcat.crossing(p, x_c, inv, ctxs, ctx_len=L)
+    rot = ctx_rotate(ctxs, Sc, L)
+    # every KV leaf lost its oldest Sc slots; nothing else changed
+    for a, b in zip(jax.tree.leaves(ctxs), jax.tree.leaves(rot)):
+        if a.ndim >= 4 and a.shape[-3] == L:
+            assert b.shape[-3] == L - Sc
+            np.testing.assert_array_equal(np.asarray(a[..., Sc:, :, :]),
+                                          np.asarray(b))
+        else:
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    y_rot, _ = dcat.crossing(p, x_c, inv, rot, ctx_len=L, rotated=True)
+    np.testing.assert_allclose(np.asarray(y_inplace), np.asarray(y_rot),
+                               atol=5e-5)
+
+
+def test_ctx_rotate_requires_rotate_replace():
+    from repro.core.dcat import ctx_rotate
+    body, p, x_u, x_c, inv, L = _setup("pinfm-20b")
+    dcat = DCAT(body)                      # rotate_replace=False
+    _, _, ctxs = dcat.context(p, x_u)
+    rot = ctx_rotate(ctxs, x_c.shape[1], L)
+    with pytest.raises(AssertionError, match="rotate_replace"):
+        dcat.crossing(p, x_c, inv, rot, ctx_len=L, rotated=True)
+
+
 def test_dcat_gather_idx_kernel_path_matches_xla():
     """Attention.cross with gather_idx (fused-gather semantics) == take+attend."""
     key = jax.random.PRNGKey(0)

@@ -300,6 +300,42 @@ def test_engine_filtered_retrieve(lite_model):
     assert len(engine.stats) == before + 1
 
 
+def test_engine_mask_cache_hits_on_repeat_filters(lite_model):
+    """Packed per-chunk filter masks are memoized per ItemFilter
+    fingerprint: a session's repeated seen-list pays the host packing cost
+    once, and results stay identical.  An index (re-)attach invalidates
+    the cached rows (chunk windows / start_id may have moved)."""
+    model, params = lite_model
+    index = IndexBuilder(model, params, batch_size=256).build(0, 500)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=ContextCache(capacity=64))
+    engine.attach_index(index, k=16, chunk_rows=256)    # 500 rows -> 2 chunks
+    engine.warmup()
+    base = _mk_retrieve(51, k=16)
+    seen = np.arange(10, 40)
+    filtered = RetrieveRequest(
+        seq_ids=base.seq_ids, seq_actions=base.seq_actions,
+        seq_surfaces=base.seq_surfaces, k=16, exclude_ids=seen)
+    first = engine.retrieve([filtered])[0]
+    assert engine.mask_misses == 2 and engine.mask_hits == 0   # one per chunk
+    second = engine.retrieve([filtered])[0]
+    assert engine.mask_misses == 2 and engine.mask_hits == 2   # pure hits
+    np.testing.assert_array_equal(first[0], second[0])
+    np.testing.assert_array_equal(first[1], second[1])
+    # an equal-fingerprint filter built from a permuted seen-list hits too
+    permuted = RetrieveRequest(
+        seq_ids=base.seq_ids, seq_actions=base.seq_actions,
+        seq_surfaces=base.seq_surfaces, k=16, exclude_ids=seen[::-1].copy())
+    engine.retrieve([permuted])
+    assert engine.mask_misses == 2 and engine.mask_hits == 4
+    assert engine.stats[-1]["mask_hits"] == 4                  # telemetry
+    # re-attach -> cached rows dropped, repacked on next use
+    engine.attach_index(index, k=16, chunk_rows=256)
+    engine.retrieve([filtered])
+    assert engine.mask_misses == 4
+    assert engine.registry.compiles_after_warmup == 0
+
+
 def test_engine_filter_k_exceeds_survivors(lite_model):
     """A filter that leaves fewer than k items: the tail is -inf-scored,
     mirroring the scorer contract, and no recompile happens."""

@@ -7,8 +7,15 @@ Covers the acceptance points of the engine refactor:
   * engine.score == per-request single scoring == direct model.forward;
   * cached early-fusion path (ContextCache hit) == uncached pass
     BIT-FOR-BIT on the same bucket;
-  * zero fresh compiles on a mixed-shape request stream after warmup().
+  * zero fresh compiles on a mixed-shape request stream after warmup();
+  * depth-2 pipelined score == pipeline_depth=1 BIT-FOR-BIT, with the
+    pack memo / rotated-KV layout riding the same contract;
+  * MicroBatcher under concurrency: 8-thread submit hammer, background
+    flusher, and the result() double-flush race.
 """
+import threading
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -263,6 +270,134 @@ def test_lite_cached_matches_uncached(lite_model):
 
 
 # ---------------------------------------------------------------------------
+# depth-2 pipeline + pack memo + rotated-KV layout
+# ---------------------------------------------------------------------------
+
+def test_pipelined_bit_identical_to_sync(early_model):
+    """The tentpole contract: the depth-2 pipeline feeds identical operands
+    to identical executors in identical order, so scores match the
+    pipeline_depth=1 escape hatch BIT-FOR-BIT across a multi-chunk,
+    repeat-user stream — and neither path compiles anything after
+    warmup()."""
+    model, params = early_model
+    kw = dict(max_unique=4, max_candidates=8, min_candidates=4)
+    sync = ServingEngine(model, params, cache=ContextCache(32),
+                         pipeline_depth=1, **kw)
+    pipe = ServingEngine(model, params, cache=ContextCache(32),
+                         pipeline_depth=2, **kw)
+    assert sync.pipeline_depth == 1 and pipe.pipeline_depth == 2
+    sync.warmup()
+    pipe.warmup()
+    rng = np.random.RandomState(21)
+    for trial in range(3):                     # includes pure-repeat passes
+        reqs = [_mk_request(s, rng, n_cand=2)
+                for s in (1, 2, 3, 4, 5, 1, 2, 6, 7, 8)]
+        a, b = sync.score(reqs), pipe.score(reqs)
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    assert sync.registry.compiles_after_warmup == 0
+    assert pipe.registry.compiles_after_warmup == 0
+    # telemetry: the overlap gauge is bounded and depth-1 never overlaps
+    # (how MUCH overlaps is environmental — a fast device can finish before
+    # the next prepare even starts, which the is_ready gate counts as 0)
+    ps = pipe.pipeline_stats[-1]
+    assert ps.depth == 2 and ps.chunks >= 3
+    assert 0 <= ps.overlapped_ms <= ps.prepare_ms
+    assert 0 <= ps.overlap_fraction <= 1
+    assert ps.as_dict()["overlap_fraction"] == ps.overlap_fraction
+    assert all(p.overlapped_ms == 0 for p in sync.pipeline_stats)
+
+
+def test_pack_memo_skips_pack_on_exact_repeat(early_model):
+    """An exact-repeat batch (same ordered unique-user tuple) is served
+    from the device-side pack memo — no ctx_slice/ctx_pack/H2D — and is
+    bit-identical because the executor consumes the very same device
+    buffers."""
+    model, params = early_model
+    cache = ContextCache(capacity=16, memo_capacity=8)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=cache)
+    rng = np.random.RandomState(22)
+    reqs = [_mk_request(s, rng) for s in (1, 2, 3, 1)]
+    first = engine.score(reqs)
+    assert cache.memo_misses == 1 and cache.memo_hits == 0
+    second = engine.score(reqs)
+    assert cache.memo_hits == 1                # packed batch reused
+    for a, b in zip(first, second):
+        np.testing.assert_array_equal(a, b)
+    # a different user ORDER is a different packed batch (inverse_idx maps
+    # candidates to rows, so the tuple key must be order-sensitive)
+    reordered = [_mk_request(s, rng) for s in (2, 1, 3)]
+    out3 = engine.score(reordered)
+    assert cache.memo_hits == 1 and cache.memo_misses == 2
+    solo = ServingEngine(model, params, max_unique=4,
+                         max_candidates=16).score(reordered)
+    for a, b in zip(out3, solo):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+def test_pack_memo_eviction_drops_stale_batches(early_model):
+    """No stale-KV scoring: once a user is evicted from the per-user LRU,
+    every memoized packed batch containing that user must miss, and the
+    re-encoded pass must agree with a fresh engine."""
+    model, params = early_model
+    cache = ContextCache(capacity=2, memo_capacity=8)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=cache)
+    rng = np.random.RandomState(23)
+    batch_a = [_mk_request(s, rng) for s in (1, 2)]
+    first = engine.score(batch_a)              # memoizes (u1, u2)
+    engine.score([_mk_request(s, rng) for s in (3, 4)])   # evicts u1+u2
+    hits_before = cache.memo_hits
+    again = engine.score(batch_a)              # must NOT hit the stale memo
+    assert cache.memo_hits == hits_before
+    for a, b in zip(first, again):
+        np.testing.assert_array_equal(a, b)    # deterministic re-encode
+    fresh = ServingEngine(model, params, max_unique=4,
+                          max_candidates=16).score(batch_a)
+    for a, b in zip(again, fresh):
+        np.testing.assert_allclose(a, b, atol=1e-5)
+
+
+@pytest.fixture(scope="module")
+def rotate_model():
+    return _make_model(
+        "graphsage-lt",
+        dcat=DCATOptions(rotate_replace=True, skip_last_self_attn=True))
+
+
+def test_rotated_kv_layout_cached_path(rotate_model):
+    """rotate_replace engines cache the PRE-ROTATED fixed-L KV layout
+    (``ctx_rotate``), so the cross executor concats instead of rotating
+    per call: hit == miss bit-for-bit, parity with the monolithic in-place
+    rotation path, zero recompiles after warmup, and the cached KV is
+    n_cand_tokens slots smaller per user."""
+    model, params = rotate_model
+    cache = ContextCache(capacity=16)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=cache)
+    assert engine._ctx_rot and engine._ctx_tag == "rot"
+    engine.warmup()
+    rng = np.random.RandomState(24)
+    reqs = [_mk_request(s, rng) for s in (1, 2, 3, 1)]
+    miss_pass = engine.score(reqs)
+    hit_pass = engine.score(reqs)
+    for a, b in zip(miss_pass, hit_pass):
+        np.testing.assert_array_equal(a, b)
+    assert engine.registry.compiles_after_warmup == 0
+    # the cached value is tagged and rotated: KV length L - n_cand_tokens
+    tag, ctxs = cache.peek(next(iter(cache._d)))
+    assert tag == "rot"
+    kv = [l for l in jax.tree.leaves(ctxs) if l.ndim >= 3]
+    assert all(l.shape[-3] == L - model.n_cand_tokens for l in kv)
+    # parity with the uncached engine (per-call in-place rotation)
+    plain = ServingEngine(model, params, max_unique=4,
+                          max_candidates=16).score(reqs)
+    for a, b in zip(miss_pass, plain):
+        np.testing.assert_allclose(a, b, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
 # executor registry / warmup
 # ---------------------------------------------------------------------------
 
@@ -353,3 +488,147 @@ def test_microbatcher_propagates_engine_errors(early_model):
     assert t.done()
     with pytest.raises(ValueError, match="graphsage"):
         t.result()
+
+
+class _FakeEngine:
+    """Deterministic stand-in for ServingEngine: each request scores to its
+    own cand_ids (so a result can be attributed to exactly one request —
+    the property the concurrency tests assert).  Optionally blocks inside
+    score() until released, to hold a flush in flight."""
+
+    def __init__(self, gate: "threading.Event" = None, delay: float = 0.0):
+        self.max_candidates = 64
+        self.calls = 0
+        self._gate = gate
+        self._delay = delay
+
+    def score(self, requests):
+        self.calls += 1
+        if self._gate is not None:
+            assert self._gate.wait(10.0)
+        if self._delay:
+            import time
+            time.sleep(self._delay)
+        return [np.asarray(r.cand_ids, np.float32) for r in requests]
+
+
+def _tiny_request(uid: int, tag: int):
+    ids = np.full(4, uid, np.int32)
+    return RankRequest(seq_ids=ids, seq_actions=ids, seq_surfaces=ids,
+                       cand_ids=np.array([tag], np.int32),
+                       cand_feats=np.zeros((1, 2), np.float32),
+                       user_feats=np.zeros(2, np.float32))
+
+
+def test_ticket_result_no_redundant_flush_while_in_flight():
+    """The double-flush race: a ticket whose request was picked up by an
+    in-flight flush must WAIT on that batch from result(), not trigger a
+    second engine call (which would prematurely flush whatever queued
+    after it)."""
+    gate = threading.Event()
+    eng = _FakeEngine(gate=gate)
+    mb = MicroBatcher(eng, max_requests=64)
+    t1 = mb.submit(_tiny_request(1, 101))
+    flusher = threading.Thread(target=mb.flush)
+    flusher.start()                    # picks t1 up, blocks inside score()
+    deadline = time.time() + 10.0
+    while eng.calls == 0:              # wait until the flush is in flight
+        assert time.time() < deadline, "flush never reached engine.score"
+        time.sleep(1e-4)
+    t2 = mb.submit(_tiny_request(2, 202))      # queued AFTER the swap
+    waiter_done = threading.Event()
+
+    def waiter():
+        assert t1.result() == [101.0]
+        waiter_done.set()
+
+    w = threading.Thread(target=waiter)
+    w.start()
+    w.join(0.2)
+    # t1's result() saw its request in flight -> no second flush happened,
+    # t2 is still pending, and the waiter is still blocked on the batch
+    assert eng.calls == 1 and not t2.done() and not waiter_done.is_set()
+    gate.set()
+    flusher.join(10.0)
+    assert waiter_done.wait(10.0)
+    mb.flush()                         # t2 goes out in its own batch
+    assert t2.result() == [202.0]
+    assert eng.calls == 2 and mb.flushes == 2
+
+
+def test_microbatcher_threaded_submit_hammer():
+    """8 threads hammer submit(); every ticket must resolve exactly once
+    with ITS OWN request's result (no cross-wiring under concurrent
+    flushes), and per-thread submission order is preserved in the
+    tickets each thread holds."""
+    eng = _FakeEngine(delay=0.001)
+    mb = MicroBatcher(eng, max_requests=8)
+    n_threads, per_thread = 8, 25
+    results = [None] * n_threads
+    errors = []
+
+    def worker(tid):
+        try:
+            tags = [tid * 1000 + i for i in range(per_thread)]
+            tickets = [mb.submit(_tiny_request(tid, tag)) for tag in tags]
+            results[tid] = (tags, [t.result() for t in tickets])
+        except BaseException as e:     # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker, args=(tid,))
+               for tid in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60.0)
+    mb.flush()                         # drain any final partial batch
+    assert not errors
+    for tid in range(n_threads):
+        tags, outs = results[tid]
+        # result-order: the i-th ticket of this thread carries the i-th
+        # submitted request's score, in submission order
+        assert [int(o[0]) for o in outs] == tags
+    assert mb.coalesced == n_threads * per_thread
+    assert mb.flushes == eng.calls <= n_threads * per_thread
+
+
+def test_background_flusher_resolves_without_result(early_model):
+    """With max_wait_ms set, a partial batch goes out on its own: the
+    ticket resolves without anyone calling result()/flush()/poll(), and
+    the scores match the synchronous engine."""
+    model, params = early_model
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=ContextCache(16))
+    rng = np.random.RandomState(14)
+    reqs = [_mk_request(s, rng) for s in (1, 2)]
+    ref = ServingEngine(model, params, max_unique=4,
+                        max_candidates=16).score(reqs)
+    with MicroBatcher(engine, max_requests=32, max_wait_ms=5.0) as mb:
+        tickets = [mb.submit(r) for r in reqs]
+        assert all(t._done.wait(30.0) for t in tickets)   # no manual flush
+        for t, r in zip(tickets, ref):
+            np.testing.assert_allclose(t.result(), r, atol=1e-5)
+        assert mb.flushes >= 1
+    assert mb._flusher is None         # close() joined the thread
+
+
+def test_background_flusher_survives_engine_errors():
+    """A failing flush must not kill the flusher thread: subsequent
+    batches still go out."""
+
+    class _Flaky(_FakeEngine):
+        def score(self, requests):
+            self.calls += 1
+            if self.calls == 1:
+                raise RuntimeError("boom")
+            return super().score(requests)
+
+    eng = _Flaky()
+    with MicroBatcher(eng, max_requests=64, max_wait_ms=2.0) as mb:
+        bad = mb.submit(_tiny_request(1, 7))
+        assert bad._done.wait(30.0)
+        with pytest.raises(RuntimeError, match="boom"):
+            bad.result()
+        good = mb.submit(_tiny_request(2, 8))
+        assert good._done.wait(30.0)
+        assert good.result() == [8.0]
