@@ -12,14 +12,21 @@ Sections:
      memo_capacity=0) on a repeat-user STREAMING workload (recurring
      micro-batched compositions, multi-chunk score() calls), with a
      memo/depth ablation sweep.  Emits BENCH_serving_pipeline.json.
+  3. fused two-stage vs sequential retrieve-then-rank — the
+     ``RetrieveThenRankRequest`` lane (one submit, retrieval feeding the
+     rank stage inside one pipeline schedule, rank operands built straight
+     from retrieval-stage state) against the sequential ``retrieve()`` +
+     ``score()`` shims on a repeat-user two-stage workload.  Emits
+     BENCH_two_stage.json.
 
 Run:   PYTHONPATH=src python benchmarks/bench_serving_engine.py [--smoke]
 
 --smoke shrinks the traffic for CI and asserts the CORRECTNESS acceptance
 properties only (cached beats uncached; pipelined scores == sync scores
-bit-for-bit; compiles_after_warmup == 0 everywhere).  The full run
-additionally asserts the >= 1.3x pipelined-vs-sync items/sec acceptance
-bar and records every row in BENCH_serving_pipeline.json.
+bit-for-bit; fused two-stage == sequential bit-for-bit;
+compiles_after_warmup == 0 everywhere).  The full run additionally
+asserts the >= 1.3x pipelined-vs-sync and >= 1.15x fused-vs-sequential
+items/sec acceptance bars and records the rows in the JSON files.
 """
 import json
 import os
@@ -38,7 +45,9 @@ from repro.core.finetune import FinetuneConfig, PinFMRankingModel
 from repro.core.losses import LossConfig
 from repro.core.pretrain import PinFMConfig, PinFMPretrain
 from repro.models.config import get_config
-from repro.serving import ContextCache, RankRequest, ServingEngine
+from repro.retrieval import IndexBuilder
+from repro.serving import (ContextCache, RankRequest, RetrieveRequest,
+                           RetrieveThenRankRequest, ServingEngine)
 
 SMOKE = "--smoke" in sys.argv
 
@@ -48,19 +57,28 @@ L = 256
 
 JSON_PATH = os.path.join(os.path.dirname(__file__), "..",
                          "BENCH_serving_pipeline.json")
+JSON2_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_two_stage.json")
 
 
-def serving_model():
+def serving_model(variant="graphsage-lt"):
+    """Bench-scale ranking model: early-fusion graphsage-lt for the cache/
+    pipeline sections, lite-last for the two-stage section (retrieval +
+    score_emb need the pooled-embedding paths)."""
     bb = smoke_config(get_config("pinfm-20b")).replace(
         n_layers=4, d_model=128, d_ff=256, n_heads=8, n_kv=8, head_dim=16)
     pcfg = PinFMConfig(rows=4096, n_tables=4, sub_dim=16, seq_len=L,
                        loss=LossConfig(window=4, downstream_len=16,
                                        n_negatives=0))
-    fcfg = FinetuneConfig(
-        variant="graphsage-lt", seq_len=L, graphsage_dim=16, user_feat_dim=8,
-        cand_feat_dim=8, hidden=64, n_cross_layers=2,
-        dcat=DCATOptions(rotate_replace=False, skip_last_self_attn=True),
-        seq_loss=LossConfig(use_mtl=False, use_ftl=False, n_negatives=0))
+    kw = dict(variant=variant, seq_len=L, user_feat_dim=8, cand_feat_dim=8,
+              hidden=64, n_cross_layers=2,
+              seq_loss=LossConfig(use_mtl=False, use_ftl=False,
+                                  n_negatives=0))
+    if variant == "graphsage-lt":
+        kw.update(graphsage_dim=16,
+                  dcat=DCATOptions(rotate_replace=False,
+                                   skip_last_self_attn=True))
+    fcfg = FinetuneConfig(**kw)
     model = PinFMRankingModel.__new__(PinFMRankingModel)
     model.__init__(pcfg, fcfg)
     model.pinfm = PinFMPretrain(pcfg, bb)
@@ -283,12 +301,133 @@ def section_pipelined_vs_sync(model, params, fcfg):
             "score_parity": "bit-identical (sync vs pipelined vs ablations)"}
 
 
+# ---------------------------------------------------------------------------
+# section 3: fused two-stage vs sequential retrieve-then-rank
+# ---------------------------------------------------------------------------
+
+def section_two_stage():
+    model, fcfg = serving_model(variant="lite-last")
+    params = model.init(jax.random.PRNGKey(0))
+    n_items = 4096 if SMOKE else 32768
+    top_k = 8 if SMOKE else 16
+    n_pool = 8 if SMOKE else 16
+    n_calls, stream_len, reps = (3, 4, 1) if SMOKE else (4, 12, 5)
+    index = IndexBuilder(model, params, batch_size=4096, bits=4) \
+        .build(0, n_items)
+    feat_table = np.random.RandomState(0) \
+        .randn(n_items, fcfg.cand_feat_dim).astype(np.float32)
+    feats = lambda ids: feat_table[np.asarray(ids)]
+
+    def user(seed):
+        r = np.random.RandomState(1000 + seed)
+        return (r.randint(0, n_items, L), r.randint(0, 6, L),
+                r.randint(0, 3, L),
+                r.randn(fcfg.user_feat_dim).astype(np.float32))
+
+    pool = [user(s) for s in range(n_pool)]
+    rng = np.random.RandomState(3)
+    calls = [[pool[u] for u in rng.randint(0, n_pool, 16)]
+             for _ in range(n_calls)]
+    stream = [calls[i % len(calls)] for i in range(stream_len)]
+    print(f"\nfused two-stage vs sequential: {stream_len} calls of "
+          f"{len(calls[0])} requests, corpus {n_items} items, top-{top_k}, "
+          f"median of {reps} interleaved")
+
+    def two_reqs(call):
+        return [RetrieveThenRankRequest(
+                    seq_ids=i, seq_actions=a, seq_surfaces=s, user_feats=uf,
+                    k=top_k) for i, a, s, uf in call]
+
+    def mk_engine():
+        e = ServingEngine(model, params, max_unique=8, max_candidates=64,
+                          min_unique=8, min_candidates=64,
+                          cache=ContextCache(4096))
+        e.attach_index(index, k=top_k, chunk_rows=8192)
+        e.attach_features(feats)
+        e.warmup()
+        for c in calls:                               # prime the user cache
+            futs = e.submit_many(two_reqs(c))
+            e.flush()
+            for f in futs:
+                f.result()
+        return e
+
+    def run_fused(e, call):
+        futs = e.submit_many(two_reqs(call))
+        e.flush()
+        return [f.result() for f in futs]
+
+    def run_seq(e, call):
+        got = e.retrieve([RetrieveRequest(
+            seq_ids=i, seq_actions=a, seq_surfaces=s, k=top_k)
+            for i, a, s, _ in call])
+        probs = e.score([RankRequest(
+            seq_ids=i, seq_actions=a, seq_surfaces=s, cand_ids=ids,
+            cand_feats=feats(ids), user_feats=uf)
+            for (i, a, s, uf), (ids, _) in zip(call, got)])
+        return got, probs
+
+    fused_e, seq_e = mk_engine(), mk_engine()
+
+    # parity: fused == sequential BIT-FOR-BIT on every call composition
+    for call in calls:
+        fres = run_fused(fused_e, call)
+        got, probs = run_seq(seq_e, call)
+        for r, (ids, sc), p in zip(fres, got, probs):
+            np.testing.assert_array_equal(r.item_ids, ids)
+            np.testing.assert_array_equal(r.retrieval_scores, sc)
+            np.testing.assert_array_equal(r.probs, p)
+
+    def drive_two_stage(run, e):
+        t0 = time.time()
+        n = 0
+        for call in stream:
+            out = run(e, call)
+            n += 16 * top_k
+        return n / (time.time() - t0)
+
+    qs_f, qs_s = [], []
+    for _ in range(reps):                    # interleaved: drift-fair ratios
+        qs_s.append(drive_two_stage(run_seq, seq_e))
+        qs_f.append(drive_two_stage(run_fused, fused_e))
+    qs_f, qs_s = sorted(qs_f), sorted(qs_s)
+    items_f, items_s = qs_f[len(qs_f) // 2], qs_s[len(qs_s) // 2]
+    speedup = items_f / items_s
+    ps = [p for p in fused_e.pipeline_stats if p.lane == "two_stage"]
+    assert fused_e.registry.compiles_after_warmup == 0
+    assert seq_e.registry.compiles_after_warmup == 0
+    print(f"  sequential retrieve()+score() {items_s:8.0f} items/s")
+    print(f"  fused RetrieveThenRankRequest {items_f:8.0f} items/s  "
+          f"(x{speedup:.2f})")
+    print(f"fused two-stage speedup: {speedup:.2f}x over sequential "
+          f"(bit-identical results, 0 recompiles)")
+    if not SMOKE:
+        assert speedup >= 1.15, (
+            f"acceptance: fused two-stage must reach >= 1.15x the "
+            f"sequential path, got {speedup:.2f}x")
+    return {"workload": {
+                "calls": stream_len, "requests_per_call": 16,
+                "distinct_compositions": len(calls), "pool_users": n_pool,
+                "corpus_items": n_items, "top_k": top_k, "seq_len": L},
+            "sequential_items_per_s": items_s,
+            "fused_items_per_s": items_f,
+            "fused_items_per_s_all": [round(q, 1) for q in qs_f],
+            "sequential_items_per_s_all": [round(q, 1) for q in qs_s],
+            "fused_speedup_vs_sequential": speedup,
+            "retrieve_ms_per_call": round(float(np.mean(
+                [p.retrieve_ms for p in ps])), 3),
+            "rank_prepare_ms_per_call": round(float(np.mean(
+                [p.prepare_ms for p in ps])), 3),
+            "score_parity": "bit-identical (fused vs sequential)"}
+
+
 def main():
     model, fcfg = serving_model()
     params = model.init(jax.random.PRNGKey(0))
 
     cache_res = section_cached_vs_uncached(model, params, fcfg)
     pipe_res = section_pipelined_vs_sync(model, params, fcfg)
+    two_stage_res = section_two_stage()
 
     if not SMOKE:
         out = {"bench": "serving_pipeline", "smoke": False,
@@ -298,7 +437,14 @@ def main():
         with open(JSON_PATH, "w") as f:
             json.dump(out, f, indent=2)
         print(f"wrote {os.path.relpath(JSON_PATH)}")
-    print("OK: pipelined == sync bit-for-bit, zero recompiles after warmup")
+        out2 = {"bench": "two_stage", "smoke": False,
+                "device": jax.devices()[0].platform,
+                "cpu_count": os.cpu_count(), **two_stage_res}
+        with open(JSON2_PATH, "w") as f:
+            json.dump(out2, f, indent=2)
+        print(f"wrote {os.path.relpath(JSON2_PATH)}")
+    print("OK: pipelined == sync bit-for-bit, fused two-stage == "
+          "sequential bit-for-bit, zero recompiles after warmup")
 
 
 if __name__ == "__main__":

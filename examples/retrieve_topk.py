@@ -81,7 +81,7 @@ def main():
             for i, a, srf in users]
     reqs[2] = dataclasses.replace(reqs[2], allow_surfaces=(0,))
     retrieved = engine.retrieve(reqs)
-    stats = engine.stats[-1]
+    stats = engine.call_stats[-1]
     print(f"retrieved top-{TOP_K} of {stats['corpus_items']} items for "
           f"{stats['retrieve_users']} users "
           f"({stats['filtered_users']} filtered) in "
@@ -103,7 +103,7 @@ def main():
         user_feats=rng.randn(fcfg.user_feat_dim).astype(np.float32))
         for (i, a, srf), (ids, _) in zip(users, retrieved)]
     probs = engine.score(requests)
-    stats = engine.stats[-1]
+    stats = engine.call_stats[-1]
     print(f"ranked {stats['candidates']} retrieved candidates in "
           f"{stats['latency_s'] * 1e3:.1f} ms — cache "
           f"{engine.cache.hits} hits / {engine.cache.misses} misses "

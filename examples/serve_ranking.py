@@ -1,11 +1,14 @@
 """Serving demo (paper §4.3 / Figure 2): the serving engine receives
-ranking requests, deduplicates user sequences (Ψ), serves int4-quantized
-embedding rows, and scores candidates through DCAT crossing.
+ranking requests through its async ``submit()`` front door, deduplicates
+user sequences (Ψ), serves int4-quantized embedding rows, and scores
+candidates through DCAT crossing.
 
-The engine is layered: a BatchPlan builder (Ψ + shape buckets), an
+The engine is layered: a RequestScheduler (coalescing + futures behind
+``submit``/``submit_many``), a BatchPlan builder (Ψ + shape buckets), an
 ExecutorRegistry (one jitted fn per variant×bucket, precompiled by
 ``warmup()``), and a ContextCache holding per-user context KV so
 repeat-user traffic skips the context transformer entirely.
+``engine.score`` remains as the batch shim over the same path.
 
 Run:  PYTHONPATH=src python examples/serve_ranking.py
 """
@@ -24,8 +27,7 @@ from benchmarks.common import (data_cfg, default_fcfg, pinfm_cfg,
 from repro.core.dcat import DCATOptions
 from repro.data.synthetic import SyntheticActivity
 from repro.quant import quantize_table, quantized_lookup, relative_l2_error
-from repro.serving import (ContextCache, MicroBatcher, RankRequest,
-                           ServingEngine)
+from repro.serving import ContextCache, RankRequest, ServingEngine
 
 
 def main():
@@ -68,10 +70,13 @@ def main():
             user_feats=r.randn(fcfg.user_feat_dim).astype(np.float32),
             graphsage=rng.randn(5, fcfg.graphsage_dim).astype(np.float32))
 
-    # 6 requests, 3 distinct users (duplicates dedup via Ψ)
-    requests = [mk_request(s) for s in (1, 2, 3, 1, 2, 1)]
-    probs = engine.score(requests)
-    stats = engine.stats[-1]
+    # -- submit(): async front door, one future per request -----------------
+    # 6 requests, 3 distinct users (duplicates dedup via Ψ); they coalesce
+    # in the engine's scheduler until a flush serves them as ONE batch
+    futures = [engine.submit(mk_request(s)) for s in (1, 2, 3, 1, 2, 1)]
+    engine.flush()
+    probs = [f.result() for f in futures]
+    stats = engine.call_stats[-1]
     print(f"scored {stats['candidates']} candidates for "
           f"{stats['unique_users']} unique users "
           f"(dedup ratio {stats['dedup_ratio']:.1f}:1) "
@@ -80,20 +85,19 @@ def main():
           f"recompiles {stats['exec_compiles_after_warmup']})")
     print(f"request 0 save-probabilities: {np.round(probs[0][:, 0], 3)}")
 
-    # repeat traffic: pure ContextCache hits -> no context transformer
-    engine.score(requests)
-    stats = engine.stats[-1]
+    # repeat traffic: pure ContextCache hits -> no context transformer;
+    # engine.score is the batch shim over the same submit_many path
+    engine.score([mk_request(s) for s in (1, 2, 3, 1, 2, 1)])
+    stats = engine.call_stats[-1]
     print(f"repeat pass: {stats['latency_s'] * 1e3:.1f} ms, "
           f"cache {engine.cache.hits} hits / {engine.cache.misses} misses "
           f"({engine.cache.nbytes / 2**10:.0f} KiB ctx KV cached)")
 
-    # -- micro-batcher: coalesce single-request callers ---------------------
-    mb = MicroBatcher(engine, max_requests=6)
-    tickets = [mb.submit(mk_request(s)) for s in (1, 2, 3, 1, 2, 1)]
-    out = tickets[0].result()
-    print(f"micro-batched {mb.coalesced} caller requests into "
-          f"{mb.flushes} engine call(s); request 0 "
-          f"save-probabilities: {np.round(out[:, 0], 3)}")
+    # one read-atomic telemetry snapshot for everything above
+    snap = engine.stats()
+    print(f"stats(): {snap['scheduler']['coalesced']} requests in "
+          f"{snap['scheduler']['flushes']} flush(es), lanes {snap['lanes']}, "
+          f"{snap['executors']['compiles_after_warmup']} recompiles")
 
 
 if __name__ == "__main__":

@@ -1,18 +1,37 @@
-"""Serving subsystem public surface.
+"""Serving subsystem public surface — exactly the typed request types, the
+engine (with its front-door collaborators), and the deprecation shims; a
+test pins ``__all__`` to this list.
 
-Layer map (request flow order): ``MicroBatcher`` -> ``build_plan`` /
-``BatchPlan`` -> ``ServingEngine`` dispatching jitted executors from the
-``ExecutorRegistry``, with ``ContextCache`` short-circuiting repeat users.
-``RankRequest`` / ``RetrieveRequest`` are the request types;
-``InferenceRouter`` is the legacy PR-0 facade kept for compatibility.
-See docs/architecture.md for lifecycles and the zero-recompile contract.
+One front door: build a :class:`ServingEngine`, then ``submit`` typed
+requests — :class:`RankRequest`, :class:`RetrieveRequest`,
+:class:`RetrieveThenRankRequest` (the fused two-stage path, resolving to
+a :class:`TwoStageResult`), :class:`GenerateRequest` — and read each
+:class:`Future`.  ``engine.score`` / ``engine.retrieve`` are batch shims
+over ``submit_many``; ``engine.stats()`` is the telemetry snapshot.
+
+Internals (``BatchPlan``/``build_plan``, ``BucketLadder``,
+``ExecutorRegistry``, ``PipelineStats``, ``RequestScheduler``) stay
+importable from their modules (``repro.serving.plan`` etc.) but are not
+part of this package's public surface.  ``MicroBatcher``/``Ticket`` and
+``InferenceRouter``/``UserEmbeddingCache`` are deprecated shims that
+forward to the ``submit_many`` path.  See docs/architecture.md for
+lifecycles and the zero-recompile contract.
 """
 from repro.serving.context_cache import ContextCache
 from repro.serving.engine import ServingEngine
-from repro.serving.executors import ExecutorRegistry
-from repro.serving.generate import GenerateConfig, Generator
 from repro.serving.microbatch import MicroBatcher, Ticket
-from repro.serving.plan import (BatchPlan, BucketLadder, PipelineStats,
-                                RankRequest, RetrieveRequest, build_plan,
-                                request_key, split_requests)
+from repro.serving.plan import (GenerateRequest, RankRequest,
+                                RetrieveRequest, RetrieveThenRankRequest,
+                                TwoStageResult)
 from repro.serving.router import InferenceRouter, UserEmbeddingCache
+from repro.serving.scheduler import Future
+
+__all__ = [
+    # typed requests (+ the two-stage result they resolve to)
+    "RankRequest", "RetrieveRequest", "RetrieveThenRankRequest",
+    "GenerateRequest", "TwoStageResult",
+    # the engine and its front-door collaborators
+    "ServingEngine", "ContextCache", "Future",
+    # deprecated shims
+    "MicroBatcher", "Ticket", "InferenceRouter", "UserEmbeddingCache",
+]

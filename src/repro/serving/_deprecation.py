@@ -1,0 +1,16 @@
+"""Once-per-process DeprecationWarning helper shared by the compat shims
+(``microbatch.MicroBatcher``, ``router.InferenceRouter``).  Tests reset a
+key via ``_warned.discard(key)`` to re-assert the warning."""
+from __future__ import annotations
+
+import warnings
+
+_warned: set = set()
+
+
+def warn_once(key: str, message: str) -> None:
+    """Emit ``message`` as a DeprecationWarning the first time ``key`` is
+    seen in this process; no-op afterwards."""
+    if key not in _warned:
+        _warned.add(key)
+        warnings.warn(message, DeprecationWarning, stacklevel=3)

@@ -1,7 +1,11 @@
 """Serving engine (paper §4.3, Figure 2) — the layered successor of the
 seed's monolithic ``InferenceRouter``:
 
-  requests ──► MicroBatcher ──► BatchPlan (Ψ + shape bucket, host)
+  submit(req) ─► RequestScheduler ─► mixed-workload flush: lanes
+  (typed requests)  (coalesce/dedup)    rank │ retrieve │ two-stage │ gen
+                                   │  one shared user-encode pass
+                                   ▼
+               BatchPlan (Ψ + shape bucket, host)
                                    │
                                    ▼
                ExecutorRegistry — one jitted fn per (kind, bucket)
@@ -14,6 +18,17 @@ seed's monolithic ``InferenceRouter``:
                              data + filter bitmask as traced operands)
                                    │
                ContextCache ───────┘  per-user ctx KV / pooled emb
+
+THE FRONT DOOR is ``submit(request) -> Future`` / ``submit_many``: every
+workload — ranking (``RankRequest``), candidate generation
+(``RetrieveRequest``), the paper's fused two-stage retrieve-then-rank
+(``RetrieveThenRankRequest``), LM generation (``GenerateRequest``) — goes
+through one scheduler and one flush.  A flush partitions the pending mix
+into per-workload lanes that share a single ``_lookup_users`` /
+``_encode_rows`` pass, so a user appearing in a rank AND a retrieve
+request in the same flush is encoded exactly once.  ``score()`` and
+``retrieve()`` remain as thin batch shims over ``submit_many`` (same
+results, same chunking).
 
 Because the bucket ladder is finite, ``warmup()`` precompiles every
 executor the engine can ever dispatch; steady-state traffic — including a
@@ -43,6 +58,7 @@ and packed per-chunk retrieval filter masks are memoized per
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from collections import OrderedDict
 from typing import Dict, List, Optional, Sequence
@@ -55,9 +71,12 @@ from repro.core.dcat import ctx_pack, ctx_rotate, ctx_slice
 from repro.core.finetune import PinFMRankingModel
 from repro.serving.context_cache import ContextCache
 from repro.serving.executors import ExecutorRegistry
-from repro.serving.plan import (BatchPlan, BucketLadder, PipelineStats,
-                                RankRequest, RetrieveRequest, _pad_rows,
-                                build_plan, request_key, split_requests)
+from repro.serving.plan import (BatchPlan, BucketLadder, GenerateRequest,
+                                PipelineStats, RankRequest, RetrieveRequest,
+                                RetrieveThenRankRequest, TwoStageResult,
+                                _pad_rows, build_plan, request_key,
+                                split_requests)
+from repro.serving.scheduler import Future, RequestScheduler
 
 LITE_VARIANTS = ("lite-mean", "lite-last")
 _CROSS_KEYS = ("inverse_idx", "cand_ids", "cand_feats", "user_feats")
@@ -90,16 +109,21 @@ class _Inflight:
 
 class ServingEngine:
     """Dedup-aware, shape-bucketed, cache-accelerated ranking + retrieval
-    engine.
+    engine with ONE async front door: ``submit(request) -> Future``.
 
     Args:
       model / params: a ``PinFMRankingModel`` (any variant) and its params.
       max_unique / max_candidates: bucket-ladder maxima — one request chunk
         never exceeds these; larger request lists are split transparently.
       cache: optional ``ContextCache``; enables the split (cached) scoring
-        paths and the retrieve/rank embedding sharing.
+        paths and the cross-workload embedding sharing (a user hit in any
+        lane is a hit in every lane).
       key_fn: optional ``request -> bytes`` cache key override (default:
         full sequence identity, ``plan.request_key``).
+      max_pending / max_wait_ms: scheduler knobs — ``submit`` auto-flushes
+        at ``max_pending`` queued requests; ``max_wait_ms`` starts the
+        background flusher bounding the oldest request's age (the old
+        ``MicroBatcher(max_wait_ms=...)`` behaviour, now engine-owned).
 
     Invariants:
       * ZERO-RECOMPILE CONTRACT — after :meth:`warmup` (plus
@@ -120,7 +144,8 @@ class ServingEngine:
                  max_unique: int = 8, max_candidates: int = 64,
                  min_unique: int = 1, min_candidates: int = 8,
                  cache: Optional[ContextCache] = None, key_fn=None,
-                 pipeline_depth: int = 2):
+                 pipeline_depth: int = 2,
+                 max_pending: int = 32, max_wait_ms: Optional[float] = None):
         self.model, self.params = model, params
         self.variant = model.cfg.variant
         self.lite = self.variant in LITE_VARIANTS
@@ -151,7 +176,23 @@ class ServingEngine:
                     for k in model.pinfm.bb.block_kinds()))
         self._ctx_tag = "rot" if self._ctx_rot else "full"
         self.registry = ExecutorRegistry()
-        self.stats: List[dict] = []
+        self.call_stats: List[dict] = []  # one entry per executed chunk
+        # one RLock serializes every flush (scheduler-driven or via the
+        # score()/retrieve() shims), so engine state (cache, counters,
+        # call_stats) needs no finer locking; stats() snapshots under it
+        self._engine_lock = threading.RLock()
+        # created eagerly: a lazy check-then-set would race on the first
+        # concurrent submit() and orphan one of two queues
+        self._scheduler = RequestScheduler(
+            self._flush_requests, lock=self._engine_lock,
+            max_requests=max_pending,
+            max_candidates=max_candidates * max_pending,
+            max_wait_ms=max_wait_ms)
+        self._lane_counts = {"rank": 0, "retrieve": 0, "two_stage": 0,
+                             "generate": 0}
+        self.shared_encode_users = 0      # users encoded by the shared pass
+        self._features_fn = None          # attach_features provider
+        self._generator = None            # attach_generator provider
         self.index = None                 # retrieval corpus (attach_index)
         self._chunks = None               # fixed-shape device corpus chunks
         self._chunk_size = 0              # rows per chunk (static, mult. 32)
@@ -217,12 +258,195 @@ class ServingEngine:
         keys = _CROSS_KEYS + (("graphsage",) if self.use_graphsage else ())
         return {k: batch[k] for k in keys}
 
+    # -- the async front door ----------------------------------------------
+    @property
+    def scheduler(self) -> RequestScheduler:
+        """The engine-owned request scheduler."""
+        return self._scheduler
+
+    def _validate_request(self, r) -> None:
+        """Fail-fast at submit() time: a request that can be KNOWN to be
+        misconfigured must not enter the queue, where its failure would
+        poison the whole coalesced flush (every future in a flush shares
+        one fate, as MicroBatcher batches always did — so attach providers
+        before submitting).  Runtime errors a lane discovers later still
+        fail the flush as a unit.
+
+        Reads attach state WITHOUT the engine lock — submit must never
+        block behind a running flush; the flush-time gates re-check these
+        preconditions under the lock."""
+        if isinstance(r, (RetrieveRequest, RetrieveThenRankRequest)):
+            if self._chunks is None:
+                raise ValueError("no retrieval corpus: call attach_index() "
+                                 "first")
+            if r.k > self.retrieve_k:
+                raise ValueError(
+                    f"k={r.k} but the attached index serves "
+                    f"k<={self.retrieve_k}; re-attach with a larger k")
+            if isinstance(r, RetrieveThenRankRequest):
+                if r.k < 1:
+                    raise ValueError("two-stage requests need k >= 1 "
+                                     "(there is nothing to rank)")
+                if r.cand_feats_fn is None and self._features_fn is None:
+                    raise ValueError(
+                        "two-stage ranking needs candidate features: set "
+                        "request.cand_feats_fn or call "
+                        "engine.attach_features() before submitting")
+        elif isinstance(r, GenerateRequest):
+            if self._generator is None:
+                raise ValueError("no generator: call attach_generator() "
+                                 "before submitting GenerateRequests")
+        elif not isinstance(r, RankRequest):
+            raise TypeError(
+                f"{type(r).__name__} is not a serving request type "
+                "(RankRequest, RetrieveRequest, RetrieveThenRankRequest, "
+                "GenerateRequest)")
+
+    def submit(self, request) -> Future:
+        """Enqueue ONE typed request — ``RankRequest``,
+        ``RetrieveRequest``, ``RetrieveThenRankRequest`` or
+        ``GenerateRequest`` — and return its :class:`Future`.  Requests
+        coalesce across callers and workloads until a flush (size
+        threshold, ``flush()``, ``poll()``, the background flusher, or a
+        ``future.result()``); one flush serves the whole mix with a single
+        shared user-encode pass."""
+        self._validate_request(request)
+        return self.scheduler.submit(request)
+
+    def submit_many(self, requests: Sequence) -> List[Future]:
+        """Enqueue a request list atomically -> one future per request
+        (the list is never size-split across flushes by its own length)."""
+        requests = list(requests)
+        for r in requests:
+            self._validate_request(r)
+        return self.scheduler.submit_many(requests)
+
+    def flush(self):
+        """Drain every pending submitted request through one
+        mixed-workload flush."""
+        self.scheduler.flush()
+
+    def poll(self):
+        """Flush if the oldest pending request has waited past the
+        scheduler's age bound."""
+        self.scheduler.poll()
+
+    def close(self):
+        """Stop the background flusher (if running) after a final drain."""
+        self._scheduler.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- mixed-workload flush ------------------------------------------------
+    def _flush_requests(self, requests: Sequence) -> List:
+        """One flush: partition the pending mix into per-workload lanes,
+        run the shared user-encode pass, execute each lane, and scatter
+        results back into request order.  This is the scheduler's flush_fn
+        and the single place every public entry point funnels through."""
+        with self._engine_lock:
+            lanes: Dict[str, List[int]] = {
+                "retrieve": [], "two_stage": [], "generate": [], "rank": []}
+            for i, r in enumerate(requests):
+                if isinstance(r, RetrieveRequest):
+                    lanes["retrieve"].append(i)
+                elif isinstance(r, RetrieveThenRankRequest):
+                    lanes["two_stage"].append(i)
+                elif isinstance(r, GenerateRequest):
+                    lanes["generate"].append(i)
+                elif isinstance(r, RankRequest):
+                    lanes["rank"].append(i)
+                else:
+                    raise TypeError(
+                        f"request {i}: {type(r).__name__} is not a serving "
+                        "request type (RankRequest, RetrieveRequest, "
+                        "RetrieveThenRankRequest, GenerateRequest)")
+            for name, idxs in lanes.items():
+                self._lane_counts[name] += len(idxs)
+            # fail a misconfigured request BEFORE any lane runs (by the
+            # time a late lane noticed, executors for the whole coalesced
+            # flush would already be in flight); submit() validates too,
+            # but shim traffic (MicroBatcher) enters here directly
+            for i in lanes["two_stage"]:
+                if requests[i].k < 1:
+                    raise ValueError(f"request {i}: two-stage requests "
+                                     "need k >= 1 (there is nothing to "
+                                     "rank)")
+                if (requests[i].cand_feats_fn is None
+                        and self._features_fn is None):
+                    raise ValueError(
+                        f"request {i}: two-stage ranking needs "
+                        "candidate features: set request.cand_feats_fn "
+                        "or call engine.attach_features()")
+            if lanes["generate"] and self._generator is None:
+                raise ValueError(
+                    "no generator: call attach_generator() first")
+            # encode each unique user ONCE for the whole flush when more
+            # than one encode-consuming lane is populated
+            encode_lanes = [n for n in ("rank", "retrieve", "two_stage")
+                            if lanes[n]]
+            if len(encode_lanes) > 1:
+                self._prime_shared_users(
+                    [requests[i] for n in encode_lanes for i in lanes[n]])
+            results: List = [None] * len(requests)
+            runners = {"rank": self._score_batch,
+                       "retrieve": self._retrieve_batch,
+                       "two_stage": self._two_stage_batch,
+                       "generate": self._generate_batch}
+            for name, idxs in lanes.items():
+                if not idxs:
+                    continue
+                out = runners[name]([requests[i] for i in idxs])
+                for i, r in zip(idxs, out):
+                    results[i] = r
+            return results
+
+    def _prime_shared_users(self, reqs: Sequence) -> None:
+        """The shared encode pass: resolve every unique user sequence the
+        flush touches into the ContextCache BEFORE the lanes run, in
+        bucketed batches, so each lane's own ``_lookup_users`` is a pure
+        hit and a user spanning lanes is encoded exactly once.  Lite
+        engines only (retrieval/two-stage require the pooled-embedding
+        variants; early-fusion engines have nothing to share with
+        retrieval), and only with a cache to share through."""
+        if not self.lite or self.cache is None:
+            return
+        key_fn = self._key_fn or request_key
+        missing: Dict[bytes, object] = {}      # key -> first request
+        for r in reqs:
+            key = key_fn(r)
+            if key not in missing and self.cache.peek(key) is None:
+                missing[key] = r
+        keys, rows = list(missing), list(missing.values())
+        for off in range(0, len(keys), self.max_unique):
+            # the regular cache-miss/encode/populate protocol; the
+            # returned embeddings are discarded — the lanes re-read them
+            # from the cache as pure hits
+            self._user_embeddings(rows[off:off + self.max_unique],
+                                  keys[off:off + self.max_unique])
+        self.shared_encode_users += len(keys)
+
     # ------------------------------------------------------------------
     def score(self, requests: Sequence[RankRequest]) -> List[np.ndarray]:
-        """-> per-request (N_b, n_tasks) probabilities.  Oversized request
-        lists are transparently split into bucket-sized chunks; a single
-        request with more than max_candidates candidates is split by
-        candidate slice and reassembled.
+        """-> per-request (N_b, n_tasks) probabilities.  A thin batch shim
+        over the ``submit_many`` front door: the whole list lands in one
+        flush (plus whatever else other callers queued), and the futures
+        are gathered in order — results are identical to the pre-submit()
+        engine because the rank lane runs the same ``_score_batch``."""
+        futures = self.submit_many(requests)
+        self.flush()
+        return [f.result() for f in futures]
+
+    def _score_batch(self, requests: Sequence[RankRequest]) \
+            -> List[np.ndarray]:
+        """The rank lane: oversized request lists are transparently split
+        into bucket-sized chunks; a single request with more than
+        max_candidates candidates is split by candidate slice and
+        reassembled.
 
         Chunks flow through the depth-2 pipeline: chunk k+1's host prepare
         (plan, cache, pack, H2D) runs while chunk k's executor is still in
@@ -343,7 +567,7 @@ class ServingEngine:
             entry["cache_misses"] = self.cache.misses
             entry["memo_hits"] = self.cache.memo_hits
             entry["memo_misses"] = self.cache.memo_misses
-        self.stats.append(entry)
+        self.call_stats.append(entry)
 
         off = 0
         for i, c in zip(infl.idxs, plan.counts):
@@ -456,6 +680,12 @@ class ServingEngine:
         assert chunk_rows % 32 == 0, \
             f"chunk_rows={chunk_rows} must be a multiple of 32 (one packed " \
             "filter-mask word covers 32 rows)"
+        # a live refresh must not swap corpus state under a flush in
+        # progress on the background flusher (or any other) thread
+        with self._engine_lock:
+            self._attach_index_locked(index, k, chunk_rows)
+
+    def _attach_index_locked(self, index, k: int, chunk_rows: int) -> None:
         R = index.qt.packed.shape[0]
         attach_key = (k, index.bits, index.dim, chunk_rows)
         compatible = (self._attach_key == attach_key
@@ -532,12 +762,53 @@ class ServingEngine:
             if self.cache is None:     # not covered by the warmup() pass
                 self.registry.warm("encode", (b_u, L), self.params,
                                    zi(b_u, L), zi(b_u, L), zi(b_u, L))
+                for b_c in self.ladder_c.sizes():
+                    self._warm_score_emb(b_u, b_c, L)
             self.registry.warm("retrieve", (b_u,),
                                jnp.zeros((b_u, d), jnp.float32),
                                *self._chunks[0][:5], self._zero_mask(b_u))
 
     def retrieve(self, requests: Sequence[RetrieveRequest]):
-        """-> per-request (item_ids (k,), scores (k,)) numpy pairs.
+        """-> per-request (item_ids (k,), scores (k,)) numpy pairs.  A thin
+        batch shim over ``submit_many`` — the retrieve lane of one flush
+        (``_retrieve_batch``) does the work."""
+        futures = self.submit_many(requests)
+        self.flush()
+        return [f.result() for f in futures]
+
+    def _group_retrieval(self, requests):
+        """Shared retrieval planning: validate per-request k, build
+        ``ItemFilter``s, and dedupe requests into unique (user key, filter
+        fingerprint) rows.  -> (filts, keys, owners) where ``owners[u]``
+        lists the request indices sharing unique row u."""
+        if self._chunks is None:
+            raise ValueError("no retrieval corpus: call attach_index() first")
+        from repro.retrieval.filters import ItemFilter
+        filts = []
+        for i, r in enumerate(requests):
+            if r.k > self.retrieve_k:
+                raise ValueError(
+                    f"request {i} wants k={r.k} but the attached index "
+                    f"serves k<={self.retrieve_k}; re-attach with a larger k")
+            f = ItemFilter(
+                exclude_ids=r.exclude_ids,
+                allow_surfaces=(None if r.allow_surfaces is None
+                                else tuple(r.allow_surfaces)))
+            filts.append(None if f.is_empty() else f)
+        key_fn = self._key_fn or request_key   # same namespace as ranking
+        keys = [key_fn(r) for r in requests]
+        uniq: Dict[tuple, int] = {}
+        owners: List[List[int]] = []   # unique (user, filter) -> request idx
+        for i, key in enumerate(keys):
+            fkey = filts[i].fingerprint() if filts[i] is not None else b""
+            u = uniq.setdefault((key, fkey), len(owners))
+            if u == len(owners):
+                owners.append([])
+            owners[u].append(i)
+        return filts, keys, owners
+
+    def _retrieve_batch(self, requests: Sequence[RetrieveRequest]):
+        """The retrieve lane.
 
         The pooled user embedding comes from the ContextCache when present
         (shared with the lite ranking path); misses run the bucketed
@@ -550,31 +821,8 @@ class ServingEngine:
         DIFFERENT filters are distinct retrieval groups but still share
         one cached user embedding; when fewer than k items survive a
         filter, the tail scores are -inf."""
-        if self._chunks is None:
-            raise ValueError("no retrieval corpus: call attach_index() first")
-        from repro.retrieval.filters import ItemFilter
-        filts: List[Optional[ItemFilter]] = []
-        for i, r in enumerate(requests):
-            if r.k > self.retrieve_k:
-                raise ValueError(
-                    f"request {i} wants k={r.k} but the attached index "
-                    f"serves k<={self.retrieve_k}; re-attach with a larger k")
-            f = ItemFilter(
-                exclude_ids=r.exclude_ids,
-                allow_surfaces=(None if r.allow_surfaces is None
-                                else tuple(r.allow_surfaces)))
-            filts.append(None if f.is_empty() else f)
+        filts, keys, owners = self._group_retrieval(requests)
         out: List[Optional[tuple]] = [None] * len(requests)
-        key_fn = self._key_fn or request_key   # same namespace as ranking
-        keys = [key_fn(r) for r in requests]
-        uniq: Dict[tuple, int] = {}
-        owners: List[List[int]] = []   # unique (user, filter) -> request idx
-        for i, key in enumerate(keys):
-            fkey = filts[i].fingerprint() if filts[i] is not None else b""
-            u = uniq.setdefault((key, fkey), len(owners))
-            if u == len(owners):
-                owners.append([])
-            owners[u].append(i)
         order = list(range(len(owners)))
         for g0 in range(0, len(order), self.max_unique):
             group = order[g0:g0 + self.max_unique]
@@ -647,6 +895,8 @@ class ServingEngine:
                 continue
             ck = (fp, base_host)
             row = self._mask_cache.get(ck)
+            # counters mutate under the engine RLock every flush holds —
+            # the same lock the stats() snapshot takes, so no finer guard
             if row is None:
                 self.mask_misses += 1
                 row = pack_bits(excluded_rows(f, self.index, base_host,
@@ -662,16 +912,15 @@ class ServingEngine:
             rows.append(row)
         return np.stack(rows) if any_set else None
 
-    def _corpus_topk(self, emb, n_users, tel_extra, filters=None):
-        """Run the bucketed chunk executors over the corpus, merge on host.
-        -> (scores (n_users, k), rows (n_users, k)).  ``filters`` (one
-        Optional[ItemFilter] per user row) is resolved per chunk into a
-        packed (b_q, chunk/32) bitmask — rows are memoized per filter
-        fingerprint (``_chunk_mask_rows``), and chunks no filter touches
-        reuse the cached all-zeros mask, so the common case ships no
-        bytes."""
-        from repro.retrieval.scorer import merge_topk
-        t0 = time.perf_counter()
+    def _dispatch_retrieval(self, emb, n_users, filters=None):
+        """Dispatch the bucketed chunk executors over the whole corpus —
+        async: returns the per-chunk (scores, rows) device futures without
+        waiting for any of them.  ``filters`` (one Optional[ItemFilter]
+        per user row) is resolved per chunk into a packed (b_q, chunk/32)
+        bitmask — rows are memoized per filter fingerprint
+        (``_chunk_mask_rows``), and chunks no filter touches reuse the
+        cached all-zeros mask, so the common case ships no bytes.
+        -> (parts, b_q)."""
         b_q = self.ladder_u.fit(n_users)
         q = jnp.asarray(_pad_rows(emb.astype(np.float32), b_q))
         filtered = filters is not None and any(f is not None for f in filters)
@@ -686,8 +935,18 @@ class ServingEngine:
                     mask = jnp.asarray(_pad_rows(m, b_q))
             parts.append(self.registry("retrieve", (b_q,), q, pk, sc, bs,
                                        base, n_valid, mask))
+        return parts, b_q
+
+    def _merge_retrieval(self, parts, n_users):
+        """Retrieval finalize: sync on the per-chunk partials and merge
+        them on host (stable, lower row index wins).
+        -> (scores (n_users, k), rows (n_users, k))."""
+        from repro.retrieval.scorer import merge_topk
         scores, rows = merge_topk([p[0] for p in parts],
                                   [p[1] for p in parts], self.retrieve_k)
+        return scores[:n_users], rows[:n_users]
+
+    def _retrieval_stats_entry(self, n_users, b_q, t0, tel_extra, filters):
         entry = {"retrieve_users": n_users, "b_q": b_q,
                  "corpus_items": self.index.n_items,
                  "corpus_chunks": len(self._chunks),
@@ -701,14 +960,297 @@ class ServingEngine:
         if self.cache is not None:
             entry["cache_hits"] = self.cache.hits
             entry["cache_misses"] = self.cache.misses
-        self.stats.append(entry)
-        return scores[:n_users], rows[:n_users]
+        self.call_stats.append(entry)
+
+    def _corpus_topk(self, emb, n_users, tel_extra, filters=None):
+        """Synchronous dispatch + merge over the corpus (the retrieve
+        lane's path; the fused two-stage lane drives the two stages
+        separately to overlap the merge with ranking).
+        -> (scores (n_users, k), rows (n_users, k))."""
+        t0 = time.perf_counter()
+        parts, b_q = self._dispatch_retrieval(emb, n_users, filters)
+        scores, rows = self._merge_retrieval(parts, n_users)
+        self._retrieval_stats_entry(n_users, b_q, t0, tel_extra, filters)
+        return scores, rows
+
+    # -- fused two-stage lane: retrieve -> rank in one pipeline schedule ----
+    def attach_features(self, fn) -> None:
+        """Register the engine-level candidate-feature provider for the
+        fused two-stage path: ``fn(item_ids) -> (n, cand_feat_dim)``
+        float32 ranking features of retrieved items.  A request-level
+        ``cand_feats_fn`` overrides it."""
+        with self._engine_lock:     # not under a flush on another thread
+            self._features_fn = fn
+
+    def attach_generator(self, generator) -> None:
+        """Register the LM generator behind ``GenerateRequest`` routing —
+        any object with ``generate(prompts, rng=...)`` (see
+        ``serving.generate.Generator``)."""
+        with self._engine_lock:     # not under a flush on another thread
+            self._generator = generator
+
+    def _generate_batch(self, requests: Sequence[GenerateRequest]):
+        """The generate lane: forward each request to the attached
+        generator (LM generation has its own internal batching; requests
+        are independent decode loops)."""
+        if self._generator is None:
+            raise ValueError("no generator: call attach_generator() first")
+        out = []
+        for r in requests:
+            kw = {"rng": r.rng} if r.rng is not None else {}
+            out.append(np.asarray(self._generator.generate(r.prompts, **kw)))
+        return out
+
+    def _two_stage_batch(self, requests: Sequence[RetrieveThenRankRequest]) \
+            -> List[TwoStageResult]:
+        """The fused retrieve->rank lane: retrieval top-k feeds the rank
+        path INSIDE one pipeline schedule.
+
+        Requests dedupe into unique (user, filter) rows and process in
+        groups of <= max_unique, exactly like the retrieve lane; the
+        pooled user embedding comes from the ContextCache (one encode per
+        user across BOTH stages).  The rank stage is then built DIRECTLY
+        from what the retrieval stage already knows — the group is
+        pre-deduplicated and the pooled embeddings are in hand — so the
+        ``score_emb`` operands are assembled without a second Ψ pass: no
+        ``build_plan`` identity hashing, no ``np.unique``, no second round
+        of cache lookups.  (This is the fused path's main saving over the
+        sequential ``retrieve()`` + ``score()`` shims, whose rank stage
+        must re-deduplicate from scratch; the scores are identical because
+        ``score_emb`` is row-wise in the candidates.)
+
+        Under ``pipeline_depth=2`` the groups software-pipeline: group g's
+        corpus-chunk executors are dispatched (async) BEFORE group g-1's
+        retrieval finalize + rank build/launch run on the host, so the
+        device scores group g's corpus while the host merges and ranks
+        group g-1 — and the last launched rank chunk is always finalized
+        one step behind, like the rank lane's own depth-2 pipeline.
+        ``pipeline_depth=1`` runs each group to completion first; both
+        orders feed identical operands to identical executors, so results
+        are bit-identical either way, and match the sequential
+        retrieve-then-rank path run on a cache-enabled engine (whose rank
+        stage serves the same cached embeddings to the same executor).
+
+        Per-flush ``PipelineStats(lane="two_stage")`` lands in
+        ``pipeline_stats`` with the retrieval stage broken out
+        (``retrieve_ms``)."""
+        filts, keys, owners = self._group_retrieval(requests)
+        order = list(range(len(owners)))
+        groups = [order[g0:g0 + self.max_unique]
+                  for g0 in range(0, len(order), self.max_unique)]
+        ps = PipelineStats(depth=self.pipeline_depth, lane="two_stage")
+        t_all = time.perf_counter()
+        probs_parts: List[List[np.ndarray]] = [[] for _ in requests]
+        meta: Dict[int, tuple] = {}         # request -> (ids, retr scores)
+        infl: Optional[dict] = None         # rank chunk awaiting finalize
+
+        def finalize(fl) -> float:
+            t0 = time.perf_counter()
+            probs = np.asarray(fl["out"])
+            wait_s = time.perf_counter() - t0
+            off = 0
+            for i, c in fl["scatter"]:
+                probs_parts[i].append(probs[off:off + c])
+                off += c
+            self.call_stats.append(
+                {"candidates": fl["n_c"], "unique_users": fl["n_u"],
+                 "b_u": fl["b_u"], "b_c": fl["b_c"], "lane": "two_stage",
+                 # same span as the rank lane's entries: prepare+launch+wait
+                 "latency_s": fl["prepare_s"] + fl["launch_s"] + wait_s,
+                 **{f"exec_{k}": v for k, v in
+                    self.registry.telemetry().items()}})
+            return wait_s * 1e3
+
+        def launch_rank(chunk):
+            """One rank chunk straight from retrieval-stage state: chunk
+            entries are (req idx, cand ids, cand feats, pooled emb row,
+            user_feats, identity key); unique users dedupe by FULL sequence
+            identity within the chunk (first occurrence wins) — the same
+            rule as build_plan's Ψ, deliberately NOT the engine's custom
+            cache ``key_fn``: a coarser key_fn may share cached embeddings
+            across sequences, but must not collapse their user_feats
+            rows."""
+            nonlocal infl
+            in_flight = infl is not None and not _is_ready(infl["out"])
+            t0 = time.perf_counter()
+            rows: Dict[bytes, int] = {}
+            emb_rows, uf_rows = [], []
+            inv, cand_ids, cand_feats, scatter = [], [], [], []
+            for i, ids, feats, emb_vec, uf, ukey in chunk:
+                u = rows.get(ukey)
+                if u is None:
+                    u = rows[ukey] = len(rows)
+                    emb_rows.append(emb_vec)
+                    uf_rows.append(np.asarray(uf, np.float32))
+                inv.append(np.full(len(ids), u, np.int32))
+                cand_ids.append(np.asarray(ids, np.int32))
+                cand_feats.append(feats)
+                scatter.append((i, len(ids)))
+            n_u, n_c = len(rows), sum(c for _, c in scatter)
+            b_u, b_c = self.ladder_u.fit(n_u), self.ladder_c.fit(n_c)
+            inv = _pad_rows(np.concatenate(inv), b_c)
+            batch = {
+                "inverse_idx": inv,
+                "cand_ids": _pad_rows(np.concatenate(cand_ids), b_c),
+                "cand_feats": _pad_rows(
+                    np.concatenate(cand_feats).astype(np.float32), b_c),
+                "user_feats": _pad_rows(np.stack(uf_rows), b_u),
+            }
+            user_emb = _pad_rows(np.stack(emb_rows).astype(np.float32),
+                                 b_u)[inv]
+            prepare_s = time.perf_counter() - t0
+            ps.chunks += 1
+            ps.prepare_ms += prepare_s * 1e3
+            if in_flight:
+                ps.overlapped_ms += prepare_s * 1e3
+            t1 = time.perf_counter()
+            out = self.registry("score_emb", (b_u, b_c), self.params,
+                                jnp.asarray(user_emb), self._device(batch))
+            launch_s = time.perf_counter() - t1
+            ps.launch_ms += launch_s * 1e3
+            fresh = {"out": out, "scatter": scatter, "n_c": n_c, "n_u": n_u,
+                     "b_u": b_u, "b_c": b_c, "prepare_s": prepare_s,
+                     "launch_s": launch_s}
+            if self.pipeline_depth >= 2:
+                prev, infl = infl, fresh
+                if prev is not None:
+                    ps.wait_ms += finalize(prev)
+            else:
+                ps.wait_ms += finalize(fresh)
+
+        def absorb(state):
+            """Retrieval finalize for one group + build/launch its rank
+            chunks (host work that overlaps the NEXT group's retrieval
+            executors and the previous rank chunk's device time)."""
+            group, parts, b_q, t0g, tel, emb = state
+            rank_busy = infl is not None and not _is_ready(infl["out"])
+            t_m = time.perf_counter()
+            scores, rows = self._merge_retrieval(parts, len(group))
+            merge_ms = (time.perf_counter() - t_m) * 1e3
+            ps.retrieve_ms += merge_ms
+            if rank_busy:
+                ps.overlapped_ms += merge_ms
+            self._retrieval_stats_entry(
+                len(group), b_q, t0g, tel,
+                [filts[owners[u][0]] for u in group])
+            entries = []
+            for j, u in enumerate(group):
+                ids_full = self.index.item_ids(rows[j])
+                for i in owners[u]:
+                    r = requests[i]
+                    ids = ids_full[:r.k]
+                    meta[i] = (ids, scores[j, :r.k])
+                    # non-None: the flush gate validated before lanes ran
+                    feats_fn = r.cand_feats_fn or self._features_fn
+                    feats = np.asarray(feats_fn(ids), np.float32)
+                    ident = request_key(r)      # full identity, not key_fn
+                    # a k beyond the candidate bucket splits by slice,
+                    # exactly like the rank lane's _split_candidates
+                    for o in range(0, len(ids), self.max_candidates):
+                        sl = slice(o, o + self.max_candidates)
+                        entries.append((i, ids[sl], feats[sl], emb[j],
+                                        r.user_feats, ident))
+            cur, cur_keys, cur_c = [], set(), 0
+            for e in entries:
+                n, new_u = len(e[1]), e[5] not in cur_keys
+                if cur and (cur_c + n > self.max_candidates
+                            or len(cur_keys) + new_u > self.max_unique):
+                    launch_rank(cur)
+                    cur, cur_keys, cur_c = [], set(), 0
+                cur.append(e)
+                cur_keys.add(e[5])
+                cur_c += n
+            if cur:
+                launch_rank(cur)
+
+        pending = None
+        for group in groups:
+            t0g = time.perf_counter()
+            emb, tel = self._user_embeddings(
+                [requests[owners[u][0]] for u in group],
+                [keys[owners[u][0]] for u in group])
+            rank_busy = infl is not None and not _is_ready(infl["out"])
+            t_d = time.perf_counter()
+            parts, b_q = self._dispatch_retrieval(
+                emb, len(group), [filts[owners[u][0]] for u in group])
+            disp_ms = (time.perf_counter() - t_d) * 1e3
+            ps.retrieve_ms += disp_ms
+            if rank_busy:   # dispatch hidden behind the previous rank chunk
+                ps.overlapped_ms += disp_ms
+            state = (group, parts, b_q, t0g, tel, emb)
+            if self.pipeline_depth >= 2:
+                if pending is not None:
+                    absorb(pending)
+                pending = state
+            else:
+                absorb(state)
+        if pending is not None:
+            absorb(pending)
+        if infl is not None:
+            ps.wait_ms += finalize(infl)
+        ps.total_ms = (time.perf_counter() - t_all) * 1e3
+        self.pipeline_stats.append(ps)
+
+        return [TwoStageResult(
+                    item_ids=meta[i][0], retrieval_scores=meta[i][1],
+                    probs=(probs_parts[i][0] if len(probs_parts[i]) == 1
+                           else np.concatenate(probs_parts[i])))
+                for i in range(len(requests))]
+
+    # -- telemetry snapshot -------------------------------------------------
+    def stats(self) -> dict:
+        """One read-atomic telemetry snapshot: engine-side counters
+        mutate only under the engine RLock (which every flush holds),
+        registry counters under the registry RLock, scheduler counters
+        under the scheduler queue lock — and this method holds all three,
+        so no counter can be read torn or mid-update.  Covers executor
+        compile/hit counts, ContextCache + pack-memo counters, retrieval
+        mask-cache counters, per-lane request totals, scheduler flush
+        counters, and the last pipeline record.  This is
+        THE way to read engine telemetry — the per-chunk ``call_stats``
+        list and the raw counters remain for tests/debugging, but only
+        this method reads them consistently under concurrency."""
+        sched = self._scheduler
+        # scheduler counters mutate under the scheduler queue lock (never
+        # held while acquiring the engine lock, so the order is safe)
+        with self._engine_lock, self.registry.lock, sched._lock:
+            snap = {
+                "executors": self.registry.telemetry(),
+                "cache": (self.cache.stats() if self.cache is not None
+                          else None),
+                "masks": {"hits": self.mask_hits,
+                          "misses": self.mask_misses,
+                          "entries": len(self._mask_cache)},
+                "lanes": dict(self._lane_counts),
+                "shared_encode_users": self.shared_encode_users,
+                "scheduler": {
+                    "flushes": sched.flushes,
+                    "coalesced": sched.coalesced,
+                },
+                "chunks_executed": len(self.call_stats),
+                "pipeline_calls": len(self.pipeline_stats),
+                "last_pipeline": (self.pipeline_stats[-1].as_dict()
+                                  if self.pipeline_stats else None),
+                "retrieval": {
+                    "attached": self._chunks is not None,
+                    "k": self.retrieve_k,
+                    "corpus_items": (self.index.n_items
+                                     if self.index is not None else 0),
+                    "corpus_chunks": (len(self._chunks)
+                                      if self._chunks is not None else 0),
+                },
+            }
+        return snap
 
     # ------------------------------------------------------------------
     def warmup(self, *, seq_len: Optional[int] = None) -> dict:
         """Precompile every executor reachable from the bucket ladder, so
         steady-state traffic never pays an XLA compile.  Returns registry
         telemetry (incl. wall time)."""
+        with self._engine_lock:     # not under a flush on another thread
+            return self._warmup_locked(seq_len)
+
+    def _warmup_locked(self, seq_len: Optional[int]) -> dict:
         L = int(seq_len if seq_len is not None else self.model.cfg.seq_len)
         t0 = time.perf_counter()
         params = self.params
@@ -729,24 +1271,31 @@ class ServingEngine:
                                    jnp.zeros((b_u, d), jnp.float32),
                                    *self._chunks[0][:5], self._zero_mask(b_u))
             for b_c in self.ladder_c.sizes():
-                batch = self._dummy_batch(b_u, b_c, L)
                 if self.cache is None:
-                    self.registry.warm("rank", (b_u, b_c, L), params,
-                                       self._device(batch))
-                elif self.lite:
-                    d = self.model.pcfg.id_dim
                     self.registry.warm(
-                        "score_emb", (b_u, b_c), params,
-                        jnp.zeros((b_c, d), jnp.float32),
-                        self._device(self._cross_batch(batch)))
-                else:
+                        "rank", (b_u, b_c, L), params,
+                        self._device(self._dummy_batch(b_u, b_c, L)))
+                elif not self.lite:
                     self.registry.warm(
                         "cross", (b_u, b_c, L), params,
-                        self._device(self._cross_batch(batch)), ctxs)
+                        self._device(self._cross_batch(
+                            self._dummy_batch(b_u, b_c, L))), ctxs)
+                if self.lite and (self.cache is not None
+                                  or self._chunks is not None):
+                    self._warm_score_emb(b_u, b_c, L)
         self._warmed_up, self._warm_L = True, L
         tel = self.registry.telemetry()
         tel["warmup_s"] = time.perf_counter() - t0
         return tel
+
+    def _warm_score_emb(self, b_u: int, b_c: int, L: int) -> None:
+        """Warm the pooled-embedding ranker for one bucket — shared by the
+        lite cached path and the fused two-stage rank stage (which scores
+        from pooled embeddings even on cache-less engines)."""
+        self.registry.warm(
+            "score_emb", (b_u, b_c), self.params,
+            jnp.zeros((b_c, self.model.pcfg.id_dim), jnp.float32),
+            self._device(self._cross_batch(self._dummy_batch(b_u, b_c, L))))
 
     def _dummy_batch(self, b_u: int, b_c: int, L: int) -> dict:
         cfg = self.model.cfg

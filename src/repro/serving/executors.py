@@ -39,6 +39,13 @@ class ExecutorRegistry:
         self.compiles = 0
         self.hits = 0
 
+    @property
+    def lock(self):
+        """The registry RLock — the engine's telemetry mutations and the
+        ``ServingEngine.stats()`` snapshot read take it so concurrent
+        submitters can never observe torn counters."""
+        return self._lock
+
     def register(self, kind: str, factory: Callable):
         with self._lock:
             self._factories[kind] = factory

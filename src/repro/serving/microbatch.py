@@ -1,210 +1,56 @@
-"""Micro-batching front-end: coalesce RankRequests across callers before
-planning, so concurrent low-fanout callers share one device batch (and one
-Ψ pass — duplicate users ACROSS callers dedup too, which is where the
-paper's 1:1000 serving ratio comes from).
+"""DEPRECATED micro-batching front-end — superseded by the engine's own
+``submit()`` front door.
 
-Two operating modes:
+The queue/coalesce/background-flush machinery that used to live here is
+now :class:`repro.serving.scheduler.RequestScheduler`, owned by the
+``ServingEngine`` itself (``engine.submit`` / ``engine.submit_many``),
+where it batches EVERY workload — rank, retrieve, fused two-stage,
+generate — through one flush with a shared user-encode pass.
 
-  * synchronous (default, ``max_wait_ms=None``) — no threads: the queue
-    flushes when ``max_requests`` or ``max_candidates`` worth of work has
-    accumulated, on demand (``flush()`` / ``ticket.result()``), or when a
-    server loop calls ``poll()`` past ``max_wait_s``.  Deterministic for
-    tests.
-  * background flusher (``max_wait_ms=<float>``) — a daemon thread bounds
-    the age of the oldest pending request, so the engine's depth-2
-    pipeline is fed continuously WITHOUT any caller blocking in
-    ``result()``: callers submit and pick results up later; the flusher
-    drains the queue behind them.  ``close()`` (or the context manager)
-    stops the thread.
-
-Flush/result race contract: a ticket whose request was already picked up
-by an in-flight flush (another caller's, or the background flusher's) must
-NOT trigger a redundant flush from ``result()`` — the membership check and
-the queue swap happen atomically under the queue lock, so ``result()``
-either drains the batch its request is actually in, or just waits for the
-in-flight one to land.
+``MicroBatcher`` remains as a thin compatibility shim: it is a
+``RequestScheduler`` whose flush function forwards to the engine's
+mixed-workload flush (``_flush_requests`` — the same code path
+``submit_many`` uses), so existing callers keep working and keep getting
+identical results; it emits a :class:`DeprecationWarning` once per
+process.  ``Ticket`` is the old name for :class:`Future`.  New code
+should call ``engine.submit(request)`` directly.
 """
 from __future__ import annotations
 
-import threading
-import time
-from typing import List, Optional
+from repro.serving._deprecation import warn_once
+from repro.serving.scheduler import Future, RequestScheduler
 
-import numpy as np
-
-from repro.serving.plan import RankRequest
+# the old name: a MicroBatcher ticket IS a scheduler future
+Ticket = Future
 
 
-class Ticket:
-    """Handle for one submitted request; ``result()`` flushes only if the
-    request is still queued — if an in-flight flush already picked it up,
-    it waits for that batch instead of triggering a redundant one."""
+class MicroBatcher(RequestScheduler):
+    """Deprecated queue-and-coalesce front-end over a ``ServingEngine``.
 
-    def __init__(self, batcher: "MicroBatcher"):
-        self._batcher = batcher
-        self._done = threading.Event()
-        self._value: Optional[np.ndarray] = None
-        self._error: Optional[BaseException] = None
+    Forwards every flush to the engine's mixed-workload flush (the same
+    path as ``engine.submit_many``), so results are identical to the new
+    API; falls back to ``engine.score`` for engine stand-ins that only
+    implement ``score`` (as the concurrency tests' fakes do).
 
-    def done(self) -> bool:
-        return self._done.is_set()
-
-    def result(self) -> np.ndarray:
-        if not self._done.is_set():
-            # targeted flush: atomically checks whether THIS request is
-            # still pending; a no-op when another flush has it in flight
-            self._batcher._flush(only_if_pending=self)
-            self._done.wait()
-        if self._error is not None:
-            raise self._error
-        return self._value
-
-    def _set(self, value):
-        self._value = value
-        self._done.set()
-
-    def _set_error(self, exc: BaseException):
-        self._error = exc
-        self._done.set()
-
-
-class MicroBatcher:
-    """Queue-and-coalesce front-end over a ``ServingEngine``.
-
-    Args:
-      engine: the engine whose ``score`` handles flushed batches.
-      max_requests / max_candidates: flush thresholds (candidates default
-        to the engine's bucket maximum).
-      max_wait_s: age bound enforced by ``poll()``.
-      max_wait_ms: when set, starts the BACKGROUND FLUSHER: a daemon
-        thread that flushes whenever the oldest pending request has waited
-        this long, feeding the engine pipeline without a caller blocking
-        in ``result()``.  Overrides ``max_wait_s``.
-
-    Invariant: every submitted request's ticket resolves exactly once —
-    with the result, or with the engine's exception if a flush fails.
-
-    Concurrency contract: the engine itself (ContextCache, stats lists,
-    mask cache) is NOT thread-safe; the batcher serializes all flush-driven
-    ``engine.score`` calls through ``engine_lock``.  With a background
-    flusher running, any DIRECT engine use from another thread
-    (``engine.retrieve``, ad-hoc ``engine.score``) must hold that same
-    lock::
-
-        with mb.engine_lock:
-            engine.retrieve(reqs)
+    Args match the historical surface: ``max_requests`` /
+    ``max_candidates`` flush thresholds (candidates default to the
+    engine's bucket maximum), ``max_wait_s`` age bound enforced by
+    ``poll()``, and ``max_wait_ms`` enabling the background flusher.
     """
 
     def __init__(self, engine, *, max_requests: int = 32,
-                 max_candidates: Optional[int] = None,
-                 max_wait_s: float = 0.01,
-                 max_wait_ms: Optional[float] = None):
+                 max_candidates=None, max_wait_s: float = 0.01,
+                 max_wait_ms=None):
+        warn_once(
+            "microbatch",
+            "MicroBatcher is deprecated: the ServingEngine batches "
+            "requests itself now — use engine.submit(request) / "
+            "engine.submit_many(requests) (one front door for rank, "
+            "retrieve, two-stage and generate traffic)")
         self.engine = engine
-        self.max_requests = max_requests
-        self.max_candidates = (max_candidates if max_candidates is not None
-                               else engine.max_candidates)
-        self.max_wait_s = (max_wait_ms / 1e3 if max_wait_ms is not None
-                           else max_wait_s)
-        self._lock = threading.Lock()
-        # the engine (ContextCache LRU, stats lists) is not thread-safe:
-        # serialize engine.score across flushing callers + the flusher;
-        # public so direct engine users can join the serialization
-        self.engine_lock = threading.Lock()
-        self._pending: List[RankRequest] = []
-        self._tickets: List[Ticket] = []
-        self._oldest: Optional[float] = None
-        self.flushes = 0
-        self.coalesced = 0
-        self._stop = threading.Event()
-        self._flusher: Optional[threading.Thread] = None
-        if max_wait_ms is not None:
-            tick = min(max(self.max_wait_s / 4, 5e-4), 0.05)
-            self._flusher = threading.Thread(
-                target=self._flusher_loop, args=(tick,),
-                name="microbatch-flusher", daemon=True)
-            self._flusher.start()
-
-    # -- background flusher -------------------------------------------------
-    def _flusher_loop(self, tick: float):
-        while not self._stop.wait(tick):
-            try:
-                self.poll()
-            except BaseException:
-                # the failing batch's tickets already carry the exception
-                # (flush resolves them before re-raising); the flusher
-                # itself must survive to serve subsequent batches
-                pass
-
-    def close(self):
-        """Stop the background flusher (if any) after draining the queue.
-        Idempotent; the batcher remains usable in synchronous mode."""
-        self._stop.set()
-        if self._flusher is not None:
-            self._flusher.join()
-            self._flusher = None
-        try:
-            self.flush()
-        except BaseException:
-            pass
-
-    def __enter__(self):
-        return self
-
-    def __exit__(self, *exc):
-        self.close()
-        return False
-
-    # -- submit / flush -----------------------------------------------------
-    def submit(self, request: RankRequest) -> Ticket:
-        """Enqueue one request -> ticket.  Flushes inline when a size
-        threshold trips; otherwise the batch waits for the background
-        flusher, ``poll()``, ``flush()``, or a ``ticket.result()``."""
-        with self._lock:
-            t = Ticket(self)
-            self._pending.append(request)
-            self._tickets.append(t)
-            if self._oldest is None:
-                self._oldest = time.time()
-            full = (len(self._pending) >= self.max_requests
-                    or sum(len(r.cand_ids) for r in self._pending)
-                    >= self.max_candidates)
-        if full:
-            self.flush()
-        return t
-
-    def poll(self):
-        """Flush if the oldest pending request has waited past max_wait_s."""
-        with self._lock:
-            expired = (self._oldest is not None
-                       and time.time() - self._oldest >= self.max_wait_s)
-        if expired:
-            self.flush()
-
-    def flush(self):
-        """Drain the queue through one ``engine.score`` call (one Ψ pass
-        over every pending caller's requests) and resolve the tickets."""
-        self._flush()
-
-    def _flush(self, only_if_pending: Optional[Ticket] = None):
-        with self._lock:
-            if (only_if_pending is not None
-                    and only_if_pending not in self._tickets):
-                return      # picked up by an in-flight flush: just wait
-            pending, tickets = self._pending, self._tickets
-            self._pending, self._tickets, self._oldest = [], [], None
-            if pending:
-                self.flushes += 1
-                self.coalesced += len(pending)
-        if not pending:
-            return
-        try:
-            with self.engine_lock:
-                results = self.engine.score(pending)
-        except BaseException as exc:
-            # never orphan a ticket: a caller blocked in result() must see
-            # the failure, not hang
-            for t in tickets:
-                t._set_error(exc)
-            raise
-        for t, r in zip(tickets, results):
-            t._set(r)
+        flush_fn = getattr(engine, "_flush_requests", None) or engine.score
+        super().__init__(
+            flush_fn, max_requests=max_requests,
+            max_candidates=(max_candidates if max_candidates is not None
+                            else engine.max_candidates),
+            max_wait_s=max_wait_s, max_wait_ms=max_wait_ms)

@@ -12,7 +12,7 @@ compile in steady state.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -53,6 +53,54 @@ class RetrieveRequest:
     k: int = 100
     exclude_ids: Optional[np.ndarray] = None
     allow_surfaces: Optional[Tuple[int, ...]] = None
+
+
+@dataclasses.dataclass
+class RetrieveThenRankRequest:
+    """The paper's flagship two-stage workload as ONE request: corpus
+    retrieval whose top-k feeds the ranking path of the same engine flush.
+
+    Submitted through ``ServingEngine.submit``, the engine executes the
+    fused schedule: the pooled user embedding is looked up / encoded once
+    (shared with any rank or retrieve request for the same user in the
+    same flush), the retrieval top-k runs through the warmed corpus-chunk
+    executors, and the retrieved ids become the candidate set of an
+    internal :class:`RankRequest` scored on the rank lane of the same
+    pipeline — with the next group's retrieval overlapping this group's
+    ranking.  Resolves to a :class:`TwoStageResult`.
+
+    ``cand_feats_fn(item_ids) -> (n, F_c) float32`` supplies the ranking
+    features of the retrieved candidates; when ``None`` the engine's
+    ``attach_features`` provider is used (one of the two must exist).
+    Filters behave exactly as on :class:`RetrieveRequest`; when fewer than
+    ``k`` items survive, the -inf tail is still ranked (identical to what
+    the sequential retrieve-then-rank path would do)."""
+    seq_ids: np.ndarray          # (L,)
+    seq_actions: np.ndarray
+    seq_surfaces: np.ndarray
+    user_feats: np.ndarray       # (F_u,) — the rank stage needs it
+    k: int = 100
+    exclude_ids: Optional[np.ndarray] = None
+    allow_surfaces: Optional[Tuple[int, ...]] = None
+    cand_feats_fn: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class TwoStageResult:
+    """What a :class:`RetrieveThenRankRequest` future resolves to."""
+    item_ids: np.ndarray          # (k,) retrieved ids, retrieval order
+    retrieval_scores: np.ndarray  # (k,) corpus dot-product scores
+    probs: np.ndarray             # (k, n_tasks) ranking probabilities
+
+
+@dataclasses.dataclass
+class GenerateRequest:
+    """Autoregressive LM generation routed through the same ``submit``
+    front door (the ``serving/generate.py`` workload as a typed request).
+    Requires ``ServingEngine.attach_generator``; resolves to a
+    (B, max_new_tokens) int32 numpy array."""
+    prompts: np.ndarray           # (B, S) int32
+    rng: Optional[Any] = None
 
 
 def request_key(r) -> bytes:
@@ -119,6 +167,13 @@ class PipelineStats:
         predecessor already finished (output ready) counts zero; one whose
         predecessor is still running counts in full, so this is an UPPER
         bound when the predecessor completes mid-prepare.
+
+    The fused two-stage path records one of these per flush too, with
+    ``lane="two_stage"`` and the retrieval stage broken out:
+    ``retrieve_ms`` is host time spent dispatching corpus-chunk executors
+    and merging their top-k partials (the merge is the retrieval
+    finalize — under the fused schedule it overlaps the previous group's
+    ranking).
     """
     depth: int
     chunks: int = 0
@@ -129,12 +184,15 @@ class PipelineStats:
     total_ms: float = 0.0
     memo_hits: int = 0
     memo_misses: int = 0
+    lane: str = "rank"
+    retrieve_ms: float = 0.0
 
     @property
     def overlap_fraction(self) -> float:
-        """Share of host prepare work hidden behind device execution."""
-        return (self.overlapped_ms / self.prepare_ms
-                if self.prepare_ms > 0 else 0.0)
+        """Share of host work (prepare, plus retrieval dispatch+merge on
+        the two-stage lane) hidden behind device execution."""
+        host = self.prepare_ms + self.retrieve_ms
+        return self.overlapped_ms / host if host > 0 else 0.0
 
     def as_dict(self) -> dict:
         return {**dataclasses.asdict(self),

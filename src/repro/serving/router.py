@@ -1,11 +1,15 @@
-"""Back-compat facade over the serving engine (paper §4.3, Figure 2).
+"""DEPRECATED back-compat facade over the serving engine (paper §4.3,
+Figure 2).
 
 The seed's monolithic ``InferenceRouter`` grew into a layered engine —
-see :mod:`repro.serving.engine` (BatchPlan / ExecutorRegistry /
-ContextCache / MicroBatcher).  This module keeps the original public
+see :mod:`repro.serving.engine`.  This module keeps the original public
 surface (``InferenceRouter``, ``RankRequest``, ``UserEmbeddingCache``)
-as thin wrappers so existing callers and tests keep working; new code
-should use :class:`repro.serving.engine.ServingEngine` directly.
+as thin wrappers so existing callers and tests keep working: ``score`` /
+``score_cached`` forward to ``ServingEngine.score``, itself a shim over
+the ``submit_many`` front door, so the router is two hops from the real
+path and emits a :class:`DeprecationWarning` once per process.  New code
+should construct a :class:`~repro.serving.engine.ServingEngine` and call
+``submit`` / ``submit_many`` (or the ``score`` batch shim) directly.
 """
 from __future__ import annotations
 
@@ -13,6 +17,7 @@ from typing import List, Optional, Sequence
 
 import numpy as np
 
+from repro.serving._deprecation import warn_once
 from repro.serving.context_cache import ContextCache
 from repro.serving.engine import LITE_VARIANTS, ServingEngine
 from repro.serving.plan import RankRequest                     # re-export
@@ -38,6 +43,10 @@ class InferenceRouter:
     def __init__(self, model, params, *, max_unique: int = 8,
                  max_candidates: int = 64,
                  user_cache: Optional[UserEmbeddingCache] = None):
+        warn_once(
+            "router",
+            "InferenceRouter is deprecated: construct a ServingEngine and "
+            "use submit()/submit_many() (or the score() batch shim)")
         self.model, self.params = model, params
         self.max_unique, self.max_candidates = max_unique, max_candidates
         self.user_cache = user_cache
@@ -55,11 +64,11 @@ class InferenceRouter:
                                                         r.seq_actions))
             # one chronological stats stream across both paths, like the
             # seed's single list
-            self._cached_engine.stats = self._engine.stats
+            self._cached_engine.call_stats = self._engine.call_stats
 
     @property
     def stats(self) -> List[dict]:
-        return self._engine.stats
+        return self._engine.call_stats
 
     def score(self, requests: Sequence[RankRequest]) -> List[np.ndarray]:
         """-> per-request (N_b, n_tasks) probabilities."""

@@ -1,0 +1,251 @@
+"""Request scheduler: the engine's single async front door.
+
+``ServingEngine.submit(req) -> Future`` enqueues a typed request
+(:class:`~repro.serving.plan.RankRequest`,
+:class:`~repro.serving.plan.RetrieveRequest`,
+:class:`~repro.serving.plan.RetrieveThenRankRequest`,
+:class:`~repro.serving.plan.GenerateRequest`) into one queue regardless of
+workload; a single flush hands the whole mixed batch to the engine, which
+partitions it into per-workload lanes that SHARE one user-encode pass (see
+``ServingEngine._flush_requests``).  This generalizes what the PR-1
+``MicroBatcher`` did for rank-only traffic — coalescing, cross-caller
+dedup, background flush — across every request type, which is why
+``MicroBatcher`` is now a deprecation shim over this class.
+
+Operating modes (unchanged semantics from the MicroBatcher):
+
+  * synchronous (default, ``max_wait_ms=None``) — no threads: the queue
+    flushes when ``max_requests`` requests or ``max_candidates`` worth of
+    work has accumulated, on demand (``flush()`` / ``future.result()``),
+    or when a server loop calls ``poll()`` past ``max_wait_s``.
+    Deterministic for tests.
+  * background flusher (``max_wait_ms=<float>``) — a daemon thread bounds
+    the age of the oldest pending request, feeding the engine's pipeline
+    continuously without any caller blocking in ``result()``; ``close()``
+    (or the context manager) stops the thread.
+
+Flush/result race contract: a future whose request was already picked up
+by an in-flight flush (another caller's, or the background flusher's) must
+NOT trigger a redundant flush from ``result()`` — the membership check and
+the queue swap happen atomically under the queue lock, so ``result()``
+either drains the batch its request is actually in, or just waits for the
+in-flight one to land.
+
+``submit_many`` enqueues a request list ATOMICALLY (thresholds are checked
+once, after the whole list is queued), so a caller's batch is never split
+across two flushes by its own size — ``ServingEngine.score`` relies on
+this to keep its chunking identical to the pre-submit() engine.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import List, Optional, Sequence
+
+
+def request_cost(r) -> int:
+    """Weight of one request toward the ``max_candidates`` flush threshold:
+    candidates for rank requests, k for retrieve / two-stage requests,
+    prompt rows for generate requests, else 1."""
+    cand = getattr(r, "cand_ids", None)
+    if cand is not None:
+        return len(cand)
+    k = getattr(r, "k", None)
+    if k is not None:
+        return int(k)
+    prompts = getattr(r, "prompts", None)
+    if prompts is not None:
+        return len(prompts)
+    return 1
+
+
+class Future:
+    """Handle for one submitted request; ``result()`` flushes only if the
+    request is still queued — if an in-flight flush already picked it up,
+    it waits for that batch instead of triggering a redundant one."""
+
+    def __init__(self, scheduler: "RequestScheduler"):
+        self._scheduler = scheduler
+        self._done = threading.Event()
+        self._value = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self):
+        if not self._done.is_set():
+            # targeted flush: atomically checks whether THIS request is
+            # still pending; a no-op when another flush has it in flight
+            self._scheduler._flush(only_if_pending=self)
+            self._done.wait()
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+    def _set(self, value):
+        self._value = value
+        self._done.set()
+
+    def _set_error(self, exc: BaseException):
+        self._error = exc
+        self._done.set()
+
+
+class RequestScheduler:
+    """Queue-and-coalesce front end over a flush function.
+
+    Args:
+      flush_fn: ``flush_fn(requests) -> results`` — one result per request,
+        same order.  For a ``ServingEngine`` this is ``_flush_requests``
+        (the mixed-workload lane partitioner); anything exposing the same
+        shape works (tests use fakes).
+      max_requests / max_candidates: flush thresholds (``max_candidates``
+        counts :func:`request_cost` units; ``None`` disables that bound).
+      max_wait_s: age bound enforced by ``poll()``.
+      max_wait_ms: when set, starts the BACKGROUND FLUSHER (overrides
+        ``max_wait_s``).
+      lock: optional lock serializing ``flush_fn`` executions; defaults to
+        a private one.  The engine passes its own RLock so scheduler-driven
+        flushes and any direct engine calls serialize together.
+
+    Invariant: every submitted request's future resolves exactly once —
+    with the result, or with the flush function's exception if a flush
+    fails.
+    """
+
+    def __init__(self, flush_fn, *, max_requests: int = 32,
+                 max_candidates: Optional[int] = None,
+                 max_wait_s: float = 0.01,
+                 max_wait_ms: Optional[float] = None,
+                 lock=None):
+        self._flush_fn = flush_fn
+        self.max_requests = max_requests
+        self.max_candidates = max_candidates
+        self.max_wait_s = (max_wait_ms / 1e3 if max_wait_ms is not None
+                           else max_wait_s)
+        self._lock = threading.Lock()
+        # serializes flush_fn execution across flushing callers + the
+        # background flusher; public so direct users of the underlying
+        # engine can join the serialization
+        self.engine_lock = lock if lock is not None else threading.Lock()
+        self._pending: List = []
+        self._futures: List[Future] = []
+        self._oldest: Optional[float] = None
+        self.flushes = 0
+        self.coalesced = 0
+        self._stop = threading.Event()
+        self._flusher: Optional[threading.Thread] = None
+        if max_wait_ms is not None:
+            tick = min(max(self.max_wait_s / 4, 5e-4), 0.05)
+            self._flusher = threading.Thread(
+                target=self._flusher_loop, args=(tick,),
+                name="serving-scheduler-flusher", daemon=True)
+            self._flusher.start()
+
+    # -- background flusher -------------------------------------------------
+    def _flusher_loop(self, tick: float):
+        while not self._stop.wait(tick):
+            try:
+                self.poll()
+            except BaseException:
+                # the failing batch's futures already carry the exception
+                # (flush resolves them before re-raising); the flusher
+                # itself must survive to serve subsequent batches
+                pass
+
+    def close(self):
+        """Stop the background flusher (if any) after draining the queue.
+        Idempotent; the scheduler remains usable in synchronous mode."""
+        self._stop.set()
+        if self._flusher is not None:
+            self._flusher.join()
+            self._flusher = None
+        try:
+            self.flush()
+        except BaseException:
+            pass
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # -- submit / flush -----------------------------------------------------
+    def _enqueue(self, request) -> Future:
+        f = Future(self)
+        self._pending.append(request)
+        self._futures.append(f)
+        if self._oldest is None:
+            self._oldest = time.time()
+        return f
+
+    def _over_threshold(self) -> bool:
+        if len(self._pending) >= self.max_requests:
+            return True
+        return (self.max_candidates is not None
+                and sum(request_cost(r) for r in self._pending)
+                >= self.max_candidates)
+
+    def submit(self, request) -> Future:
+        """Enqueue one request -> future.  Flushes inline when a size
+        threshold trips; otherwise the batch waits for the background
+        flusher, ``poll()``, ``flush()``, or a ``future.result()``."""
+        with self._lock:
+            f = self._enqueue(request)
+            full = self._over_threshold()
+        if full:
+            self.flush()
+        return f
+
+    def submit_many(self, requests: Sequence) -> List[Future]:
+        """Enqueue a request list atomically -> one future per request.
+        Thresholds are checked once, AFTER the whole list is queued, so the
+        resulting flush sees the complete batch (never a size-split prefix
+        of it)."""
+        with self._lock:
+            futures = [self._enqueue(r) for r in requests]
+            full = self._over_threshold()
+        if full:
+            self.flush()
+        return futures
+
+    def poll(self):
+        """Flush if the oldest pending request has waited past max_wait_s."""
+        with self._lock:
+            expired = (self._oldest is not None
+                       and time.time() - self._oldest >= self.max_wait_s)
+        if expired:
+            self.flush()
+
+    def flush(self):
+        """Drain the queue through one flush_fn call (for an engine: one
+        mixed-workload flush sharing a single user-encode pass) and resolve
+        the futures."""
+        self._flush()
+
+    def _flush(self, only_if_pending: Optional[Future] = None):
+        with self._lock:
+            if (only_if_pending is not None
+                    and only_if_pending not in self._futures):
+                return      # picked up by an in-flight flush: just wait
+            pending, futures = self._pending, self._futures
+            self._pending, self._futures, self._oldest = [], [], None
+            if pending:
+                self.flushes += 1
+                self.coalesced += len(pending)
+        if not pending:
+            return
+        try:
+            with self.engine_lock:
+                results = self._flush_fn(pending)
+        except BaseException as exc:
+            # never orphan a future: a caller blocked in result() must see
+            # the failure, not hang
+            for f in futures:
+                f._set_error(exc)
+            raise
+        for f, r in zip(futures, results):
+            f._set(r)

@@ -293,11 +293,11 @@ def test_engine_filtered_retrieve(lite_model):
         np.testing.assert_allclose(got[1], s_ref[0], atol=1e-5)
 
     # duplicate (user, filter) pairs dedup into one execution
-    before = len(engine.stats)
+    before = len(engine.call_stats)
     res2 = engine.retrieve([filtered, filtered])
     np.testing.assert_array_equal(res2[0][0], res2[1][0])
-    assert engine.stats[-1]["retrieve_users"] == 1
-    assert len(engine.stats) == before + 1
+    assert engine.call_stats[-1]["retrieve_users"] == 1
+    assert len(engine.call_stats) == before + 1
 
 
 def test_engine_mask_cache_hits_on_repeat_filters(lite_model):
@@ -328,7 +328,7 @@ def test_engine_mask_cache_hits_on_repeat_filters(lite_model):
         seq_surfaces=base.seq_surfaces, k=16, exclude_ids=seen[::-1].copy())
     engine.retrieve([permuted])
     assert engine.mask_misses == 2 and engine.mask_hits == 4
-    assert engine.stats[-1]["mask_hits"] == 4                  # telemetry
+    assert engine.call_stats[-1]["mask_hits"] == 4             # telemetry
     # re-attach -> cached rows dropped, repacked on next use
     engine.attach_index(index, k=16, chunk_rows=256)
     engine.retrieve([filtered])

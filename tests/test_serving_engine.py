@@ -212,7 +212,7 @@ def test_oversized_request_list_is_chunked(early_model):
     engine = ServingEngine(model, params, max_unique=4, max_candidates=16)
     out = engine.score(reqs)
     assert len(out) == 9 and all(o.shape == (3, 3) for o in out)
-    assert len(engine.stats) >= 3                        # several chunks
+    assert len(engine.call_stats) >= 3                   # several chunks
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,515 @@
+"""The unified async serving API (this PR's tentpole): one ``submit()``
+front door, mixed-workload flushes with a shared encode pass, the fused
+retrieve->rank lane, the read-atomic ``engine.stats()`` snapshot, and the
+deprecation shims.
+
+Acceptance points covered:
+  * ``RetrieveThenRankRequest`` via ``submit()`` == sequential
+    ``retrieve()`` then ``score()`` (bit-identical), with fewer encoder
+    invocations for overlapping users and zero post-warmup compiles;
+  * one flush mixing rank + retrieve + two-stage requests with
+    overlapping users encodes each unique user exactly once and matches
+    the per-lane sequential paths;
+  * ``score()``/``retrieve()`` are bit-identical shims over
+    ``submit_many``; ``MicroBatcher``/``InferenceRouter`` forward with a
+    one-time DeprecationWarning;
+  * ``repro.serving.__all__`` is pinned;
+  * concurrent ``submit`` + ``stats()`` readers never observe torn or
+    negative counters.
+"""
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCAT
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.models.config import get_config
+from repro.retrieval import IndexBuilder
+from repro.serving import (ContextCache, GenerateRequest, RankRequest,
+                           RetrieveRequest, RetrieveThenRankRequest,
+                           ServingEngine, TwoStageResult)
+
+L = 16
+N_ITEMS = 500
+TOP_K = 8
+CAND_DIM = 32
+
+
+@pytest.fixture(scope="module")
+def lite_model():
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    cfg = FinetuneConfig(variant="lite-last", seq_len=L)
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def item_index(lite_model):
+    model, params = lite_model
+    return IndexBuilder(model, params, batch_size=256).build(0, N_ITEMS)
+
+
+def _feats(ids):
+    """Deterministic per-item ranking features — both the fused path and
+    the sequential reference must feed the ranker identical bytes."""
+    return np.stack([np.random.RandomState(int(i) % 4999).randn(CAND_DIM)
+                     for i in np.asarray(ids)]).astype(np.float32)
+
+
+def _user(seed):
+    r = np.random.RandomState(seed)
+    return (r.randint(0, N_ITEMS, L), r.randint(0, 6, L),
+            r.randint(0, 3, L), r.randn(32).astype(np.float32))
+
+
+def _mk_rank(seed, cand_rng, n_cand=3):
+    i, a, s, uf = _user(seed)
+    ids = cand_rng.randint(0, N_ITEMS, n_cand)
+    return RankRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                       cand_ids=ids, cand_feats=_feats(ids), user_feats=uf)
+
+
+def _mk_retrieve(seed, k=TOP_K, exclude=False):
+    i, a, s, _ = _user(seed)
+    return RetrieveRequest(seq_ids=i, seq_actions=a, seq_surfaces=s, k=k,
+                           exclude_ids=np.unique(i) if exclude else None)
+
+
+def _mk_two_stage(seed, k=TOP_K, exclude=False):
+    i, a, s, uf = _user(seed)
+    return RetrieveThenRankRequest(
+        seq_ids=i, seq_actions=a, seq_surfaces=s, user_feats=uf, k=k,
+        exclude_ids=np.unique(i) if exclude else None)
+
+
+def _mk_engine(lite_model, item_index, *, warm=True, attach=True, **kw):
+    model, params = lite_model
+    kw.setdefault("cache", ContextCache(capacity=256))
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=32,
+                           **kw)
+    if attach:
+        engine.attach_index(item_index, k=TOP_K, chunk_rows=256)
+        engine.attach_features(_feats)
+    if warm:
+        engine.warmup()
+    return engine
+
+
+def _count_encodes(engine):
+    """Wrap ``_encode_rows`` to record how many user rows each executor
+    invocation encodes; -> the mutable list of per-call row counts."""
+    counts = []
+    orig = engine._encode_rows
+
+    def counting(kind, ids, acts, surfs):
+        counts.append(len(ids))
+        return orig(kind, ids, acts, surfs)
+
+    engine._encode_rows = counting
+    return counts
+
+
+# ---------------------------------------------------------------------------
+# public surface
+# ---------------------------------------------------------------------------
+
+def test_public_surface_pinned():
+    """The serving package exports exactly the typed requests, the engine
+    (+ front-door collaborators), and the deprecation shims."""
+    import repro.serving as serving
+    assert serving.__all__ == [
+        "RankRequest", "RetrieveRequest", "RetrieveThenRankRequest",
+        "GenerateRequest", "TwoStageResult",
+        "ServingEngine", "ContextCache", "Future",
+        "MicroBatcher", "Ticket", "InferenceRouter", "UserEmbeddingCache",
+    ]
+    for name in serving.__all__:
+        assert getattr(serving, name) is not None
+
+
+def test_unknown_request_type_rejected(lite_model, item_index):
+    """A bad request fails at submit() — it must never enter the queue
+    where its failure would poison other callers' coalesced flush."""
+    engine = _mk_engine(lite_model, item_index, warm=False, attach=False)
+    with pytest.raises(TypeError, match="not a serving request type"):
+        engine.submit(object())
+    # shim traffic (MicroBatcher bypasses submit) fails at the flush gate
+    with pytest.raises(TypeError, match="not a serving request type"):
+        engine._flush_requests([object()])
+
+
+# ---------------------------------------------------------------------------
+# submit() front door + batch shims
+# ---------------------------------------------------------------------------
+
+def test_submit_resolves_like_score(lite_model, item_index):
+    """A submitted RankRequest's future resolves (result() forces the
+    flush) to exactly what the batch shim returns."""
+    rng = np.random.RandomState(0)
+    reqs = [_mk_rank(s, rng) for s in (1, 2, 1)]
+    engine = _mk_engine(lite_model, item_index, warm=False, attach=False)
+    ref = _mk_engine(lite_model, item_index, warm=False,
+                     attach=False).score(reqs)
+    futs = [engine.submit(r) for r in reqs]
+    assert not any(f.done() for f in futs)
+    out = [f.result() for f in futs]            # first result() flushes all
+    assert all(f.done() for f in futs)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert engine.scheduler.flushes == 1
+    assert engine.stats()["lanes"]["rank"] == 3
+
+
+def test_score_shim_bit_identical_to_rank_lane(lite_model, item_index):
+    """score() is a thin shim over submit_many: same chunking, same
+    executors, bit-identical results to calling the rank lane directly."""
+    rng = np.random.RandomState(1)
+    reqs = [_mk_rank(s, rng, n_cand=4) for s in (1, 2, 3, 1, 4)]
+    via_shim = _mk_engine(lite_model, item_index, warm=False,
+                          attach=False).score(reqs)
+    direct = _mk_engine(lite_model, item_index, warm=False,
+                        attach=False)._score_batch(reqs)
+    for a, b in zip(via_shim, direct):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_retrieve_shim_bit_identical_to_lane(lite_model, item_index):
+    reqs = [_mk_retrieve(s) for s in (1, 2, 1)] + [_mk_retrieve(3, k=5)]
+    via_shim = _mk_engine(lite_model, item_index).retrieve(reqs)
+    direct = _mk_engine(lite_model, item_index)._retrieve_batch(reqs)
+    for (ia, sa), (ib, sb) in zip(via_shim, direct):
+        np.testing.assert_array_equal(ia, ib)
+        np.testing.assert_array_equal(sa, sb)
+
+
+def test_engine_background_flusher(lite_model, item_index):
+    """max_wait_ms on the ENGINE starts the background flusher: a
+    submitted request resolves without anyone calling flush()/result()."""
+    rng = np.random.RandomState(2)
+    reqs = [_mk_rank(s, rng) for s in (1, 2)]
+    ref = _mk_engine(lite_model, item_index, warm=False,
+                     attach=False).score(reqs)
+    with _mk_engine(lite_model, item_index, warm=False, attach=False,
+                    max_wait_ms=5.0) as engine:
+        futs = [engine.submit(r) for r in reqs]
+        assert all(f._done.wait(30.0) for f in futs)     # no manual flush
+        for f, r in zip(futs, ref):
+            np.testing.assert_array_equal(f.result(), r)
+
+
+# ---------------------------------------------------------------------------
+# fused two-stage lane
+# ---------------------------------------------------------------------------
+
+def _sequential_two_stage(engine, reqs):
+    """The unfused reference: retrieve(), build the RankRequests by hand,
+    score() — what examples/retrieve_topk.py stage 2 does."""
+    retrieved = engine.retrieve([RetrieveRequest(
+        seq_ids=r.seq_ids, seq_actions=r.seq_actions,
+        seq_surfaces=r.seq_surfaces, k=r.k, exclude_ids=r.exclude_ids,
+        allow_surfaces=r.allow_surfaces) for r in reqs])
+    probs = engine.score([RankRequest(
+        seq_ids=r.seq_ids, seq_actions=r.seq_actions,
+        seq_surfaces=r.seq_surfaces, cand_ids=ids, cand_feats=_feats(ids),
+        user_feats=r.user_feats)
+        for r, (ids, _) in zip(reqs, retrieved)])
+    return retrieved, probs
+
+
+def test_two_stage_matches_sequential(lite_model, item_index):
+    """ACCEPTANCE: RetrieveThenRankRequest via submit() == sequential
+    retrieve()+score(), bit-identical, with fewer encoder invocations for
+    overlapping users and zero post-warmup compiles."""
+    # 10 requests, 6 unique users (> max_unique=4 -> several groups)
+    seeds = (1, 2, 3, 1, 4, 5, 6, 2, 1, 3)
+    reqs = [_mk_two_stage(s, exclude=True) for s in seeds]
+    fused = _mk_engine(lite_model, item_index)
+    counts = _count_encodes(fused)
+    futs = fused.submit_many(reqs)
+    fused.flush()
+    res = [f.result() for f in futs]
+    assert all(isinstance(r, TwoStageResult) for r in res)
+    # each of the 6 unique users is encoded exactly once across BOTH
+    # stages — fewer invocations than the 10 submitted requests
+    assert sum(counts) == len(set(seeds)) < len(reqs)
+    assert fused.registry.compiles_after_warmup == 0
+
+    seq_engine = _mk_engine(lite_model, item_index)
+    retrieved, probs = _sequential_two_stage(seq_engine, reqs)
+    assert seq_engine.registry.compiles_after_warmup == 0
+    for r, (ids, scores), p in zip(res, retrieved, probs):
+        np.testing.assert_array_equal(r.item_ids, ids)
+        np.testing.assert_array_equal(r.retrieval_scores, scores)
+        np.testing.assert_array_equal(r.probs, p)
+    # per-stage pipeline telemetry for the fused flush
+    ps = fused.pipeline_stats[-1]
+    assert ps.lane == "two_stage" and ps.chunks >= 2
+    assert ps.retrieve_ms > 0
+    assert 0 <= ps.overlap_fraction <= 1
+    assert ps.as_dict()["lane"] == "two_stage"
+
+
+def test_two_stage_depth1_bit_identical(lite_model, item_index):
+    """The fused schedule's escape hatch: pipeline_depth=1 runs each group
+    to completion and must match depth-2 bit-for-bit."""
+    reqs = [_mk_two_stage(s) for s in (1, 2, 3, 4, 5, 1)]
+    pipe = _mk_engine(lite_model, item_index, pipeline_depth=2)
+    sync = _mk_engine(lite_model, item_index, pipeline_depth=1)
+    fa, fb = pipe.submit_many(reqs), sync.submit_many(reqs)
+    pipe.flush()
+    sync.flush()
+    a, b = [f.result() for f in fa], [f.result() for f in fb]
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x.item_ids, y.item_ids)
+        np.testing.assert_array_equal(x.retrieval_scores, y.retrieval_scores)
+        np.testing.assert_array_equal(x.probs, y.probs)
+    assert sync.pipeline_stats[-1].depth == 1
+
+
+def test_two_stage_coarse_key_fn_keeps_user_feats(lite_model, item_index):
+    """REGRESSION: a coarse cache ``key_fn`` shares cached embeddings
+    across sequences, but the fused rank stage must still dedupe its
+    user_feats rows by FULL sequence identity (build_plan's Ψ rule) —
+    collapsing them by key_fn would rank one request's candidates with
+    another request's user_feats, diverging from the sequential path."""
+    model, params = lite_model
+
+    def mk_eng():
+        e = ServingEngine(model, params, max_unique=4, max_candidates=32,
+                          cache=ContextCache(64),
+                          key_fn=lambda r: b"same-user")
+        e.attach_index(item_index, k=TOP_K, chunk_rows=256)
+        e.attach_features(_feats)
+        return e
+
+    reqs = [_mk_two_stage(1), _mk_two_stage(2)]   # distinct seqs + feats
+    fused = mk_eng()
+    futs = fused.submit_many(reqs)
+    fused.flush()
+    res = [f.result() for f in futs]
+    retrieved, probs = _sequential_two_stage(mk_eng(), reqs)
+    for r, (ids, scores), p in zip(res, retrieved, probs):
+        np.testing.assert_array_equal(r.item_ids, ids)
+        np.testing.assert_array_equal(r.probs, p)
+
+
+def test_two_stage_needs_features(lite_model, item_index):
+    engine = _mk_engine(lite_model, item_index, warm=False)
+    engine._features_fn = None
+    with pytest.raises(ValueError, match="candidate features"):
+        engine.submit(_mk_two_stage(1))          # fail-fast at submit
+    # a request-level cand_feats_fn fills the gap
+    r = _mk_two_stage(2)
+    r.cand_feats_fn = _feats
+    out = engine.submit(r).result()
+    assert out.probs.shape[0] == TOP_K
+
+
+# ---------------------------------------------------------------------------
+# mixed-workload flush
+# ---------------------------------------------------------------------------
+
+def test_mixed_flush_single_encode_and_parity(lite_model, item_index):
+    """SATELLITE: one flush containing rank + retrieve + two-stage
+    requests with overlapping users encodes each unique user ONCE, matches
+    the per-lane sequential results, and compiles nothing after warmup."""
+    rng = np.random.RandomState(3)
+    # user 1 appears in all three lanes; users 2/3 in two lanes each
+    rank_reqs = [_mk_rank(1, rng), _mk_rank(2, rng, n_cand=5)]
+    ret_reqs = [_mk_retrieve(1), _mk_retrieve(3), _mk_retrieve(2)]
+    two_reqs = [_mk_two_stage(1), _mk_two_stage(3)]
+    mixed = [rank_reqs[0], ret_reqs[0], two_reqs[0], ret_reqs[1],
+             rank_reqs[1], two_reqs[1], ret_reqs[2]]
+
+    engine = _mk_engine(lite_model, item_index)
+    counts = _count_encodes(engine)
+    futs = engine.submit_many(mixed)
+    engine.flush()
+    out = [f.result() for f in futs]
+    assert engine.scheduler.flushes == 1
+    assert sum(counts) == 3                  # users 1, 2, 3: once each
+    assert engine.registry.compiles_after_warmup == 0
+    snap = engine.stats()
+    assert snap["shared_encode_users"] == 3
+    assert snap["lanes"] == {"rank": 2, "retrieve": 3, "two_stage": 2,
+                             "generate": 0}
+
+    # parity: each lane against a sequential engine running one lane
+    ref = _mk_engine(lite_model, item_index)
+    ref_rank = ref.score(rank_reqs)
+    ref_ret = ref.retrieve(ret_reqs)
+    ref_two, ref_two_probs = _sequential_two_stage(
+        _mk_engine(lite_model, item_index), two_reqs)
+    np.testing.assert_array_equal(out[0], ref_rank[0])
+    np.testing.assert_array_equal(out[4], ref_rank[1])
+    for got, (ids, scores) in zip((out[1], out[3], out[6]), ref_ret):
+        np.testing.assert_array_equal(got[0], ids)
+        np.testing.assert_array_equal(got[1], scores)
+    for got, (ids, scores), p in zip((out[2], out[5]), ref_two,
+                                     ref_two_probs):
+        np.testing.assert_array_equal(got.item_ids, ids)
+        np.testing.assert_array_equal(got.retrieval_scores, scores)
+        np.testing.assert_array_equal(got.probs, p)
+
+
+# ---------------------------------------------------------------------------
+# generate lane
+# ---------------------------------------------------------------------------
+
+class _StubGenerator:
+    def __init__(self):
+        self.calls = 0
+
+    def generate(self, prompts, *, rng=None):
+        self.calls += 1
+        return np.asarray(prompts)[:, :4] + (0 if rng is None else 1)
+
+
+def test_generate_request_routed(lite_model, item_index):
+    engine = _mk_engine(lite_model, item_index, warm=False, attach=False)
+    with pytest.raises(ValueError, match="attach_generator"):
+        engine.submit(GenerateRequest(prompts=np.ones((2, 8), np.int32)))
+    gen = _StubGenerator()
+    engine.attach_generator(gen)
+    prompts = np.arange(16, dtype=np.int32).reshape(2, 8)
+    out = engine.submit(GenerateRequest(prompts=prompts)).result()
+    np.testing.assert_array_equal(out, prompts[:, :4])
+    out_rng = engine.submit(GenerateRequest(prompts=prompts, rng=1)).result()
+    np.testing.assert_array_equal(out_rng, prompts[:, :4] + 1)
+    assert gen.calls == 2
+    assert engine.stats()["lanes"]["generate"] == 2
+
+
+# ---------------------------------------------------------------------------
+# telemetry snapshot under concurrency
+# ---------------------------------------------------------------------------
+
+def test_stats_snapshot_concurrent_submits(lite_model, item_index):
+    """SATELLITE: concurrent submit() traffic + stats() readers — no
+    torn, negative, or non-monotonic counters, and no post-warmup
+    compiles.  (Counter writes and the snapshot read share the registry
+    RLock.)"""
+    engine = _mk_engine(lite_model, item_index)
+    rng = np.random.RandomState(4)
+    errors = []
+    snaps = []
+    stop = threading.Event()
+
+    def writer(tid):
+        try:
+            for i in range(6):
+                futs = engine.submit_many(
+                    [_mk_rank(1 + (tid + i) % 4, np.random.RandomState(tid)),
+                     _mk_retrieve(1 + (tid + i) % 4),
+                     _mk_two_stage(1 + (tid + i) % 4)])
+                engine.flush()
+                for f in futs:
+                    f.result()
+        except BaseException as e:          # pragma: no cover - diagnostic
+            errors.append(e)
+
+    def reader():
+        import time as _time
+        try:
+            while not stop.is_set():
+                snaps.append(engine.stats())
+                _time.sleep(2e-3)
+        except BaseException as e:          # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
+    r = threading.Thread(target=reader)
+    r.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120.0)
+    stop.set()
+    r.join(30.0)
+    snaps.append(engine.stats())
+    assert not errors
+    prev_hits = prev_flushes = -1
+    for s in snaps:
+        ex, cache, masks = s["executors"], s["cache"], s["masks"]
+        assert ex["compiles_after_warmup"] == 0
+        for v in (ex["hits"], ex["compiles"], cache["hits"],
+                  cache["misses"], masks["hits"], masks["misses"],
+                  s["scheduler"]["flushes"], s["scheduler"]["coalesced"],
+                  *s["lanes"].values()):
+            assert v >= 0
+        # monotonicity: snapshots are taken by one reader thread, so each
+        # cumulative counter may only grow between successive snapshots
+        assert ex["hits"] >= prev_hits
+        assert s["scheduler"]["flushes"] >= prev_flushes
+        prev_hits, prev_flushes = ex["hits"], s["scheduler"]["flushes"]
+    final = snaps[-1]
+    assert final["scheduler"]["coalesced"] == 4 * 6 * 3
+    assert final["lanes"]["rank"] == final["lanes"]["retrieve"] == \
+        final["lanes"]["two_stage"] == 24
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_microbatcher_shim_warns_and_matches(lite_model, item_index):
+    """MicroBatcher forwards to the engine's mixed-workload flush (the
+    submit_many path): identical results, one DeprecationWarning."""
+    import repro.serving.microbatch as mb_mod
+    from repro.serving import _deprecation
+    rng = np.random.RandomState(5)
+    reqs = [_mk_rank(s, rng) for s in (1, 2, 1, 3)]
+    ref = _mk_engine(lite_model, item_index, warm=False, attach=False) \
+        .score(reqs)
+    engine = _mk_engine(lite_model, item_index, warm=False, attach=False)
+    _deprecation._warned.discard("microbatch")
+    with pytest.warns(DeprecationWarning, match="engine.submit"):
+        mb = mb_mod.MicroBatcher(engine, max_requests=64)
+    tickets = [mb.submit(r) for r in reqs]
+    mb.flush()
+    for t, r in zip(tickets, ref):
+        np.testing.assert_array_equal(t.result(), r)
+    assert mb.flushes == 1 and mb.coalesced == 4
+    # warning fires once per process, not per construction
+    import warnings as _warnings
+    with _warnings.catch_warnings(record=True) as record:
+        _warnings.simplefilter("always")
+        mb_mod.MicroBatcher(engine, max_requests=64)
+    assert not any(issubclass(w.category, DeprecationWarning)
+                   for w in record)
+    # a MicroBatcher can even carry retrieval traffic now (typed lanes)
+    engine.attach_index(
+        IndexBuilder(*lite_model, batch_size=256).build(0, N_ITEMS),
+        k=TOP_K, chunk_rows=256)
+    ids, scores = mb.submit(_mk_retrieve(1)).result()
+    assert len(ids) == TOP_K
+
+
+def test_inference_router_shim_warns_and_matches(lite_model, item_index):
+    import repro.serving.router as router_mod
+    from repro.serving import _deprecation
+    model, params = lite_model
+    rng = np.random.RandomState(6)
+    reqs = [_mk_rank(s, rng) for s in (1, 2, 1)]
+    ref = _mk_engine(lite_model, item_index, warm=False, attach=False) \
+        .score(reqs)
+    _deprecation._warned.discard("router")
+    with pytest.warns(DeprecationWarning, match="submit"):
+        router = router_mod.InferenceRouter(model, params, max_unique=4,
+                                            max_candidates=32)
+    out = router.score(reqs)
+    for a, b in zip(out, ref):
+        np.testing.assert_array_equal(a, b)
+    assert router.stats[-1]["unique_users"] == 2
