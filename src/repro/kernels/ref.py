@@ -47,6 +47,25 @@ def int8_dequant_ref(packed, scale, bias):
     return codes * scale.astype(jnp.float32) + bias.astype(jnp.float32)
 
 
+def slab_gather_ref(codes, scale, slots, *, bits=8, out_dtype=jnp.float32):
+    """KV-slab slot gather + dequant oracle (``kernels.slab_gather``).
+
+    codes: (S, R, Wq) int8 arena rows — Wq = D for int8; for int4, Wq =
+    D//2 with code d in byte d//2, nibble d%2, sign-extended; scale:
+    (S, R, 1) fp16; slots: (N,) int32.  -> (N, R, D) with
+    ``out[i] = codes[slots[i]] * scale[slots[i]]``."""
+    c = jnp.take(jnp.asarray(codes), jnp.asarray(slots), axis=0)
+    s = jnp.take(jnp.asarray(scale), jnp.asarray(slots), axis=0)
+    if bits == 4:
+        w = c.astype(jnp.int32) & 0xFF
+        sext = lambda n: (n ^ 8) - 8
+        c = jnp.stack([sext(w & 0xF), sext((w >> 4) & 0xF)],
+                      axis=-1).reshape(c.shape[0], c.shape[1],
+                                       c.shape[2] * 2)
+    return (c.astype(jnp.float32)
+            * s.astype(jnp.float32)).astype(out_dtype)
+
+
 def retrieval_topk_ref(packed, scale, bias, queries, *, k, bits=4,
                        mask=None):
     """Corpus retrieval oracle: dequantize the WHOLE packed corpus to fp32,

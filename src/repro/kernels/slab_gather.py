@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: fused slot-gather + dequantization over a KV slab
+arena (serving tentpole — see ``serving/kv_slab.py``).
+
+The device-resident ContextCache stores each user's context KV as one SLOT
+of a preallocated quantized arena, ``codes (S, R, Wq) + fp16 scale
+(S, R, 1)`` per leaf (R = reps*L*K rows per user, Wq = packed code words
+per row).  Assembling a request batch is a gather by slot id fused with
+the per-row dequantize — one HBM read of exactly the b_u needed slots, one
+HBM write of the fp batch, never touching the other million resident
+users.
+
+The slot ids ride as a SCALAR-PREFETCH operand
+(``pltpu.PrefetchScalarGridSpec``): the grid walks the batch axis and the
+index map reads ``slots[i]`` to aim each block DMA at the right arena
+slot, so the gather is expressed in the block pipeline itself rather than
+as a separate materialized ``jnp.take``.  int4 codes are bit-unpacked in
+VMEM with the same shift/mask scheme as ``kernels/int4_dequant.py``
+(code d -> byte d//2, nibble d%2, sign-extended).
+
+``slab_gather(..., impl="jnp")`` is the pure-jnp fallback (the default
+inside the serving executors on CPU hosts); ``impl="pallas"`` runs the
+kernel (``interpret=True`` everywhere in this repo).  Both match
+``kernels.ref.slab_gather_ref`` exactly.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.quant.kv_cache import dequantize_kv
+
+
+def _gather_dequant_kernel(slots_ref, codes_ref, scale_ref, o_ref, *,
+                           bits: int):
+    del slots_ref            # consumed by the index maps, not the body
+    codes = codes_ref[...].astype(jnp.int32)              # (1, R, Wq)
+    if bits == 4:
+        one, r, w = codes.shape
+        sext = lambda n: (n ^ 8) - 8
+        codes = jnp.stack([sext(codes & 0xF),
+                           sext((codes >> 4) & 0xF)],
+                          axis=-1).reshape(one, r, w * 2)
+    out = codes.astype(jnp.float32) * scale_ref[...].astype(jnp.float32)
+    o_ref[...] = out.astype(o_ref.dtype)
+
+
+def slab_gather(codes, scale, slots, *, bits: int = 8,
+                out_dtype=jnp.float32, impl: str = "jnp",
+                interpret: bool = True):
+    """codes: (S, R, Wq) int8 arena (Wq = D for int8, D//2 packed for
+    int4); scale: (S, R, 1) fp16; slots: (N,) int32 slot ids.
+    -> (N, R, D) dequantized rows, ``out[i] = dequant(codes[slots[i]])``."""
+    assert bits in (4, 8), bits
+    assert impl in ("jnp", "pallas"), impl
+    S, R, Wq = codes.shape
+    D = Wq * (2 if bits == 4 else 1)
+    if impl == "jnp":
+        c = jnp.take(codes, slots, axis=0)                # (N, R, Wq)
+        s = jnp.take(scale, slots, axis=0)                # (N, R, 1)
+        return dequantize_kv(c, s, out_dtype, bits=bits)
+    N = slots.shape[0]
+    kernel = functools.partial(_gather_dequant_kernel, bits=bits)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(N,),
+        in_specs=[pl.BlockSpec((1, R, Wq), lambda i, s: (s[i], 0, 0)),
+                  pl.BlockSpec((1, R, 1), lambda i, s: (s[i], 0, 0))],
+        out_specs=pl.BlockSpec((1, R, D), lambda i, s: (i, 0, 0)))
+    return pl.pallas_call(
+        kernel, grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((N, R, D), out_dtype),
+        interpret=interpret,
+    )(slots, codes, scale)

@@ -1,4 +1,5 @@
 from repro.quant.ptq import (QuantizedTable, quantize_table, dequantize_table,
                              relative_l2_error, compression_ratio,
                              quantized_lookup)
-from repro.quant.kv_cache import QuantizedKVCache
+from repro.quant.kv_cache import (QuantizedKVCache, dequantize_kv, pack_int4,
+                                  quantize_kv, unpack_int4)

@@ -17,18 +17,60 @@ import jax
 import jax.numpy as jnp
 
 
-def _quantize(x):
-    """x: (..., D) -> (int8 codes, fp16 scale (..., 1)).  Symmetric."""
+def quantize_kv(x, *, bits: int = 8):
+    """x: (..., D) -> (codes, fp16 scale (..., 1)).  Symmetric min-max,
+    zero-preserving, per-(slot, head) along the last axis.
+
+    bits=8: codes are int8 in [-127, 127], shape (..., D).
+    bits=4: codes are int8 nibble pairs in [-7, 7], PACKED two-per-byte
+    (code d lives in byte d//2, nibble d%2) -> shape (..., D//2)."""
+    assert bits in (4, 8), bits
+    qmax = 127.0 if bits == 8 else 7.0
     amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
-    scale = (amax / 127.0).astype(jnp.float16)
+    scale = (amax / qmax).astype(jnp.float16)
     sf = jnp.maximum(scale.astype(jnp.float32), 1e-8)
-    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / sf), -127, 127)
-    return codes.astype(jnp.int8), scale
+    codes = jnp.clip(jnp.round(x.astype(jnp.float32) / sf), -qmax, qmax)
+    codes = codes.astype(jnp.int8)
+    if bits == 4:
+        codes = pack_int4(codes)
+    return codes, scale
+
+
+def dequantize_kv(codes, scale, dtype, *, bits: int = 8):
+    """Inverse of :func:`quantize_kv` (int4 codes are unpacked first)."""
+    assert bits in (4, 8), bits
+    if bits == 4:
+        codes = unpack_int4(codes)
+    return (codes.astype(jnp.float32)
+            * scale.astype(jnp.float32)).astype(dtype)
+
+
+def pack_int4(codes):
+    """(..., D) int8 codes in [-8, 7] -> (..., D//2) int8, two codes per
+    byte: code d -> byte d//2, nibble d%2 (low nibble = even d)."""
+    assert codes.shape[-1] % 2 == 0, codes.shape
+    w = codes.astype(jnp.int32)
+    lo, hi = w[..., 0::2] & 0xF, w[..., 1::2] & 0xF
+    packed = lo | (hi << 4)                      # [0, 255]
+    return (packed - jnp.where(packed > 127, 256, 0)).astype(jnp.int8)
+
+
+def unpack_int4(packed):
+    """(..., W) int8 -> (..., 2W) int8 sign-extended nibble codes."""
+    w = packed.astype(jnp.int32) & 0xFF
+    sext = lambda n: (n ^ 8) - 8
+    both = jnp.stack([sext(w & 0xF), sext((w >> 4) & 0xF)], axis=-1)
+    return both.reshape(*packed.shape[:-1], packed.shape[-1] * 2) \
+               .astype(jnp.int8)
+
+
+# back-compat aliases (original int8-only spellings)
+def _quantize(x):
+    return quantize_kv(x, bits=8)
 
 
 def _dequantize(codes, scale, dtype):
-    return (codes.astype(jnp.float32)
-            * scale.astype(jnp.float32)).astype(dtype)
+    return dequantize_kv(codes, scale, dtype, bits=8)
 
 
 @dataclasses.dataclass

@@ -42,10 +42,18 @@ class ContextCache:
     Args:
       capacity: max per-user entries.
       memo_capacity: max memoized packed device batches (0 disables the
-        memo — the PR-3 behaviour)."""
+        memo — the PR-3 behaviour).
+      on_evict: optional ``fn(key, value)`` called whenever an entry's
+        value leaves the cache — capacity eviction, explicit
+        :meth:`evict_lru`, or replacement by a ``put`` of the same key.
+        The KV-slab engine uses it to return the entry's device slot to
+        the slab free list (value-identity bookkeeping lives with the
+        owner of the values, not the cache)."""
 
-    def __init__(self, capacity: int = 4096, memo_capacity: int = 32):
+    def __init__(self, capacity: int = 4096, memo_capacity: int = 32,
+                 on_evict=None):
         self.capacity = capacity
+        self.on_evict = on_evict
         self._d: OrderedDict = OrderedDict()
         self._bytes: dict = {}
         self.hits = 0
@@ -95,15 +103,33 @@ class ContextCache:
         self._invalidate_user_memos(key)
         if key in self._d:
             self.nbytes -= self._bytes.pop(key, 0)
+            if self.on_evict is not None:
+                self.on_evict(key, self._d[key])
         self._d[key] = value
         self._d.move_to_end(key)
         nb = ctx_nbytes(value)
         self._bytes[key] = nb
         self.nbytes += nb
         while len(self._d) > self.capacity:
-            old, _ = self._d.popitem(last=False)
-            self.nbytes -= self._bytes.pop(old, 0)
-            self._invalidate_user_memos(old)
+            self._evict_oldest()
+
+    def _evict_oldest(self):
+        old, val = self._d.popitem(last=False)
+        self.nbytes -= self._bytes.pop(old, 0)
+        self._invalidate_user_memos(old)
+        if self.on_evict is not None:
+            self.on_evict(old, val)
+
+    def evict_lru(self, n: int = 1) -> int:
+        """Explicitly evict up to ``n`` least-recently-used entries (memo
+        invalidation and ``on_evict`` fire exactly as for capacity
+        eviction).  -> number actually evicted.  The slab engine calls
+        this to recycle device slots when the free list runs dry."""
+        done = 0
+        while done < n and self._d:
+            self._evict_oldest()
+            done += 1
+        return done
 
     # -- device-side pack memo ---------------------------------------------
     def memo_get(self, memo_key) -> Optional[Any]:

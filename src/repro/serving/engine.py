@@ -35,10 +35,21 @@ executor the engine can ever dispatch; steady-state traffic — including a
 mixed-shape request stream — then runs with zero fresh XLA compiles
 (``registry.compiles_after_warmup == 0``).
 
-The cached early-fusion path always round-trips contexts through per-user
-host slices (``ctx_slice``/``ctx_pack``), so a cache-hit pass feeds the
-crossing executor the exact same bytes as the pass that populated the
-cache: hit and miss scoring agree bit-for-bit on the same bucket.
+The cached early-fusion path has two backing stores.  The HOST-PACK path
+round-trips contexts through per-user host slices (``ctx_slice_batch`` /
+``ctx_pack``), so a cache-hit pass feeds the crossing executor the exact
+same bytes as the pass that populated the cache: hit and miss scoring
+agree bit-for-bit on the same bucket.  With ``slab_slots > 0`` the
+DEVICE-RESIDENT KV SLAB replaces it (``serving/kv_slab.py``): contexts
+live quantized (int8 / opt-in int4, per-(slot, head) fp16 scales from
+``quant/kv_cache.py``) in preallocated per-leaf device arenas, puts are
+donated ``.at[slots].set`` scatters, and batch assembly is a jitted
+slot-id gather with the dequant fused in (``kernels/slab_gather.py``) —
+the hit path never touches ``ctx_slice``/``ctx_pack`` or H2D, and evicts
+are pure host bookkeeping (free-list push).  The ``slab_dtype="fp16"``
+escape hatch stores the native ctx dtype and is bit-identical to the
+host-pack path; the ContextCache still owns LRU order and keys, with
+cache eviction returning slots through its ``on_evict`` hook.
 
 ``score`` runs as a DEPTH-2 HOST/DEVICE PIPELINE: every chunk is split
 into prepare (host: plan + cache + pack + H2D dispatch) -> launch (async
@@ -53,7 +64,11 @@ PACK MEMO short-circuits ``ctx_slice``/``ctx_pack``/H2D for exact-repeat
 batches, ``rotate_replace`` engines cache contexts in the pre-rotated
 fixed-L layout (``ctx_rotate``) so crossing skips the per-call rotation,
 and packed per-chunk retrieval filter masks are memoized per
-``ItemFilter`` fingerprint.
+``ItemFilter`` fingerprint.  The pack memo keys on the UNORDERED unique-
+user set: a permuted repeat batch is still a hit, served by relabelling
+``inverse_idx``/``user_feats`` into the memoized row order on host
+(bit-identical — the crossing consumes per-user rows only through
+``inverse_idx`` gathers).
 """
 from __future__ import annotations
 
@@ -67,10 +82,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core.dcat import ctx_pack, ctx_rotate, ctx_slice
+from repro.core.dcat import ctx_pack, ctx_rotate, ctx_slice_batch
 from repro.core.finetune import PinFMRankingModel
 from repro.serving.context_cache import ContextCache
 from repro.serving.executors import ExecutorRegistry
+from repro.serving.kv_slab import KVSlab, SLAB_DTYPES
 from repro.serving.plan import (BatchPlan, BucketLadder, GenerateRequest,
                                 PipelineStats, RankRequest, RetrieveRequest,
                                 RetrieveThenRankRequest, TwoStageResult,
@@ -124,6 +140,15 @@ class ServingEngine:
         at ``max_pending`` queued requests; ``max_wait_ms`` starts the
         background flusher bounding the oldest request's age (the old
         ``MicroBatcher(max_wait_ms=...)`` behaviour, now engine-owned).
+      slab_slots: > 0 enables the device-resident KV slab backing store
+        for the early-fusion ContextCache (``serving/kv_slab.py``):
+        ``slab_slots`` resident users per device, quantized per
+        ``slab_dtype`` ("int8", "int4", or the bit-identical "fp16"
+        escape hatch storing the native ctx dtype).  Requires a cache and
+        an early-fusion variant; must be >= max_unique so a flush can
+        always seat its own unique users.  ``slab_gather_impl`` picks the
+        fused gather backend ("jnp" | "pallas", see
+        ``kernels/slab_gather.py``).
 
     Invariants:
       * ZERO-RECOMPILE CONTRACT — after :meth:`warmup` (plus
@@ -145,7 +170,9 @@ class ServingEngine:
                  min_unique: int = 1, min_candidates: int = 8,
                  cache: Optional[ContextCache] = None, key_fn=None,
                  pipeline_depth: int = 2,
-                 max_pending: int = 32, max_wait_ms: Optional[float] = None):
+                 max_pending: int = 32, max_wait_ms: Optional[float] = None,
+                 slab_slots: int = 0, slab_dtype: str = "int8",
+                 slab_gather_impl: str = "jnp"):
         self.model, self.params = model, params
         self.variant = model.cfg.variant
         self.lite = self.variant in LITE_VARIANTS
@@ -175,6 +202,28 @@ class ServingEngine:
             and all(k in ("attn", "moe")
                     for k in model.pinfm.bb.block_kinds()))
         self._ctx_tag = "rot" if self._ctx_rot else "full"
+        # -- device-resident KV slab (built lazily at the first known L) --
+        if slab_dtype not in SLAB_DTYPES:
+            raise ValueError(f"slab_dtype={slab_dtype!r}: expected one of "
+                             f"{SLAB_DTYPES}")
+        if slab_slots:
+            if self.lite:
+                raise ValueError("slab_slots needs an early-fusion variant "
+                                 f"(ctx KV to store); got {self.variant!r}")
+            if cache is None:
+                raise ValueError("slab_slots needs a ContextCache (it owns "
+                                 "LRU order and slot->user keys)")
+            if slab_slots < max_unique:
+                raise ValueError(
+                    f"slab_slots={slab_slots} < max_unique={max_unique}: a "
+                    "single flush could need more slots than exist")
+            cache.on_evict = self._on_cache_evict
+        self._slab_slots = int(slab_slots)
+        self._slab_dtype = slab_dtype
+        self._slab_gather_impl = slab_gather_impl
+        self._slab: Optional[KVSlab] = None
+        self.slab_fallbacks = 0      # flushes at an L the slab isn't sized for
+        self.memo_perm_hits = 0      # pack-memo hits served via row remap
         self.registry = ExecutorRegistry()
         self.call_stats: List[dict] = []  # one entry per executed chunk
         # one RLock serializes every flush (scheduler-driven or via the
@@ -603,41 +652,152 @@ class ServingEngine:
                                  plan.batch["seq_surfaces"][miss_rows])
 
     def _prepare_early(self, plan: BatchPlan):
-        """Early-fusion prepare: per-user ctx KV from the ContextCache
-        (tagged with the layout: "full", or "rot" = pre-rotated fixed-L
-        ``rotate_replace`` layout), packed into the bucket batch — or the
-        whole packed DEVICE batch straight from the pack memo when this
-        exact unique-user tuple was packed before (skipping ctx_slice,
-        ctx_pack AND the H2D transfer)."""
+        """Early-fusion prepare: per-user ctx KV from the ContextCache —
+        slot ids into the device slab when one is enabled, host pytrees
+        otherwise (tagged with the layout: "full", or "rot" = pre-rotated
+        fixed-L ``rotate_replace`` layout) — assembled into the bucket
+        batch by the fused slab gather / host ``ctx_pack``.  The pack memo
+        short-circuits assembly for any repeat of the same UNORDERED
+        unique-user set: an exact-order repeat reuses the memoized device
+        batch as-is; a permuted repeat reuses it through a host-side
+        ``inverse_idx``/``user_feats`` remap into the memoized row order
+        (bit-identical, and still zero context bytes moved)."""
+        slab = self._ensure_slab(plan.seq_len)
+        if slab is None and self._slab_slots:
+            self.slab_fallbacks += 1        # wrong-L traffic -> host path
+        want = 3 if slab is not None else 2
         values, miss_rows = self._lookup_users(plan.user_keys)
         # layout discipline: entries written by an engine with a different
-        # ctx layout (or a pre-layout cache) re-encode rather than mis-score
+        # ctx layout/backing store re-encode rather than mis-score
         for u in list(values):
             v = values[u]
-            if not (isinstance(v, tuple) and len(v) == 2
-                    and v[0] == self._ctx_tag):
+            ok = (isinstance(v, tuple) and len(v) == want
+                  and (v[:2] == ("slab", self._ctx_tag) if want == 3
+                       else v[0] == self._ctx_tag))
+            if not ok:
                 del values[u]
                 miss_rows.append(u)
         miss_rows.sort()
-        memo_key = (self._ctx_tag, plan.b_u, plan.seq_len,
-                    tuple(plan.user_keys))
-        packed_dev = self.cache.memo_get(memo_key)
-        if packed_dev is None:
-            if miss_rows:
-                ctxs = self._encode_missing(plan, miss_rows, "context")
-                for j, u in enumerate(miss_rows):
-                    sl = ctx_slice(ctxs, j)          # device sync (miss)
-                    if self._ctx_rot:
-                        sl = ctx_rotate(sl, self._n_new, plan.seq_len)
-                    self.cache.put(plan.user_keys[u], (self._ctx_tag, sl))
-                    values[u] = (self._ctx_tag, sl)
-            packed = ctx_pack([values[u][1] for u in range(plan.n_unique)],
-                              plan.b_u)
-            packed_dev = self._device(packed)
-            self.cache.memo_put(memo_key, plan.user_keys, packed_dev)
+        memo_key = (self._ctx_tag, plan.b_u, plan.seq_len, plan.user_set)
+        batch = self._cross_batch(plan.batch)
+        hit = self.cache.memo_get(memo_key)
+        if hit is not None:
+            stored_order, packed_dev = hit
+            if stored_order != tuple(plan.user_keys):
+                batch = self._remap_unique_rows(batch, stored_order, plan)
+                self.memo_perm_hits += 1
+        else:
+            packed_dev = (self._pack_slab(plan, values, miss_rows, slab)
+                          if slab is not None
+                          else self._pack_host(plan, values, miss_rows))
+            self.cache.memo_put(memo_key, plan.user_keys,
+                                (tuple(plan.user_keys), packed_dev))
         return ("cross", (plan.b_u, plan.b_c, plan.seq_len),
-                (self.params, self._device(self._cross_batch(plan.batch)),
-                 packed_dev))
+                (self.params, self._device(batch), packed_dev))
+
+    def _pack_host(self, plan: BatchPlan, values, miss_rows):
+        """Host-pack assembly: encode misses (ONE vectorized device->host
+        slice per flush — ``ctx_slice_batch`` — instead of a blocking
+        per-user loop), populate the cache, ``ctx_pack`` + H2D."""
+        if miss_rows:
+            ctxs = self._encode_missing(plan, miss_rows, "context")
+            if self._ctx_rot:
+                ctxs = ctx_rotate(ctxs, self._n_new, plan.seq_len)
+            sls = ctx_slice_batch(ctxs, len(miss_rows))  # one device sync
+            for j, u in enumerate(miss_rows):
+                self.cache.put(plan.user_keys[u], (self._ctx_tag, sls[j]))
+                values[u] = (self._ctx_tag, sls[j])
+        packed = ctx_pack([values[u][1] for u in range(plan.n_unique)],
+                          plan.b_u)
+        return self._device(packed)
+
+    def _pack_slab(self, plan: BatchPlan, values, miss_rows, slab: KVSlab):
+        """Slab assembly: encode misses straight into freshly allocated
+        arena slots (quantize + donated scatter, NO device sync, no host
+        ctx bytes), then gather the whole bucket by slot id with dequant
+        fused — the packed device batch without ctx_slice/ctx_pack/H2D."""
+        if miss_rows:
+            ctxs = self._encode_missing(plan, miss_rows, "context")
+            slots = self._alloc_slots(slab, len(miss_rows))
+            b_m = self.ladder_u.fit(len(miss_rows))
+            vec = np.full(b_m, slab.scratch, np.int32)
+            vec[:len(miss_rows)] = slots
+            slab.arenas = self.registry(
+                "slab_put", (b_m, plan.seq_len),
+                slab.arenas, ctxs, jnp.asarray(vec))
+            slab.puts += len(miss_rows)
+            for j, u in enumerate(miss_rows):
+                v = ("slab", self._ctx_tag, slots[j])
+                self.cache.put(plan.user_keys[u], v)
+                values[u] = v
+        vec = np.full(plan.b_u, slab.scratch, np.int32)
+        for u in range(plan.n_unique):
+            vec[u] = values[u][2]
+        out = self.registry("slab_gather", (plan.b_u, plan.seq_len),
+                            slab.arenas, jnp.asarray(vec))
+        slab.gathers += 1
+        return out
+
+    def _alloc_slots(self, slab: KVSlab, n: int):
+        """Take ``n`` free slots, evicting LRU cache entries to recycle
+        theirs when the free list runs dry.  Safe with respect to the
+        in-flight plan: its hit users were LRU-refreshed by
+        ``_lookup_users`` moments ago, so (with capacity >= max_unique)
+        eviction can only reach users outside the current flush."""
+        slots = slab.alloc(n)
+        while slots is None:
+            if self.cache.evict_lru(1) == 0:   # pragma: no cover - guarded
+                raise RuntimeError(
+                    f"KV slab exhausted: need {n} slots, "
+                    f"{len(slab.free)} free and nothing left to evict")
+            slots = slab.alloc(n)
+        return slots
+
+    def _on_cache_evict(self, key, value):
+        """ContextCache ``on_evict`` hook: when an evicted/replaced entry
+        owned a slab slot, push the slot back on the free list (the stale
+        device row is simply unreachable until reused)."""
+        if (self._slab is not None and isinstance(value, tuple)
+                and len(value) == 3 and value[0] == "slab"):
+            self._slab.release(value[2])
+
+    def _ensure_slab(self, L: int) -> Optional[KVSlab]:
+        """The slab for context length ``L`` — built (and its executors
+        registered) on first sight of a concrete L; None when the slab is
+        disabled or sized for a different L (those flushes fall back to
+        the host-pack path rather than reallocating arenas)."""
+        if not self._slab_slots:
+            return None
+        if self._slab is None:
+            self._slab = KVSlab(
+                self.model, self.params, seq_len=L,
+                slots=self._slab_slots, dtype=self._slab_dtype,
+                rotated=self._ctx_rot, n_new=self._n_new,
+                gather_impl=self._slab_gather_impl)
+            # the arena argument is DONATED: put updates slots in place
+            # instead of copying the whole arena every miss batch
+            self.registry.register("slab_put", self._slab.put_factory,
+                                   jit_kwargs={"donate_argnums": 0})
+            self.registry.register("slab_gather", self._slab.gather_factory)
+        return self._slab if self._slab.seq_len == L else None
+
+    @staticmethod
+    def _remap_unique_rows(batch, stored_order, plan: BatchPlan):
+        """Serve a PERMUTED pack-memo hit: relabel ``inverse_idx`` into
+        the memoized batch's row order and permute ``user_feats`` rows to
+        match.  Bit-identical to repacking — the crossing consumes
+        per-user rows (ctxs and user_feats alike) only through
+        ``inverse_idx`` gathers, so scores depend on which row each
+        candidate reads, never on row order itself."""
+        pos = {k: i for i, k in enumerate(stored_order)}
+        m = np.array([pos[k] for k in plan.user_keys], np.int32)
+        batch = dict(batch)
+        batch["inverse_idx"] = m[batch["inverse_idx"]]
+        uf = batch["user_feats"]
+        uf2 = np.zeros_like(uf)
+        uf2[m] = uf[:len(m)]
+        batch["user_feats"] = uf2
+        return batch
 
     # -- lite path: pooled-embedding cache (dedup-aware) --------------------
     def _prepare_lite(self, plan: BatchPlan):
@@ -1218,6 +1378,12 @@ class ServingEngine:
                 "executors": self.registry.telemetry(),
                 "cache": (self.cache.stats() if self.cache is not None
                           else None),
+                "memo_perm_hits": self.memo_perm_hits,
+                "slab": (dict(self._slab.stats(),
+                              fallbacks=self.slab_fallbacks,
+                              gather_hits=(self.cache.memo_hits
+                                           if self.cache is not None else 0))
+                         if self._slab is not None else None),
                 "masks": {"hits": self.mask_hits,
                           "misses": self.mask_misses,
                           "entries": len(self._mask_cache)},
@@ -1262,6 +1428,15 @@ class ServingEngine:
                 kind = "encode" if self.lite else "context"
                 ctxs = self.registry.warm(kind, (b_u, L), params,
                                           zi(b_u, L), zi(b_u, L), zi(b_u, L))
+                slab = None if self.lite else self._ensure_slab(L)
+                if slab is not None:
+                    # warm put + gather at every bucket against the shared
+                    # scratch slot — zero-recompile covers the slab path
+                    vec = jnp.full((b_u,), slab.scratch, jnp.int32)
+                    slab.arenas = self.registry.warm(
+                        "slab_put", (b_u, L), slab.arenas, ctxs, vec)
+                    self.registry.warm("slab_gather", (b_u, L),
+                                       slab.arenas, vec)
                 if self._ctx_rot and not self.lite:
                     # the cross executors consume the PRE-ROTATED layout
                     ctxs = ctx_rotate(ctxs, self._n_new, L)

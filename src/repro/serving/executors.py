@@ -32,6 +32,7 @@ class ExecutorRegistry:
 
     def __init__(self):
         self._factories: Dict[str, Callable] = {}
+        self._jit_kwargs: Dict[str, dict] = {}
         self._jitted: Dict[Tuple[str, Hashable], Callable] = {}
         self._executed: set = set()
         self._warmed: set = set()
@@ -46,9 +47,15 @@ class ExecutorRegistry:
         submitters can never observe torn counters."""
         return self._lock
 
-    def register(self, kind: str, factory: Callable):
+    def register(self, kind: str, factory: Callable, *,
+                 jit_kwargs: dict = None):
+        """``jit_kwargs`` are forwarded to ``jax.jit`` for every executor
+        of this kind — e.g. ``{"donate_argnums": 0}`` lets the KV-slab put
+        executor update its arena buffers in place instead of copying the
+        whole arena per call."""
         with self._lock:
             self._factories[kind] = factory
+            self._jit_kwargs[kind] = dict(jit_kwargs or {})
 
     def invalidate(self, kind: str):
         """Drop every jitted executor of ``kind`` — required when a factory
@@ -79,7 +86,8 @@ class ExecutorRegistry:
         with self._lock:
             fn = self._jitted.get(k)
             if fn is None:
-                fn = jax.jit(self._factories[kind](key))
+                fn = jax.jit(self._factories[kind](key),
+                             **self._jit_kwargs.get(kind, {}))
                 self._jitted[k] = fn
             if k in self._executed:
                 self.hits += 1

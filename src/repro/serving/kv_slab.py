@@ -1,0 +1,204 @@
+"""KVSlab: the device-resident quantized backing store of the ContextCache.
+
+The host-pack serving path keeps one numpy ctx pytree PER USER and
+reassembles device batches with ``ctx_slice``/``ctx_pack`` + an H2D copy
+per chunk.  The slab replaces that with one preallocated device ARENA per
+DCAT context leaf:
+
+  codes  (slots+1, reps, L', K, Wq) int8   Wq = D (int8) | D//2 (int4)
+  scale  (slots+1, reps, L', K, 1)  fp16   per-(slot, head) symmetric
+                                            min-max (quant/kv_cache.py)
+
+(or a single unquantized arena in the ``fp16`` escape-hatch mode — stored
+at the model's NATIVE ctx dtype so the escape hatch stays bit-identical
+to the host-pack path, as the house rule demands; on this repo's fp32
+models that is fp32).  One user's context is one SLOT of every arena:
+
+  * put   = quantize + ``.at[slots].set`` scatter (a jitted executor with
+    the arena DONATED, so XLA updates in place — no arena-sized copy);
+  * evict = host bookkeeping only (push the slot id back on the free
+    list; the stale device bytes are simply unreachable);
+  * batch assembly = a jitted slot-id gather with the dequant fused in
+    (``kernels/slab_gather.py``) — the hit path never runs ``ctx_slice``
+    / ``ctx_pack`` and ships zero context bytes host<->device.
+
+The LAST slot is a scratch row: padded put rows and padded gather rows
+both target it, so every bucket shape runs one fixed-shape executor.
+LRU ordering, slot ownership, and the free list all live on the host
+(``ServingEngine`` + ``ContextCache``); the slab only owns device memory
+and the executor factories (registered as "slab_put"/"slab_gather" so the
+zero-recompile contract covers them).
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.dcat import ctx_rotate
+from repro.kernels.slab_gather import slab_gather
+from repro.quant.kv_cache import quantize_kv
+
+SLAB_DTYPES = ("int8", "int4", "fp16")
+
+
+class KVSlab:
+    """Fixed-capacity per-leaf device arenas + the host free list.
+
+    Args:
+      model / params: the engine's ranking model (template source).
+      seq_len: raw context length L the arenas are sized for.
+      slots: resident-user capacity (arena row count is ``slots + 1``;
+        the extra row is the shared scratch slot).
+      dtype: "int8" | "int4" (quantized, per-(slot, head) fp16 scales) |
+        "fp16" (escape hatch: unquantized at the native ctx dtype —
+        bit-identical to the host-pack path).
+      rotated / n_new: store the pre-rotated fixed-L ``rotate_replace``
+        layout (see ``ctx_rotate``) — matches what the engine caches.
+      gather_impl: "jnp" | "pallas" backend for the fused gather.
+    """
+
+    def __init__(self, model, params, *, seq_len: int, slots: int,
+                 dtype: str = "int8", rotated: bool = False,
+                 n_new: int = 1, gather_impl: str = "jnp"):
+        assert dtype in SLAB_DTYPES, dtype
+        assert slots >= 1, slots
+        self.seq_len = int(seq_len)
+        self.capacity = int(slots)
+        self.scratch = int(slots)          # arena row `slots` = scratch
+        self.dtype = dtype
+        self.bits: Optional[int] = {"int8": 8, "int4": 4,
+                                    "fp16": None}[dtype]
+        self.rotated = bool(rotated)
+        self.n_new = int(n_new)
+        self.gather_impl = gather_impl
+        # per-user leaf template via eval_shape: trace the context encoder
+        # (+ the rotation the cache layout applies) without running it
+        def one_user(ids):
+            ctxs = model.encode_context(params, ids, ids, ids,
+                                        serving=True)[1]
+            if self.rotated:
+                ctxs = ctx_rotate(ctxs, self.n_new, self.seq_len)
+            return ctxs
+        dummy = jax.ShapeDtypeStruct((1, self.seq_len), jnp.int32)
+        shapes = jax.eval_shape(one_user, dummy)
+        leaves, self.treedef = jax.tree.flatten(shapes)
+        # batched leaf (reps, 1, L', K, D) -> per-user (reps, L', K, D)
+        self.leaf_shapes = [(l.shape[0],) + l.shape[2:] for l in leaves]
+        self.leaf_dtypes = [l.dtype for l in leaves]
+        for s in self.leaf_shapes:
+            if self.bits == 4:
+                assert s[-1] % 2 == 0, \
+                    f"int4 slab needs an even head_dim, got leaf {s}"
+        self.arenas = tuple(self._alloc_arena(s, dt)
+                            for s, dt in zip(self.leaf_shapes,
+                                             self.leaf_dtypes))
+        self.free: List[int] = list(range(self.capacity))
+        # telemetry (mutated only under the engine lock)
+        self.puts = 0
+        self.evictions = 0
+        self.gathers = 0
+
+    def _alloc_arena(self, shape, dtype):
+        rows = (self.capacity + 1,) + shape
+        if self.bits is None:
+            return (jnp.zeros(rows, dtype),)
+        wq = shape[-1] if self.bits == 8 else shape[-1] // 2
+        return (jnp.zeros(rows[:-1] + (wq,), jnp.int8),
+                jnp.zeros(rows[:-1] + (1,), jnp.float16))
+
+    # -- host-side slot accounting -----------------------------------------
+    @property
+    def occupancy(self) -> int:
+        return self.capacity - len(self.free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Take ``n`` slot ids off the free list, or None if it is short
+        (the engine then evicts LRU users to replenish it)."""
+        if len(self.free) < n:
+            return None
+        out, self.free = self.free[:n], self.free[n:]
+        return out
+
+    def release(self, slot: int) -> None:
+        """Return an evicted user's slot — host bookkeeping only; the
+        stale arena row is overwritten by the slot's next occupant."""
+        self.free.append(slot)
+        self.evictions += 1
+
+    # -- byte accounting ----------------------------------------------------
+    @property
+    def bytes_per_user(self) -> int:
+        total = 0
+        for shape, dt in zip(self.leaf_shapes, self.leaf_dtypes):
+            n = int(np.prod(shape))
+            if self.bits is None:
+                total += n * jnp.dtype(dt).itemsize
+            else:
+                total += n // (2 if self.bits == 4 else 1)       # codes
+                total += (n // shape[-1]) * 2                    # fp16 scale
+        return total
+
+    @property
+    def nbytes(self) -> int:
+        return sum(int(a.size) * a.dtype.itemsize
+                   for leaf in self.arenas for a in leaf)
+
+    # -- executor factories (registered on the engine's registry) -----------
+    def put_factory(self, key):
+        """"slab_put" executor for bucket ``key = (b_m, L)``: quantize a
+        fresh ctx batch and scatter it into the (DONATED) arenas at
+        ``slots`` — padded rows aim at the scratch slot.
+        ``fn(arenas, ctxs, slots) -> arenas``."""
+        rotated, n_new, L = self.rotated, self.n_new, self.seq_len
+        bits = self.bits
+
+        def fn(arenas, ctxs, slots):
+            if rotated:
+                ctxs = ctx_rotate(ctxs, n_new, L)
+            new = []
+            for arena, leaf in zip(arenas, jax.tree.leaves(ctxs)):
+                x = jnp.moveaxis(leaf, 1, 0)     # (b_m, reps, L', K, D)
+                if bits is None:
+                    new.append((arena[0].at[slots].set(
+                        x.astype(arena[0].dtype)),))
+                else:
+                    codes, scale = quantize_kv(x, bits=bits)
+                    new.append((arena[0].at[slots].set(codes),
+                                arena[1].at[slots].set(scale)))
+            return tuple(new)
+        return fn
+
+    def gather_factory(self, key):
+        """"slab_gather" executor for bucket ``key = (b_u, L)``: assemble
+        a packed ctx pytree from slot ids, dequant fused (padded rows read
+        the scratch slot; their contents never reach a real candidate).
+        ``fn(arenas, slots) -> ctxs``."""
+        bits, impl = self.bits, self.gather_impl
+        shapes, dtypes, treedef = (self.leaf_shapes, self.leaf_dtypes,
+                                   self.treedef)
+
+        def fn(arenas, slots):
+            outs = []
+            for arena, shape, dt in zip(arenas, shapes, dtypes):
+                if bits is None:
+                    x = jnp.take(arena[0], slots, axis=0)
+                else:
+                    rows = int(np.prod(shape[:-1]))
+                    codes = arena[0].reshape(self.capacity + 1, rows, -1)
+                    scale = arena[1].reshape(self.capacity + 1, rows, 1)
+                    x = slab_gather(codes, scale, slots, bits=bits,
+                                    out_dtype=dt, impl=impl)
+                    x = x.reshape((slots.shape[0],) + shape)
+                outs.append(jnp.moveaxis(x, 0, 1))   # (reps, b_u, ...)
+            return jax.tree.unflatten(treedef, outs)
+        return fn
+
+    def stats(self) -> dict:
+        return {"capacity": self.capacity, "occupancy": self.occupancy,
+                "dtype": self.dtype, "seq_len": self.seq_len,
+                "puts": self.puts, "evictions": self.evictions,
+                "gathers": self.gathers, "bytes_resident": self.nbytes,
+                "bytes_per_user": self.bytes_per_user}

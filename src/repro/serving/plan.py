@@ -218,6 +218,14 @@ class BatchPlan:
     def dedup_ratio(self) -> float:
         return self.n_candidates / max(self.n_unique, 1)
 
+    @property
+    def user_set(self) -> frozenset:
+        """The UNORDERED unique-user identity — the pack-memo key
+        component: two plans with equal ``user_set`` (and bucket shape)
+        pack permutations of the same per-user contexts, so a memoized
+        batch serves both via a host-side row remap."""
+        return frozenset(self.user_keys)
+
 
 def _pad_rows(x: np.ndarray, n: int, fill=0) -> np.ndarray:
     out = np.full((n, *x.shape[1:]), fill, x.dtype)

@@ -1,11 +1,75 @@
 """int8 KV-cache quantization (beyond-paper §Perf extension): ring-buffer
-parity with the fp cache and bounded decode-output error."""
+parity with the fp cache, bounded decode-output error, and direct unit
+tests of the quantize/dequantize primitives the serving KV slab reuses."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.nn.attention import Attention, KVCache, attend5
-from repro.quant import QuantizedKVCache
+from repro.quant import QuantizedKVCache, dequantize_kv, quantize_kv
+
+
+# ---------------------------------------------------------------------------
+# quantize_kv / dequantize_kv primitives (shared with serving/kv_slab.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits,wq,tol", [(8, 64, 1 / 127), (4, 32, 1 / 7)])
+def test_round_trip_within_scale_tolerance(bits, wq, tol):
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(5, 3, 64).astype(np.float32))
+    codes, scale = quantize_kv(x, bits=bits)
+    assert codes.shape == (5, 3, wq) and codes.dtype == jnp.int8
+    assert scale.shape == (5, 3, 1) and scale.dtype == jnp.float16
+    y = dequantize_kv(codes, scale, jnp.float32, bits=bits)
+    # symmetric min-max: per-row error bounded by half a quantization step
+    # (scale itself is fp16-rounded, so allow a full step)
+    amax = np.max(np.abs(np.asarray(x)), axis=-1, keepdims=True)
+    assert np.all(np.abs(np.asarray(y) - np.asarray(x)) <= tol * amax + 1e-6)
+
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_zero_row_scale_guard(bits):
+    """An all-zero row quantizes to scale 0 and dequantizes to EXACT zeros
+    (no 0/0 NaNs from the scale floor)."""
+    x = jnp.zeros((2, 4, 16), jnp.float32)
+    codes, scale = quantize_kv(x, bits=bits)
+    assert float(jnp.max(jnp.abs(scale))) == 0.0
+    y = dequantize_kv(codes, scale, jnp.float32, bits=bits)
+    np.testing.assert_array_equal(np.asarray(y), np.zeros((2, 4, 16)))
+
+
+def test_quantization_preserves_zero_and_sign():
+    x = jnp.asarray([[0.0, 1.0, -1.0, 0.5]])
+    codes, scale = quantize_kv(x, bits=8)
+    c = np.asarray(codes)[0]
+    assert c[0] == 0 and c[1] == 127 and c[2] == -127 and c[3] > 0
+
+
+def test_ring_update_wraps_and_overwrites():
+    """After size+1 updates the oldest slot is overwritten in place: slot
+    (pos % size) holds the newest step, pos keeps counting monotonically."""
+    B, size, K, D = 1, 3, 1, 8
+    q8 = QuantizedKVCache.zeros(B, size, K, D, jnp.float32)
+    steps = [jnp.full((B, 1, K, D), float(t + 1)) for t in range(size + 1)]
+    for s in steps:
+        q8 = q8.update(s, s)
+    assert int(q8.pos[0]) == size + 1
+    got = np.asarray(q8.k)[0, :, 0, 0]
+    np.testing.assert_allclose(got, [size + 1.0, 2.0, 3.0], rtol=1e-2)
+    kp, kv = q8.slot_positions()
+    np.testing.assert_array_equal(np.asarray(kv)[0], [True] * size)
+    np.testing.assert_array_equal(np.asarray(kp)[0], [3, 1, 2])
+
+
+def test_nbytes_formula():
+    B, size, K, D = 2, 16, 4, 32
+    q8 = QuantizedKVCache.zeros(B, size, K, D, jnp.float32)
+    n = B * size * K * D
+    # k8 + v8 (1 byte each) + k_scale + v_scale (fp16, one per (slot, head))
+    assert q8.nbytes == 2 * n + 2 * 2 * (n // D)
+    fp = KVCache.zeros(B, size, K, D, jnp.float32)
+    assert q8.nbytes / (fp.k.nbytes + fp.v.nbytes) < 0.27
 
 
 def test_ring_semantics_match_fp_cache():

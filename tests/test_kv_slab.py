@@ -1,0 +1,320 @@
+"""Device-resident quantized KV slab (serving tentpole).
+
+Covers the acceptance points:
+  * ``slab_dtype="fp16"`` escape hatch BIT-IDENTICAL to the host-pack
+    path on the same buckets;
+  * int8 / int4 slab scores within documented quantization tolerance of
+    the escape hatch;
+  * zero fresh compiles across put/evict/gather at every bucket of a
+    mixed-shape stream (``compiles_after_warmup == 0``);
+  * slot lifecycle: LRU eviction recycles slots through the ContextCache
+    ``on_evict`` hook, occupancy never exceeds capacity, re-encoded users
+    re-quantize deterministically;
+  * the fused gather kernel (``kernels/slab_gather.py``) matches its
+    ``ref.py`` oracle, jnp == pallas(interpret);
+  * a torn-counter hammer over the slab stats section.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.dcat import DCATOptions, ctx_slice, ctx_slice_batch
+from repro.kernels.ref import slab_gather_ref
+from repro.kernels.slab_gather import slab_gather
+from repro.quant.kv_cache import pack_int4, quantize_kv, unpack_int4
+from repro.serving.context_cache import ContextCache
+from repro.serving.engine import ServingEngine
+from repro.serving.kv_slab import KVSlab
+
+from test_serving_engine import L, _make_model, _mk_request
+
+
+@pytest.fixture(scope="module")
+def early_model():
+    return _make_model(
+        "graphsage-lt",
+        dcat=DCATOptions(rotate_replace=False, skip_last_self_attn=True))
+
+
+@pytest.fixture(scope="module")
+def rotate_model():
+    return _make_model(
+        "graphsage-lt",
+        dcat=DCATOptions(rotate_replace=True, skip_last_self_attn=True))
+
+
+def _engine(model_params, *, slab=0, dtype="int8", cache_cap=64, **kw):
+    model, params = model_params
+    return ServingEngine(model, params, max_unique=4, max_candidates=16,
+                         cache=ContextCache(capacity=cache_cap),
+                         slab_slots=slab, slab_dtype=dtype, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fused gather kernel vs oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_slab_gather_kernel_matches_ref(bits):
+    rng = np.random.RandomState(0)
+    S, R, D = 7, 12, 32
+    x = jnp.asarray(rng.randn(S, R, D).astype(np.float32))
+    codes, scale = quantize_kv(x, bits=bits)
+    slots = jnp.asarray(rng.randint(0, S, size=5).astype(np.int32))
+    ref = slab_gather_ref(codes, scale, slots, bits=bits)
+    for impl in ("jnp", "pallas"):
+        got = slab_gather(codes, scale, slots, bits=bits, impl=impl)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+    # the oracle itself dequantizes back to the right neighbourhood
+    err = np.max(np.abs(np.asarray(ref) - np.asarray(x)[np.asarray(slots)]))
+    assert err <= (1.0 if bits == 4 else 0.05)
+
+
+def test_int4_pack_unpack_roundtrip():
+    rng = np.random.RandomState(1)
+    codes = jnp.asarray(rng.randint(-7, 8, size=(3, 10)).astype(np.int8))
+    np.testing.assert_array_equal(np.asarray(unpack_int4(pack_int4(codes))),
+                                  np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# escape hatch: fp16 slab == host pack, bit for bit
+# ---------------------------------------------------------------------------
+
+def test_fp16_slab_bit_identical_to_host_pack(early_model):
+    host = _engine(early_model)
+    slab = _engine(early_model, slab=8, dtype="fp16")
+    host.warmup()
+    slab.warmup()
+    rng = np.random.RandomState(2)
+    reqs = [_mk_request(i, rng) for i in range(6)]
+    for a, b in zip(host.score(reqs), slab.score(reqs)):
+        np.testing.assert_array_equal(a, b)
+    # repeat traffic (memo + pure slab hits) stays bit-identical too
+    rng = np.random.RandomState(2)
+    reqs2 = [_mk_request(i, rng) for i in range(6)]
+    for a, b in zip(host.score(reqs2), slab.score(reqs2)):
+        np.testing.assert_array_equal(a, b)
+    assert slab.registry.compiles_after_warmup == 0
+    assert slab.stats()["slab"]["dtype"] == "fp16"
+
+
+def test_rotated_layout_slab_matches_host(rotate_model):
+    """rotate_replace engines store the pre-rotated fixed-L layout in the
+    slab (rotation happens inside the put executor) — escape hatch still
+    bit-identical, int8 still within tolerance."""
+    host = _engine(rotate_model)
+    fp = _engine(rotate_model, slab=8, dtype="fp16")
+    q8 = _engine(rotate_model, slab=8, dtype="int8")
+    rng = np.random.RandomState(3)
+    reqs = [_mk_request(i, rng) for i in range(5)]
+    ref = host.score(reqs)
+    for a, b in zip(ref, fp.score(reqs)):
+        np.testing.assert_array_equal(a, b)
+    for a, b in zip(ref, q8.score(reqs)):
+        np.testing.assert_allclose(a, b, atol=5e-3)
+
+
+# ---------------------------------------------------------------------------
+# quantized tolerance (documented: int8 |Δp| < 5e-3, int4 < 5e-2)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,atol", [("int8", 5e-3), ("int4", 5e-2)])
+def test_quantized_slab_within_tolerance(early_model, dtype, atol):
+    fp = _engine(early_model, slab=8, dtype="fp16")
+    q = _engine(early_model, slab=8, dtype=dtype)
+    rng = np.random.RandomState(4)
+    reqs = [_mk_request(i, rng) for i in range(6)]
+    a_all, b_all = fp.score(reqs), q.score(reqs)
+    for a, b in zip(a_all, b_all):
+        np.testing.assert_allclose(a, b, atol=atol)
+    # the quantized store is byte-for-byte deterministic on re-encode:
+    # evict everything, re-score, same probabilities
+    q.cache.evict_lru(n=64)
+    for a, b in zip(b_all, q.score(reqs)):
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# zero-recompile contract across put/evict/gather
+# ---------------------------------------------------------------------------
+
+def test_mixed_shape_stream_zero_recompiles(early_model):
+    eng = _engine(early_model, slab=8, dtype="int8", cache_cap=8)
+    eng.warmup()
+    rng = np.random.RandomState(5)
+    for n_req, n_cand, seed0 in ((1, 2, 0), (3, 5, 10), (4, 4, 20),
+                                 (2, 16, 0), (4, 8, 30), (1, 1, 40)):
+        eng.score([_mk_request(seed0 + i, rng, n_cand=n_cand)
+                   for i in range(n_req)])
+    assert eng.registry.compiles_after_warmup == 0
+    s = eng.stats()["slab"]
+    assert s["puts"] > 0 and s["gathers"] > 0
+    assert 0 <= s["occupancy"] <= s["capacity"] == 8
+    kinds = {k for k, _ in eng.registry.executors()}
+    assert {"slab_put", "slab_gather", "context", "cross"} <= kinds
+
+
+# ---------------------------------------------------------------------------
+# slot lifecycle: eviction recycles, capacity pressure, byte accounting
+# ---------------------------------------------------------------------------
+
+def test_slot_recycling_under_capacity_pressure(early_model):
+    eng = _engine(early_model, slab=4, dtype="int8", cache_cap=4)
+    eng.warmup()
+    rng = np.random.RandomState(6)
+    reqs = [_mk_request(i, rng) for i in range(3)]
+    first = eng.score(reqs)
+    # 6 more distinct users through a 4-slot slab: eviction must recycle
+    eng.score([_mk_request(100 + i, rng) for i in range(6)])
+    s = eng.stats()["slab"]
+    assert s["evictions"] >= 5
+    assert s["occupancy"] <= s["capacity"] == 4
+    assert sorted(eng._slab.free + [v[2] for v in eng.cache._d.values()
+                                    if isinstance(v, tuple)
+                                    and v[0] == "slab"]) == [0, 1, 2, 3]
+    # evicted users re-seat on fresh slots with identical quantized scores
+    again = eng.score(reqs)
+    for a, b in zip(first, again):
+        np.testing.assert_array_equal(a, b)
+    assert eng.registry.compiles_after_warmup == 0
+
+
+def test_slab_byte_accounting(early_model):
+    model, params = early_model
+    slabs = {d: KVSlab(model, params, seq_len=L, slots=4, dtype=d)
+             for d in ("fp16", "int8", "int4")}
+    # native fp32 leaves: (reps=2, L=16, K=4, D=64) x 2 leaves
+    per_user_fp = sum(int(np.prod(s)) * 4
+                      for s in slabs["fp16"].leaf_shapes)
+    assert slabs["fp16"].bytes_per_user == per_user_fp
+    # int8 = 1 byte/elem + fp16 scale per (slot, head) row of D elems
+    n_elems = sum(int(np.prod(s)) for s in slabs["int8"].leaf_shapes)
+    n_rows = n_elems // 64
+    assert slabs["int8"].bytes_per_user == n_elems + 2 * n_rows
+    assert slabs["int4"].bytes_per_user == n_elems // 2 + 2 * n_rows
+    for slab in slabs.values():
+        assert slab.nbytes == (slab.capacity + 1) * slab.bytes_per_user
+    # quantization wins the documented resident-user multiplier at fixed
+    # arena bytes vs the unquantized escape hatch
+    ratio8 = per_user_fp / slabs["int8"].bytes_per_user
+    ratio4 = per_user_fp / slabs["int4"].bytes_per_user
+    assert ratio8 >= 3.0 and ratio4 >= 4.0
+
+
+def test_slab_validation_errors(early_model):
+    model, params = early_model
+    with pytest.raises(ValueError, match="ContextCache"):
+        ServingEngine(model, params, slab_slots=8)
+    with pytest.raises(ValueError, match="max_unique"):
+        ServingEngine(model, params, max_unique=8, slab_slots=4,
+                      cache=ContextCache())
+    with pytest.raises(ValueError, match="slab_dtype"):
+        ServingEngine(model, params, slab_slots=8, slab_dtype="int2",
+                      cache=ContextCache())
+    lm, lp = _make_model("lite-last")
+    with pytest.raises(ValueError, match="early-fusion"):
+        ServingEngine(lm, lp, slab_slots=8, cache=ContextCache())
+
+
+def test_wrong_seq_len_falls_back_to_host_pack(early_model):
+    """Traffic at an L the slab wasn't sized for runs the host-pack path
+    (counted in slab_fallbacks) instead of mis-gathering — and matches a
+    plain host-pack engine bit for bit."""
+    eng = _engine(early_model, slab=8, dtype="int8")
+    eng.warmup()                      # builds the slab for L=16
+    host = _engine(early_model)
+    rng = np.random.RandomState(7)
+    short = []
+    for i in range(2):
+        r = _mk_request(50 + i, rng)
+        short.append(type(r)(seq_ids=r.seq_ids[:8],
+                             seq_actions=r.seq_actions[:8],
+                             seq_surfaces=r.seq_surfaces[:8],
+                             cand_ids=r.cand_ids, cand_feats=r.cand_feats,
+                             user_feats=r.user_feats, graphsage=r.graphsage))
+    for a, b in zip(eng.score(short), host.score(short)):
+        np.testing.assert_array_equal(a, b)
+    assert eng.slab_fallbacks > 0
+    assert eng.stats()["slab"]["fallbacks"] == eng.slab_fallbacks
+
+
+# ---------------------------------------------------------------------------
+# vectorized miss-path slicing (satellite): one sync, same bytes
+# ---------------------------------------------------------------------------
+
+def test_ctx_slice_batch_matches_per_user_loop(early_model):
+    model, params = early_model
+    rng = np.random.RandomState(8)
+    ids = jnp.asarray(rng.randint(0, 1000, (3, L)).astype(np.int32))
+    acts = jnp.asarray(rng.randint(0, 6, (3, L)).astype(np.int32))
+    surf = jnp.asarray(rng.randint(0, 3, (3, L)).astype(np.int32))
+    _, ctxs, _ = model.encode_context(params, ids, acts, surf, serving=True)
+    batch = ctx_slice_batch(ctxs, 2)
+    assert len(batch) == 2
+    for i, sl in enumerate(batch):
+        ref = ctx_slice(ctxs, i)
+        for a, b in zip(jax.tree.leaves(sl), jax.tree.leaves(ref)):
+            np.testing.assert_array_equal(a, b)
+            assert a.flags["C_CONTIGUOUS"]
+
+
+# ---------------------------------------------------------------------------
+# torn-counter hammer over the slab stats section (satellite)
+# ---------------------------------------------------------------------------
+
+def test_slab_stats_hammer(early_model):
+    eng = _engine(early_model, slab=8, dtype="int8", cache_cap=8)
+    eng.warmup()
+    errors, snaps = [], []
+    stop = threading.Event()
+
+    def writer(tid):
+        try:
+            rng = np.random.RandomState(tid)
+            for i in range(4):
+                futs = eng.submit_many(
+                    [_mk_request(20 * tid + i + j, rng) for j in range(2)])
+                eng.flush()
+                for f in futs:
+                    f.result()
+        except BaseException as e:      # pragma: no cover - diagnostic
+            errors.append(e)
+
+    def reader():
+        import time
+        try:
+            while not stop.is_set():
+                snaps.append(eng.stats())
+                time.sleep(2e-3)
+        except BaseException as e:      # pragma: no cover - diagnostic
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(4)]
+    r = threading.Thread(target=reader)
+    r.start()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(120.0)
+    stop.set()
+    r.join(30.0)
+    snaps.append(eng.stats())
+    assert not errors
+    prev = -1
+    for s in snaps:
+        assert s["executors"]["compiles_after_warmup"] == 0
+        sl = s["slab"]
+        for key in ("capacity", "occupancy", "puts", "evictions",
+                    "gathers", "gather_hits", "bytes_resident",
+                    "bytes_per_user", "fallbacks"):
+            assert sl[key] >= 0
+        assert sl["occupancy"] <= sl["capacity"] == 8
+        assert sl["bytes_resident"] == 9 * sl["bytes_per_user"]
+        # cumulative counters only grow between one reader's snapshots
+        assert sl["puts"] >= prev
+        prev = sl["puts"]
+    assert snaps[-1]["slab"]["puts"] >= 8

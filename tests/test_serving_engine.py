@@ -325,15 +325,23 @@ def test_pack_memo_skips_pack_on_exact_repeat(early_model):
     assert cache.memo_hits == 1                # packed batch reused
     for a, b in zip(first, second):
         np.testing.assert_array_equal(a, b)
-    # a different user ORDER is a different packed batch (inverse_idx maps
-    # candidates to rows, so the tuple key must be order-sensitive)
+    # a PERMUTED repeat of the same unique-user SET is still a memo hit:
+    # the engine relabels inverse_idx/user_feats into the memoized row
+    # order on host (bit-identical — per-user rows are only ever consumed
+    # through inverse_idx gathers), so no repack, no H2D
     reordered = [_mk_request(s, rng) for s in (2, 1, 3)]
     out3 = engine.score(reordered)
-    assert cache.memo_hits == 1 and cache.memo_misses == 2
+    assert cache.memo_hits == 2 and cache.memo_misses == 1
+    assert engine.memo_perm_hits == 1
     solo = ServingEngine(model, params, max_unique=4,
                          max_candidates=16).score(reordered)
     for a, b in zip(out3, solo):
         np.testing.assert_allclose(a, b, atol=1e-5)
+    # ... and bit-identical to scoring the same permutation uncached-memo
+    fresh = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                          cache=ContextCache(capacity=16, memo_capacity=0))
+    for a, b in zip(out3, fresh.score(reordered)):
+        np.testing.assert_array_equal(a, b)
 
 
 def test_pack_memo_eviction_drops_stale_batches(early_model):

@@ -444,10 +444,14 @@ def test_stats_snapshot_concurrent_submits(lite_model, item_index):
     for s in snaps:
         ex, cache, masks = s["executors"], s["cache"], s["masks"]
         assert ex["compiles_after_warmup"] == 0
+        # a lite engine has no KV slab; the key is present regardless so
+        # dashboards never KeyError (the slab hammer test covers the
+        # populated section — see test_kv_slab.py)
+        assert s["slab"] is None
         for v in (ex["hits"], ex["compiles"], cache["hits"],
                   cache["misses"], masks["hits"], masks["misses"],
                   s["scheduler"]["flushes"], s["scheduler"]["coalesced"],
-                  *s["lanes"].values()):
+                  s["memo_perm_hits"], *s["lanes"].values()):
             assert v >= 0
         # monotonicity: snapshots are taken by one reader thread, so each
         # cumulative counter may only grow between successive snapshots
