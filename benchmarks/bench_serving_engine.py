@@ -34,6 +34,14 @@ Sections:
      swings ~2x with inherited allocator state, so worker-process
      isolation (pyperf-style) is what makes the number reproducible —
      running ``--only-slab`` by hand gives the same result.
+  5. observability overhead — the PR-7 ``repro.obs`` layer
+     (``obs_enabled=True``: per-request tracing, per-lane latency
+     histograms, the export collector) against the ``obs_enabled=False``
+     null-object fast path on the section-2 streaming workload: scores
+     bit-identical, trace JSON + Prometheus exports well-formed, and
+     enabled-mode throughput within 2% of disabled (the <2% bar is the
+     acceptance criterion; asserted in the full run, correctness-only in
+     smoke).  Emits BENCH_obs.json.
 
 Run:   PYTHONPATH=src python benchmarks/bench_serving_engine.py [--smoke]
 
@@ -41,11 +49,12 @@ Run:   PYTHONPATH=src python benchmarks/bench_serving_engine.py [--smoke]
 properties only (cached beats uncached; pipelined scores == sync scores
 bit-for-bit; fused two-stage == sequential bit-for-bit; fp16 slab ==
 host pack bit-for-bit with int8/int4 inside their documented tolerance;
-int8/int4 resident-capacity multipliers; compiles_after_warmup == 0
-everywhere).  The full run additionally asserts the >= 1.3x
-pipelined-vs-sync, >= 1.15x fused-vs-sequential and >= 1.3x
-slab-vs-host-pack items/sec acceptance bars and records the rows in the
-JSON files.
+int8/int4 resident-capacity multipliers; obs-enabled scores == disabled
+bit-for-bit with well-formed trace/Prometheus exports;
+compiles_after_warmup == 0 everywhere).  The full run additionally
+asserts the >= 1.3x pipelined-vs-sync, >= 1.15x fused-vs-sequential,
+>= 1.3x slab-vs-host-pack and < 2% observability-overhead items/sec
+acceptance bars and records the rows in the JSON files.
 """
 import json
 import os
@@ -80,6 +89,8 @@ JSON2_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_two_stage.json")
 JSON3_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_kv_slab.json")
+JSON4_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_obs.json")
 
 
 def serving_model(variant="graphsage-lt", seq_len=L):
@@ -576,6 +587,93 @@ def section_kv_slab(model, params, fcfg):
                              "int8 <= 5e-3, int4 <= 5e-2 max |dp|")}
 
 
+# ---------------------------------------------------------------------------
+# section 5: observability overhead (obs on vs off)
+# ---------------------------------------------------------------------------
+
+def section_observability(model, params, fcfg):
+    """The PR-7 acceptance: an obs-enabled engine must (a) score
+    bit-identically to a disabled one, (b) export a Perfetto-loadable
+    trace and well-formed Prometheus text with per-lane p50/p99 flush
+    latency, (c) keep ``compiles_after_warmup == 0`` under tracing, and
+    (d) cost < 2% items/sec vs the ``obs_enabled=False`` null-object
+    fast path on the section-2 streaming workload."""
+    kw, base, stream, reps = _pipeline_workload(fcfg)
+    reps = 1 if SMOKE else max(reps, 5)
+    print(f"\nobservability overhead: {len(stream)} calls of "
+          f"{len(stream[0])} requests, obs on vs off, median of {reps} "
+          "interleaved")
+
+    def mk(enabled):
+        e = ServingEngine(model, params,
+                          cache=ContextCache(4096, memo_capacity=64),
+                          pipeline_depth=2, obs_enabled=enabled, **kw)
+        e.warmup()
+        for b in base:                       # prime user cache + pack memo
+            e.score(b)
+        return e
+
+    on_e, off_e = mk(True), mk(False)
+
+    # -- parity: tracing must not perturb results at all --------------------
+    for b in stream:
+        for r, g in zip(off_e.score(b), on_e.score(b)):
+            np.testing.assert_array_equal(r, g)
+
+    # -- interleaved timing: drift-fair on/off ratio ------------------------
+    qs_on, qs_off = [], []
+    for _ in range(reps):
+        qs_off.append(drive(off_e, stream)[0])
+        qs_on.append(drive(on_e, stream)[0])
+    qs_on, qs_off = sorted(qs_on), sorted(qs_off)
+    items_on, items_off = qs_on[len(qs_on) // 2], qs_off[len(qs_off) // 2]
+    overhead = 1.0 - items_on / items_off
+
+    # -- functional acceptance (asserted in smoke too) ----------------------
+    assert on_e.registry.compiles_after_warmup == 0    # tracing != compiles
+    assert off_e.registry.compiles_after_warmup == 0
+    trace = on_e.obs.chrome_trace()
+    json.dumps(trace)                                  # serializable
+    names = {ev["name"] for ev in trace["traceEvents"]}
+    assert {"flush", "lane:rank", "prepare", "launch", "wait",
+            "RankRequest"} <= names, sorted(names)
+    prom = on_e.obs.prometheus_text()
+    assert "repro_serving_flush_latency_ms_bucket" in prom
+    assert 'repro_serving_flush_latency_ms_p50{lane="rank"}' in prom
+    assert 'repro_serving_flush_latency_ms_p99{lane="rank"}' in prom
+    assert "repro_serving_executor_compiles_after_warmup 0" in prom
+    assert "repro_serving_memo_hits_total" in prom
+    # the disabled engine's exports are EMPTY, not merely small
+    assert off_e.obs.prometheus_text() == ""
+    assert off_e.obs.chrome_trace()["traceEvents"] == []
+
+    n_events = len(trace["traceEvents"])
+    print(f"  obs off (null objects)  {items_off:8.0f} items/s")
+    print(f"  obs on  (trace+metrics) {items_on:8.0f} items/s  "
+          f"({overhead * 100:+.1f}% overhead, {n_events} trace events, "
+          f"dropped {trace['otherData']['dropped_events']})")
+    print("observability: scores bit-identical, exports well-formed, "
+          "0 recompiles under tracing")
+    if not SMOKE:
+        # timing gated out of smoke like every other section; the 2% bar
+        # is the PR acceptance criterion
+        assert items_on >= 0.98 * items_off, (
+            f"acceptance: obs-enabled engine must stay within 2% of the "
+            f"disabled fast path, got {overhead * 100:.1f}% overhead "
+            f"({items_on:.0f} vs {items_off:.0f} items/s)")
+    return {"workload": {
+                "calls": len(stream), "requests_per_call": len(stream[0]),
+                "seq_len": L,
+                **{k: kw[k] for k in ("max_unique", "max_candidates")}},
+            "obs_off_items_per_s": items_off,
+            "obs_on_items_per_s": items_on,
+            "obs_off_items_per_s_all": [round(q, 1) for q in qs_off],
+            "obs_on_items_per_s_all": [round(q, 1) for q in qs_on],
+            "overhead_fraction": round(overhead, 4),
+            "trace_events": n_events,
+            "score_parity": "bit-identical (obs on vs off)"}
+
+
 def _slab_only():
     # fresh-interpreter entry point for section 4 (spawned by main() in
     # full mode; see the module docstring for why isolation matters here).
@@ -596,6 +694,7 @@ def main():
 
     cache_res = section_cached_vs_uncached(model, params, fcfg)
     pipe_res = section_pipelined_vs_sync(model, params, fcfg)
+    obs_res = section_observability(model, params, fcfg)
     if SMOKE:
         section_kv_slab(model, params, fcfg)
     else:
@@ -618,9 +717,15 @@ def main():
         with open(JSON2_PATH, "w") as f:
             json.dump(out2, f, indent=2)
         print(f"wrote {os.path.relpath(JSON2_PATH)}")
+        out4 = {"bench": "obs_overhead", "smoke": False,
+                "device": jax.devices()[0].platform,
+                "cpu_count": os.cpu_count(), **obs_res}
+        with open(JSON4_PATH, "w") as f:
+            json.dump(out4, f, indent=2)
+        print(f"wrote {os.path.relpath(JSON4_PATH)}")
     print("OK: pipelined == sync bit-for-bit, slab fp16 == host pack "
-          "bit-for-bit, fused two-stage == sequential bit-for-bit, zero "
-          "recompiles after warmup")
+          "bit-for-bit, fused two-stage == sequential bit-for-bit, obs "
+          "on == off bit-for-bit, zero recompiles after warmup")
 
 
 if __name__ == "__main__":

@@ -16,7 +16,15 @@ the shared encode pass (each unique user encoded once for the whole
 flush), and checks the fused results against the sequential
 retrieve()-then-score() path bit for bit.
 
+With ``--trace-out PATH`` the run also exports the engine's
+observability artifacts (``repro.obs``): the Chrome trace-event JSON of
+the whole session to PATH (drop it into https://ui.perfetto.dev) and the
+Prometheus text exposition — per-lane flush-latency histograms with
+p50/p99, cache/memo/slab counters — to PATH + ".prom".  Pretty-print
+both with ``python tools/dump_obs.py PATH PATH.prom``.
+
 Run:  PYTHONPATH=src python examples/serve_two_stage.py [--smoke]
+          [--trace-out /tmp/serve_trace.json]
 """
 import sys
 import os
@@ -33,6 +41,8 @@ from repro.serving import (ContextCache, RankRequest, RetrieveRequest,
                            RetrieveThenRankRequest, ServingEngine)
 
 SMOKE = "--smoke" in sys.argv
+TRACE_OUT = (sys.argv[sys.argv.index("--trace-out") + 1]
+             if "--trace-out" in sys.argv else None)
 N_ITEMS = 1024 if SMOKE else 4096
 TOP_K = 8 if SMOKE else 16
 N_USERS = 6 if SMOKE else 12
@@ -138,6 +148,15 @@ def main():
           f"{snap['executors']['compiles_after_warmup']})")
     assert snap["shared_encode_users"] == 1
     assert snap["executors"]["compiles_after_warmup"] == 0
+
+    # -- observability export: the whole session as one trace + metrics ----
+    if TRACE_OUT:
+        engine.obs.export_trace(TRACE_OUT)
+        engine.obs.export_prometheus(TRACE_OUT + ".prom")
+        n_ev = len(engine.obs.chrome_trace()["traceEvents"])
+        print(f"trace: {n_ev} events -> {TRACE_OUT} (Perfetto-loadable), "
+              f"metrics -> {TRACE_OUT}.prom (per-lane p50/p99 flush "
+              "latency, cache/memo counters)")
 
 
 if __name__ == "__main__":

@@ -1,5 +1,12 @@
 """Ranking metrics.  HIT@3 (paper §5.1): for each recommendation group, how
-many of the model's top-3 scored items received the user action."""
+many of the model's top-3 scored items received the user action.
+
+This module is MODEL-QUALITY metrics (offline evaluation).  Serving
+observability — latency histograms, counters, Prometheus export — is a
+different subsystem: ``repro/obs/metrics.py`` (package ``repro.obs``).
+The two are deliberately separate packages so neither import shadows
+the other; grep for ``repro.obs`` when you want per-lane p50/p99, and
+here when you want HIT@k."""
 from __future__ import annotations
 
 import jax

@@ -1,0 +1,394 @@
+"""Serving metrics: a thread-safe registry of counters, gauges, and
+log-spaced-bucket histograms, exporting JSON snapshots and Prometheus
+text exposition.
+
+NAMING — every metric is ``<namespace>_<subsystem>_<name>`` (namespace
+defaults to ``repro``), e.g. ``repro_serving_flush_latency_ms``; callers
+pass the ``<subsystem>_<name>`` part plus optional label kwargs
+(``lane="rank"``).  The registry get-or-creates one metric object per
+(name, label set) — hot paths hold on to the returned handle instead of
+re-looking it up per event.
+
+HISTOGRAMS use FIXED log-spaced buckets (no reservoir sampling, no
+decay): ``per_decade`` inclusive upper bounds per factor of 10 between
+``lo`` and ``hi``, plus an underflow bucket (<= lo) and an overflow
+bucket.  Quantiles are computed exactly from the bucket counts — the
+reported pXX is the inclusive upper bound of the bucket holding that
+rank, a deterministic value whose error is bounded by the bucket ratio
+(~12% at the default 20 buckets/decade), which is what dashboards and
+SLO gates want: reproducible numbers, not a sample of them.  Two
+histograms with the same bucket layout :meth:`Histogram.merge` by plain
+count addition — the multi-host aggregation path needs nothing fancier.
+
+Mutations take a per-metric lock (leaf locks — never held while taking
+any other), so an 8-thread record hammer loses no counts; export
+(:meth:`MetricsRegistry.snapshot` / :meth:`prometheus_text`) first runs
+the registered COLLECTORS (pull-style callbacks that copy engine-side
+counters in under their own locks, Prometheus-scrape style), then reads
+every metric under its lock.
+
+This module is SERVING observability — not model quality.  Model
+evaluation metrics (HIT@3 etc.) live in ``repro/core/metrics.py``; the
+two are deliberately separate packages (``repro.obs`` vs ``repro.core``)
+so neither import shadows the other.
+"""
+from __future__ import annotations
+
+import math
+import re
+import threading
+from bisect import bisect_left
+from typing import Callable, Dict, List, Optional, Tuple
+
+_NAME_RE = re.compile(r"^[a-z][a-z0-9_]*$")
+
+
+def _fmt_labels(labels: Tuple[Tuple[str, str], ...]) -> str:
+    if not labels:
+        return ""
+    inner = ",".join(f'{k}="{v}"' for k, v in labels)
+    return "{" + inner + "}"
+
+
+def _fmt_num(v) -> str:
+    """Prometheus-friendly number: integers stay integral, floats use
+    repr (full precision round-trips)."""
+    if isinstance(v, bool):
+        return "1" if v else "0"
+    if isinstance(v, int):
+        return str(v)
+    f = float(v)
+    if math.isinf(f):
+        return "+Inf" if f > 0 else "-Inf"
+    return repr(f)
+
+
+class Counter:
+    """Monotonically increasing count.  ``set_total`` exists for
+    COLLECTORS that mirror an externally-owned cumulative counter (the
+    engine's cache hit counts etc.) into the registry at export time."""
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def inc(self, n=1):
+        with self._lock:
+            self.value += n
+
+    def set_total(self, v):
+        with self._lock:
+            self.value = v
+
+    def get(self):
+        with self._lock:
+            return self.value
+
+
+class Gauge:
+    """Point-in-time value (queue depth, occupancy, bytes resident)."""
+    __slots__ = ("_lock", "value")
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def set(self, v):
+        with self._lock:
+            self.value = v
+
+    def inc(self, n=1):
+        with self._lock:
+            self.value += n
+
+    def get(self):
+        with self._lock:
+            return self.value
+
+
+class Histogram:
+    """Fixed log-spaced-bucket histogram with exact-from-buckets
+    quantiles.
+
+    Bucket layout: inclusive upper bounds ``lo * 10**(i / per_decade)``
+    for ``i = 0 .. n`` (the first bound is exactly ``lo``, the last is
+    the first bound >= ``hi``), plus one overflow bucket above the last
+    bound.  ``record(v)`` lands ``v`` in the FIRST bucket whose upper
+    bound is >= v (bounds are inclusive: recording a value exactly equal
+    to a bound counts in that bound's bucket — pinned by test).
+
+    ``quantile(q)`` returns the inclusive upper bound of the bucket
+    containing rank ``ceil(q * count)`` (rank >= 1), i.e. a value
+    guaranteed >= at least ``q`` of the recorded samples and tight to one
+    bucket width; NaN when empty, the top bound when the rank falls in
+    the overflow bucket.  Deterministic — the same recordings always
+    report the same pXX.
+    """
+    __slots__ = ("_lock", "bounds", "counts", "count", "sum")
+
+    def __init__(self, lo: float = 1e-2, hi: float = 1e5,
+                 per_decade: int = 20):
+        assert lo > 0 and hi > lo and per_decade >= 1
+        bounds: List[float] = []
+        i = 0
+        while True:
+            b = lo * 10.0 ** (i / per_decade)
+            bounds.append(b)
+            if b >= hi:
+                break
+            i += 1
+        self._lock = threading.Lock()
+        self.bounds = bounds              # inclusive upper bounds
+        self.counts = [0] * (len(bounds) + 1)   # +1 = overflow
+        self.count = 0
+        self.sum = 0.0
+
+    def record(self, v) -> None:
+        v = float(v)
+        idx = bisect_left(self.bounds, v)       # first bound >= v
+        with self._lock:
+            self.counts[idx] += 1
+            self.count += 1
+            self.sum += v
+
+    def layout(self) -> tuple:
+        return (len(self.bounds), self.bounds[0], self.bounds[-1])
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """-> a NEW histogram holding both sides' recordings.  Requires
+        identical bucket layouts (multi-host aggregation ships the same
+        registry code everywhere, so layouts agree by construction)."""
+        if self.layout() != other.layout():
+            raise ValueError(f"bucket layout mismatch: {self.layout()} "
+                             f"vs {other.layout()}")
+        out = Histogram.__new__(Histogram)
+        out._lock = threading.Lock()
+        out.bounds = self.bounds
+        with self._lock:
+            a = (list(self.counts), self.count, self.sum)
+        with other._lock:
+            b = (list(other.counts), other.count, other.sum)
+        out.counts = [x + y for x, y in zip(a[0], b[0])]
+        out.count = a[1] + b[1]
+        out.sum = a[2] + b[2]
+        return out
+
+    def _quantile_locked(self, q: float) -> float:
+        if self.count == 0:
+            return float("nan")
+        rank = max(1, math.ceil(q * self.count))
+        cum = 0
+        for i, c in enumerate(self.counts):
+            cum += c
+            if cum >= rank:
+                return self.bounds[min(i, len(self.bounds) - 1)]
+        return self.bounds[-1]      # pragma: no cover - rank <= count
+
+    def quantile(self, q: float) -> float:
+        assert 0.0 < q <= 1.0, q
+        with self._lock:
+            return self._quantile_locked(q)
+
+    def snapshot(self) -> dict:
+        """-> JSON-able dict: count/sum/p50/p95/p99 plus the non-empty
+        cumulative bucket prefix (le -> cumulative count)."""
+        with self._lock:
+            counts = list(self.counts)
+            total, s = self.count, self.sum
+            ps = {f"p{int(q * 100)}": self._quantile_locked(q)
+                  for q in (0.5, 0.95, 0.99)}
+        buckets, cum = {}, 0
+        for b, c in zip(self.bounds, counts):
+            cum += c
+            if c:
+                buckets[_fmt_num(b)] = cum
+        return {"count": total, "sum": s, **ps, "buckets": buckets}
+
+
+class NullMetric:
+    """Shared no-op counter/gauge/histogram — the ``enabled=False``
+    fast path records into this (every mutator is a constant method)."""
+    __slots__ = ()
+    value = 0
+    count = 0
+    sum = 0.0
+
+    def inc(self, n=1):
+        pass
+
+    def set(self, v):
+        pass
+
+    def set_total(self, v):
+        pass
+
+    def record(self, v):
+        pass
+
+    def get(self):
+        return 0
+
+    def quantile(self, q):
+        return float("nan")
+
+
+NULL_METRIC = NullMetric()
+
+
+class MetricsRegistry:
+    """Thread-safe get-or-create registry + exporter.
+
+    ``counter/gauge/histogram(name, help=..., **labels)`` return the
+    (shared) metric object for that name + label set; the first call
+    fixes the metric's type, help string, and (for histograms) bucket
+    parameters — later conflicting declarations raise.  Collectors
+    registered via :meth:`register_collector` run at the top of every
+    export, outside the registry lock, so they may freely take their own
+    locks and mutate metrics.
+    """
+
+    def __init__(self, namespace: str = "repro"):
+        assert _NAME_RE.match(namespace), namespace
+        self.namespace = namespace
+        self.enabled = True
+        self._lock = threading.Lock()
+        self._metrics: Dict[tuple, object] = {}   # (name, labels) -> metric
+        self._meta: Dict[str, tuple] = {}         # name -> (type, help, params)
+        self._collectors: List[Callable] = []
+
+    # -- declaration --------------------------------------------------------
+    def _get(self, name: str, typ: str, help_: str, params: tuple,
+             labels: dict, factory):
+        if not _NAME_RE.match(name):
+            raise ValueError(f"bad metric name {name!r} (want "
+                             "[a-z][a-z0-9_]*)")
+        lk = tuple(sorted((k, str(v)) for k, v in labels.items()))
+        with self._lock:
+            meta = self._meta.get(name)
+            if meta is None:
+                self._meta[name] = (typ, help_, params)
+            elif meta[0] != typ or meta[2] != params:
+                raise ValueError(
+                    f"metric {name!r} already declared as {meta[0]}"
+                    f"{meta[2]}, conflicting redeclaration as {typ}{params}")
+            m = self._metrics.get((name, lk))
+            if m is None:
+                m = self._metrics[(name, lk)] = factory()
+            return m
+
+    def counter(self, name: str, help: str = "", **labels) -> Counter:
+        return self._get(name, "counter", help, (), labels, Counter)
+
+    def gauge(self, name: str, help: str = "", **labels) -> Gauge:
+        return self._get(name, "gauge", help, (), labels, Gauge)
+
+    def histogram(self, name: str, help: str = "", *, lo: float = 1e-2,
+                  hi: float = 1e5, per_decade: int = 20,
+                  **labels) -> Histogram:
+        return self._get(name, "histogram", help, (lo, hi, per_decade),
+                         labels, lambda: Histogram(lo, hi, per_decade))
+
+    def register_collector(self, fn: Callable) -> None:
+        """``fn()`` is invoked before every export to pull externally-
+        owned counters into the registry (scrape-style)."""
+        with self._lock:
+            self._collectors.append(fn)
+
+    def _collect(self):
+        with self._lock:
+            collectors = list(self._collectors)
+        for fn in collectors:        # outside the registry lock on purpose
+            fn()
+
+    # -- export -------------------------------------------------------------
+    def _items(self):
+        with self._lock:
+            return sorted(self._metrics.items()), dict(self._meta)
+
+    def snapshot(self) -> dict:
+        """-> JSON-able {full_name{labels}: value | histogram dict}."""
+        self._collect()
+        items, meta = self._items()
+        out = {}
+        for (name, labels), m in items:
+            full = f"{self.namespace}_{name}" + _fmt_labels(labels)
+            out[full] = (m.snapshot() if isinstance(m, Histogram)
+                         else m.get())
+        return out
+
+    def prometheus_text(self) -> str:
+        """-> Prometheus text exposition.  Histograms emit the standard
+        cumulative ``_bucket``/``_sum``/``_count`` series plus derived
+        ``_p50``/``_p99`` gauges (exact-from-buckets, see
+        :meth:`Histogram.quantile`) so a raw snapshot file already shows
+        the latency distribution without a query engine."""
+        self._collect()
+        items, meta = self._items()
+        by_name: Dict[str, list] = {}
+        for (name, labels), m in items:
+            by_name.setdefault(name, []).append((labels, m))
+        lines = []
+        for name in sorted(by_name):
+            typ, help_, _ = meta[name]
+            full = f"{self.namespace}_{name}"
+            if help_:
+                lines.append(f"# HELP {full} {help_}")
+            lines.append(f"# TYPE {full} {typ}")
+            for labels, m in by_name[name]:
+                ls = _fmt_labels(labels)
+                if typ != "histogram":
+                    lines.append(f"{full}{ls} {_fmt_num(m.get())}")
+                    continue
+                with m._lock:
+                    counts = list(m.counts)
+                    total, s = m.count, m.sum
+                    p50 = m._quantile_locked(0.5) if total else float("nan")
+                    p99 = m._quantile_locked(0.99) if total else float("nan")
+                cum = 0
+                for b, c in zip(m.bounds, counts):
+                    cum += c
+                    if c:         # non-empty buckets + +Inf carry everything
+                        lines.append(
+                            f'{full}_bucket{_fmt_labels(labels + (("le", _fmt_num(b)),))} {cum}')
+                lines.append(
+                    f'{full}_bucket{_fmt_labels(labels + (("le", "+Inf"),))} '
+                    f"{total}")
+                lines.append(f"{full}_sum{ls} {_fmt_num(s)}")
+                lines.append(f"{full}_count{ls} {total}")
+                if total:
+                    lines.append(f"{full}_p50{ls} {_fmt_num(p50)}")
+                    lines.append(f"{full}_p99{ls} {_fmt_num(p99)}")
+        return "\n".join(lines) + ("\n" if lines else "")
+
+
+class NullMetricsRegistry:
+    """The ``enabled=False`` registry: every declaration returns the
+    shared :data:`NULL_METRIC`, every export is empty, collectors are
+    dropped — the hot-loop cost of a disabled engine is one attribute
+    load and a constant method call per record site."""
+
+    enabled = False
+    namespace = "repro"
+
+    def counter(self, name, help="", **labels):
+        return NULL_METRIC
+
+    def gauge(self, name, help="", **labels):
+        return NULL_METRIC
+
+    def histogram(self, name, help="", *, lo=1e-2, hi=1e5, per_decade=20,
+                  **labels):
+        return NULL_METRIC
+
+    def register_collector(self, fn):
+        pass
+
+    def snapshot(self):
+        return {}
+
+    def prometheus_text(self):
+        return ""
+
+
+NULL_REGISTRY = NullMetricsRegistry()

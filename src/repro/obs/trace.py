@@ -1,0 +1,208 @@
+"""Request tracing: bounded ring buffer of timed spans, exported as
+Chrome trace-event JSON (loadable in Perfetto / chrome://tracing).
+
+The tracer records COMPLETE events — (name, category, start, duration,
+track, args) tuples appended to a ``deque(maxlen=capacity)`` — so a
+long-lived engine holds the most recent window of activity at a fixed
+memory bound and export never blocks serving.  Producers that already
+measured their timings (the engine's pipeline stages do, for
+``PipelineStats``) emit via :meth:`Tracer.event` with the measured
+start/duration — no second clock read; code that hasn't uses the
+:meth:`Tracer.span` context manager.
+
+Tracks: every span carries a ``tid`` obtained from :meth:`Tracer.tid`
+(a stable small int per track name — "requests", "lane:rank", ...), and
+the export emits the matching ``thread_name`` metadata events, so the
+Perfetto timeline shows one named row per lane with the engine's own
+stage names on it.
+
+``annotate=True`` additionally wraps :meth:`span`/:meth:`annotation`
+scopes in ``jax.profiler.TraceAnnotation``, so a device profile captured
+with ``jax.profiler.trace`` shows the SAME lane/stage names on the
+device timeline as this host-side trace — the two line up by name.
+
+The disabled path is :data:`NULL_TRACER`: every method is a constant
+no-op (``span`` returns one shared reusable null context manager), which
+is what lets the engine leave trace calls inline in its hot loop.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional
+
+
+class _NullCtx:
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_CTX = _NullCtx()
+
+
+class _Span:
+    """Context manager recording one complete event on exit; optionally
+    mirrors itself onto the device timeline via TraceAnnotation."""
+    __slots__ = ("tracer", "name", "cat", "tid", "args", "t0", "_ann")
+
+    def __init__(self, tracer, name, cat, tid, args):
+        self.tracer, self.name, self.cat = tracer, name, cat
+        self.tid, self.args = tid, args
+        self._ann = None
+
+    def __enter__(self):
+        if self.tracer.annotate:
+            self._ann = self.tracer._annotation(self.name)
+            self._ann.__enter__()
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        dur = time.perf_counter() - self.t0
+        if self._ann is not None:
+            self._ann.__exit__(*exc)
+        self.tracer.event(self.name, self.cat, self.t0, dur,
+                          tid=self.tid, args=self.args)
+        return False
+
+
+class Tracer:
+    """Bounded in-memory trace sink.
+
+    Args:
+      capacity: ring-buffer size in events — the newest ``capacity``
+        events are kept, older ones are dropped (``dropped`` counts
+        them; the count is exported in the trace metadata).
+      annotate: wrap :meth:`span` scopes (and hand out real
+        :meth:`annotation` scopes) in ``jax.profiler.TraceAnnotation``
+        so device profiles share the host trace's names.  Off by
+        default — annotations cost a little even without an active
+        profiler session.
+    """
+
+    enabled = True
+
+    def __init__(self, capacity: int = 8192, annotate: bool = False):
+        self.capacity = int(capacity)
+        self.annotate = bool(annotate)
+        self._events = deque(maxlen=self.capacity)
+        self._appended = 0
+        self._epoch = time.perf_counter()
+        self._tid_lock = threading.Lock()
+        self._tids: Dict[str, int] = {}
+
+    # -- recording ----------------------------------------------------------
+    def event(self, name: str, cat: str, t_start: float, dur_s: float,
+              *, tid: int = 0, args: Optional[dict] = None) -> None:
+        """Record one complete event; times are ``time.perf_counter``
+        seconds (the tracer converts to trace microseconds on export).
+        deque.append is atomic under the GIL — no lock on the hot path."""
+        self._events.append((name, cat, t_start, dur_s, tid, args))
+        self._appended += 1
+
+    def instant(self, name: str, cat: str = "serving", *, tid: int = 0,
+                args: Optional[dict] = None) -> None:
+        """Zero-duration marker (rendered as an instant event)."""
+        self._events.append((name, cat, time.perf_counter(), -1.0, tid,
+                             args))
+        self._appended += 1
+
+    def span(self, name: str, cat: str = "serving", *, tid: int = 0,
+             args: Optional[dict] = None) -> _Span:
+        """-> context manager timing its body into one complete event."""
+        return _Span(self, name, cat, tid, args)
+
+    @staticmethod
+    def _annotation(name: str):
+        import jax
+        return jax.profiler.TraceAnnotation(name)
+
+    def annotation(self, name: str):
+        """-> a ``jax.profiler.TraceAnnotation`` scope when ``annotate``
+        is set (else a shared no-op) — the engine wraps executor dispatch
+        in this so device timelines carry lane/executor names."""
+        return self._annotation(name) if self.annotate else _NULL_CTX
+
+    def tid(self, track: str) -> int:
+        """Stable small int for a named track (lane, stage group)."""
+        with self._tid_lock:
+            t = self._tids.get(track)
+            if t is None:
+                t = self._tids[track] = len(self._tids) + 1
+            return t
+
+    @property
+    def dropped(self) -> int:
+        return max(0, self._appended - len(self._events))
+
+    # -- export -------------------------------------------------------------
+    def chrome_trace(self) -> dict:
+        """-> Chrome trace-event JSON object (``traceEvents`` +
+        ``displayTimeUnit``), Perfetto-loadable.  Timestamps are
+        microseconds since the tracer's epoch."""
+        events = list(self._events)          # atomic snapshot of the ring
+        with self._tid_lock:
+            tids = dict(self._tids)
+        te = []
+        for track, t in sorted(tids.items(), key=lambda kv: kv[1]):
+            te.append({"name": "thread_name", "ph": "M", "pid": 1,
+                       "tid": t, "args": {"name": track}})
+        for name, cat, t0, dur, tid, args in events:
+            ev = {"name": name, "cat": cat, "pid": 1, "tid": tid,
+                  "ts": (t0 - self._epoch) * 1e6}
+            if dur < 0:
+                ev["ph"], ev["s"] = "i", "t"
+            else:
+                ev["ph"], ev["dur"] = "X", dur * 1e6
+            if args:
+                ev["args"] = args
+            te.append(ev)
+        return {"displayTimeUnit": "ms", "traceEvents": te,
+                "otherData": {"dropped_events": self.dropped,
+                              "capacity": self.capacity}}
+
+    def export(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+
+class NullTracer:
+    """The ``enabled=False`` tracer: constant no-ops everywhere."""
+
+    enabled = False
+    annotate = False
+    capacity = 0
+    dropped = 0
+
+    def event(self, name, cat, t_start, dur_s, *, tid=0, args=None):
+        pass
+
+    def instant(self, name, cat="serving", *, tid=0, args=None):
+        pass
+
+    def span(self, name, cat="serving", *, tid=0, args=None):
+        return _NULL_CTX
+
+    def annotation(self, name):
+        return _NULL_CTX
+
+    def tid(self, track):
+        return 0
+
+    def chrome_trace(self):
+        return {"displayTimeUnit": "ms", "traceEvents": [],
+                "otherData": {"dropped_events": 0, "capacity": 0}}
+
+    def export(self, path):
+        with open(path, "w") as f:
+            json.dump(self.chrome_trace(), f)
+
+
+NULL_TRACER = NullTracer()

@@ -84,6 +84,7 @@ import jax.numpy as jnp
 
 from repro.core.dcat import ctx_pack, ctx_rotate, ctx_slice_batch
 from repro.core.finetune import PinFMRankingModel
+from repro.obs import Observability
 from repro.serving.context_cache import ContextCache
 from repro.serving.executors import ExecutorRegistry
 from repro.serving.kv_slab import KVSlab, SLAB_DTYPES
@@ -112,7 +113,7 @@ def _is_ready(out) -> bool:
 class _Inflight:
     """One chunk's pipeline state between prepare and finalize."""
     __slots__ = ("plan", "idxs", "kind", "key", "args", "out",
-                 "t0", "prepare_s", "launch_s")
+                 "t0", "prepare_s", "launch_s", "obs_args")
 
     def __init__(self, plan, kind, key, args, t0):
         self.plan, self.kind, self.key, self.args = plan, kind, key, args
@@ -121,6 +122,7 @@ class _Inflight:
         self.out = None
         self.prepare_s = 0.0
         self.launch_s = 0.0
+        self.obs_args = None        # cache/memo outcome (tracing only)
 
 
 class ServingEngine:
@@ -149,6 +151,18 @@ class ServingEngine:
         always seat its own unique users.  ``slab_gather_impl`` picks the
         fused gather backend ("jnp" | "pallas", see
         ``kernels/slab_gather.py``).
+      obs / obs_enabled / obs_annotate: the observability handle
+        (``repro.obs.Observability``).  By default the engine builds its
+        own enabled handle; ``obs_enabled=False`` swaps in the shared
+        null metrics/tracer singletons (near-zero hot-loop cost, proven
+        by bench_serving_engine.py section 5); pass ``obs=`` to share one
+        handle across engines.  ``obs_annotate=True`` additionally wraps
+        executor dispatch in ``jax.profiler.TraceAnnotation`` so device
+        profiles carry the same lane/stage names as the host trace.
+        Export via ``engine.obs`` (``chrome_trace()`` /
+        ``prometheus_text()`` / ``snapshot()``); ad-hoc engine counters
+        are mirrored into the registry at export time by a collector, so
+        the ``stats()`` dict contract is unchanged.
 
     Invariants:
       * ZERO-RECOMPILE CONTRACT — after :meth:`warmup` (plus
@@ -172,7 +186,9 @@ class ServingEngine:
                  pipeline_depth: int = 2,
                  max_pending: int = 32, max_wait_ms: Optional[float] = None,
                  slab_slots: int = 0, slab_dtype: str = "int8",
-                 slab_gather_impl: str = "jnp"):
+                 slab_gather_impl: str = "jnp",
+                 obs: Optional[Observability] = None,
+                 obs_enabled: bool = True, obs_annotate: bool = False):
         self.model, self.params = model, params
         self.variant = model.cfg.variant
         self.lite = self.variant in LITE_VARIANTS
@@ -230,13 +246,44 @@ class ServingEngine:
         # score()/retrieve() shims), so engine state (cache, counters,
         # call_stats) needs no finer locking; stats() snapshots under it
         self._engine_lock = threading.RLock()
+        # -- observability: metric handles are pre-created here (hot paths
+        # never re-look them up); with obs off every handle is the shared
+        # null object and record sites cost one constant no-op call
+        self.obs = obs if obs is not None else Observability(
+            enabled=obs_enabled, annotate=obs_annotate)
+        self._obs_on = self.obs.enabled
+        self._tracer = self.obs.tracer
+        m = self.obs.metrics
+        lane_names = ("rank", "retrieve", "two_stage", "generate")
+        self._h_lane_ms = {
+            n: m.histogram("serving_flush_latency_ms",
+                           "per-lane wall time of one flush, ms", lane=n)
+            for n in lane_names}
+        self._h_lane_reqs = {
+            n: m.histogram("serving_lane_batch_requests",
+                           "requests served by one lane in one flush",
+                           lo=1.0, hi=1e4, per_decade=10, lane=n)
+            for n in lane_names}
+        self._h_retr_ms = m.histogram(
+            "serving_retrieval_group_ms",
+            "corpus dispatch+merge wall time per retrieval group, ms")
+        self._lane_tid = {n: self._tracer.tid("lane:" + n)
+                          for n in lane_names}
+        self._stage_tid = {"rank": self._tracer.tid("pipeline:rank"),
+                           "two_stage":
+                               self._tracer.tid("pipeline:two_stage")}
+        self._retr_tid = self._tracer.tid("retrieval")
+        self._slab_tid = self._tracer.tid("slab")
+        self._prep_obs = None       # cache/memo outcome of the last prepare
+        if self._obs_on:
+            m.register_collector(self._collect_obs)
         # created eagerly: a lazy check-then-set would race on the first
         # concurrent submit() and orphan one of two queues
         self._scheduler = RequestScheduler(
             self._flush_requests, lock=self._engine_lock,
             max_requests=max_pending,
             max_candidates=max_candidates * max_pending,
-            max_wait_ms=max_wait_ms)
+            max_wait_ms=max_wait_ms, obs=self.obs)
         self._lane_counts = {"rank": 0, "retrieve": 0, "two_stage": 0,
                              "generate": 0}
         self.shared_encode_users = 0      # users encoded by the shared pass
@@ -449,7 +496,17 @@ class ServingEngine:
             for name, idxs in lanes.items():
                 if not idxs:
                     continue
+                if self._obs_on:
+                    t_lane = time.perf_counter()
                 out = runners[name]([requests[i] for i in idxs])
+                if self._obs_on:
+                    dt = time.perf_counter() - t_lane
+                    self._h_lane_ms[name].record(dt * 1e3)
+                    self._h_lane_reqs[name].record(len(idxs))
+                    self._tracer.event(
+                        "lane:" + name, "lane", t_lane, dt,
+                        tid=self._lane_tid[name],
+                        args={"requests": len(idxs)})
                 for i, r in zip(idxs, out):
                     results[i] = r
             return results
@@ -543,6 +600,8 @@ class ServingEngine:
             ps.memo_hits = self.cache.memo_hits - memo0[0]
             ps.memo_misses = self.cache.memo_misses - memo0[1]
         self.pipeline_stats.append(ps)
+        if self._obs_on:
+            ps.record_to(self.obs.metrics)
         out: List[List[np.ndarray]] = [[] for _ in requests]
         for i, p in zip(owner, scored):
             out[i].append(p)
@@ -584,13 +643,16 @@ class ServingEngine:
             kind, key, args = self._prepare_early(plan)
         infl = _Inflight(plan, kind, key, args, t0)
         infl.prepare_s = time.perf_counter() - t0
+        if self._obs_on:
+            infl.obs_args, self._prep_obs = self._prep_obs, None
         return infl
 
     def _launch(self, infl: _Inflight) -> None:
         """Dispatch the executor — returns as soon as XLA has enqueued the
         computation (JAX async dispatch); ``infl.out`` is a device future."""
         t0 = time.perf_counter()
-        infl.out = self.registry(infl.kind, infl.key, *infl.args)
+        with self._tracer.annotation(infl.kind):
+            infl.out = self.registry(infl.kind, infl.key, *infl.args)
         infl.args = None                 # drop operand refs early
         infl.launch_s = time.perf_counter() - t0
 
@@ -617,12 +679,33 @@ class ServingEngine:
             entry["memo_hits"] = self.cache.memo_hits
             entry["memo_misses"] = self.cache.memo_misses
         self.call_stats.append(entry)
+        if self._obs_on:
+            self._trace_chunk("rank", infl.t0, infl.prepare_s,
+                              infl.launch_s, t0, wait_s,
+                              {"kind": infl.kind, "b_u": plan.b_u,
+                               "b_c": plan.b_c,
+                               "candidates": plan.n_candidates,
+                               **(infl.obs_args or {})})
 
         off = 0
         for i, c in zip(infl.idxs, plan.counts):
             scored[i] = probs[off:off + c]
             off += c
         return wait_s * 1e3
+
+    def _trace_chunk(self, lane, t0, prepare_s, launch_s, t_wait0, wait_s,
+                     args):
+        """Emit one chunk's stage spans from ALREADY-measured timings (no
+        extra clock reads): prepare and launch sit at dispatch time, wait
+        at finalize time — under the depth-2 pipeline the wait span starts
+        later than launch ends, and the visible gap on the track is device
+        time the host spent preparing the NEXT chunk."""
+        tid = self._stage_tid[lane]
+        self._tracer.event("prepare", "stage", t0, prepare_s, tid=tid,
+                           args=args)
+        self._tracer.event("launch", "stage", t0 + prepare_s, launch_s,
+                           tid=tid)
+        self._tracer.event("wait", "stage", t_wait0, wait_s, tid=tid)
 
     # -- per-user context/embedding cache protocol (rank + retrieve) --------
     def _lookup_users(self, user_keys: Sequence[bytes]):
@@ -682,16 +765,24 @@ class ServingEngine:
         batch = self._cross_batch(plan.batch)
         hit = self.cache.memo_get(memo_key)
         if hit is not None:
+            memo_state = "hit"
             stored_order, packed_dev = hit
             if stored_order != tuple(plan.user_keys):
                 batch = self._remap_unique_rows(batch, stored_order, plan)
                 self.memo_perm_hits += 1
+                memo_state = "perm_hit"
         else:
+            memo_state = "miss"
             packed_dev = (self._pack_slab(plan, values, miss_rows, slab)
                           if slab is not None
                           else self._pack_host(plan, values, miss_rows))
             self.cache.memo_put(memo_key, plan.user_keys,
                                 (tuple(plan.user_keys), packed_dev))
+        if self._obs_on:
+            self._prep_obs = {"memo": memo_state,
+                              "ctx_misses": len(miss_rows),
+                              "ctx_hits": plan.n_unique - len(miss_rows),
+                              "slab": slab is not None}
         return ("cross", (plan.b_u, plan.b_c, plan.seq_len),
                 (self.params, self._device(batch), packed_dev))
 
@@ -717,15 +808,17 @@ class ServingEngine:
         ctx bytes), then gather the whole bucket by slot id with dequant
         fused — the packed device batch without ctx_slice/ctx_pack/H2D."""
         if miss_rows:
-            ctxs = self._encode_missing(plan, miss_rows, "context")
-            slots = self._alloc_slots(slab, len(miss_rows))
-            b_m = self.ladder_u.fit(len(miss_rows))
-            vec = np.full(b_m, slab.scratch, np.int32)
-            vec[:len(miss_rows)] = slots
-            slab.arenas = self.registry(
-                "slab_put", (b_m, plan.seq_len),
-                slab.arenas, ctxs, jnp.asarray(vec))
-            slab.puts += len(miss_rows)
+            with self._tracer.span("slab:put", "slab", tid=self._slab_tid,
+                                   args={"miss_users": len(miss_rows)}):
+                ctxs = self._encode_missing(plan, miss_rows, "context")
+                slots = self._alloc_slots(slab, len(miss_rows))
+                b_m = self.ladder_u.fit(len(miss_rows))
+                vec = np.full(b_m, slab.scratch, np.int32)
+                vec[:len(miss_rows)] = slots
+                slab.arenas = self.registry(
+                    "slab_put", (b_m, plan.seq_len),
+                    slab.arenas, ctxs, jnp.asarray(vec))
+                slab.puts += len(miss_rows)
             for j, u in enumerate(miss_rows):
                 v = ("slab", self._ctx_tag, slots[j])
                 self.cache.put(plan.user_keys[u], v)
@@ -733,8 +826,10 @@ class ServingEngine:
         vec = np.full(plan.b_u, slab.scratch, np.int32)
         for u in range(plan.n_unique):
             vec[u] = values[u][2]
-        out = self.registry("slab_gather", (plan.b_u, plan.seq_len),
-                            slab.arenas, jnp.asarray(vec))
+        with self._tracer.span("slab:gather", "slab", tid=self._slab_tid,
+                               args={"b_u": plan.b_u}):
+            out = self.registry("slab_gather", (plan.b_u, plan.seq_len),
+                                slab.arenas, jnp.asarray(vec))
         slab.gathers += 1
         return out
 
@@ -802,6 +897,9 @@ class ServingEngine:
     # -- lite path: pooled-embedding cache (dedup-aware) --------------------
     def _prepare_lite(self, plan: BatchPlan):
         values, miss_rows = self._lookup_users(plan.user_keys)
+        if self._obs_on:
+            self._prep_obs = {"ctx_misses": len(miss_rows),
+                              "ctx_hits": plan.n_unique - len(miss_rows)}
         if miss_rows:
             fresh = np.asarray(self._encode_missing(plan, miss_rows, "encode"))
             for j, u in enumerate(miss_rows):
@@ -1121,6 +1219,15 @@ class ServingEngine:
             entry["cache_hits"] = self.cache.hits
             entry["cache_misses"] = self.cache.misses
         self.call_stats.append(entry)
+        if self._obs_on:
+            self._h_retr_ms.record(entry["latency_s"] * 1e3)
+            self._tracer.event(
+                "retrieval:group", "retrieval", t0, entry["latency_s"],
+                tid=self._retr_tid,
+                args={"users": n_users, "b_q": b_q,
+                      "chunks": entry["corpus_chunks"],
+                      "filtered_users": entry["filtered_users"],
+                      **tel_extra})
 
     def _corpus_topk(self, emb, n_users, tel_extra, filters=None):
         """Synchronous dispatch + merge over the corpus (the retrieve
@@ -1219,6 +1326,12 @@ class ServingEngine:
                  "latency_s": fl["prepare_s"] + fl["launch_s"] + wait_s,
                  **{f"exec_{k}": v for k, v in
                     self.registry.telemetry().items()}})
+            if self._obs_on:
+                self._trace_chunk(
+                    "two_stage", fl["t0"], fl["prepare_s"], fl["launch_s"],
+                    t0, wait_s,
+                    {"kind": "score_emb", "b_u": fl["b_u"],
+                     "b_c": fl["b_c"], "candidates": fl["n_c"]})
             return wait_s * 1e3
 
         def launch_rank(chunk):
@@ -1264,13 +1377,15 @@ class ServingEngine:
             if in_flight:
                 ps.overlapped_ms += prepare_s * 1e3
             t1 = time.perf_counter()
-            out = self.registry("score_emb", (b_u, b_c), self.params,
-                                jnp.asarray(user_emb), self._device(batch))
+            with self._tracer.annotation("score_emb"):
+                out = self.registry("score_emb", (b_u, b_c), self.params,
+                                    jnp.asarray(user_emb),
+                                    self._device(batch))
             launch_s = time.perf_counter() - t1
             ps.launch_ms += launch_s * 1e3
             fresh = {"out": out, "scatter": scatter, "n_c": n_c, "n_u": n_u,
                      "b_u": b_u, "b_c": b_c, "prepare_s": prepare_s,
-                     "launch_s": launch_s}
+                     "launch_s": launch_s, "t0": t0}
             if self.pipeline_depth >= 2:
                 prev, infl = infl, fresh
                 if prev is not None:
@@ -1350,6 +1465,8 @@ class ServingEngine:
             ps.wait_ms += finalize(infl)
         ps.total_ms = (time.perf_counter() - t_all) * 1e3
         self.pipeline_stats.append(ps)
+        if self._obs_on:
+            ps.record_to(self.obs.metrics)
 
         return [TwoStageResult(
                     item_ids=meta[i][0], retrieval_scores=meta[i][1],
@@ -1408,13 +1525,120 @@ class ServingEngine:
             }
         return snap
 
+    def _collect_obs(self) -> None:
+        """Export-time collector (registered when obs is enabled): mirrors
+        the engine's ad-hoc telemetry — executor registry, ContextCache +
+        pack memo, retrieval mask cache, KV slab, lane totals, scheduler
+        counters — into the obs registry, Prometheus-scrape style.  The
+        source of truth stays the engine counters and the :meth:`stats`
+        dict (whose key set is pinned by test); this reads ONE consistent
+        ``stats()`` snapshot so the exported values are exactly what
+        ``stats()`` would have returned at export time.  Runs outside the
+        metrics registry lock; the per-metric locks it then takes are
+        leaves, so the only lock order is engine -> metric."""
+        m = self.obs.metrics
+        s = self.stats()
+        ex = s["executors"]
+        m.gauge("serving_executors",
+                "jitted executors instantiated").set(ex["executors"])
+        m.counter("serving_executor_compiles_total",
+                  "first executions (each paid an XLA compile)"
+                  ).set_total(ex["compiles"])
+        m.counter("serving_executor_hits_total",
+                  "executions of an already-compiled executor"
+                  ).set_total(ex["hits"])
+        m.gauge("serving_executor_warmed",
+                "executors precompiled by warmup()").set(ex["warmed"])
+        m.gauge("serving_executor_compiles_after_warmup",
+                "compiles outside warmup — the zero-recompile contract "
+                "pins this at 0").set(ex["compiles_after_warmup"])
+        calls: Dict[str, int] = {}
+        for (kind, _), n in self.registry.call_counts().items():
+            calls[kind] = calls.get(kind, 0) + n
+        for kind, n in sorted(calls.items()):
+            m.counter("serving_executor_calls_total",
+                      "executor executions by kind",
+                      kind=kind).set_total(n)
+        if s["cache"] is not None:
+            c = s["cache"]
+            m.counter("serving_cache_hits_total",
+                      "ContextCache hits").set_total(c["hits"])
+            m.counter("serving_cache_misses_total",
+                      "ContextCache misses").set_total(c["misses"])
+            m.gauge("serving_cache_entries",
+                    "ContextCache resident entries").set(c["entries"])
+            m.gauge("serving_cache_bytes",
+                    "ContextCache resident bytes").set(c["nbytes"])
+            m.counter("serving_memo_hits_total",
+                      "pack-memo hits (assembly skipped)"
+                      ).set_total(c["memo_hits"])
+            m.counter("serving_memo_misses_total",
+                      "pack-memo misses").set_total(c["memo_misses"])
+            m.counter("serving_memo_invalidations_total",
+                      "pack-memo entries dropped by cache churn"
+                      ).set_total(c["memo_invalidations"])
+            m.counter("serving_memo_perm_hits_total",
+                      "pack-memo hits served via host row remap"
+                      ).set_total(s["memo_perm_hits"])
+        if s["slab"] is not None:
+            sl = s["slab"]
+            m.gauge("serving_slab_occupancy",
+                    "KV slab slots in use").set(sl["occupancy"])
+            m.gauge("serving_slab_capacity",
+                    "KV slab slots total").set(sl["capacity"])
+            m.gauge("serving_slab_bytes_resident",
+                    "KV slab arena bytes").set(sl["bytes_resident"])
+            m.counter("serving_slab_puts_total",
+                      "users quantized+scattered into the slab"
+                      ).set_total(sl["puts"])
+            m.counter("serving_slab_gathers_total",
+                      "fused slab batch gathers").set_total(sl["gathers"])
+            m.counter("serving_slab_evictions_total",
+                      "slab slots recycled via cache eviction"
+                      ).set_total(sl["evictions"])
+            m.counter("serving_slab_fallbacks_total",
+                      "flushes at an L the slab is not sized for"
+                      ).set_total(sl["fallbacks"])
+        m.counter("serving_mask_hits_total",
+                  "retrieval filter-mask memo hits"
+                  ).set_total(s["masks"]["hits"])
+        m.counter("serving_mask_misses_total",
+                  "retrieval filter-mask memo misses"
+                  ).set_total(s["masks"]["misses"])
+        m.gauge("serving_mask_entries",
+                "memoized filter-mask rows").set(s["masks"]["entries"])
+        for lane, n in s["lanes"].items():
+            m.counter("serving_lane_requests_total",
+                      "requests served, by lane", lane=lane).set_total(n)
+        m.counter("serving_shared_encode_users_total",
+                  "users encoded by the cross-lane shared pass"
+                  ).set_total(s["shared_encode_users"])
+        m.counter("serving_scheduler_flushes_total",
+                  "scheduler flushes executed"
+                  ).set_total(s["scheduler"]["flushes"])
+        m.counter("serving_scheduler_coalesced_total",
+                  "requests drained across all flushes"
+                  ).set_total(s["scheduler"]["coalesced"])
+        m.counter("serving_chunks_executed_total",
+                  "executor chunks executed"
+                  ).set_total(s["chunks_executed"])
+        if s["retrieval"]["attached"]:
+            m.gauge("serving_retrieval_corpus_items",
+                    "items in the attached corpus"
+                    ).set(s["retrieval"]["corpus_items"])
+            m.gauge("serving_retrieval_corpus_chunks",
+                    "fixed-shape device chunks covering the corpus"
+                    ).set(s["retrieval"]["corpus_chunks"])
+
     # ------------------------------------------------------------------
     def warmup(self, *, seq_len: Optional[int] = None) -> dict:
         """Precompile every executor reachable from the bucket ladder, so
         steady-state traffic never pays an XLA compile.  Returns registry
         telemetry (incl. wall time)."""
         with self._engine_lock:     # not under a flush on another thread
-            return self._warmup_locked(seq_len)
+            with self._tracer.span("warmup", "engine",
+                                   tid=self._tracer.tid("engine")):
+                return self._warmup_locked(seq_len)
 
     def _warmup_locked(self, seq_len: Optional[int]) -> dict:
         L = int(seq_len if seq_len is not None else self.model.cfg.seq_len)

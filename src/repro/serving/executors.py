@@ -36,6 +36,7 @@ class ExecutorRegistry:
         self._jitted: Dict[Tuple[str, Hashable], Callable] = {}
         self._executed: set = set()
         self._warmed: set = set()
+        self._calls: Dict[Tuple[str, Hashable], int] = {}
         self._lock = threading.RLock()
         self.compiles = 0
         self.hits = 0
@@ -82,6 +83,9 @@ class ExecutorRegistry:
         first use.  First executions count toward ``compiles`` (and, if
         outside :meth:`warm`, toward ``compiles_after_warmup`` — the
         number the zero-recompile serving contract pins at 0)."""
+        return self._execute(kind, key, args, warming=False)
+
+    def _execute(self, kind: str, key: Hashable, args, *, warming: bool):
         k = (kind, key)
         with self._lock:
             fn = self._jitted.get(k)
@@ -94,16 +98,30 @@ class ExecutorRegistry:
             else:
                 self._executed.add(k)
                 self.compiles += 1
+            if warming:
+                # marked in the SAME critical section as the executed set:
+                # a concurrent telemetry()/stats() reader interleaving with
+                # warmup() must never observe the executed-but-not-yet-
+                # warmed gap as a phantom nonzero compiles_after_warmup
+                self._warmed.add(k)
+            self._calls[k] = self._calls.get(k, 0) + 1
         return fn(*args)
 
     def warm(self, kind: str, key: Hashable, *args):
         """Execute once for compilation and tag the executor as warmed; the
         warmup compile is excluded from steady-state telemetry questions via
-        ``compiles_after_warmup``."""
-        out = self(kind, key, *args)
+        ``compiles_after_warmup``.  The warmed mark is applied atomically
+        with the execution bookkeeping (one lock section), so concurrent
+        telemetry readers see warmup compiles as warmed from the start."""
+        return self._execute(kind, key, args, warming=True)
+
+    def call_counts(self) -> Dict[Tuple[str, Hashable], int]:
+        """-> consistent {(kind, key): executions} snapshot (taken under
+        the registry lock).  Not part of :meth:`telemetry` — the
+        ``stats()`` dict contract is pinned; the obs registry exports
+        per-kind aggregates of this via a collector."""
         with self._lock:
-            self._warmed.add((kind, key))
-        return out
+            return dict(self._calls)
 
     @property
     def compiles_after_warmup(self) -> int:

@@ -198,6 +198,36 @@ class PipelineStats:
         return {**dataclasses.asdict(self),
                 "overlap_fraction": self.overlap_fraction}
 
+    def record_to(self, metrics) -> None:
+        """Mirror this flush's stage timings into an obs
+        ``MetricsRegistry`` (``repro.obs``) as per-lane histograms plus
+        the overlap-fraction gauge.  Called by the engine once per flush
+        (per lane) — per-flush get-or-create lookups, not per-chunk."""
+        lane = self.lane
+        metrics.histogram("serving_stage_prepare_ms",
+                          "host prepare per flush, ms",
+                          lane=lane).record(self.prepare_ms)
+        metrics.histogram("serving_stage_launch_ms",
+                          "executor dispatch per flush, ms",
+                          lane=lane).record(self.launch_ms)
+        metrics.histogram("serving_stage_wait_ms",
+                          "device->host sync per flush, ms",
+                          lane=lane).record(self.wait_ms)
+        metrics.histogram("serving_stage_total_ms",
+                          "whole lane batch wall time, ms",
+                          lane=lane).record(self.total_ms)
+        if self.retrieve_ms:
+            metrics.histogram("serving_stage_retrieve_ms",
+                              "retrieval dispatch+merge per flush, ms",
+                              lane=lane).record(self.retrieve_ms)
+        metrics.histogram("serving_pipeline_chunks",
+                          "executor chunks per flush",
+                          lo=1.0, hi=1e4, per_decade=10,
+                          lane=lane).record(self.chunks)
+        metrics.gauge("serving_pipeline_overlap_fraction",
+                      "share of host work hidden behind device execution "
+                      "(last flush)", lane=lane).set(self.overlap_fraction)
+
 
 @dataclasses.dataclass
 class BatchPlan:

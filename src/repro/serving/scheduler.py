@@ -108,6 +108,12 @@ class RequestScheduler:
       lock: optional lock serializing ``flush_fn`` executions; defaults to
         a private one.  The engine passes its own RLock so scheduler-driven
         flushes and any direct engine calls serialize together.
+      obs: optional ``repro.obs.Observability`` — when enabled, the
+        scheduler records the per-request QUEUE WAIT (submit -> flush
+        start) and coalesced batch-size histograms, keeps a queue-depth
+        gauge, and emits one trace span per flush plus one per-request
+        lifecycle span (submit -> result resolution, with the queue wait
+        and request type as args).
 
     Invariant: every submitted request's future resolves exactly once —
     with the result, or with the flush function's exception if a flush
@@ -118,7 +124,7 @@ class RequestScheduler:
                  max_candidates: Optional[int] = None,
                  max_wait_s: float = 0.01,
                  max_wait_ms: Optional[float] = None,
-                 lock=None):
+                 lock=None, obs=None):
         self._flush_fn = flush_fn
         self.max_requests = max_requests
         self.max_candidates = max_candidates
@@ -131,9 +137,28 @@ class RequestScheduler:
         self.engine_lock = lock if lock is not None else threading.Lock()
         self._pending: List = []
         self._futures: List[Future] = []
+        self._enq_t: List[float] = []    # per-pending submit timestamps
         self._oldest: Optional[float] = None
         self.flushes = 0
         self.coalesced = 0
+        # -- observability (all handles are no-ops when obs is off) --------
+        self._obs_on = obs is not None and obs.enabled
+        if self._obs_on:
+            m, self._tracer = obs.metrics, obs.tracer
+            self._h_wait = m.histogram(
+                "serving_queue_wait_ms",
+                "request age at flush start (submit -> flush), ms")
+            self._h_coalesced = m.histogram(
+                "serving_flush_coalesced_requests",
+                "requests drained per flush", lo=1.0, hi=1e4, per_decade=10)
+            self._g_depth = m.gauge(
+                "serving_queue_depth", "pending requests after last submit")
+            self._c_failures = m.counter(
+                "serving_flush_failures_total",
+                "flushes that raised (every member future carries the "
+                "exception)")
+            self._req_tid = self._tracer.tid("requests")
+            self._flush_tid = self._tracer.tid("scheduler")
         self._stop = threading.Event()
         self._flusher: Optional[threading.Thread] = None
         if max_wait_ms is not None:
@@ -178,6 +203,8 @@ class RequestScheduler:
         f = Future(self)
         self._pending.append(request)
         self._futures.append(f)
+        if self._obs_on:
+            self._enq_t.append(time.perf_counter())
         if self._oldest is None:
             self._oldest = time.time()
         return f
@@ -196,6 +223,9 @@ class RequestScheduler:
         with self._lock:
             f = self._enqueue(request)
             full = self._over_threshold()
+            depth = len(self._pending)
+        if self._obs_on:
+            self._g_depth.set(depth)
         if full:
             self.flush()
         return f
@@ -208,6 +238,9 @@ class RequestScheduler:
         with self._lock:
             futures = [self._enqueue(r) for r in requests]
             full = self._over_threshold()
+            depth = len(self._pending)
+        if self._obs_on:
+            self._g_depth.set(depth)
         if full:
             self.flush()
         return futures
@@ -232,20 +265,46 @@ class RequestScheduler:
                     and only_if_pending not in self._futures):
                 return      # picked up by an in-flight flush: just wait
             pending, futures = self._pending, self._futures
+            enq_t = self._enq_t
             self._pending, self._futures, self._oldest = [], [], None
+            self._enq_t = []
             if pending:
                 self.flushes += 1
                 self.coalesced += len(pending)
         if not pending:
             return
+        obs = self._obs_on
+        if obs:
+            t_flush = time.perf_counter()
+            for t in enq_t:
+                self._h_wait.record((t_flush - t) * 1e3)
+            self._h_coalesced.record(len(pending))
+            self._g_depth.set(0)
         try:
             with self.engine_lock:
                 results = self._flush_fn(pending)
         except BaseException as exc:
             # never orphan a future: a caller blocked in result() must see
             # the failure, not hang
+            if obs:
+                self._c_failures.inc()
             for f in futures:
                 f._set_error(exc)
             raise
         for f, r in zip(futures, results):
             f._set(r)
+        if obs:
+            t_done = time.perf_counter()
+            self._tracer.event(
+                "flush", "scheduler", t_flush, t_done - t_flush,
+                tid=self._flush_tid,
+                args={"requests": len(pending),
+                      "max_queue_wait_ms":
+                          round((t_flush - min(enq_t)) * 1e3, 3)
+                          if enq_t else 0.0})
+            # one lifecycle span per request: submit -> result resolution
+            for r, t in zip(pending, enq_t):
+                self._tracer.event(
+                    type(r).__name__, "request", t, t_done - t,
+                    tid=self._req_tid,
+                    args={"queue_wait_ms": round((t_flush - t) * 1e3, 3)})

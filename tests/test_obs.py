@@ -1,0 +1,444 @@
+"""Serving observability (``repro.obs``): histogram quantile math,
+registry/export semantics, tracer ring buffer, the ExecutorRegistry
+warmup-vs-telemetry atomicity regression, and engine integration.
+
+Acceptance points covered:
+  * histogram bucket-boundary exactness (a value exactly on an inclusive
+    upper bound lands in that bound's bucket), empty/one-sample edges,
+    merge + layout-mismatch rejection, and an 8-thread record hammer
+    losing no counts;
+  * Prometheus text exposition is well-formed (+Inf bucket == count,
+    derived _p50/_p99) and the JSON snapshot runs collectors;
+  * the tracer keeps the newest ``capacity`` events, counts drops, and
+    exports loadable Chrome trace-event JSON;
+  * warmup() marks executors warmed atomically with the executed
+    bookkeeping — a concurrent telemetry reader never observes a phantom
+    nonzero ``compiles_after_warmup`` (regression);
+  * engine integration: ``stats()`` key set UNCHANGED by obs, per-lane
+    histograms + request spans present after traffic, ``obs_enabled=False``
+    scores bit-identically with empty exports, zero recompiles either way.
+"""
+import json
+import math
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCAT
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.models.config import get_config
+from repro.obs import (NULL_REGISTRY, NULL_TRACER, Histogram,
+                       MetricsRegistry, Observability, Tracer)
+from repro.retrieval import IndexBuilder
+from repro.serving import (ContextCache, RankRequest, RetrieveRequest,
+                           RetrieveThenRankRequest, ServingEngine)
+from repro.serving.executors import ExecutorRegistry
+
+L = 16
+N_ITEMS = 300
+TOP_K = 8
+CAND_DIM = 32
+
+
+# ---------------------------------------------------------------------------
+# Histogram quantile math
+# ---------------------------------------------------------------------------
+
+def test_histogram_bucket_boundary_inclusive():
+    """A value exactly equal to a bucket's inclusive upper bound counts in
+    THAT bucket: quantile() reports the bound itself, not the next one."""
+    h = Histogram(lo=1.0, hi=100.0, per_decade=1)     # bounds [1, 10, 100]
+    assert h.bounds == [1.0, 10.0, 100.0]
+    h.record(10.0)                                    # exactly on a bound
+    assert h.quantile(0.5) == 10.0
+    assert h.quantile(1.0) == 10.0
+    h2 = Histogram(lo=1.0, hi=100.0, per_decade=1)
+    h2.record(1.0)                                    # exactly lo
+    assert h2.quantile(0.5) == 1.0
+    h3 = Histogram(lo=1.0, hi=100.0, per_decade=1)
+    h3.record(10.000001)                              # just over the bound
+    assert h3.quantile(0.5) == 100.0
+
+
+def test_histogram_under_and_overflow():
+    h = Histogram(lo=1.0, hi=100.0, per_decade=1)
+    h.record(0.001)                   # underflow -> first bucket (<= lo)
+    assert h.quantile(0.5) == 1.0
+    h.record(1e9)                     # overflow -> reported as top bound
+    assert h.quantile(0.99) == 100.0
+    assert h.count == 2
+
+
+def test_histogram_empty_and_one_sample():
+    h = Histogram()
+    assert math.isnan(h.quantile(0.5))
+    assert math.isnan(h.quantile(0.99))
+    h.record(3.7)
+    # one sample: every quantile is that sample's bucket bound
+    assert h.quantile(0.5) == h.quantile(0.99) == h.quantile(1.0)
+    assert h.quantile(0.5) >= 3.7                 # upper bound property
+    assert h.quantile(0.5) <= 3.7 * 10 ** (1 / 20)    # tight to one bucket
+
+
+def test_histogram_quantile_bounds_sample_population():
+    """pXX is >= at least XX% of samples and within one bucket ratio of
+    the true quantile — the determinism/accuracy contract."""
+    h = Histogram(lo=1e-2, hi=1e5, per_decade=20)
+    vals = [float(v) for v in range(1, 101)]          # 1..100
+    for v in vals:
+        h.record(v)
+    ratio = 10 ** (1 / 20)
+    for q in (0.5, 0.95, 0.99):
+        true_q = vals[max(0, math.ceil(q * len(vals)) - 1)]
+        got = h.quantile(q)
+        assert got >= true_q                          # never understates
+        assert got <= true_q * ratio                  # one bucket width
+        assert h.quantile(q) == got                   # deterministic
+
+
+def test_histogram_merge_adds_counts():
+    a = Histogram(lo=1.0, hi=100.0, per_decade=2)
+    b = Histogram(lo=1.0, hi=100.0, per_decade=2)
+    for v in (1.0, 5.0, 50.0):
+        a.record(v)
+    for v in (2.0, 5.0):
+        b.record(v)
+    m = a.merge(b)
+    assert m.count == 5
+    assert m.sum == pytest.approx(63.0)
+    assert sum(m.counts) == 5
+    # merge is a copy: mutating the merged histogram leaves inputs alone
+    m.record(99.0)
+    assert a.count == 3 and b.count == 2
+
+
+def test_histogram_merge_layout_mismatch_raises():
+    a = Histogram(lo=1.0, hi=100.0, per_decade=2)
+    b = Histogram(lo=1.0, hi=100.0, per_decade=4)
+    with pytest.raises(ValueError, match="layout mismatch"):
+        a.merge(b)
+
+
+def test_histogram_eight_thread_hammer():
+    """8 threads x 4000 records: per-metric lock loses no counts and the
+    sum is exact (each thread records a distinct constant)."""
+    h = Histogram()
+    N, T = 4000, 8
+
+    def work(val):
+        for _ in range(N):
+            h.record(val)
+
+    threads = [threading.Thread(target=work, args=(float(t + 1),))
+               for t in range(T)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert h.count == N * T
+    assert sum(h.counts) == N * T
+    assert h.sum == pytest.approx(N * sum(range(1, T + 1)))
+
+
+# ---------------------------------------------------------------------------
+# Registry + exports
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_conflicts():
+    r = MetricsRegistry()
+    c1 = r.counter("serving_thing_total", lane="rank")
+    assert r.counter("serving_thing_total", lane="rank") is c1
+    c2 = r.counter("serving_thing_total", lane="retrieve")
+    assert c2 is not c1
+    with pytest.raises(ValueError, match="conflicting"):
+        r.gauge("serving_thing_total")                # type conflict
+    r.histogram("serving_lat_ms", lo=1.0, hi=10.0, per_decade=2)
+    with pytest.raises(ValueError, match="conflicting"):
+        r.histogram("serving_lat_ms", lo=1.0, hi=10.0, per_decade=4)
+    with pytest.raises(ValueError, match="bad metric name"):
+        r.counter("Bad-Name")
+
+
+def test_registry_prometheus_text_format():
+    r = MetricsRegistry(namespace="repro")
+    r.counter("serving_hits_total", help="cache hits").inc(7)
+    h = r.histogram("serving_lat_ms", lane="rank")
+    for v in (0.5, 2.0, 2.0, 40.0):
+        h.record(v)
+    text = r.prometheus_text()
+    assert "# TYPE repro_serving_hits_total counter" in text
+    assert "repro_serving_hits_total 7" in text
+    assert "# TYPE repro_serving_lat_ms histogram" in text
+    assert 'repro_serving_lat_ms_bucket{lane="rank",le="+Inf"} 4' in text
+    assert 'repro_serving_lat_ms_count{lane="rank"} 4' in text
+    assert 'repro_serving_lat_ms_p50{lane="rank"}' in text
+    assert 'repro_serving_lat_ms_p99{lane="rank"}' in text
+    # cumulative buckets never decrease and end at the total count
+    cums = [int(ln.rsplit(" ", 1)[1]) for ln in text.splitlines()
+            if ln.startswith("repro_serving_lat_ms_bucket")]
+    assert cums == sorted(cums) and cums[-1] == 4
+
+
+def test_registry_collector_runs_at_export():
+    r = MetricsRegistry()
+    pulls = []
+
+    def collect():
+        pulls.append(1)
+        r.counter("serving_pulled_total").set_total(42)
+
+    r.register_collector(collect)
+    snap = r.snapshot()
+    assert snap["repro_serving_pulled_total"] == 42
+    assert "repro_serving_pulled_total 42" in r.prometheus_text()
+    assert len(pulls) == 2                            # once per export
+
+
+def test_histogram_snapshot_shape():
+    r = MetricsRegistry()
+    h = r.histogram("serving_lat_ms")
+    h.record(1.0)
+    h.record(2.0)
+    snap = r.snapshot()["repro_serving_lat_ms"]
+    assert snap["count"] == 2 and snap["sum"] == pytest.approx(3.0)
+    assert set(snap) == {"count", "sum", "p50", "p95", "p99", "buckets"}
+    assert max(snap["buckets"].values()) == 2         # cumulative
+
+
+def test_null_registry_and_tracer_are_inert():
+    assert NULL_REGISTRY.snapshot() == {}
+    assert NULL_REGISTRY.prometheus_text() == ""
+    m = NULL_REGISTRY.histogram("serving_x_ms", lane="rank")
+    m.record(5.0)
+    m.inc()
+    assert m.get() == 0 and math.isnan(m.quantile(0.5))
+    assert NULL_TRACER.chrome_trace()["traceEvents"] == []
+    with NULL_TRACER.span("x"):
+        pass
+    assert NULL_TRACER.tid("anything") == 0
+    obs = Observability(enabled=False)
+    assert obs.metrics is NULL_REGISTRY and obs.tracer is NULL_TRACER
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_ring_buffer_and_dropped():
+    tr = Tracer(capacity=4)
+    for i in range(10):
+        tr.event(f"ev{i}", "test", 0.0, 0.001, tid=tr.tid("t"))
+    assert tr.dropped == 6
+    doc = tr.chrome_trace()
+    names = [e["name"] for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert names == ["ev6", "ev7", "ev8", "ev9"]      # newest window wins
+    assert doc["otherData"] == {"dropped_events": 6, "capacity": 4}
+
+
+def test_tracer_chrome_trace_shape(tmp_path):
+    tr = Tracer(capacity=64)
+    with tr.span("work", "stage", tid=tr.tid("lane:rank"),
+                 args={"requests": 3}):
+        pass
+    tr.instant("mark", "stage", tid=tr.tid("lane:rank"))
+    path = tmp_path / "t.json"
+    tr.export(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    meta = [e for e in evs if e["ph"] == "M"]
+    assert meta[0]["args"]["name"] == "lane:rank"
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert spans[0]["name"] == "work" and spans[0]["dur"] >= 0
+    assert spans[0]["args"] == {"requests": 3}
+    inst = [e for e in evs if e["ph"] == "i"]
+    assert inst[0]["name"] == "mark" and "dur" not in inst[0]
+    assert tr.tid("lane:rank") == tr.tid("lane:rank")  # stable
+    assert tr.tid("lane:rank") != tr.tid("other")
+
+
+# ---------------------------------------------------------------------------
+# ExecutorRegistry warmup atomicity (regression)
+# ---------------------------------------------------------------------------
+
+def test_warm_vs_telemetry_concurrent_never_phantom_compiles():
+    """warmup() in one thread, telemetry readers in others: the warmed
+    mark is applied in the same critical section as the executed
+    bookkeeping, so ``compiles_after_warmup`` never flickers above 0
+    mid-warmup (regression: it used to be marked after the fact)."""
+    reg = ExecutorRegistry()
+    reg.register("id", lambda key: lambda x: x + key[0])
+    phantom, stop = [], threading.Event()
+
+    def reader():
+        while not stop.is_set():
+            v = reg.compiles_after_warmup
+            if v:
+                phantom.append(v)
+            t = reg.telemetry()
+            if t["compiles_after_warmup"]:
+                phantom.append(t)
+
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    for t in readers:
+        t.start()
+    x = np.float32(1.0)
+    for i in range(60):
+        reg.warm("id", (i,), x)
+    stop.set()
+    for t in readers:
+        t.join()
+    assert phantom == []
+    tel = reg.telemetry()
+    assert tel["compiles"] == 60 and tel["warmed"] == 60
+    assert tel["compiles_after_warmup"] == 0
+    # call_counts is a side snapshot, NOT part of the pinned telemetry dict
+    assert set(tel) == {"executors", "compiles", "hits", "warmed",
+                        "compiles_after_warmup"}
+    assert sum(reg.call_counts().values()) == 60
+
+
+# ---------------------------------------------------------------------------
+# Engine integration
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lite_model():
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    cfg = FinetuneConfig(variant="lite-last", seq_len=L)
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def item_index(lite_model):
+    model, params = lite_model
+    return IndexBuilder(model, params, batch_size=256).build(0, N_ITEMS)
+
+
+def _feats(ids):
+    return np.stack([np.random.RandomState(int(i) % 4999).randn(CAND_DIM)
+                     for i in np.asarray(ids)]).astype(np.float32)
+
+
+def _user(seed):
+    r = np.random.RandomState(seed)
+    return (r.randint(0, N_ITEMS, L), r.randint(0, 6, L),
+            r.randint(0, 3, L), r.randn(32).astype(np.float32))
+
+
+def _mk_rank(seed, n_cand=3):
+    i, a, s, uf = _user(seed)
+    ids = np.random.RandomState(seed + 7000).randint(0, N_ITEMS, n_cand)
+    return RankRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                       cand_ids=ids, cand_feats=_feats(ids), user_feats=uf)
+
+
+def _mk_engine(lite_model, item_index, **kw):
+    model, params = lite_model
+    kw.setdefault("cache", ContextCache(capacity=256))
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=32,
+                           **kw)
+    engine.attach_index(item_index, k=TOP_K, chunk_rows=256)
+    engine.attach_features(_feats)
+    engine.warmup()
+    return engine
+
+
+def _traffic(engine):
+    i, a, s, uf = _user(3)
+    reqs = [_mk_rank(1), _mk_rank(2),
+            RetrieveRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                            k=TOP_K),
+            RetrieveThenRankRequest(seq_ids=i, seq_actions=a,
+                                    seq_surfaces=s, user_feats=uf, k=TOP_K)]
+    futs = engine.submit_many(reqs)
+    engine.flush()
+    return [f.result() for f in futs]
+
+
+STATS_KEYS = {"executors", "cache", "memo_perm_hits", "slab", "masks",
+              "lanes", "shared_encode_users", "scheduler",
+              "chunks_executed", "pipeline_calls", "last_pipeline",
+              "retrieval"}
+
+
+def test_engine_stats_contract_unchanged_by_obs(lite_model, item_index):
+    """The pinned stats() dict carries NO obs keys — obs reads stats,
+    never the other way around."""
+    engine = _mk_engine(lite_model, item_index)
+    _traffic(engine)
+    snap = engine.stats()
+    assert set(snap) == STATS_KEYS
+    assert set(snap["executors"]) == {"executors", "compiles", "hits",
+                                      "warmed", "compiles_after_warmup"}
+    assert snap["executors"]["compiles_after_warmup"] == 0
+
+
+def test_engine_obs_traffic_metrics_and_trace(lite_model, item_index):
+    engine = _mk_engine(lite_model, item_index)
+    _traffic(engine)
+    text = engine.obs.prometheus_text()
+    assert 'repro_serving_flush_latency_ms_bucket{lane="rank"' in text
+    assert 'repro_serving_flush_latency_ms_p50{lane="rank"}' in text
+    assert "repro_serving_queue_wait_ms_count" in text
+    assert "repro_serving_executor_compiles_after_warmup 0" in text
+    assert "repro_serving_memo_hits_total" in text
+    assert 'repro_serving_lane_requests_total{lane="rank"} 2' in text
+    assert 'repro_serving_executor_calls_total{kind=' in text
+    names = {e["name"] for e in engine.obs.chrome_trace()["traceEvents"]}
+    assert {"warmup", "flush", "lane:rank", "prepare", "launch", "wait",
+            "RankRequest", "RetrieveRequest",
+            "RetrieveThenRankRequest"} <= names
+    # snapshot mirrors stats() through the collector
+    snap, stats = engine.obs.snapshot(), engine.stats()
+    assert snap["repro_serving_cache_hits_total"] == stats["cache"]["hits"]
+    assert (snap["repro_serving_scheduler_flushes_total"]
+            == stats["scheduler"]["flushes"])
+
+
+def test_engine_obs_disabled_bit_identical_and_empty(lite_model, item_index):
+    on = _mk_engine(lite_model, item_index, obs_enabled=True)
+    off = _mk_engine(lite_model, item_index, obs_enabled=False)
+    reqs = [_mk_rank(11), _mk_rank(12)]
+    p_on = on.score(reqs)
+    p_off = off.score(reqs)
+    np.testing.assert_array_equal(np.asarray(p_on), np.asarray(p_off))
+    assert off.obs.prometheus_text() == ""
+    assert off.obs.snapshot() == {}
+    assert off.obs.chrome_trace()["traceEvents"] == []
+    assert off.stats()["executors"]["compiles_after_warmup"] == 0
+    assert set(off.stats()) == STATS_KEYS
+
+
+def test_engine_obs_export_files(lite_model, item_index, tmp_path):
+    engine = _mk_engine(lite_model, item_index)
+    _traffic(engine)
+    tpath, ppath = tmp_path / "t.json", tmp_path / "m.prom"
+    engine.obs.export_trace(str(tpath))
+    engine.obs.export_prometheus(str(ppath))
+    doc = json.loads(tpath.read_text())
+    assert doc["traceEvents"] and doc["otherData"]["dropped_events"] == 0
+    assert "repro_serving_flush_latency_ms" in ppath.read_text()
+    # and the bundled dump tool accepts both (CI gates on this)
+    import subprocess
+    import sys as _sys
+    import os as _os
+    r = subprocess.run(
+        [_sys.executable,
+         _os.path.join(_os.path.dirname(__file__), "..", "tools",
+                       "dump_obs.py"), str(tpath), str(ppath)],
+        capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    assert "named tracks" in r.stdout and "histogram series" in r.stdout

@@ -1,0 +1,138 @@
+#!/usr/bin/env python
+"""Pretty-print (and validate) serving observability artifacts.
+
+Takes any mix of Chrome trace-event JSON files (exported by
+``engine.obs.export_trace`` / ``Tracer.export``) and Prometheus text
+files (``engine.obs.export_prometheus``), sniffing the format per file:
+
+  * trace JSON -> event count, dropped-event count, per-track span
+    totals (count + total duration), slowest spans;
+  * Prometheus text -> every non-histogram sample, plus one line per
+    histogram label set with count / p50 / p99 (read from the exported
+    ``_p50``/``_p99`` gauges).
+
+Exits non-zero when a file is malformed — a trace that is not loadable
+trace-event JSON (missing ``traceEvents``, events missing ph/ts, a
+complete event missing dur) or a metrics file with an unparseable
+sample line — so CI can gate on "the exporters produce artifacts the
+tools can actually consume":
+
+    python examples/serve_two_stage.py --smoke --trace-out /tmp/t.json
+    python tools/dump_obs.py /tmp/t.json /tmp/t.json.prom
+"""
+import json
+import sys
+from collections import defaultdict
+
+# Prometheus sample: name{optional labels} value
+_REQUIRED_PH_FIELDS = {"X": ("dur",), "i": (), "M": (), "C": ()}
+
+
+def fail(msg: str) -> None:
+    print(f"dump_obs: MALFORMED: {msg}", file=sys.stderr)
+    sys.exit(1)
+
+
+def dump_trace(path: str, doc) -> None:
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        fail(f"{path}: no traceEvents key (not Chrome trace-event JSON)")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        fail(f"{path}: traceEvents is not a list")
+    tracks = {}
+    per_track = defaultdict(lambda: [0, 0.0])     # tid -> [count, dur_us]
+    spans = []
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict) or "ph" not in ev or "name" not in ev:
+            fail(f"{path}: event {i} missing ph/name: {ev!r}")
+        ph = ev["ph"]
+        if ph == "M":
+            if ev["name"] == "thread_name":
+                tracks[ev.get("tid", 0)] = ev["args"]["name"]
+            continue
+        if "ts" not in ev:
+            fail(f"{path}: event {i} ({ev['name']!r}) missing ts")
+        for field in _REQUIRED_PH_FIELDS.get(ph, ()):
+            if field not in ev:
+                fail(f"{path}: {ph!r} event {i} ({ev['name']!r}) "
+                     f"missing {field}")
+        if ph == "X":
+            t = per_track[ev.get("tid", 0)]
+            t[0] += 1
+            t[1] += ev["dur"]
+            spans.append((ev["dur"], ev["name"], ev.get("tid", 0)))
+    other = doc.get("otherData", {})
+    print(f"== trace {path}: {len(events)} events, "
+          f"{len(tracks)} named tracks, "
+          f"dropped={other.get('dropped_events', 0)} "
+          f"capacity={other.get('capacity', '?')}")
+    for tid in sorted(per_track):
+        n, dur = per_track[tid]
+        print(f"  track {tracks.get(tid, tid)!s:<22} {n:5d} spans  "
+              f"{dur / 1e3:10.2f} ms total")
+    for dur, name, tid in sorted(spans, reverse=True)[:5]:
+        print(f"  slowest: {name:<18} {dur / 1e3:10.2f} ms  "
+              f"on {tracks.get(tid, tid)}")
+
+
+def dump_prometheus(path: str, text: str) -> None:
+    hist = defaultdict(dict)       # (metric base, labels) -> {suffix: value}
+    plain = []
+    for ln, line in enumerate(text.splitlines(), 1):
+        if not line.strip() or line.startswith("#"):
+            continue
+        try:
+            name_part, value = line.rsplit(" ", 1)
+            float(value)           # +Inf / nan are valid Prometheus floats
+        except ValueError:
+            fail(f"{path}:{ln}: unparseable sample line: {line!r}")
+        name = name_part.split("{", 1)[0]
+        labels = (name_part[len(name):] if "{" in name_part else "")
+        for suffix in ("_bucket", "_sum", "_count", "_p50", "_p99"):
+            if name.endswith(suffix):
+                base = name[: -len(suffix)]
+                if suffix == "_bucket":    # drop the le label for grouping
+                    labels = labels.replace("{", "").replace("}", "")
+                    labels = ",".join(p for p in labels.split(",")
+                                      if not p.startswith('le='))
+                    labels = "{" + labels + "}" if labels else ""
+                hist[(base, labels)][suffix] = value
+                break
+        else:
+            plain.append((name + labels, value))
+    print(f"== metrics {path}: {len(plain)} samples, "
+          f"{len(hist)} histogram series")
+    for name, value in plain:
+        print(f"  {name:<58} {value}")
+    for (base, labels), parts in sorted(hist.items()):
+        if "_count" not in parts:
+            continue
+        print(f"  {base + labels:<58} count={parts['_count']} "
+              f"p50={parts.get('_p50', 'n/a')} "
+              f"p99={parts.get('_p99', 'n/a')}")
+
+
+def main(argv):
+    if not argv:
+        print(__doc__)
+        return 2
+    for path in argv:
+        try:
+            with open(path) as f:
+                text = f.read()
+        except OSError as e:
+            fail(f"{path}: {e}")
+        stripped = text.lstrip()
+        if stripped.startswith("{"):
+            try:
+                doc = json.loads(text)
+            except json.JSONDecodeError as e:
+                fail(f"{path}: invalid JSON: {e}")
+            dump_trace(path, doc)
+        else:
+            dump_prometheus(path, text)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
