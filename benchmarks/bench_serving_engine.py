@@ -42,6 +42,20 @@ Sections:
      enabled-mode throughput within 2% of disabled (the <2% bar is the
      acceptance criterion; asserted in the full run, correctness-only in
      smoke).  Emits BENCH_obs.json.
+  6. SLO lane isolation — the PR-8 per-lane flush policies on an
+     ADVERSARIAL MIX: latency-sensitive rank micro-batches interleaved
+     with slow large-k corpus passes queued on the retrieve lane.  With
+     ``isolate_lanes=True`` a rank-threshold flush drains ONLY the rank
+     lane; the ``isolate_lanes=False`` baseline (the pre-SLO shared
+     flush) drags the queued corpus passes into every rank flush, so the
+     rank caller pays for retrieval it never asked for.  Reports the
+     rank submit->resolve latency distribution (p50/p99) both ways —
+     bit-identical results, zero recompiles — plus a deterministic
+     shed-pressure run (0 ms rank budget, alternating priorities: every
+     sheddable request sheds with a typed ShedError, every protected one
+     is served).  Emits BENCH_slo.json (in smoke too — the smoke run
+     asserts the correctness half: parity, typed sheds, 0 recompiles;
+     the full run also asserts the >= 1.3x rank-p99 isolation bar).
 
 Run:   PYTHONPATH=src python benchmarks/bench_serving_engine.py [--smoke]
 
@@ -91,6 +105,8 @@ JSON3_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_kv_slab.json")
 JSON4_PATH = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_obs.json")
+JSON5_PATH = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_slo.json")
 
 
 def serving_model(variant="graphsage-lt", seq_len=L):
@@ -674,6 +690,170 @@ def section_observability(model, params, fcfg):
             "score_parity": "bit-identical (obs on vs off)"}
 
 
+# ---------------------------------------------------------------------------
+# section 6: SLO lane isolation — rank latency under an adversarial mix
+# ---------------------------------------------------------------------------
+
+def section_slo():
+    from repro.serving import LanePolicy, ShedError
+
+    model, fcfg = serving_model(variant="lite-last")
+    params = model.init(jax.random.PRNGKey(0))
+    if SMOKE:
+        n_items, top_k, chunk_rows = 2048, 8, 2048
+        n_rounds, n_retr, n_rank = 6, 3, 4
+    else:
+        n_items, top_k, chunk_rows = 32768, 16, 8192
+        n_rounds, n_retr, n_rank = 30, 6, 4
+    index = IndexBuilder(model, params, batch_size=4096, bits=4) \
+        .build(0, n_items)
+    feat_table = np.random.RandomState(0) \
+        .randn(n_items, fcfg.cand_feat_dim).astype(np.float32)
+    feats = lambda ids: feat_table[np.asarray(ids)]
+    print(f"\nSLO lane isolation: {n_rounds} rounds of {n_retr} queued "
+          f"corpus passes (top-{top_k} over {n_items} items) + {n_rank} "
+          f"latency-sensitive rank requests, isolated vs shared flush")
+
+    def user(seed):
+        r = np.random.RandomState(1000 + seed)
+        return (r.randint(0, n_items, L), r.randint(0, 6, L),
+                r.randint(0, 3, L),
+                r.randn(fcfg.user_feat_dim).astype(np.float32))
+
+    pool = [user(s) for s in range(8)]
+
+    def mk_rank(rnd, j, priority=0):
+        i, a, s, uf = pool[(rnd * 3 + j) % len(pool)]
+        r = np.random.RandomState(500 + rnd * 16 + j)
+        ids = r.randint(0, n_items, 4)
+        return RankRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                           cand_ids=ids, cand_feats=feats(ids),
+                           user_feats=uf, priority=priority)
+
+    def mk_retrieve(rnd, j):
+        i, a, s, _ = pool[(rnd * 5 + j + 3) % len(pool)]
+        return RetrieveRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                               k=top_k)
+
+    def mk_engine(isolate, policies=None):
+        e = ServingEngine(
+            model, params, max_unique=8, max_candidates=64,
+            min_unique=4, min_candidates=32, cache=ContextCache(4096),
+            max_pending=100, isolate_lanes=isolate,
+            lane_policies=policies if policies is not None
+            else {"rank": LanePolicy(max_requests=n_rank)})
+        e.attach_index(index, k=top_k, chunk_rows=chunk_rows)
+        e.attach_features(feats)
+        e.warmup()
+        for rnd in range(min(n_rounds, 3)):          # prime the user cache
+            e.submit_many([mk_retrieve(rnd, j) for j in range(n_retr)]
+                          + [mk_rank(rnd, j) for j in range(n_rank)])
+            e.flush()
+        return e
+
+    def run_round(engine, rnd):
+        """One adversarial round: queue the corpus passes, then submit the
+        rank micro-batch — the n_rank-th submit trips the rank lane's
+        threshold and flushes inline.  Isolated: that flush serves ONLY
+        the rank requests; shared: it drags the queued corpus passes in.
+        -> (per-rank-request latencies ms, rank results, retrieve results)."""
+        retr_futs = [engine.submit(mk_retrieve(rnd, j))
+                     for j in range(n_retr)]
+        t_sub, rank_futs = [], []
+        for j in range(n_rank):
+            t_sub.append(time.perf_counter())
+            rank_futs.append(engine.submit(mk_rank(rnd, j)))
+        t_done = time.perf_counter()
+        assert all(f.done() for f in rank_futs)      # flushed inline
+        engine.flush()                               # drain the retrieve lane
+        return ([(t_done - t) * 1e3 for t in t_sub],
+                [f.result() for f in rank_futs],
+                [f.result() for f in retr_futs])
+
+    iso_e, shared_e = mk_engine(True), mk_engine(False)
+    lat_iso, lat_shared = [], []
+    for rnd in range(n_rounds):                      # interleaved: drift-fair
+        l_s, rank_s, retr_s = run_round(shared_e, rnd)
+        l_i, rank_i, retr_i = run_round(iso_e, rnd)
+        lat_shared.extend(l_s)
+        lat_iso.extend(l_i)
+        # parity: lane isolation must not change a single bit
+        for a, b in zip(rank_i, rank_s):
+            np.testing.assert_array_equal(a, b)
+        for (ia, sa), (ib, sb) in zip(retr_i, retr_s):
+            np.testing.assert_array_equal(ia, ib)
+            np.testing.assert_array_equal(sa, sb)
+    assert iso_e.registry.compiles_after_warmup == 0
+    assert shared_e.registry.compiles_after_warmup == 0
+    assert iso_e.scheduler.shed_total == 0 == shared_e.scheduler.shed_total
+
+    pct = lambda xs, q: float(np.percentile(np.asarray(xs), q))
+    p50_i, p99_i = pct(lat_iso, 50), pct(lat_iso, 99)
+    p50_s, p99_s = pct(lat_shared, 50), pct(lat_shared, 99)
+    p99_ratio = p99_s / p99_i
+    print(f"  shared flush (pre-SLO)  rank p50 {p50_s:7.2f} ms  "
+          f"p99 {p99_s:7.2f} ms")
+    print(f"  isolated lanes (PR-8)   rank p50 {p50_i:7.2f} ms  "
+          f"p99 {p99_i:7.2f} ms")
+    print(f"rank-lane p99 improvement: {p99_ratio:.2f}x (results "
+          f"bit-identical, 0 recompiles, nothing shed)")
+    if not SMOKE:
+        assert p99_ratio >= 1.3, (
+            f"acceptance: lane isolation must improve rank p99 >= 1.3x "
+            f"over the shared flush, got {p99_ratio:.2f}x")
+
+    # -- deterministic shed pressure: 0 ms rank budget, alternating
+    #    priorities — sheddable requests shed with a typed ShedError,
+    #    protected ones ride the same flush to a real score
+    shed_e = mk_engine(True, policies={
+        "rank": LanePolicy(max_requests=n_rank, shed_ms=0.0,
+                           shed_max_priority=0)})
+    shed_before = shed_e.scheduler.shed_total    # priming also sheds prio-0
+    n_shed = n_served = 0
+    for rnd in range(n_rounds):
+        futs = [shed_e.submit(mk_rank(rnd, j, priority=j % 2))
+                for j in range(n_rank)]
+        shed_e.flush()
+        for j, f in enumerate(futs):
+            try:
+                f.result()
+                n_served += 1
+                assert j % 2 == 1, "sheddable request escaped the 0ms budget"
+            except ShedError as e:
+                n_shed += 1
+                assert e.lane == "rank" and e.reason == "deadline"
+                assert j % 2 == 0, "protected request was shed"
+    assert n_shed == n_rounds * (n_rank // 2), (n_shed, n_rounds, n_rank)
+    assert shed_e.scheduler.shed_total - shed_before == n_shed
+    assert shed_e.registry.compiles_after_warmup == 0
+    lane = shed_e.stats()["scheduler"]["lane_detail"]["rank"]
+    print(f"shed pressure: {n_shed} shed (typed ShedError), {n_served} "
+          f"protected served, {lane['deadline_misses']} deadline misses "
+          f"recorded")
+
+    res = {"workload": {
+               "rounds": n_rounds, "rank_per_round": n_rank,
+               "retrieve_per_round": n_retr, "corpus_items": n_items,
+               "top_k": top_k, "chunk_rows": chunk_rows, "seq_len": L},
+           "rank_p50_ms_isolated": round(p50_i, 3),
+           "rank_p99_ms_isolated": round(p99_i, 3),
+           "rank_p50_ms_shared": round(p50_s, 3),
+           "rank_p99_ms_shared": round(p99_s, 3),
+           "rank_p99_improvement": round(p99_ratio, 3),
+           "shed_pressure": {"shed": n_shed, "served": n_served,
+                             "deadline_misses": lane["deadline_misses"]},
+           "score_parity": "bit-identical (isolated vs shared flush)"}
+    # emitted in smoke too: CI gates on this file existing + the
+    # correctness fields; the full run overwrites it with real latencies
+    out = {"bench": "slo_lane_isolation", "smoke": SMOKE,
+           "device": jax.devices()[0].platform,
+           "cpu_count": os.cpu_count(), **res}
+    with open(JSON5_PATH, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {os.path.relpath(JSON5_PATH)}")
+    return res
+
+
 def _slab_only():
     # fresh-interpreter entry point for section 4 (spawned by main() in
     # full mode; see the module docstring for why isolation matters here).
@@ -702,6 +882,7 @@ def main():
         subprocess.run([sys.executable, os.path.abspath(__file__),
                         "--only-slab"], check=True)
     two_stage_res = section_two_stage()
+    section_slo()                    # writes BENCH_slo.json itself
 
     if not SMOKE:
         out = {"bench": "serving_pipeline", "smoke": False,

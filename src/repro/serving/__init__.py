@@ -20,11 +20,11 @@ lifecycles and the zero-recompile contract.
 from repro.serving.context_cache import ContextCache
 from repro.serving.engine import ServingEngine
 from repro.serving.microbatch import MicroBatcher, Ticket
-from repro.serving.plan import (GenerateRequest, RankRequest,
+from repro.serving.plan import (GenerateRequest, LanePolicy, RankRequest,
                                 RetrieveRequest, RetrieveThenRankRequest,
                                 TwoStageResult)
 from repro.serving.router import InferenceRouter, UserEmbeddingCache
-from repro.serving.scheduler import Future
+from repro.serving.scheduler import Future, ShedError
 
 __all__ = [
     # typed requests (+ the two-stage result they resolve to)
@@ -32,6 +32,8 @@ __all__ = [
     "GenerateRequest", "TwoStageResult",
     # the engine and its front-door collaborators
     "ServingEngine", "ContextCache", "Future",
+    # SLO scheduling: per-lane policies + the typed shed error
+    "LanePolicy", "ShedError",
     # deprecated shims
     "MicroBatcher", "Ticket", "InferenceRouter", "UserEmbeddingCache",
 ]

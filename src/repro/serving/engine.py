@@ -75,7 +75,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
-from collections import OrderedDict
+from collections import OrderedDict, deque
 from typing import Dict, List, Optional, Sequence
 
 import numpy as np
@@ -89,10 +89,10 @@ from repro.serving.context_cache import ContextCache
 from repro.serving.executors import ExecutorRegistry
 from repro.serving.kv_slab import KVSlab, SLAB_DTYPES
 from repro.serving.plan import (BatchPlan, BucketLadder, GenerateRequest,
-                                PipelineStats, RankRequest, RetrieveRequest,
-                                RetrieveThenRankRequest, TwoStageResult,
-                                _pad_rows, build_plan, request_key,
-                                split_requests)
+                                LanePolicy, PipelineStats, RankRequest,
+                                RetrieveRequest, RetrieveThenRankRequest,
+                                TwoStageResult, _pad_rows, build_plan,
+                                request_key, split_requests)
 from repro.serving.scheduler import Future, RequestScheduler
 
 LITE_VARIANTS = ("lite-mean", "lite-last")
@@ -139,9 +139,22 @@ class ServingEngine:
       key_fn: optional ``request -> bytes`` cache key override (default:
         full sequence identity, ``plan.request_key``).
       max_pending / max_wait_ms: scheduler knobs — ``submit`` auto-flushes
-        at ``max_pending`` queued requests; ``max_wait_ms`` starts the
-        background flusher bounding the oldest request's age (the old
-        ``MicroBatcher(max_wait_ms=...)`` behaviour, now engine-owned).
+        a lane at ``max_pending`` queued requests; ``max_wait_ms`` starts
+        the background flusher bounding each lane's oldest request's age
+        (the old ``MicroBatcher(max_wait_ms=...)`` behaviour, now
+        engine-owned).
+      lane_policies / isolate_lanes: per-lane SLO policies
+        (``{lane: LanePolicy}`` — independent flush thresholds, age
+        bounds, ``shed_ms`` latency budgets with the typed ``ShedError``
+        path, ``max_queue`` admission control, and the ``auto_tune``
+        wait tuner; see :class:`~repro.serving.plan.LanePolicy`).  With
+        ``isolate_lanes=True`` (default) size/age/result-triggered
+        flushes drain only their own lane, so a slow large-k corpus pass
+        never delays a rank flush; ``isolate_lanes=False`` restores the
+        pre-SLO shared-flush behaviour (every trigger drains every lane
+        in one combined flush) — the bit-parity baseline: unshed results
+        are identical either way, since both paths run the same lane
+        runners on the same requests.
       slab_slots: > 0 enables the device-resident KV slab backing store
         for the early-fusion ContextCache (``serving/kv_slab.py``):
         ``slab_slots`` resident users per device, quantized per
@@ -185,6 +198,8 @@ class ServingEngine:
                  cache: Optional[ContextCache] = None, key_fn=None,
                  pipeline_depth: int = 2,
                  max_pending: int = 32, max_wait_ms: Optional[float] = None,
+                 lane_policies: Optional[Dict[str, LanePolicy]] = None,
+                 isolate_lanes: bool = True,
                  slab_slots: int = 0, slab_dtype: str = "int8",
                  slab_gather_impl: str = "jnp",
                  obs: Optional[Observability] = None,
@@ -199,12 +214,20 @@ class ServingEngine:
                                      min(min_candidates, max_candidates))
         self.cache = cache
         self._key_fn = key_fn
-        # 2 = host/device overlap, 1 = fully synchronous (bit-identical);
-        # deeper lookahead is future work (needs operand back-pressure) and
-        # silently clamping it would make lookahead experiments lie
-        if pipeline_depth not in (1, 2):
-            raise ValueError(f"pipeline_depth={pipeline_depth!r}: only 1 "
-                             "(synchronous) and 2 (depth-2 overlap) exist")
+        # 1 = fully synchronous (bit-identical escape hatch), 2 = classic
+        # host/device overlap, >2 = deeper lookahead: the rank lane keeps
+        # up to depth-1 chunks in flight, finalizing the OLDEST as soon as
+        # the window fills (back-pressure — the host never runs more than
+        # depth-1 prepares ahead of the device).  The two-stage lane's
+        # fused schedule stays depth-2 at any depth >= 2 (its group
+        # pipeline interleaves two stages; deeper lookahead applies to the
+        # rank lane's chunk stream).  The cap keeps the in-flight operand
+        # footprint bounded; silently clamping out-of-range depths would
+        # make lookahead experiments lie, so it raises instead.
+        if not 1 <= int(pipeline_depth) <= 8:
+            raise ValueError(f"pipeline_depth={pipeline_depth!r}: expected "
+                             "1 (synchronous) .. 8 (depth-1 chunks of "
+                             "lookahead with back-pressure)")
         self.pipeline_depth = int(pipeline_depth)
         self.pipeline_stats: List[PipelineStats] = []
         # rotate_replace engines cache the PRE-ROTATED fixed-L KV layout
@@ -283,7 +306,8 @@ class ServingEngine:
             self._flush_requests, lock=self._engine_lock,
             max_requests=max_pending,
             max_candidates=max_candidates * max_pending,
-            max_wait_ms=max_wait_ms, obs=self.obs)
+            max_wait_ms=max_wait_ms, obs=self.obs,
+            lane_policies=lane_policies, isolate_lanes=isolate_lanes)
         self._lane_counts = {"rank": 0, "retrieve": 0, "two_stage": 0,
                              "generate": 0}
         self.shared_encode_users = 0      # users encoded by the shared pass
@@ -417,14 +441,17 @@ class ServingEngine:
             self._validate_request(r)
         return self.scheduler.submit_many(requests)
 
-    def flush(self):
+    def flush(self, lane: Optional[str] = None):
         """Drain every pending submitted request through one
-        mixed-workload flush."""
-        self.scheduler.flush()
+        mixed-workload flush; ``lane`` restricts the drain to one
+        scheduler lane (``"rank"`` / ``"retrieve"`` / ``"two_stage"`` /
+        ``"generate"``)."""
+        self.scheduler.flush(lane=lane)
 
     def poll(self):
-        """Flush if the oldest pending request has waited past the
-        scheduler's age bound."""
+        """Flush every lane whose oldest pending request has waited past
+        that lane's age bound (and shed anything past its lane's latency
+        budget)."""
         self.scheduler.poll()
 
     def close(self):
@@ -554,13 +581,18 @@ class ServingEngine:
         max_candidates candidates is split by candidate slice and
         reassembled.
 
-        Chunks flow through the depth-2 pipeline: chunk k+1's host prepare
-        (plan, cache, pack, H2D) runs while chunk k's executor is still in
-        flight on the device; results land in request order regardless.
+        Chunks flow through the lookahead pipeline: up to
+        ``pipeline_depth - 1`` chunks stay in flight on the device while
+        the host prepares the next one (plan, cache, pack, H2D); once the
+        window is full the OLDEST chunk is finalized before another
+        prepare starts — that drain is the back-pressure bounding the
+        in-flight operand footprint, so ``pipeline_depth=8`` on a
+        thousand-chunk stream holds at most 7 chunks of device operands
+        at once.  Results land in request order regardless.
         ``pipeline_depth=1`` processes each chunk fully before the next —
-        the escape hatch is bit-identical because both orders run the same
-        executors on the same operands and mutate the cache at the same
-        points (prepare), never at finalize."""
+        the escape hatch is bit-identical (at EVERY depth) because all
+        orders run the same executors on the same operands and mutate the
+        cache at the same points (prepare), never at finalize."""
         pieces, owner = [], []               # flattened sub-requests
         for i, r in enumerate(requests):
             for part in self._split_candidates(r):
@@ -571,14 +603,14 @@ class ServingEngine:
         t_all = time.perf_counter()
         if self.cache is not None:
             memo0 = (self.cache.memo_hits, self.cache.memo_misses)
-        prev: Optional[_Inflight] = None
+        inflight: deque = deque()            # oldest-first launched chunks
         for idxs in split_requests(pieces, self.max_unique,
                                    self.max_candidates):
-            # overlap gauge: only count this prepare as hidden work if the
-            # previous chunk is genuinely still executing when it starts
-            # (an already-ready output means the device beat the host and
+            # overlap gauge: only count this prepare as hidden work if
+            # some launched chunk is genuinely still executing when it
+            # starts (all-ready outputs mean the device beat the host and
             # nothing is being hidden)
-            in_flight = prev is not None and not _is_ready(prev.out)
+            in_flight = any(not _is_ready(p.out) for p in inflight)
             infl = self._prepare_chunk([pieces[i] for i in idxs])
             infl.idxs = idxs
             ps.chunks += 1
@@ -587,14 +619,15 @@ class ServingEngine:
                 ps.overlapped_ms += infl.prepare_s * 1e3
             self._launch(infl)
             ps.launch_ms += infl.launch_s * 1e3
-            if self.pipeline_depth >= 2:
-                if prev is not None:
-                    ps.wait_ms += self._finalize(prev, scored)
-                prev = infl
-            else:
-                ps.wait_ms += self._finalize(infl, scored)
-        if prev is not None:
-            ps.wait_ms += self._finalize(prev, scored)
+            inflight.append(infl)
+            # back-pressure: drain the oldest chunk(s) until at most
+            # depth-1 remain in flight (depth=1 drains immediately —
+            # fully synchronous; depth=2 reproduces the classic one-deep
+            # overlap exactly)
+            while len(inflight) >= self.pipeline_depth:
+                ps.wait_ms += self._finalize(inflight.popleft(), scored)
+        while inflight:
+            ps.wait_ms += self._finalize(inflight.popleft(), scored)
         ps.total_ms = (time.perf_counter() - t_all) * 1e3
         if self.cache is not None:
             ps.memo_hits = self.cache.memo_hits - memo0[0]
@@ -1506,9 +1539,14 @@ class ServingEngine:
                           "entries": len(self._mask_cache)},
                 "lanes": dict(self._lane_counts),
                 "shared_encode_users": self.shared_encode_users,
+                # contract: the historical keys ("flushes", "coalesced")
+                # never change meaning; SLO additions only EXTEND the dict
                 "scheduler": {
                     "flushes": sched.flushes,
                     "coalesced": sched.coalesced,
+                    "shed": sched.shed_total,
+                    "isolate_lanes": sched.isolate_lanes,
+                    "lane_detail": sched._lane_stats_locked(),
                 },
                 "chunks_executed": len(self.call_stats),
                 "pipeline_calls": len(self.pipeline_stats),
@@ -1619,6 +1657,9 @@ class ServingEngine:
         m.counter("serving_scheduler_coalesced_total",
                   "requests drained across all flushes"
                   ).set_total(s["scheduler"]["coalesced"])
+        m.counter("serving_scheduler_shed_total",
+                  "requests shed across all lanes (each future carries a "
+                  "typed ShedError)").set_total(s["scheduler"]["shed"])
         m.counter("serving_chunks_executed_total",
                   "executor chunks executed"
                   ).set_total(s["chunks_executed"])

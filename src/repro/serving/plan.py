@@ -24,7 +24,11 @@ class RankRequest:
     """One caller's scoring request: a user activity sequence plus the
     candidate set to score against it.  Requests sharing the exact same
     (ids, actions, surfaces) sequence are Ψ-deduplicated by the planner
-    and share one context encode / cache entry."""
+    and share one context encode / cache entry.
+
+    ``priority`` feeds the scheduler's admission/shed path (higher wins;
+    requests above a lane's ``shed_max_priority`` are never shed) — it
+    does not change scoring."""
     seq_ids: np.ndarray          # (L,)
     seq_actions: np.ndarray
     seq_surfaces: np.ndarray
@@ -32,6 +36,7 @@ class RankRequest:
     cand_feats: np.ndarray       # (N_b, F_c)
     user_feats: np.ndarray       # (F_u,)
     graphsage: Optional[np.ndarray] = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -53,6 +58,7 @@ class RetrieveRequest:
     k: int = 100
     exclude_ids: Optional[np.ndarray] = None
     allow_surfaces: Optional[Tuple[int, ...]] = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -83,6 +89,7 @@ class RetrieveThenRankRequest:
     exclude_ids: Optional[np.ndarray] = None
     allow_surfaces: Optional[Tuple[int, ...]] = None
     cand_feats_fn: Optional[Callable] = None
+    priority: int = 0
 
 
 @dataclasses.dataclass
@@ -101,6 +108,80 @@ class GenerateRequest:
     (B, max_new_tokens) int32 numpy array."""
     prompts: np.ndarray           # (B, S) int32
     rng: Optional[Any] = None
+    priority: int = 0
+
+
+def lane_of(request) -> str:
+    """Scheduler lane of a typed request: ``"rank"`` / ``"retrieve"`` /
+    ``"two_stage"`` / ``"generate"`` — the same partition
+    ``ServingEngine._flush_requests`` applies inside a flush, now visible
+    at SUBMIT time so each lane can queue (and flush, and shed) on its own
+    policy.  Unknown request types fall into the rank lane: the scheduler
+    is generic over request shapes (concurrency tests drive it with
+    fakes), and a single-lane view of untyped traffic reproduces the old
+    one-queue behaviour exactly."""
+    if isinstance(request, RetrieveThenRankRequest):
+        return "two_stage"
+    if isinstance(request, RetrieveRequest):
+        return "retrieve"
+    if isinstance(request, GenerateRequest):
+        return "generate"
+    return "rank"
+
+
+@dataclasses.dataclass
+class LanePolicy:
+    """Per-lane SLO policy for the :class:`~repro.serving.scheduler.
+    RequestScheduler` — how one lane queues, flushes, sheds, and adapts,
+    independently of every other lane (a slow large-k corpus pass on the
+    retrieve lane must never delay a latency-sensitive rank flush).
+
+    Threshold fields default to ``None`` = inherit the scheduler-wide
+    knob (``max_requests`` / ``max_candidates`` / ``max_wait_s``), so a
+    policy only has to name what differs:
+
+      max_requests / max_candidates — size thresholds tripping an inline
+        flush of THIS lane only (candidates in
+        :func:`~repro.serving.scheduler.request_cost` units).
+      max_wait_ms — age bound for this lane, enforced by ``poll()`` / the
+        background flusher; the auto-tuner (below) retunes it live.
+
+    SLO fields (all off by default — a default-constructed policy changes
+    nothing):
+
+      shed_ms — queue-wait latency budget: a request still queued after
+        ``shed_ms`` ms is SHED at flush pickup — its future resolves with
+        a typed :class:`~repro.serving.scheduler.ShedError` (never a
+        silent drop), and it never reaches the engine.  ``None`` disables
+        shedding.
+      shed_max_priority — only requests with ``priority <=`` this are
+        sheddable; higher-priority requests are always served (and count
+        a deadline miss instead when they exceed ``shed_ms``).
+      max_queue — admission bound: a submit into a lane already holding
+        ``max_queue`` pending requests sheds the LOWEST-priority sheddable
+        request (the incoming one, unless a strictly-lower-priority queued
+        request can be evicted in its place).  Protected priorities
+        (> ``shed_max_priority``) always enter, even past the bound.
+      auto_tune — adapt ``max_wait_ms`` to the lane's OBSERVED flush
+        latency: after each flush the wait is set to ``autotune_ratio`` x
+        the lane's flush-latency p50 (from the engine's
+        ``serving_flush_latency_ms{lane=}`` obs histogram when available,
+        else the scheduler's own EWMA), clamped to
+        [``autotune_min_ms``, ``autotune_max_ms``].  Waiting much less
+        than one flush's service time buys no batching; waiting much more
+        adds queue latency for nothing — tying the two together keeps the
+        wait proportionate as load and corpus size shift.
+    """
+    max_requests: Optional[int] = None
+    max_candidates: Optional[int] = None
+    max_wait_ms: Optional[float] = None
+    shed_ms: Optional[float] = None
+    shed_max_priority: int = 0
+    max_queue: Optional[int] = None
+    auto_tune: bool = False
+    autotune_ratio: float = 0.5
+    autotune_min_ms: float = 0.5
+    autotune_max_ms: float = 50.0
 
 
 def request_key(r) -> bytes:

@@ -1,46 +1,77 @@
-"""Request scheduler: the engine's single async front door.
+"""Request scheduler: the engine's single async front door, with
+PER-LANE SLO policies.
 
 ``ServingEngine.submit(req) -> Future`` enqueues a typed request
 (:class:`~repro.serving.plan.RankRequest`,
 :class:`~repro.serving.plan.RetrieveRequest`,
 :class:`~repro.serving.plan.RetrieveThenRankRequest`,
-:class:`~repro.serving.plan.GenerateRequest`) into one queue regardless of
-workload; a single flush hands the whole mixed batch to the engine, which
-partitions it into per-workload lanes that SHARE one user-encode pass (see
-``ServingEngine._flush_requests``).  This generalizes what the PR-1
-``MicroBatcher`` did for rank-only traffic — coalescing, cross-caller
-dedup, background flush — across every request type, which is why
-``MicroBatcher`` is now a deprecation shim over this class.
+:class:`~repro.serving.plan.GenerateRequest`).  Requests queue PER LANE
+(:func:`~repro.serving.plan.lane_of` — the same rank / retrieve /
+two-stage / generate partition the engine's flush applies), and each lane
+carries its own :class:`~repro.serving.plan.LanePolicy`: independent size
+thresholds, age bound, latency budget with a typed shed path, admission
+control, and an optional auto-tuner adapting the wait to observed flush
+latency.  A size- or age-triggered flush drains ONLY its lane, so a slow
+large-k corpus pass on the retrieve lane never delays a rank flush;
+an explicit ``flush()`` still drains every lane through ONE flush_fn
+call — the engine's mixed-workload flush with its shared user-encode
+pass — which is also the bit-parity baseline (``isolate_lanes=False``
+makes every trigger behave that way, reproducing the pre-SLO one-queue
+scheduler exactly).
 
-Operating modes (unchanged semantics from the MicroBatcher):
+Operating modes (unchanged from the one-queue scheduler):
 
-  * synchronous (default, ``max_wait_ms=None``) — no threads: the queue
-    flushes when ``max_requests`` requests or ``max_candidates`` worth of
-    work has accumulated, on demand (``flush()`` / ``future.result()``),
-    or when a server loop calls ``poll()`` past ``max_wait_s``.
-    Deterministic for tests.
+  * synchronous (default, ``max_wait_ms=None``) — no threads: a lane
+    flushes when its ``max_requests`` / ``max_candidates`` threshold
+    trips, on demand (``flush()`` / ``future.result()``), or when a
+    server loop calls ``poll()`` past the lane's wait.  Deterministic
+    for tests.
   * background flusher (``max_wait_ms=<float>``) — a daemon thread bounds
-    the age of the oldest pending request, feeding the engine's pipeline
-    continuously without any caller blocking in ``result()``; ``close()``
-    (or the context manager) stops the thread.
+    the age of each lane's oldest pending request, feeding the engine's
+    pipeline continuously without any caller blocking in ``result()``;
+    ``close()`` (or the context manager) stops the thread.
+
+SHED CONTRACT: a shed request's future resolves with a typed
+:class:`ShedError` — never a silent drop, never a hang — and a request is
+never both shed and served.  Shedding happens in exactly two places, both
+operating only on STILL-QUEUED requests under the queue lock:
+
+  * flush pickup — a sheddable request whose queue wait exceeds its
+    lane's ``shed_ms`` budget is resolved with ``ShedError`` during the
+    atomic queue swap instead of joining the batch (``shed_expired()``
+    runs the same check without flushing);
+  * admission — a submit into a lane at its ``max_queue`` bound sheds the
+    lowest-priority sheddable request (incoming or queued) immediately.
+
+FLUSH MEMBERSHIP BEATS SHED: the queue swap removes a batch from the
+pending lists before flush_fn runs, so a request another caller's flush
+already picked up is invisible to every shed path — it deterministically
+resolves with its result (or the flush's error), even if its budget
+expires while the flush is in flight.
 
 Flush/result race contract: a future whose request was already picked up
-by an in-flight flush (another caller's, or the background flusher's) must
-NOT trigger a redundant flush from ``result()`` — the membership check and
-the queue swap happen atomically under the queue lock, so ``result()``
-either drains the batch its request is actually in, or just waits for the
-in-flight one to land.
+by an in-flight flush (another caller's, or the background flusher's)
+must NOT trigger a redundant flush from ``result()`` — the membership
+check and the queue swap happen atomically under the queue lock, so
+``result()`` either drains the lane its request is actually in, or just
+waits for the in-flight flush to land.
 
-``submit_many`` enqueues a request list ATOMICALLY (thresholds are checked
-once, after the whole list is queued), so a caller's batch is never split
-across two flushes by its own size — ``ServingEngine.score`` relies on
-this to keep its chunking identical to the pre-submit() engine.
+``submit_many`` enqueues a request list ATOMICALLY (thresholds are
+checked once, after the whole list is queued), so a caller's batch is
+never split across two flushes of its lane by its own size —
+``ServingEngine.score`` relies on this to keep its chunking identical to
+the pre-submit() engine.
 """
 from __future__ import annotations
 
+import math
 import threading
 import time
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
+
+from repro.serving.plan import LanePolicy, lane_of
+
+LANE_NAMES = ("rank", "retrieve", "two_stage", "generate")
 
 
 def request_cost(r) -> int:
@@ -59,19 +90,56 @@ def request_cost(r) -> int:
     return 1
 
 
+def _priority(r) -> int:
+    return int(getattr(r, "priority", 0) or 0)
+
+
+class ShedError(RuntimeError):
+    """A request was shed by admission control or a lane latency budget —
+    carried on the request's future (``result()`` raises it), NEVER a
+    silent drop.  ``reason`` is ``"deadline"`` (queued past the lane's
+    ``shed_ms`` budget) or ``"admission"`` (lane at ``max_queue``, this
+    request lost the priority comparison)."""
+
+    def __init__(self, lane: str, reason: str, wait_ms: float,
+                 budget_ms: Optional[float], priority: int = 0):
+        self.lane = lane
+        self.reason = reason
+        self.wait_ms = wait_ms
+        self.budget_ms = budget_ms
+        self.priority = priority
+        budget = (f"{budget_ms:.1f}ms budget" if budget_ms is not None
+                  else "admission bound")
+        super().__init__(
+            f"request shed from lane {lane!r} ({reason}): waited "
+            f"{wait_ms:.1f}ms against {budget} at priority {priority}")
+
+
 class Future:
     """Handle for one submitted request; ``result()`` flushes only if the
     request is still queued — if an in-flight flush already picked it up,
-    it waits for that batch instead of triggering a redundant one."""
+    it waits for that batch instead of triggering a redundant one.  A
+    shed request's ``result()`` raises the :class:`ShedError`."""
 
-    def __init__(self, scheduler: "RequestScheduler"):
+    def __init__(self, scheduler: "RequestScheduler", lane: str = "rank"):
         self._scheduler = scheduler
+        self._lane = lane
         self._done = threading.Event()
         self._value = None
         self._error: Optional[BaseException] = None
 
+    @property
+    def lane(self) -> str:
+        """The scheduler lane this request queued on."""
+        return self._lane
+
     def done(self) -> bool:
         return self._done.is_set()
+
+    def shed(self) -> bool:
+        """True once the request has been shed (resolved with a
+        :class:`ShedError`)."""
+        return self._done.is_set() and isinstance(self._error, ShedError)
 
     def result(self):
         if not self._done.is_set():
@@ -84,65 +152,129 @@ class Future:
         return self._value
 
     def _set(self, value):
+        if self._done.is_set():      # first resolution wins (exactly-once)
+            return
         self._value = value
         self._done.set()
 
     def _set_error(self, exc: BaseException):
+        if self._done.is_set():
+            return
         self._error = exc
         self._done.set()
 
 
+class _Lane:
+    """One lane's queue + resolved policy + counters.  Mutated only under
+    the scheduler queue lock."""
+    __slots__ = ("name", "policy", "pending", "futures", "enq_t", "oldest",
+                 "wait_s", "max_requests", "max_candidates", "flushes",
+                 "shed", "deadline_misses", "ewma_ms",
+                 "h_latency", "c_shed", "c_miss", "g_wait", "g_depth")
+
+    def __init__(self, name: str, policy: LanePolicy, *,
+                 default_requests: int, default_candidates: Optional[int],
+                 default_wait_s: float):
+        self.name = name
+        self.policy = policy
+        self.pending: List = []
+        self.futures: List[Future] = []
+        self.enq_t: List[float] = []    # perf_counter at submit, per pending
+        self.oldest: Optional[float] = None     # wall time of oldest pending
+        self.max_requests = (policy.max_requests
+                             if policy.max_requests is not None
+                             else default_requests)
+        self.max_candidates = (policy.max_candidates
+                               if policy.max_candidates is not None
+                               else default_candidates)
+        self.wait_s = (policy.max_wait_ms / 1e3
+                       if policy.max_wait_ms is not None else default_wait_s)
+        self.flushes = 0
+        self.shed = 0
+        self.deadline_misses = 0
+        self.ewma_ms = 0.0              # lane flush latency, obs-independent
+        self.h_latency = None           # obs flush-latency histogram (p50)
+        self.c_shed = None
+        self.c_miss = None
+        self.g_wait = None
+        self.g_depth = None
+
+    def over_threshold(self) -> bool:
+        if len(self.pending) >= self.max_requests:
+            return True
+        return (self.max_candidates is not None
+                and sum(request_cost(r) for r in self.pending)
+                >= self.max_candidates)
+
+
 class RequestScheduler:
-    """Queue-and-coalesce front end over a flush function.
+    """Per-lane queue-and-coalesce front end over a flush function.
 
     Args:
       flush_fn: ``flush_fn(requests) -> results`` — one result per request,
         same order.  For a ``ServingEngine`` this is ``_flush_requests``
         (the mixed-workload lane partitioner); anything exposing the same
         shape works (tests use fakes).
-      max_requests / max_candidates: flush thresholds (``max_candidates``
-        counts :func:`request_cost` units; ``None`` disables that bound).
-      max_wait_s: age bound enforced by ``poll()``.
-      max_wait_ms: when set, starts the BACKGROUND FLUSHER (overrides
-        ``max_wait_s``).
+      max_requests / max_candidates / max_wait_s: scheduler-wide defaults
+        a lane inherits unless its :class:`~repro.serving.plan.LanePolicy`
+        overrides them (``max_candidates`` counts :func:`request_cost`
+        units; ``None`` disables that bound).
+      max_wait_ms: when set, starts the BACKGROUND FLUSHER (and overrides
+        ``max_wait_s`` as the default lane wait).
+      lane_fn: ``request -> lane name`` (default
+        :func:`~repro.serving.plan.lane_of`; untyped test fakes all land
+        on the rank lane, reproducing one-queue behaviour).
+      lane_policies: ``{lane: LanePolicy}`` — lanes not named get a
+        default policy (pure inherit, no shed, no admission bound).
+      isolate_lanes: True (default) — size/age/result-triggered flushes
+        drain only the triggering lane; False — ANY trigger drains every
+        lane through one combined flush_fn call (the pre-SLO shared-flush
+        behaviour, kept as the bit-parity baseline).  ``flush()`` with no
+        lane always drains everything in one call either way.
       lock: optional lock serializing ``flush_fn`` executions; defaults to
         a private one.  The engine passes its own RLock so scheduler-driven
         flushes and any direct engine calls serialize together.
       obs: optional ``repro.obs.Observability`` — when enabled, the
-        scheduler records the per-request QUEUE WAIT (submit -> flush
-        start) and coalesced batch-size histograms, keeps a queue-depth
-        gauge, and emits one trace span per flush plus one per-request
-        lifecycle span (submit -> result resolution, with the queue wait
-        and request type as args).
+        scheduler records per-request QUEUE WAIT and coalesced batch-size
+        histograms, queue-depth gauges (total + per lane), shed /
+        deadline-miss counters per lane, the tuned per-lane wait gauge,
+        and emits one trace span per flush plus one per-request lifecycle
+        span.
 
-    Invariant: every submitted request's future resolves exactly once —
-    with the result, or with the flush function's exception if a flush
-    fails.
+    Invariant: every submitted request's future resolves EXACTLY ONCE —
+    with the result, with the flush function's exception if its flush
+    fails, or with a typed :class:`ShedError` if it is shed; and never
+    both shed and served.
     """
 
     def __init__(self, flush_fn, *, max_requests: int = 32,
                  max_candidates: Optional[int] = None,
                  max_wait_s: float = 0.01,
                  max_wait_ms: Optional[float] = None,
+                 lane_fn=None,
+                 lane_policies: Optional[Dict[str, LanePolicy]] = None,
+                 isolate_lanes: bool = True,
                  lock=None, obs=None):
         self._flush_fn = flush_fn
         self.max_requests = max_requests
         self.max_candidates = max_candidates
         self.max_wait_s = (max_wait_ms / 1e3 if max_wait_ms is not None
                            else max_wait_s)
+        self._lane_fn = lane_fn if lane_fn is not None else lane_of
+        self._policies = dict(lane_policies or {})
+        self.isolate_lanes = bool(isolate_lanes)
         self._lock = threading.Lock()
         # serializes flush_fn execution across flushing callers + the
         # background flusher; public so direct users of the underlying
         # engine can join the serialization
         self.engine_lock = lock if lock is not None else threading.Lock()
-        self._pending: List = []
-        self._futures: List[Future] = []
-        self._enq_t: List[float] = []    # per-pending submit timestamps
-        self._oldest: Optional[float] = None
-        self.flushes = 0
-        self.coalesced = 0
+        self._lanes: Dict[str, _Lane] = {}   # created on first submit
+        self.flushes = 0        # flush_fn calls (a combined drain counts 1)
+        self.coalesced = 0      # requests SERVED through flush_fn
+        self.shed_total = 0     # requests resolved with ShedError
         # -- observability (all handles are no-ops when obs is off) --------
         self._obs_on = obs is not None and obs.enabled
+        self._metrics = obs.metrics if self._obs_on else None
         if self._obs_on:
             m, self._tracer = obs.metrics, obs.tracer
             self._h_wait = m.histogram(
@@ -162,11 +294,67 @@ class RequestScheduler:
         self._stop = threading.Event()
         self._flusher: Optional[threading.Thread] = None
         if max_wait_ms is not None:
-            tick = min(max(self.max_wait_s / 4, 5e-4), 0.05)
+            waits = [self.max_wait_s] + [
+                p.max_wait_ms / 1e3 for p in self._policies.values()
+                if p.max_wait_ms is not None]
+            tick = min(max(min(waits) / 4, 5e-4), 0.05)
             self._flusher = threading.Thread(
                 target=self._flusher_loop, args=(tick,),
                 name="serving-scheduler-flusher", daemon=True)
             self._flusher.start()
+
+    # -- lanes --------------------------------------------------------------
+    def _lane(self, name: str) -> _Lane:
+        """Get-or-create a lane's state.  Caller holds ``self._lock``."""
+        st = self._lanes.get(name)
+        if st is None:
+            st = _Lane(name, self._policies.get(name, LanePolicy()),
+                       default_requests=self.max_requests,
+                       default_candidates=self.max_candidates,
+                       default_wait_s=self.max_wait_s)
+            if self._obs_on:
+                m = self._metrics
+                # shares the handle the engine records into (registry
+                # get-or-creates per (name, labels)), so the auto-tuner
+                # reads real flush latency even though the ENGINE measures
+                # it; these creations nest scheduler-lock -> registry-lock
+                # only (both leaves of the engine/stats lock order)
+                st.h_latency = m.histogram(
+                    "serving_flush_latency_ms",
+                    "per-lane wall time of one flush, ms", lane=name)
+                st.c_shed = m.counter(
+                    "serving_shed_total",
+                    "requests shed (future carries ShedError)", lane=name)
+                st.c_miss = m.counter(
+                    "serving_deadline_miss_total",
+                    "served requests that overstayed the lane's shed_ms "
+                    "budget (shed-exempt priorities)", lane=name)
+                st.g_wait = m.gauge(
+                    "serving_lane_wait_ms",
+                    "current (possibly auto-tuned) lane flush wait, ms",
+                    lane=name)
+                st.g_wait.set(st.wait_s * 1e3)
+                st.g_depth = m.gauge(
+                    "serving_lane_queue_depth",
+                    "pending requests in this lane", lane=name)
+            self._lanes[name] = st
+        return st
+
+    def lane_stats(self) -> Dict[str, dict]:
+        """Per-lane snapshot: pending depth, flush / shed / deadline-miss
+        counts, and the current (possibly auto-tuned) wait in ms."""
+        with self._lock:
+            return self._lane_stats_locked()
+
+    def _lane_stats_locked(self) -> Dict[str, dict]:
+        """``lane_stats`` body for callers already holding ``_lock`` (the
+        engine's ``stats()`` snapshot)."""
+        return {name: {"pending": len(st.pending),
+                       "flushes": st.flushes,
+                       "shed": st.shed,
+                       "deadline_misses": st.deadline_misses,
+                       "wait_ms": st.wait_s * 1e3}
+                for name, st in sorted(self._lanes.items())}
 
     # -- background flusher -------------------------------------------------
     def _flusher_loop(self, tick: float):
@@ -198,91 +386,263 @@ class RequestScheduler:
         self.close()
         return False
 
-    # -- submit / flush -----------------------------------------------------
-    def _enqueue(self, request) -> Future:
-        f = Future(self)
-        self._pending.append(request)
-        self._futures.append(f)
-        if self._obs_on:
-            self._enq_t.append(time.perf_counter())
-        if self._oldest is None:
-            self._oldest = time.time()
+    # -- submit -------------------------------------------------------------
+    def _enqueue(self, st: _Lane, request) -> Future:
+        f = Future(self, st.name)
+        st.pending.append(request)
+        st.futures.append(f)
+        st.enq_t.append(time.perf_counter())
+        if st.oldest is None:
+            st.oldest = time.time()
         return f
 
-    def _over_threshold(self) -> bool:
-        if len(self._pending) >= self.max_requests:
-            return True
-        return (self.max_candidates is not None
-                and sum(request_cost(r) for r in self._pending)
-                >= self.max_candidates)
+    def _admit(self, st: _Lane, request, shed_out: List) -> Future:
+        """Enqueue under admission control.  Caller holds ``self._lock``;
+        any admission-shed (future, error) pairs are appended to
+        ``shed_out`` for resolution AFTER the lock is released."""
+        pol = st.policy
+        if pol.max_queue is None or len(st.pending) < pol.max_queue:
+            return self._enqueue(st, request)
+        prio_in = _priority(request)
+        # lowest-priority sheddable queued request, oldest first
+        victim, v_prio = None, None
+        for j, r in enumerate(st.pending):
+            p = _priority(r)
+            if p <= pol.shed_max_priority and (v_prio is None or p < v_prio):
+                victim, v_prio = j, p
+        now = time.perf_counter()
+        if victim is not None and v_prio < prio_in:
+            # evict the queued loser, seat the incoming request
+            st.pending.pop(victim)
+            vf = st.futures.pop(victim)
+            vt = st.enq_t.pop(victim)
+            if not st.pending:
+                st.oldest = None
+            shed_out.append((st, vf, ShedError(
+                st.name, "admission", (now - vt) * 1e3, None, v_prio)))
+            return self._enqueue(st, request)
+        if prio_in <= pol.shed_max_priority:
+            # incoming loses: shed it without ever queueing it
+            f = Future(self, st.name)
+            shed_out.append((st, f, ShedError(
+                st.name, "admission", 0.0, None, prio_in)))
+            return f
+        # protected priority with no lower-priority victim: the bound is
+        # soft for it — admit past max_queue rather than shed or block
+        return self._enqueue(st, request)
+
+    def _resolve_shed(self, shed: List) -> None:
+        """Resolve shed futures + bump counters; call WITHOUT the queue
+        lock (the futures are already off the pending lists, so no flush
+        can race them back in)."""
+        if not shed:
+            return
+        with self._lock:
+            for st, _, _ in shed:
+                st.shed += 1
+            self.shed_total += len(shed)
+        for st, f, err in shed:
+            if self._obs_on:
+                st.c_shed.inc()
+            f._set_error(err)
 
     def submit(self, request) -> Future:
-        """Enqueue one request -> future.  Flushes inline when a size
-        threshold trips; otherwise the batch waits for the background
-        flusher, ``poll()``, ``flush()``, or a ``future.result()``."""
+        """Enqueue one request on its lane -> future.  Flushes the lane
+        inline when a lane size threshold trips (every lane when
+        ``isolate_lanes=False``); otherwise the batch waits for the
+        background flusher, ``poll()``, ``flush()``, or a
+        ``future.result()``."""
+        shed: List = []
+        lane = self._lane_fn(request)
         with self._lock:
-            f = self._enqueue(request)
-            full = self._over_threshold()
-            depth = len(self._pending)
+            st = self._lane(lane)
+            f = self._admit(st, request, shed)
+            full = st.over_threshold()
+            depth = sum(len(s.pending) for s in self._lanes.values())
+            lane_depth = len(st.pending)
+        self._resolve_shed(shed)
         if self._obs_on:
             self._g_depth.set(depth)
+            st.g_depth.set(lane_depth)
         if full:
-            self.flush()
+            self._flush(lane=lane if self.isolate_lanes else None)
         return f
 
     def submit_many(self, requests: Sequence) -> List[Future]:
         """Enqueue a request list atomically -> one future per request.
-        Thresholds are checked once, AFTER the whole list is queued, so the
-        resulting flush sees the complete batch (never a size-split prefix
-        of it)."""
+        Thresholds are checked once, AFTER the whole list is queued, so a
+        lane's flush sees the caller's complete batch for that lane
+        (never a size-split prefix of it)."""
+        shed: List = []
         with self._lock:
-            futures = [self._enqueue(r) for r in requests]
-            full = self._over_threshold()
-            depth = len(self._pending)
+            futures = []
+            touched: Dict[str, _Lane] = {}
+            for r in requests:
+                st = self._lane(self._lane_fn(r))
+                touched[st.name] = st
+                futures.append(self._admit(st, r, shed))
+            full = [name for name, st in touched.items()
+                    if st.over_threshold()]
+            depth = sum(len(s.pending) for s in self._lanes.values())
+        self._resolve_shed(shed)
         if self._obs_on:
             self._g_depth.set(depth)
+            for st in touched.values():
+                st.g_depth.set(len(st.pending))
         if full:
-            self.flush()
+            if self.isolate_lanes:
+                for name in full:
+                    self._flush(lane=name)
+            else:
+                self._flush()
         return futures
 
+    # -- shed / poll / flush ------------------------------------------------
+    def shed_expired(self) -> int:
+        """Shed every STILL-QUEUED sheddable request past its lane's
+        ``shed_ms`` budget, without flushing.  Requests an in-flight flush
+        already drained are untouchable here (flush membership beats
+        shed).  -> number of requests shed."""
+        shed: List = []
+        now = time.perf_counter()
+        with self._lock:
+            for st in self._lanes.values():
+                budget = st.policy.shed_ms
+                if budget is None or not st.pending:
+                    continue
+                keep_r, keep_f, keep_t = [], [], []
+                for r, f, t in zip(st.pending, st.futures, st.enq_t):
+                    wait_ms = (now - t) * 1e3
+                    if (wait_ms > budget
+                            and _priority(r) <= st.policy.shed_max_priority):
+                        shed.append((st, f, ShedError(
+                            st.name, "deadline", wait_ms, budget,
+                            _priority(r))))
+                    else:
+                        keep_r.append(r)
+                        keep_f.append(f)
+                        keep_t.append(t)
+                if len(keep_r) != len(st.pending):
+                    st.pending, st.futures, st.enq_t = keep_r, keep_f, keep_t
+                    if not keep_r:
+                        st.oldest = None
+        self._resolve_shed(shed)
+        return len(shed)
+
     def poll(self):
-        """Flush if the oldest pending request has waited past max_wait_s."""
+        """Flush every lane whose oldest pending request has waited past
+        that lane's (possibly auto-tuned) wait; also sheds any request
+        past its lane's latency budget."""
+        self.shed_expired()
+        now = time.time()
         with self._lock:
-            expired = (self._oldest is not None
-                       and time.time() - self._oldest >= self.max_wait_s)
-        if expired:
-            self.flush()
+            expired = [name for name, st in self._lanes.items()
+                       if st.oldest is not None
+                       and now - st.oldest >= st.wait_s]
+        if not expired:
+            return
+        if self.isolate_lanes:
+            for name in expired:
+                self._flush(lane=name)
+        else:
+            self._flush()
 
-    def flush(self):
+    def flush(self, lane: Optional[str] = None):
         """Drain the queue through one flush_fn call (for an engine: one
-        mixed-workload flush sharing a single user-encode pass) and resolve
-        the futures."""
-        self._flush()
+        mixed-workload flush sharing a single user-encode pass) and
+        resolve the futures.  ``lane`` restricts the drain to one lane;
+        the default drains every lane TOGETHER in a single call."""
+        self._flush(lane=lane)
 
-    def _flush(self, only_if_pending: Optional[Future] = None):
+    def _drain_locked(self, lanes: List[_Lane]):
+        """Atomic queue swap + deadline shed for the given lanes.  Caller
+        holds ``self._lock``.  Sheddable requests over their lane's
+        ``shed_ms`` budget are diverted to the shed list INSTEAD of the
+        batch; protected requests over budget are served and counted as
+        deadline misses.
+        -> (batch, futures, enq_t, shed, misses, contributors)."""
+        now = time.perf_counter()
+        batch: List = []
+        futures: List[Future] = []
+        enq_t: List[float] = []
+        shed: List = []
+        misses: List[_Lane] = []
+        contributors: List[_Lane] = []
+        for st in lanes:
+            if not st.pending:
+                continue
+            budget = st.policy.shed_ms
+            served = 0
+            for r, f, t in zip(st.pending, st.futures, st.enq_t):
+                wait_ms = (now - t) * 1e3
+                if budget is not None and wait_ms > budget:
+                    if _priority(r) <= st.policy.shed_max_priority:
+                        shed.append((st, f, ShedError(
+                            st.name, "deadline", wait_ms, budget,
+                            _priority(r))))
+                        continue
+                    st.deadline_misses += 1
+                    misses.append(st)
+                batch.append(r)
+                futures.append(f)
+                enq_t.append(t)
+                served += 1
+            if served:
+                st.flushes += 1
+                contributors.append(st)
+            st.pending, st.futures, st.enq_t = [], [], []
+            st.oldest = None
+        return batch, futures, enq_t, shed, misses, contributors
+
+    def _flush(self, only_if_pending: Optional[Future] = None,
+               lane: Optional[str] = None):
         with self._lock:
-            if (only_if_pending is not None
-                    and only_if_pending not in self._futures):
-                return      # picked up by an in-flight flush: just wait
-            pending, futures = self._pending, self._futures
-            enq_t = self._enq_t
-            self._pending, self._futures, self._oldest = [], [], None
-            self._enq_t = []
-            if pending:
+            if only_if_pending is not None:
+                st = self._lanes.get(only_if_pending._lane)
+                if st is None or only_if_pending not in st.futures:
+                    return      # picked up by an in-flight flush: just wait
+                lanes = ([st] if self.isolate_lanes
+                         else list(self._lanes.values()))
+            elif lane is not None:
+                st = self._lanes.get(lane)
+                if st is None:
+                    return
+                lanes = [st]
+            else:
+                lanes = list(self._lanes.values())
+            batch, futures, enq_t, shed, misses, contributors = \
+                self._drain_locked(lanes)
+            if batch:
                 self.flushes += 1
-                self.coalesced += len(pending)
-        if not pending:
+                self.coalesced += len(batch)
+            if shed:
+                for st, _, _ in shed:
+                    st.shed += 1
+                self.shed_total += len(shed)
+        # shed futures resolve OUTSIDE the lock; they are already off the
+        # pending lists, so no concurrent flush can serve them
+        for st, f, err in shed:
+            if self._obs_on:
+                st.c_shed.inc()
+            f._set_error(err)
+        if self._obs_on and misses:
+            for st in misses:
+                st.c_miss.inc()
+        if not batch:
             return
         obs = self._obs_on
         if obs:
             t_flush = time.perf_counter()
             for t in enq_t:
                 self._h_wait.record((t_flush - t) * 1e3)
-            self._h_coalesced.record(len(pending))
+            self._h_coalesced.record(len(batch))
             self._g_depth.set(0)
+            for st in lanes:
+                st.g_depth.set(0)
+        t0 = time.perf_counter()
         try:
             with self.engine_lock:
-                results = self._flush_fn(pending)
+                results = self._flush_fn(batch)
         except BaseException as exc:
             # never orphan a future: a caller blocked in result() must see
             # the failure, not hang
@@ -293,18 +653,50 @@ class RequestScheduler:
             raise
         for f, r in zip(futures, results):
             f._set(r)
+        flush_ms = (time.perf_counter() - t0) * 1e3
+        if len(contributors) == 1:
+            self._autotune(contributors[0], flush_ms)
         if obs:
             t_done = time.perf_counter()
             self._tracer.event(
                 "flush", "scheduler", t_flush, t_done - t_flush,
                 tid=self._flush_tid,
-                args={"requests": len(pending),
+                args={"requests": len(batch),
                       "max_queue_wait_ms":
                           round((t_flush - min(enq_t)) * 1e3, 3)
                           if enq_t else 0.0})
             # one lifecycle span per request: submit -> result resolution
-            for r, t in zip(pending, enq_t):
+            for r, t in zip(batch, enq_t):
                 self._tracer.event(
                     type(r).__name__, "request", t, t_done - t,
                     tid=self._req_tid,
                     args={"queue_wait_ms": round((t_flush - t) * 1e3, 3)})
+
+    # -- auto-tuner ---------------------------------------------------------
+    def _autotune(self, st: _Lane, flush_ms: float) -> None:
+        """After a SINGLE-lane flush, adapt the lane's wait toward its
+        observed flush latency (combined multi-lane flushes are skipped —
+        their wall time conflates every lane).  The obs histogram — the
+        same ``serving_flush_latency_ms{lane=}`` handle the engine records
+        into — supplies the p50 when available; otherwise the scheduler's
+        own EWMA of flush_fn wall time stands in, so the tuner also works
+        on obs-off engines and fake flush functions."""
+        # EWMA always updates (cheap, lock-free: single-writer per flush
+        # is good enough for a tuning signal)
+        st.ewma_ms = (flush_ms if st.ewma_ms == 0.0
+                      else 0.7 * st.ewma_ms + 0.3 * flush_ms)
+        pol = st.policy
+        if not pol.auto_tune:
+            return
+        p50 = float("nan")
+        if st.h_latency is not None:
+            p50 = st.h_latency.quantile(0.5)
+        if math.isnan(p50) or p50 <= 0:
+            p50 = st.ewma_ms
+        if p50 <= 0:
+            return
+        wait_ms = min(max(pol.autotune_ratio * p50, pol.autotune_min_ms),
+                      pol.autotune_max_ms)
+        st.wait_s = wait_ms / 1e3
+        if self._obs_on:
+            st.g_wait.set(wait_ms)

@@ -1,0 +1,216 @@
+"""Strategy module for the property-based scheduler suite.
+
+Generates randomized scheduler CASES — lane policies, request mixes with
+priorities, and flush/poll/shed interleavings — in two interchangeable
+ways:
+
+  * :func:`case_strategy` — a real ``hypothesis`` strategy (structured
+    generation, so shrinking works on the case structure), used when
+    hypothesis is installed (the CI property leg);
+  * :func:`random_case` — a seeded stdlib-``random`` generator producing
+    the SAME case shapes, so the deterministic fallback loop runs the full
+    property suite (>= 200 cases) even in containers without hypothesis.
+
+Determinism matters more than realism here: deadline budgets are drawn
+from {None, 0.0, HUGE} only — a 0 ms budget sheds every sheddable request
+at pickup (any queue wait is > 0), a huge one sheds nothing — so a case's
+shed outcome never depends on wall-clock timing.
+
+The checker (:func:`run_case`) executes a case against a real
+``RequestScheduler`` over a recording fake flush function and asserts the
+scheduler invariants:
+
+  1. every future resolves EXACTLY ONCE — a result or an exception,
+     never neither (hang) or a silent drop;
+  2. per-caller order: within each lane, requests are served in
+     submission order (across flushes and within each flush);
+  3. no request is both shed and served;
+  4. shed only when over budget: every ShedError names a lane whose
+     policy makes that shed possible (deadline -> finite ``shed_ms`` and
+     sheddable priority; admission -> ``max_queue`` set), and
+     protected-priority requests are never shed;
+  5. results route to the right future (each future resolves to its own
+     request's tag).
+"""
+import dataclasses
+import random
+from typing import Dict, List, Tuple
+
+from _hypothesis_stub import HAVE_HYPOTHESIS, st
+
+from repro.serving.plan import LanePolicy
+from repro.serving.scheduler import RequestScheduler, ShedError
+
+LANES = ("rank", "retrieve", "two_stage")
+HUGE_MS = 1e9           # a budget nothing can exceed within one test
+
+# ops: ("submit", lane, priority, cost) | ("flush", lane-or-None)
+#    | ("poll",) | ("shed",) | ("result", k) — resolve the k-th oldest
+#      outstanding future via its targeted result() flush
+Op = Tuple
+
+
+@dataclasses.dataclass
+class FakeRequest:
+    """Untyped scheduler payload: ``cand_ids`` feeds request_cost,
+    ``priority`` feeds the shed paths, ``uid`` routes results back."""
+    uid: int
+    lane: str
+    priority: int
+    cand_ids: List[int]
+
+
+@dataclasses.dataclass
+class Case:
+    policies: Dict[str, LanePolicy]
+    ops: List[Op]
+    isolate_lanes: bool
+    max_requests: int           # scheduler-wide default lane threshold
+
+
+def _policy_from(draw_int, draw_choice) -> LanePolicy:
+    """One lane policy from two primitive draws (shared by the hypothesis
+    and the seeded generator so both cover the same space)."""
+    return LanePolicy(
+        max_requests=draw_choice([None, 1, 2, 3, 5]),
+        max_candidates=draw_choice([None, None, 4, 8]),
+        shed_ms=draw_choice([None, None, 0.0, HUGE_MS]),
+        shed_max_priority=draw_int(0, 1),
+        max_queue=draw_choice([None, None, 1, 2, 3]),
+    )
+
+
+def random_case(seed: int) -> Case:
+    """The seeded fallback generator: same case space as
+    :func:`case_strategy`, fully deterministic per seed."""
+    rng = random.Random(seed)
+    draw_int = rng.randint
+    draw_choice = rng.choice
+    lanes = tuple(LANES[:rng.randint(1, len(LANES))])
+    policies = {lane: _policy_from(draw_int, draw_choice)
+                for lane in lanes if rng.random() < 0.8}
+    ops: List[Op] = []
+    for _ in range(rng.randint(5, 40)):
+        roll = rng.random()
+        if roll < 0.65:
+            ops.append(("submit", rng.choice(lanes), rng.randint(0, 2),
+                        rng.randint(1, 4)))
+        elif roll < 0.80:
+            ops.append(("flush", rng.choice(lanes + (None,))))
+        elif roll < 0.88:
+            ops.append(("poll",))
+        elif roll < 0.95:
+            ops.append(("shed",))
+        else:
+            ops.append(("result", rng.randint(0, 5)))
+    return Case(policies=policies, ops=ops,
+                isolate_lanes=rng.random() < 0.8,
+                max_requests=rng.choice([2, 4, 100]))
+
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def case_strategy(draw):
+        lanes = tuple(draw(st.sampled_from(
+            [LANES[:1], LANES[:2], LANES])))
+        draw_int = lambda lo, hi: draw(st.integers(lo, hi))
+        draw_choice = lambda xs: draw(st.sampled_from(xs))
+        policies = {lane: _policy_from(draw_int, draw_choice)
+                    for lane in lanes if draw(st.booleans())}
+        op = st.one_of(
+            st.tuples(st.just("submit"), st.sampled_from(lanes),
+                      st.integers(0, 2), st.integers(1, 4)),
+            st.tuples(st.just("flush"),
+                      st.sampled_from(lanes + (None,))),
+            st.tuples(st.just("poll")),
+            st.tuples(st.just("shed")),
+            st.tuples(st.just("result"), st.integers(0, 5)),
+        )
+        ops = draw(st.lists(op, min_size=1, max_size=40))
+        return Case(policies=policies, ops=ops,
+                    isolate_lanes=draw(st.booleans()),
+                    max_requests=draw(st.sampled_from([2, 4, 100])))
+else:                                   # pragma: no cover - hypothesis leg
+    def case_strategy():
+        return None
+
+
+def run_case(case: Case) -> None:
+    """Execute one case on a real scheduler + fake flush_fn and assert
+    every scheduler invariant (see module docstring)."""
+    calls: List[List[FakeRequest]] = []
+
+    def flush_fn(batch):
+        calls.append(list(batch))
+        return [("ok", r.uid) for r in batch]
+
+    sched = RequestScheduler(
+        flush_fn, max_requests=case.max_requests,
+        max_wait_s=HUGE_MS,             # poll() never flushes by age here
+        lane_fn=lambda r: r.lane,
+        lane_policies=case.policies,
+        isolate_lanes=case.isolate_lanes)
+
+    futures: List = []
+    requests: List[FakeRequest] = []
+    uid = 0
+    for op in case.ops:
+        if op[0] == "submit":
+            _, lane, prio, cost = op
+            r = FakeRequest(uid=uid, lane=lane, priority=prio,
+                            cand_ids=list(range(cost)))
+            uid += 1
+            requests.append(r)
+            futures.append(sched.submit(r))
+        elif op[0] == "flush":
+            sched.flush(lane=op[1])
+        elif op[0] == "poll":
+            sched.poll()
+        elif op[0] == "shed":
+            sched.shed_expired()
+        elif op[0] == "result":
+            outstanding = [f for f in futures if not f.done()]
+            if outstanding:
+                try:
+                    outstanding[op[1] % len(outstanding)].result()
+                except ShedError:
+                    pass
+    sched.flush()
+
+    # -- invariant 1: exactly-once resolution, no hangs, no silent drops --
+    served_uids: List[int] = [r.uid for b in calls for r in b]
+    shed_uids: List[int] = []
+    for r, f in zip(requests, futures):
+        assert f.done(), f"request {r.uid} neither served nor shed (hang)"
+        try:
+            value = f.result()
+        except ShedError as e:
+            shed_uids.append(r.uid)
+            # -- invariant 4: shed only when over budget ------------------
+            pol = case.policies.get(r.lane, LanePolicy())
+            assert e.lane == r.lane
+            assert r.priority <= pol.shed_max_priority, \
+                f"protected request {r.uid} (prio {r.priority}) was shed"
+            if e.reason == "deadline":
+                assert pol.shed_ms is not None
+                assert e.wait_ms > pol.shed_ms
+            else:
+                assert e.reason == "admission"
+                assert pol.max_queue is not None
+        else:
+            # -- invariant 5: results route to the right future -----------
+            assert value == ("ok", r.uid)
+
+    # -- invariant 3: no request both shed and served ----------------------
+    assert not set(served_uids) & set(shed_uids)
+    assert sorted(served_uids + shed_uids) == [r.uid for r in requests]
+    assert len(served_uids) == len(set(served_uids)), "request served twice"
+    assert sched.coalesced == len(served_uids)
+    assert sched.shed_total == len(shed_uids)
+    assert sched.flushes == len(calls)
+
+    # -- invariant 2: per-lane service order == submission order -----------
+    for lane in LANES:
+        lane_order = [r.uid for b in calls for r in b if r.lane == lane]
+        assert lane_order == sorted(lane_order), \
+            f"lane {lane!r} served out of submission order: {lane_order}"

@@ -1,0 +1,380 @@
+"""SLO scheduler suite: property-based invariants + targeted unit tests.
+
+The property leg runs the SAME invariant checker two ways:
+
+  * a deterministic loop over >= 250 seeded cases (always runs, no
+    third-party deps — the container baseline);
+  * a real ``hypothesis`` ``@given`` leg (>= 200 generated examples with
+    shrinking) when hypothesis is installed — the CI property job.
+
+The unit tests pin each SLO mechanism on its own: lane isolation,
+per-lane thresholds, admission control (evict-lowest / shed-incoming /
+soft bound for protected priorities), deadline shed with a fully-typed
+:class:`ShedError`, priority exemption (deadline_misses), the
+``max_wait_ms`` auto-tuner, ``shed_expired``, and the
+flush-membership-beats-shed regression (a request an in-flight flush
+already drained must be invisible to every shed path)."""
+import threading
+import time
+
+import pytest
+
+from _hypothesis_stub import HAVE_HYPOTHESIS, given, settings
+from scheduler_strategies import (Case, FakeRequest, case_strategy,
+                                  random_case, run_case)
+
+from repro.serving.plan import LanePolicy
+from repro.serving.scheduler import RequestScheduler, ShedError
+
+N_SEEDED_CASES = 250        # the no-hypothesis property budget
+
+
+# ---------------------------------------------------------------------------
+# property leg
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("block", range(5))
+def test_property_invariants_seeded(block):
+    """Deterministic property sweep: 5 x 50 = 250 generated cases, every
+    scheduler invariant checked on each (exactly-once resolution, per-lane
+    order, shed xor served, shed-only-over-budget, result routing)."""
+    per_block = N_SEEDED_CASES // 5
+    for seed in range(block * per_block, (block + 1) * per_block):
+        try:
+            run_case(random_case(seed))
+        except AssertionError as e:
+            raise AssertionError(f"seed {seed}: {e}") from e
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=200, deadline=None)
+@given(case=case_strategy())
+def test_property_invariants_hypothesis(case):
+    run_case(case)
+
+
+# ---------------------------------------------------------------------------
+# unit tests: lane isolation + thresholds
+# ---------------------------------------------------------------------------
+
+def _mk(seq_start, lane, n, priority=0, cost=1):
+    return [FakeRequest(uid=seq_start + i, lane=lane, priority=priority,
+                        cand_ids=list(range(cost))) for i in range(n)]
+
+
+def _recording_sched(**kw):
+    calls = []
+
+    def flush_fn(batch):
+        calls.append(list(batch))
+        return [("ok", r.uid) for r in batch]
+
+    kw.setdefault("max_wait_s", 1e9)
+    sched = RequestScheduler(flush_fn, lane_fn=lambda r: r.lane, **kw)
+    return sched, calls
+
+
+def test_lane_isolation_size_flush_drains_one_lane():
+    """A rank-lane size flush must NOT drag the retrieve lane's queue
+    with it — that is the whole point of per-lane policies."""
+    sched, calls = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(max_requests=2)})
+    f_ret = sched.submit(_mk(0, "retrieve", 1)[0])
+    f0, f1 = [sched.submit(r) for r in _mk(10, "rank", 2)]
+    assert len(calls) == 1                      # rank tripped its threshold
+    assert [r.lane for r in calls[0]] == ["rank", "rank"]
+    assert f0.done() and f1.done() and not f_ret.done()
+    assert sched.lane_stats()["retrieve"]["pending"] == 1
+    sched.flush()
+    assert f_ret.result() == ("ok", 0)
+    assert len(calls) == 2
+
+
+def test_shared_flush_mode_drains_everything():
+    """``isolate_lanes=False`` reproduces the pre-SLO one-queue scheduler:
+    any trigger drains every lane through ONE flush_fn call."""
+    sched, calls = _recording_sched(
+        max_requests=100, isolate_lanes=False,
+        lane_policies={"rank": LanePolicy(max_requests=2)})
+    sched.submit(_mk(0, "retrieve", 1)[0])
+    [sched.submit(r) for r in _mk(10, "rank", 2)]
+    assert len(calls) == 1
+    assert sorted(r.lane for r in calls[0]) == ["rank", "rank", "retrieve"]
+    assert sched.flushes == 1
+
+
+def test_explicit_flush_is_one_combined_call():
+    """``flush()`` with no lane drains every lane together in a single
+    flush_fn call — the engine's shared user-encode pass depends on it."""
+    sched, calls = _recording_sched(max_requests=100)
+    for r in _mk(0, "rank", 2) + _mk(10, "retrieve", 2) + _mk(20, "two_stage", 1):
+        sched.submit(r)
+    sched.flush()
+    assert len(calls) == 1 and len(calls[0]) == 5
+    assert sched.flushes == 1 and sched.coalesced == 5
+
+
+def test_per_lane_candidate_threshold():
+    sched, calls = _recording_sched(
+        max_requests=100,
+        lane_policies={"retrieve": LanePolicy(max_candidates=6)})
+    sched.submit(FakeRequest(0, "retrieve", 0, list(range(4))))
+    assert not calls
+    sched.submit(FakeRequest(1, "retrieve", 0, list(range(4))))
+    assert len(calls) == 1 and len(calls[0]) == 2
+
+
+def test_targeted_result_flushes_only_its_lane():
+    sched, calls = _recording_sched(max_requests=100)
+    f_rank = sched.submit(_mk(0, "rank", 1)[0])
+    f_ret = sched.submit(_mk(10, "retrieve", 1)[0])
+    assert f_rank.result() == ("ok", 0)
+    assert len(calls) == 1 and [r.lane for r in calls[0]] == ["rank"]
+    assert not f_ret.done()
+    sched.flush()
+
+
+# ---------------------------------------------------------------------------
+# unit tests: shed paths
+# ---------------------------------------------------------------------------
+
+def test_deadline_shed_carries_typed_error():
+    sched, calls = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(shed_ms=0.0)})
+    f = sched.submit(_mk(0, "rank", 1)[0])
+    sched.flush()
+    assert not calls                            # shed at pickup, not served
+    assert f.done() and f.shed()
+    with pytest.raises(ShedError) as ei:
+        f.result()
+    e = ei.value
+    assert e.lane == "rank" and e.reason == "deadline"
+    assert e.wait_ms > 0.0 and e.budget_ms == 0.0 and e.priority == 0
+    assert "rank" in str(e) and "deadline" in str(e)
+    assert sched.shed_total == 1 and sched.coalesced == 0
+    assert sched.lane_stats()["rank"]["shed"] == 1
+
+
+def test_protected_priority_served_and_counted_as_miss():
+    """Over-budget requests ABOVE shed_max_priority are served anyway —
+    the budget records a deadline miss instead of shedding them."""
+    sched, calls = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(shed_ms=0.0,
+                                          shed_max_priority=0)})
+    f = sched.submit(_mk(0, "rank", 1, priority=1)[0])
+    sched.flush()
+    assert f.result() == ("ok", 0)
+    assert len(calls) == 1
+    stats = sched.lane_stats()["rank"]
+    assert stats["deadline_misses"] == 1 and stats["shed"] == 0
+
+
+def test_huge_budget_sheds_nothing():
+    sched, _ = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(shed_ms=1e9)})
+    f = sched.submit(_mk(0, "rank", 1)[0])
+    assert sched.shed_expired() == 0
+    sched.flush()
+    assert f.result() == ("ok", 0) and sched.shed_total == 0
+
+
+def test_shed_expired_sheds_without_flushing():
+    sched, calls = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(shed_ms=0.0)})
+    f = sched.submit(_mk(0, "rank", 1)[0])
+    assert sched.shed_expired() == 1
+    assert not calls and f.shed()
+    assert sched.lane_stats()["rank"]["pending"] == 0
+    sched.flush()                               # nothing left: no call
+    assert not calls
+
+
+def test_admission_sheds_incoming_at_bound():
+    sched, _ = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(max_queue=1)})
+    f0 = sched.submit(_mk(0, "rank", 1)[0])
+    f1 = sched.submit(_mk(1, "rank", 1)[0])     # same priority: incoming loses
+    assert f1.shed() and not f0.done()
+    with pytest.raises(ShedError) as ei:
+        f1.result()
+    assert ei.value.reason == "admission" and ei.value.budget_ms is None
+    sched.flush()
+    assert f0.result() == ("ok", 0)
+
+
+def test_admission_evicts_lower_priority_victim():
+    sched, calls = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(max_queue=1,
+                                          shed_max_priority=0)})
+    f_low = sched.submit(_mk(0, "rank", 1, priority=0)[0])
+    f_hi = sched.submit(_mk(1, "rank", 1, priority=1)[0])
+    assert f_low.shed() and not f_hi.done()     # queued loser evicted
+    sched.flush()
+    assert f_hi.result() == ("ok", 1)
+    assert [r.uid for r in calls[0]] == [1]
+
+
+def test_admission_bound_soft_for_protected_priorities():
+    """Two protected requests at a max_queue=1 bound: neither is
+    sheddable, so the bound is soft — both queue and both are served."""
+    sched, _ = _recording_sched(
+        max_requests=100,
+        lane_policies={"rank": LanePolicy(max_queue=1,
+                                          shed_max_priority=0)})
+    fs = [sched.submit(r) for r in _mk(0, "rank", 2, priority=2)]
+    assert sched.lane_stats()["rank"]["pending"] == 2
+    sched.flush()
+    assert [f.result() for f in fs] == [("ok", 0), ("ok", 1)]
+    assert sched.shed_total == 0
+
+
+# ---------------------------------------------------------------------------
+# unit tests: flush membership beats shed (the Ticket.result()-era gap)
+# ---------------------------------------------------------------------------
+
+def test_flush_membership_beats_shed():
+    """REGRESSION (satellite 3): once another caller's flush has picked a
+    request up, a concurrent ``shed_expired()`` — even with a 0 ms budget
+    — must not shed it: the request deterministically resolves with its
+    RESULT.  Pre-SLO ``Ticket.result()`` had no such guarantee."""
+    gate = threading.Event()
+    entered = threading.Event()
+    calls = []
+
+    def slow_flush(batch):
+        calls.append(list(batch))
+        entered.set()
+        assert gate.wait(5.0), "test gate never released"
+        return [("ok", r.uid) for r in batch]
+
+    sched = RequestScheduler(
+        slow_flush, max_requests=100, max_wait_s=1e9,
+        lane_fn=lambda r: r.lane,
+        lane_policies={"rank": LanePolicy(shed_ms=1e9)})
+    futures = [sched.submit(r) for r in _mk(0, "rank", 3)]
+
+    flusher = threading.Thread(target=sched.flush)
+    flusher.start()
+    assert entered.wait(5.0)                    # batch is off the queue…
+    # …so a zero-budget shed pass must find NOTHING to shed
+    sched._lanes["rank"].policy = LanePolicy(shed_ms=0.0)
+    assert sched.shed_expired() == 0
+    for f in futures:
+        assert not f.shed()
+    gate.set()
+    flusher.join(5.0)
+    assert not flusher.is_alive()
+    assert [f.result() for f in futures] == [("ok", 0), ("ok", 1), ("ok", 2)]
+    assert sched.shed_total == 0 and sched.coalesced == 3
+    assert len(calls) == 1
+
+
+def test_result_does_not_reflush_inflight_request():
+    """``result()`` on a future whose request is already inside an
+    in-flight flush waits for THAT flush instead of calling flush_fn
+    again (the membership check under the queue lock)."""
+    gate = threading.Event()
+    entered = threading.Event()
+    calls = []
+
+    def slow_flush(batch):
+        calls.append(list(batch))
+        entered.set()
+        assert gate.wait(5.0)
+        return [("ok", r.uid) for r in batch]
+
+    sched = RequestScheduler(slow_flush, max_requests=100, max_wait_s=1e9,
+                             lane_fn=lambda r: r.lane)
+    f = sched.submit(_mk(0, "rank", 1)[0])
+    flusher = threading.Thread(target=sched.flush)
+    flusher.start()
+    assert entered.wait(5.0)
+    waiter_done = []
+    waiter = threading.Thread(
+        target=lambda: waiter_done.append(f.result()))
+    waiter.start()
+    time.sleep(0.02)                            # waiter reaches _done.wait()
+    gate.set()
+    flusher.join(5.0)
+    waiter.join(5.0)
+    assert waiter_done == [("ok", 0)]
+    assert len(calls) == 1                      # no redundant flush
+
+
+# ---------------------------------------------------------------------------
+# unit tests: auto-tuner
+# ---------------------------------------------------------------------------
+
+def test_autotune_adapts_lane_wait_to_flush_latency():
+    def flush_fn(batch):
+        time.sleep(0.004)                       # ~4 ms flush
+        return [("ok", r.uid) for r in batch]
+
+    sched = RequestScheduler(
+        flush_fn, max_requests=100, max_wait_s=10.0,
+        lane_fn=lambda r: r.lane,
+        lane_policies={"rank": LanePolicy(auto_tune=True,
+                                          autotune_ratio=0.5,
+                                          autotune_min_ms=0.5,
+                                          autotune_max_ms=50.0)})
+    assert sched.submit(_mk(0, "rank", 1)[0]) is not None
+    before = sched.lane_stats()["rank"]["wait_ms"]
+    assert before == pytest.approx(10_000.0)    # inherited default
+    sched.flush()
+    tuned = sched.lane_stats()["rank"]["wait_ms"]
+    assert 0.5 <= tuned <= 50.0                 # clamped into policy range
+    assert tuned < before                       # adapted DOWN from 10 s
+    # a second flush keeps tracking via the EWMA, still in range
+    sched.submit(_mk(1, "rank", 1)[0])
+    sched.flush()
+    assert 0.5 <= sched.lane_stats()["rank"]["wait_ms"] <= 50.0
+
+
+def test_autotune_skips_combined_flushes():
+    """A combined multi-lane flush conflates every lane's wall time — the
+    tuner must only learn from single-lane flushes."""
+    def flush_fn(batch):
+        time.sleep(0.002)
+        return [("ok", r.uid) for r in batch]
+
+    sched = RequestScheduler(
+        flush_fn, max_requests=100, max_wait_s=10.0,
+        lane_fn=lambda r: r.lane,
+        lane_policies={"rank": LanePolicy(auto_tune=True)})
+    sched.submit(_mk(0, "rank", 1)[0])
+    sched.submit(_mk(1, "retrieve", 1)[0])
+    sched.flush()                               # combined: two contributors
+    assert sched.lane_stats()["rank"]["wait_ms"] == pytest.approx(10_000.0)
+
+
+# ---------------------------------------------------------------------------
+# unit tests: background flusher + close
+# ---------------------------------------------------------------------------
+
+def test_background_flusher_sheds_and_serves_per_policy():
+    served = []
+
+    def flush_fn(batch):
+        served.extend(r.uid for r in batch)
+        return [("ok", r.uid) for r in batch]
+
+    with RequestScheduler(
+            flush_fn, max_requests=100, max_wait_ms=5.0,
+            lane_fn=lambda r: r.lane,
+            lane_policies={"rank": LanePolicy(shed_ms=1e9),
+                           "retrieve": LanePolicy(shed_ms=0.0)}) as sched:
+        f_ok = sched.submit(_mk(0, "rank", 1)[0])
+        f_shed = sched.submit(_mk(1, "retrieve", 1)[0])
+        deadline = time.time() + 5.0
+        while not (f_ok.done() and f_shed.done()) and time.time() < deadline:
+            time.sleep(0.002)
+    assert f_ok.result() == ("ok", 0)
+    assert f_shed.shed()
+    assert served == [0]

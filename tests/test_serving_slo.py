@@ -1,0 +1,333 @@
+"""Engine-level SLO scheduling: lane isolation bit-parity, deep pipeline
+lookahead parity, priority shed through the typed request path, and the
+8-thread adversarial hammer.
+
+Acceptance points covered:
+  * with NO shed pressure, lane-isolated flushing is BIT-IDENTICAL to the
+    shared-flush baseline (``isolate_lanes=False``) on every lane;
+  * ``pipeline_depth`` 4 and 8 (deque lookahead with back-pressure)
+    reproduce the synchronous depth-1 scores bit-for-bit, and the fused
+    two-stage lane is depth-invariant for any depth >= 2;
+  * a shed rank request's future raises :class:`ShedError` end-to-end
+    through ``ServingEngine.submit`` while protected priorities on the
+    same lane are served;
+  * 8 threads of mixed lanes + background flusher + deterministic shed
+    pressure + a mid-stream compatible ``attach_index`` refresh + a
+    ``stats()`` reader: no deadlock, no torn snapshot, every future
+    resolves exactly once, zero post-warmup compiles.
+"""
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import smoke_config
+from repro.core.dcat import DCAT
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.models.config import get_config
+from repro.retrieval import IndexBuilder
+from repro.serving import (ContextCache, LanePolicy, RankRequest,
+                           RetrieveRequest, RetrieveThenRankRequest,
+                           ServingEngine, ShedError, TwoStageResult)
+
+L = 16
+N_ITEMS = 500
+TOP_K = 8
+CAND_DIM = 32
+
+
+@pytest.fixture(scope="module")
+def lite_model():
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    cfg = FinetuneConfig(variant="lite-last", seq_len=L)
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def item_index(lite_model):
+    model, params = lite_model
+    return IndexBuilder(model, params, batch_size=256).build(0, N_ITEMS)
+
+
+def _feats(ids):
+    return np.stack([np.random.RandomState(int(i) % 4999).randn(CAND_DIM)
+                     for i in np.asarray(ids)]).astype(np.float32)
+
+
+def _user(seed):
+    r = np.random.RandomState(seed)
+    return (r.randint(0, N_ITEMS, L), r.randint(0, 6, L),
+            r.randint(0, 3, L), r.randn(32).astype(np.float32))
+
+
+def _mk_rank(seed, cand_seed=None, n_cand=3, priority=0):
+    i, a, s, uf = _user(seed)
+    rng = np.random.RandomState(1000 + (cand_seed if cand_seed is not None
+                                        else seed))
+    ids = rng.randint(0, N_ITEMS, n_cand)
+    return RankRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                       cand_ids=ids, cand_feats=_feats(ids), user_feats=uf,
+                       priority=priority)
+
+
+def _mk_retrieve(seed, k=TOP_K, priority=0):
+    i, a, s, _ = _user(seed)
+    return RetrieveRequest(seq_ids=i, seq_actions=a, seq_surfaces=s, k=k,
+                           priority=priority)
+
+
+def _mk_two_stage(seed, k=TOP_K):
+    i, a, s, uf = _user(seed)
+    return RetrieveThenRankRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                                   user_feats=uf, k=k)
+
+
+def _mk_engine(lite_model, item_index, **kw):
+    model, params = lite_model
+    kw.setdefault("cache", ContextCache(capacity=256))
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=32,
+                           **kw)
+    engine.attach_index(item_index, k=TOP_K, chunk_rows=256)
+    engine.attach_features(_feats)
+    engine.warmup()
+    return engine
+
+
+def _assert_same_result(a, b):
+    if isinstance(a, TwoStageResult):
+        np.testing.assert_array_equal(a.item_ids, b.item_ids)
+        np.testing.assert_array_equal(a.retrieval_scores, b.retrieval_scores)
+        np.testing.assert_array_equal(a.probs, b.probs)
+    elif isinstance(a, tuple):
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(x, y)
+    else:
+        np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# bit-parity: lane isolation and deep pipelining change NOTHING numerically
+# ---------------------------------------------------------------------------
+
+def test_lane_isolation_bit_parity_with_shared_flush(lite_model, item_index):
+    """Per-lane flushing (size-triggered rank drains ALONE, then explicit
+    per-lane flushes) must produce bit-identical results to the pre-SLO
+    shared-flush baseline draining everything in one combined call."""
+    def traffic():
+        return ([_mk_rank(s) for s in (1, 2, 3, 1)]
+                + [_mk_retrieve(s) for s in (4, 5)]
+                + [_mk_two_stage(6)])
+
+    iso = _mk_engine(lite_model, item_index,
+                     lane_policies={"rank": LanePolicy(max_requests=4)})
+    shared = _mk_engine(lite_model, item_index, isolate_lanes=False,
+                        max_pending=1000)
+
+    futs_iso = [iso.submit(r) for r in traffic()]
+    # the 4th rank submit tripped the rank lane's threshold on its own…
+    assert iso.scheduler.lane_stats()["rank"]["pending"] == 0
+    # …without dragging the other lanes' queues with it
+    assert iso.scheduler.lane_stats()["retrieve"]["pending"] == 2
+    iso.flush(lane="retrieve")
+    iso.flush(lane="two_stage")
+
+    futs_shared = [shared.submit(r) for r in traffic()]
+    shared.flush()
+    assert shared.scheduler.flushes == 1       # one combined drain
+
+    for fi, fs in zip(futs_iso, futs_shared):
+        _assert_same_result(fi.result(), fs.result())
+    assert iso.registry.compiles_after_warmup == 0
+    assert shared.registry.compiles_after_warmup == 0
+    assert iso.scheduler.shed_total == 0
+
+
+@pytest.mark.parametrize("depth", [4, 8])
+def test_pipeline_depth_parity(lite_model, item_index, depth):
+    """Depth-``d`` lookahead (up to d-1 chunks in flight, oldest finalized
+    first) is a pure latency optimization: scores match the synchronous
+    depth-1 engine bit-for-bit across a multi-chunk batch, and the fused
+    two-stage lane stays depth-invariant."""
+    reqs = [_mk_rank(s, n_cand=3 + (s % 4)) for s in range(12)]
+    ref = _mk_engine(lite_model, item_index, pipeline_depth=1)
+    eng = _mk_engine(lite_model, item_index, pipeline_depth=depth)
+    out_ref = ref.score(reqs)
+    out = eng.score(reqs)
+    for a, b in zip(out, out_ref):
+        np.testing.assert_array_equal(a, b)
+    # the 12-user batch really exercised the lookahead window
+    assert eng.stats()["chunks_executed"] >= 3
+    ts_ref = ref.submit(_mk_two_stage(42)).result()
+    ts = eng.submit(_mk_two_stage(42)).result()
+    _assert_same_result(ts, ts_ref)
+    assert eng.registry.compiles_after_warmup == 0
+
+
+def test_pipeline_depth_validation(lite_model):
+    model, params = lite_model
+    for bad in (0, 9, -1):
+        with pytest.raises(ValueError):
+            ServingEngine(model, params, pipeline_depth=bad)
+
+
+# ---------------------------------------------------------------------------
+# shed path through the typed engine front door
+# ---------------------------------------------------------------------------
+
+def test_engine_shed_and_priority_exemption(lite_model, item_index):
+    """A zero-budget rank lane sheds priority-0 requests with a typed
+    ShedError (stats + obs counters agree) while priority-1 requests ride
+    the SAME flush to a real, bit-correct score."""
+    engine = _mk_engine(
+        lite_model, item_index,
+        lane_policies={"rank": LanePolicy(shed_ms=0.0,
+                                          shed_max_priority=0)})
+    ref = _mk_engine(lite_model, item_index)
+
+    f_shed = engine.submit(_mk_rank(1, priority=0))
+    f_kept = engine.submit(_mk_rank(2, priority=1))
+    engine.flush()
+    assert f_shed.shed() and not f_kept.shed()
+    with pytest.raises(ShedError) as ei:
+        f_shed.result()
+    assert ei.value.lane == "rank" and ei.value.reason == "deadline"
+    np.testing.assert_array_equal(f_kept.result(),
+                                  ref.score([_mk_rank(2, priority=1)])[0])
+
+    snap = engine.stats()
+    assert snap["scheduler"]["shed"] == 1
+    lane = snap["scheduler"]["lane_detail"]["rank"]
+    assert lane["shed"] == 1 and lane["deadline_misses"] == 1
+    mirror = engine.obs.snapshot()
+    assert mirror["repro_serving_scheduler_shed_total"] == 1
+    assert engine.registry.compiles_after_warmup == 0
+
+
+# ---------------------------------------------------------------------------
+# the 8-thread adversarial hammer
+# ---------------------------------------------------------------------------
+
+STATS_KEYS = {"executors", "cache", "memo_perm_hits", "slab", "masks",
+              "lanes", "shared_encode_users", "scheduler", "chunks_executed",
+              "pipeline_calls", "last_pipeline", "retrieval"}
+
+N_PER_THREAD = 12
+
+
+def test_adversarial_hammer(lite_model, item_index):
+    """8 threads against one engine: 3 rank submitters (alternating
+    sheddable/protected priorities against a 0 ms rank budget), 2 retrieve
+    submitters, 1 two-stage submitter, 1 ``stats()`` reader, and 1 thread
+    re-attaching a COMPATIBLE index refresh mid-stream — all over the
+    background flusher.  Must not deadlock; every future resolves exactly
+    once (shed xor served); snapshots are never torn; zero post-warmup
+    compiles survive the whole run."""
+    engine = _mk_engine(
+        lite_model, item_index, max_wait_ms=3.0, max_pending=6,
+        lane_policies={"rank": LanePolicy(shed_ms=0.0,
+                                          shed_max_priority=0)})
+    results = []                # (kind, priority, future), append-only
+    res_lock = threading.Lock()
+    errors = []
+    stop = threading.Event()
+
+    def submitter(kind, tid):
+        try:
+            for j in range(N_PER_THREAD):
+                seed = tid * 100 + j
+                if kind == "rank":
+                    r = _mk_rank(seed, priority=j % 2)
+                elif kind == "retrieve":
+                    r = _mk_retrieve(seed)
+                else:
+                    r = _mk_two_stage(seed)
+                f = engine.submit(r)
+                with res_lock:
+                    results.append((kind, getattr(r, "priority", 0), f))
+                time.sleep(0.001)
+        except BaseException as e:          # pragma: no cover - fail path
+            errors.append(("submit", kind, e))
+
+    def stats_reader():
+        try:
+            while not stop.is_set():
+                snap = engine.stats()
+                assert set(snap) == STATS_KEYS, set(snap) ^ STATS_KEYS
+                sched = snap["scheduler"]
+                assert sched["flushes"] >= 0 and sched["shed"] >= 0
+                assert sched["coalesced"] >= 0
+                for lane in sched["lane_detail"].values():
+                    assert lane["pending"] >= 0 and lane["shed"] >= 0
+                time.sleep(0.0005)
+        except BaseException as e:          # pragma: no cover - fail path
+            errors.append(("stats", None, e))
+
+    def reattacher():
+        try:
+            for _ in range(4):
+                time.sleep(0.01)
+                # same (k, bits, dim, chunk_rows): a live refresh that must
+                # keep every warmed executor
+                engine.attach_index(item_index, k=TOP_K, chunk_rows=256)
+        except BaseException as e:          # pragma: no cover - fail path
+            errors.append(("attach", None, e))
+
+    threads = ([threading.Thread(target=submitter, args=("rank", t))
+                for t in range(3)]
+               + [threading.Thread(target=submitter, args=("retrieve", t))
+                  for t in range(3, 5)]
+               + [threading.Thread(target=submitter, args=("two_stage", 5))]
+               + [threading.Thread(target=stats_reader),
+                  threading.Thread(target=reattacher)])
+    for t in threads:
+        t.start()
+    for t in threads[:6] + [threads[-1]]:
+        t.join(60.0)
+        assert not t.is_alive(), "hammer deadlocked"
+    engine.close()                          # drain + stop the flusher
+    stop.set()
+    threads[-2].join(10.0)
+    assert not threads[-2].is_alive()
+    assert not errors, errors
+
+    served, shed = [], []
+    for kind, prio, f in results:
+        assert f.done(), f"{kind} future never resolved"
+        try:
+            value = f.result()
+        except ShedError as e:
+            assert kind == "rank" and prio == 0, (kind, prio)
+            assert e.lane == "rank" and e.reason == "deadline"
+            shed.append(f)
+            continue
+        served.append(f)
+        if kind == "rank":
+            assert isinstance(value, np.ndarray) and value.shape[0] == 3
+        elif kind == "retrieve":
+            ids, scores = value
+            assert len(ids) == TOP_K
+        else:
+            assert isinstance(value, TwoStageResult)
+
+    # the 0 ms budget makes shed deterministic: every sheddable rank
+    # request sheds at pickup, every protected one is served
+    n_rank = 3 * N_PER_THREAD
+    assert len(shed) == n_rank // 2
+    assert len(served) == len(results) - len(shed)
+    snap = engine.stats()
+    assert snap["scheduler"]["shed"] == len(shed)
+    assert snap["scheduler"]["coalesced"] == len(served)
+    assert snap["scheduler"]["lane_detail"]["rank"]["pending"] == 0
+    assert engine.registry.compiles_after_warmup == 0

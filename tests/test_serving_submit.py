@@ -133,6 +133,7 @@ def test_public_surface_pinned():
         "RankRequest", "RetrieveRequest", "RetrieveThenRankRequest",
         "GenerateRequest", "TwoStageResult",
         "ServingEngine", "ContextCache", "Future",
+        "LanePolicy", "ShedError",
         "MicroBatcher", "Ticket", "InferenceRouter", "UserEmbeddingCache",
     ]
     for name in serving.__all__:
