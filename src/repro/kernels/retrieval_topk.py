@@ -14,13 +14,27 @@ One grid step processes one block of packed corpus rows:
                 in the output block (constant index map), merged with the
                 freshly scored block each step.
 
-The merge is an explicitly LEXICOGRAPHIC sort on (-score, row index), so
+The merge is an explicitly LEXICOGRAPHIC order on (-score, row index), so
 the global tie-break contract "equal scores -> lower row index wins" holds
 even when -inf ties are common (a fully filtered corpus block ties with
 the carry's -inf init sentinel; the sentinel's INT32_MAX index makes it
-lose to every real row).  ``jax.lax.sort`` with two operands is the
-Mosaic-portable way to express this; replacing it with an in-register
-bitonic merge is tracked on the ROADMAP.
+lose to every real row).  Two bit-identical implementations of that order
+live here:
+
+  * ``merge="bitonic"`` (default) — :func:`bitonic_topk_merge`, an
+    in-register bitonic compare-exchange network.  Every stage is a
+    last-axis reshape + ``where`` (no gathers, no variadic sort), the
+    Mosaic-friendly formulation: element p pairs with p^stride under a
+    ``(..., n/(2*stride), 2, stride)`` reshape, and the per-group
+    direction bit is constant because each group spans one aligned
+    2*stride block.  This is the shared device-side merge — the IVF route
+    (``retrieval/ivf.py``) scans its probed cluster slices through the
+    SAME helper, so the top-k merge lives in exactly one place (the host
+    counterpart is ``retrieval.scorer.merge_topk``).
+  * ``merge="sort"`` — the original two-operand ``jax.lax.sort``
+    lexicographic sort, kept as the parity escape hatch and the benchmark
+    baseline (``bench_retrieval.py`` asserts the bitonic network beats it
+    with bit-identical results).
 
 One HBM read of the packed corpus, no (Q, R) score matrix in HBM — the
 score block never leaves VMEM.  The pure-jnp oracle (dequantize the whole
@@ -37,7 +51,92 @@ from jax.experimental import pallas as pl
 _SENTINEL_IDX = 2**31 - 1   # carry init: loses every (-score, index) tie
 
 
-def _topk_kernel(packed_ref, scale_ref, bias_ref, q_ref, *rest,
+def _next_pow2(n: int) -> int:
+    p = 1
+    while p < n:
+        p *= 2
+    return p
+
+
+def _compare_swap(s, i, size: int, stride: int):
+    """One bitonic compare-exchange substage over the last axis.
+
+    Element p pairs with p ^ stride: reshape the last axis (length n) to
+    (n / (2*stride), 2, stride) and the partners land in the two middle
+    slots of each group.  The sort direction of a pair depends only on
+    bit ``size`` of p, which is constant within a group (a group spans
+    positions [g*2*stride, (g+1)*2*stride), an aligned block of length
+    2*stride <= size), so it is a per-group scalar, not a gather."""
+    lead = s.shape[:-1]
+    n = s.shape[-1]
+    g = n // (2 * stride)
+    s2 = s.reshape(*lead, g, 2, stride)
+    i2 = i.reshape(*lead, g, 2, stride)
+    lo_s, hi_s = s2[..., 0, :], s2[..., 1, :]
+    lo_i, hi_i = i2[..., 0, :], i2[..., 1, :]
+    # descending groups have bit `size` of their first position clear:
+    # the final stage (size == n) is then one all-descending merge
+    g_first = jax.lax.broadcasted_iota(jnp.int32, (g, 1), 0) * (2 * stride)
+    desc = (g_first & size) == 0
+    # "lo wins" under the contract order: higher score, ties -> lower index
+    lo_wins = (lo_s > hi_s) | ((lo_s == hi_s) & (lo_i < hi_i))
+    swap = jnp.where(desc, ~lo_wins, lo_wins)
+    new_lo_s = jnp.where(swap, hi_s, lo_s)
+    new_hi_s = jnp.where(swap, lo_s, hi_s)
+    new_lo_i = jnp.where(swap, hi_i, lo_i)
+    new_hi_i = jnp.where(swap, lo_i, hi_i)
+    s = jnp.stack([new_lo_s, new_hi_s], axis=-2).reshape(*lead, n)
+    i = jnp.stack([new_lo_i, new_hi_i], axis=-2).reshape(*lead, n)
+    return s, i
+
+
+def _bitonic_sort_desc(s, i):
+    """Full bitonic sorting network over the last axis (power-of-two
+    length): sorts by score DESCENDING, equal scores by index ASCENDING —
+    the retrieval contract order.  Static python loop over the
+    O(log^2 n) substages; every substage is reshape + where only."""
+    n = s.shape[-1]
+    assert n & (n - 1) == 0, f"bitonic length {n} must be a power of two"
+    size = 2
+    while size <= n:
+        stride = size // 2
+        while stride >= 1:
+            s, i = _compare_swap(s, i, size, stride)
+            stride //= 2
+        size *= 2
+    return s, i
+
+
+def bitonic_topk_merge(carry_s, carry_i, block_s, block_i, *, k: int = None):
+    """Merge a running (…, K) top-k carry with a freshly scored (…, N)
+    block: exact top-k of the union by (score desc, index asc).
+
+    The single device-side partial top-k merge of the retrieval
+    subsystem — the Pallas kernel's carry merge and the IVF route's
+    cluster-slice scan both call this.  Padding slots are
+    (-inf, INT32_MAX), the same sentinel the kernel carry initializes
+    with, so they lose every comparison (including -inf score ties, where
+    the lower index wins).  Bit-compatible with the two-operand
+    ``jax.lax.sort`` on (-score, index): both realize the same total
+    order, and selection of the top k from a total order is unique."""
+    if k is None:
+        k = carry_s.shape[-1]
+    cat_s = jnp.concatenate([carry_s, block_s], axis=-1)
+    cat_i = jnp.concatenate([carry_i.astype(jnp.int32),
+                             block_i.astype(jnp.int32)], axis=-1)
+    n = cat_s.shape[-1]
+    pad = _next_pow2(n) - n
+    if pad:
+        shp = cat_s.shape[:-1] + (pad,)
+        cat_s = jnp.concatenate(
+            [cat_s, jnp.full(shp, -jnp.inf, cat_s.dtype)], axis=-1)
+        cat_i = jnp.concatenate(
+            [cat_i, jnp.full(shp, _SENTINEL_IDX, jnp.int32)], axis=-1)
+    s, i = _bitonic_sort_desc(cat_s, cat_i)
+    return s[..., :k], i[..., :k]
+
+
+def _topk_kernel(packed_ref, scale_ref, bias_ref, q_ref, *rest, merge: str,
                  bits: int, per_word: int, n_items: int, block_rows: int):
     if len(rest) == 3:
         mask_ref, os_ref, oi_ref = rest
@@ -67,19 +166,26 @@ def _topk_kernel(packed_ref, scale_ref, bias_ref, q_ref, *rest,
                   >> jax.lax.broadcasted_iota(jnp.int32, (1, 1, 32), 2)) & 1)
         s = jnp.where(mbits.reshape(s.shape[0], tr) == 1, -jnp.inf, s)
 
-    cat_s = jnp.concatenate([os_ref[...], s], axis=1)        # (Q, K+TR)
-    cat_i = jnp.concatenate(
-        [oi_ref[...], jnp.broadcast_to(ridx, s.shape)], axis=1)
     k = os_ref.shape[1]
-    # lexicographic (-score asc, index asc) == (score desc, index asc)
-    neg_s, idx = jax.lax.sort((-cat_s, cat_i), num_keys=2)
-    os_ref[...] = -neg_s[:, :k]
-    oi_ref[...] = idx[:, :k]
+    if merge == "bitonic":
+        top_s, top_i = bitonic_topk_merge(
+            os_ref[...], oi_ref[...], s, jnp.broadcast_to(ridx, s.shape),
+            k=k)
+        os_ref[...] = top_s
+        oi_ref[...] = top_i
+    else:
+        cat_s = jnp.concatenate([os_ref[...], s], axis=1)    # (Q, K+TR)
+        cat_i = jnp.concatenate(
+            [oi_ref[...], jnp.broadcast_to(ridx, s.shape)], axis=1)
+        # lexicographic (-score asc, index asc) == (score desc, index asc)
+        neg_s, idx = jax.lax.sort((-cat_s, cat_i), num_keys=2)
+        os_ref[...] = -neg_s[:, :k]
+        oi_ref[...] = idx[:, :k]
 
 
 def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
                    block_rows: int = 512, interpret: bool = True,
-                   mask=None):
+                   mask=None, merge: str = "bitonic"):
     """Fused dequant + score + running top-k over a packed corpus.
 
     packed: (R, D*bits/32) int32; scale/bias: (R, 1) fp16;
@@ -91,9 +197,12 @@ def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
     survive the mask fewer than k deep are filled with (-inf, lowest
     excluded row index), matching ``retrieval_topk_ref``.
     ``block_rows`` must be a multiple of 32 when a mask is passed (one
-    mask word covers 32 corpus rows).
+    mask word covers 32 corpus rows).  ``merge`` picks the carry merge:
+    the bitonic network (default) or the legacy two-operand ``lax.sort``
+    — bit-identical results, see the module docstring.
     """
     assert bits in (4, 8)
+    assert merge in ("bitonic", "sort"), merge
     per_word = 32 // bits
     R, W = packed.shape
     D = W * per_word
@@ -112,8 +221,8 @@ def retrieval_topk(packed, scale, bias, queries, *, k: int, bits: int = 4,
     bias = jnp.pad(bias.astype(jnp.float16), ((0, pad), (0, 0)))
     nr = packed.shape[0] // tr
 
-    kernel = functools.partial(_topk_kernel, bits=bits, per_word=per_word,
-                               n_items=R, block_rows=tr)
+    kernel = functools.partial(_topk_kernel, merge=merge, bits=bits,
+                               per_word=per_word, n_items=R, block_rows=tr)
     in_specs = [
         pl.BlockSpec((tr, W), lambda r: (r, 0)),
         pl.BlockSpec((tr, 1), lambda r: (r, 0)),

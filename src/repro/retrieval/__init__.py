@@ -22,10 +22,21 @@ Module map:
               chunks, block-max selection + exact rescore), and the
               brute-force oracle (``kernels.ref.retrieval_topk_ref``).
               Also the shared executor/merge helpers (``chunk_topk``,
-              ``merge_topk``) used by the serving engine.
+              ``merge_topk`` — the ONE host-side partial top-k merge; the
+              device-side counterpart is
+              ``kernels.retrieval_topk.bitonic_topk_merge``).
+  ivf.py      The approximate route: IVF coarse quantizer (k-means over
+              the candidate-tower embeddings, ``build_ivf`` permuting the
+              corpus cluster-contiguously), host-side probe routing, the
+              ``ivf_topk`` slice-gather scorer (exact scoring inside the
+              probed clusters, shared bitonic merge), filter pushdown
+              with recall-floor nprobe widening, and the standalone
+              ``IVFScorer``.  Opt-in: recall loss comes only from cluster
+              pruning and is measurable against the exact oracle.
   sharded.py  ShardedRetriever — contiguous corpus row ranges per device
               over the ``data`` mesh axis via ``shard_map``; per-shard
-              exact top-k, stable lower-index-wins merge on host.
+              exact top-k (or shard-clipped IVF probes with
+              ``route="ivf"``), stable lower-index-wins merge on host.
 
 Serving integration lives in ``serving.engine``: ``RetrieveRequest`` ->
 cached pooled user embedding (``encode_user`` + ContextCache) -> bucketed
@@ -35,6 +46,8 @@ corpus-chunk executors in the ExecutorRegistry -> host merge; covered by
 from repro.retrieval.filters import (ItemFilter, as_filter_list,
                                      filter_masks, pack_bits, unpack_bits)
 from repro.retrieval.index import IndexBuilder, ItemIndex
+from repro.retrieval.ivf import (IVFData, IVFScorer, build_ivf, ivf_route,
+                                 ivf_topk, kmeans)
 from repro.retrieval.scorer import (CorpusScorer, chunk_topk, fused_topk,
                                     merge_topk, unpack_codes)
 from repro.retrieval.sharded import ShardedRetriever

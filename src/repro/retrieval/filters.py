@@ -112,8 +112,9 @@ def excluded_rows(f: Optional[ItemFilter], index, row_start: int,
         sl = np.asarray(index.surfaces)[row_start:row_start + n_rows]
         excl[:len(sl)] = ~np.isin(sl, np.asarray(f.allow_surfaces))
     if f.exclude_ids is not None and len(f.exclude_ids):
-        rows = (np.asarray(f.exclude_ids, np.int64)
-                - index.start_id - row_start)
+        # id -> physical row through the index (on an IVF-permuted index
+        # this consults inv_perm, so exclude_ids stay in id space)
+        rows = index.id_rows(np.asarray(f.exclude_ids, np.int64)) - row_start
         rows = rows[(rows >= 0) & (rows < n_rows)]
         excl[rows] = True
     return excl

@@ -29,14 +29,21 @@ from repro.quant.ptq import QuantizedTable, dequantize_table, quantize_table
 class ItemIndex:
     """Packed item-embedding corpus for ids [start_id, start_id + n_items).
 
-    Corpus row r holds item id ``start_id + r`` — retrieval returns row
-    indices; :meth:`item_ids` maps them back to ids.  ``surfaces`` is
-    optional per-item metadata ((n_items,) int, host numpy) consumed by
+    Without IVF metadata, corpus row r holds item id ``start_id + r``.
+    With ``ivf`` attached (``retrieval.ivf.build_ivf``) the rows are laid
+    out CLUSTER-CONTIGUOUSLY and the id<->row mapping goes through the
+    stable permutation: :meth:`item_ids` maps returned rows back through
+    ``ivf.row_map`` and :meth:`id_rows` maps ids (e.g. a filter's
+    ``exclude_ids``) forward through ``ivf.inv_perm`` — callers always
+    speak original item ids, whatever the physical layout.  ``surfaces``
+    is optional per-item metadata ((n_items,) int, host numpy, stored in
+    ROW order — permuted alongside the table) consumed by
     surface-targeting :class:`~repro.retrieval.filters.ItemFilter`s."""
     qt: QuantizedTable
     start_id: int
     n_items: int
     surfaces: Optional[np.ndarray] = None
+    ivf: Optional["IVFData"] = None    # retrieval.ivf.IVFData
 
     @property
     def dim(self) -> int:
@@ -51,18 +58,52 @@ class ItemIndex:
         return self.qt.nbytes
 
     def item_ids(self, rows):
-        """Map retrieval row indices (any shape) back to item ids."""
-        return np.asarray(rows) + self.start_id
+        """Map retrieval row indices (any shape) back to item ids.
+
+        On an IVF-permuted index, in-range rows go through ``row_map``;
+        negative rows (the IVF route's unfilled-tail sentinel) map to -1;
+        rows >= n_items (exact-path padding fills) keep the identity
+        mapping, as on an unpermuted index."""
+        rows = np.asarray(rows)
+        if self.ivf is None:
+            return rows + self.start_id
+        r = rows.astype(np.int64)
+        in_range = (r >= 0) & (r < self.n_items)
+        mapped = np.where(in_range,
+                          self.ivf.row_map[np.where(in_range, r, 0)], r)
+        return np.where(r < 0, -1, mapped + self.start_id)
+
+    def id_rows(self, ids):
+        """Map item ids to CORPUS ROWS in the physical layout (through
+        ``ivf.inv_perm`` when permuted); ids outside the index id range
+        map to -1.  The inverse of :meth:`item_ids` on valid rows."""
+        ids = np.asarray(ids, np.int64)
+        rows = ids - self.start_id
+        ok = (rows >= 0) & (rows < self.n_items)
+        if self.ivf is not None:
+            rows = np.where(ok, self.ivf.inv_perm[np.where(ok, rows, 0)],
+                            rows)
+        return np.where(ok, rows, -1)
 
     def dequantize(self, *, out_dtype=jnp.float32):
-        """Whole-corpus fp dequantization (the brute-force serving layout)."""
+        """Whole-corpus fp dequantization (the brute-force serving layout).
+        Rows come back in the PHYSICAL (possibly permuted) layout."""
         return dequantize_table(self.qt, out_dtype=out_dtype)
 
     # -- persistence --------------------------------------------------------
     def save(self, path: str) -> None:
-        """npz snapshot (codes + scale/bias + id range + surfaces)."""
+        """npz snapshot (codes + scale/bias + id range + surfaces + IVF
+        metadata when present)."""
         extra = ({"surfaces": np.asarray(self.surfaces)}
                  if self.surfaces is not None else {})
+        if self.ivf is not None:
+            extra.update(
+                ivf_centroids=np.asarray(self.ivf.centroids),
+                ivf_starts=np.asarray(self.ivf.starts),
+                ivf_row_map=np.asarray(self.ivf.row_map),
+                ivf_inv_perm=np.asarray(self.ivf.inv_perm),
+                ivf_assignments=np.asarray(self.ivf.assignments),
+                ivf_n_clustered=self.ivf.n_clustered)
         np.savez(path,
                  packed=np.asarray(self.qt.packed),
                  scale=np.asarray(self.qt.scale),
@@ -77,15 +118,27 @@ class ItemIndex:
                                 scale=jnp.asarray(z["scale"]),
                                 bias=jnp.asarray(z["bias"]),
                                 bits=int(z["bits"]), dim=int(z["dim"]))
+            ivf = None
+            if "ivf_centroids" in z.files:
+                from repro.retrieval.ivf import IVFData
+                ivf = IVFData(centroids=z["ivf_centroids"],
+                              starts=z["ivf_starts"],
+                              row_map=z["ivf_row_map"],
+                              inv_perm=z["ivf_inv_perm"],
+                              assignments=z["ivf_assignments"],
+                              n_clustered=int(z["ivf_n_clustered"]))
             return cls(qt=qt, start_id=int(z["start_id"]),
                        n_items=int(z["n_items"]),
                        surfaces=(z["surfaces"] if "surfaces" in z.files
-                                 else None))
+                                 else None),
+                       ivf=ivf)
 
 
+# ``ivf`` rides as a meta field: host-side metadata (identity-hashed —
+# IVFData is eq=False) that must never be traced.
 jax.tree_util.register_dataclass(
     ItemIndex, data_fields=["qt", "surfaces"],
-    meta_fields=["start_id", "n_items"])
+    meta_fields=["start_id", "n_items", "ivf"])
 
 
 class IndexBuilder:
@@ -154,7 +207,17 @@ class IndexBuilder:
         XLA compiles (see ``ServingEngine.attach_index``).
 
         ``surfaces`` is required iff ``index`` carries surfaces (the
-        metadata must stay aligned with the rows)."""
+        metadata must stay aligned with the rows).
+
+        On an IVF-built index the appended rows land in the UNCLUSTERED
+        TAIL: they are assigned to their nearest existing centroid
+        (metadata only — ``retrieval.ivf.ivf_append``, no re-cluster, no
+        permutation change), the id<->row maps extend identically, and
+        the IVF scorers scan the tail exactly — so append + IVF retrieve
+        still costs zero new compiles.  The ``ivf_appended_unclustered``
+        staleness counter (surfaced in ``ServingEngine.stats()``) tracks
+        how far the layout has drifted from the clustering; rebuild with
+        ``build_ivf`` when it matters."""
         assert n_new > 0
         new_start = index.start_id + index.n_items
         qt_new = self._quantize(new_start, n_new, index.bits)
@@ -173,5 +236,12 @@ class IndexBuilder:
         elif surfaces is not None:
             raise ValueError("cannot add surfaces on append to an index "
                              "built without them")
+        ivf = index.ivf
+        if ivf is not None:
+            from repro.retrieval.ivf import dequant_rows, ivf_append
+            # assign from the DEQUANTIZED new rows — the embedding space
+            # the scorers actually search
+            ivf = ivf_append(ivf, dequant_rows(qt_new, 0, n_new))
         return ItemIndex(qt=qt, start_id=index.start_id,
-                         n_items=index.n_items + n_new, surfaces=surfaces)
+                         n_items=index.n_items + n_new, surfaces=surfaces,
+                         ivf=ivf)

@@ -1,0 +1,618 @@
+"""IVF-ANN retrieval route: approximate top-k at 10M+ items over the
+exact scorer machinery (ROADMAP item 2; PinnerFormer-style pooled-embedding
+retrieval under PinFM's items/sec budget).
+
+The exact paths scan the whole corpus; this route trades exactness for
+scale with an inverted file (IVF):
+
+  build    k-means centroids over the (dequantized) candidate-tower
+           embeddings — Lloyd iterations run as jitted jnp blocks over the
+           packed corpus, training on a row sample like faiss — then a
+           STABLE permutation lays the corpus out cluster-contiguously.
+           The permutation is pure metadata: ``IVFData.row_map`` (permuted
+           -> original row) and ``inv_perm`` (original -> permuted) keep
+           ``ItemFilter.exclude_ids`` and returned ids in the original id
+           space (``ItemIndex.item_ids`` / ``id_rows`` consult them), and
+           per-row PTQ makes the permuted table byte-identical row-wise.
+  probe    each query routes to its top-``nprobe`` centroids on host (a
+           (Q, C) dot against the centroid table — tiny), and the probed
+           clusters' rows are visited as fixed-shape ``slice_rows`` slices
+           of the permuted corpus: ``ivf_topk`` gathers the slices with
+           ``lax.dynamic_slice`` and runs the SAME dequant+dot scoring as
+           ``chunk_topk``, so recall loss comes ONLY from cluster pruning
+           and is directly measurable against ``retrieval_topk_ref``.
+  merge    the per-slice scores stream through the shared bitonic partial
+           top-k merge (``kernels.retrieval_topk.bitonic_topk_merge``) —
+           the same network the Pallas kernel carries — preserving the
+           (score desc, lower row index) tie-break in the PHYSICAL
+           (permuted) row space.  Scores are bit-identical to the exact
+           oracle on probed rows; at full probe the whole result matches
+           the exact paths run on the same permuted index bit-for-bit
+           (equal-score ties order by physical row, so against the
+           UNPERMUTED oracle the score arrays still match exactly while
+           tied ids may legitimately swap).  Slots the probe does
+           not fill carry ``valid = 0`` and never contribute, so one
+           static (Q, S) shape serves every nprobe <= the attached
+           maximum: ``compiles_after_warmup == 0`` holds through the
+           warmed executor ladder.
+
+Filters (the PR-3 open question, resolved): masks are PUSHED DOWN into
+the probed slices — each visited slice gets its packed row-bitmask window
+and excluded rows pin to -inf before selection, exactly like the exact
+paths (no post-filter bias *within* the probed set).  What pushdown alone
+cannot fix is a filter starving the probed clusters below k survivors;
+when a ``recall_floor`` is configured, the scorer then WIDENS nprobe up a
+doubling ladder (each level a pre-warmed executor shape) until the fill
+fraction — finite slots / k, the recall proxy — reaches the floor or the
+ladder ends.  Unfilled tail slots are ``(-inf, -1)`` sentinels: unlike
+the exact paths (whose tails carry the lowest excluded row), an IVF tail
+row was never *visited*, so no honest row index exists for it.
+
+Rows appended by ``IndexBuilder.append`` after the build live as an
+UNCLUSTERED TAIL (rows [n_clustered, n_items) in permuted space, identity
+-mapped): they are assigned to their nearest centroid as metadata
+(rebuild hint + staleness counter ``ivf_appended_unclustered``) but are
+scanned EXACTLY by the existing chunk machinery and merged with the IVF
+partial — so freshness never costs recall or a recompile.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.retrieval_topk import _SENTINEL_IDX, bitonic_topk_merge
+from repro.retrieval.filters import (as_filter_list, excluded_rows,
+                                     pack_bits)
+from repro.retrieval.scorer import (_round_up, chunk_topk, merge_topk,
+                                    unpack_codes)
+
+MERGES = ("bitonic", "topk")
+
+
+@dataclasses.dataclass(eq=False)
+class IVFData:
+    """Coarse-quantizer metadata riding on an :class:`ItemIndex`.
+
+    ``eq=False`` keeps the default identity hash: the index is a
+    registered pytree whose meta fields must be hashable for jit keys.
+
+    Clustered rows occupy the permuted prefix [0, n_clustered); cluster c
+    owns the contiguous permuted rows [starts[c], starts[c+1]).  Rows
+    appended after the build sit in [n_clustered, n_items) (identity
+    row_map) — the unclustered tail the scorers scan exactly."""
+    centroids: np.ndarray     # (C, D) fp32 routing table
+    starts: np.ndarray        # (C + 1,) int64 cluster row boundaries
+    row_map: np.ndarray       # (n_items,) int64: permuted row -> original
+    inv_perm: np.ndarray      # (n_items,) int64: original row -> permuted
+    assignments: np.ndarray   # (n_items,) int32: ORIGINAL row -> cluster
+    n_clustered: int
+
+    @property
+    def n_clusters(self) -> int:
+        return self.centroids.shape[0]
+
+    @property
+    def n_items(self) -> int:
+        return self.row_map.shape[0]
+
+    @property
+    def appended_unclustered(self) -> int:
+        """Staleness: rows appended since the last (re)build."""
+        return self.n_items - self.n_clustered
+
+    def max_cluster_rows(self) -> int:
+        return int(np.max(np.diff(self.starts))) if self.n_clusters else 0
+
+
+# -- k-means (Lloyd, jnp blocks) ------------------------------------------
+
+def _make_assign(C: int, D: int, block: int):
+    """Jitted one-block Lloyd step: nearest centroid per row + weighted
+    per-cluster sums/counts (weight 0 parks pad rows in a spare segment).
+    argmin ties go to the LOWER cluster index (deterministic builds)."""
+    def f(xb, w, c):
+        d = 0.5 * jnp.sum(c * c, axis=1)[None, :] - xb @ c.T   # (B, C)
+        a = jnp.argmin(d, axis=1).astype(jnp.int32)
+        aw = jnp.where(w > 0, a, C)
+        sums = jax.ops.segment_sum(xb * w[:, None], aw, num_segments=C + 1)
+        cnts = jax.ops.segment_sum(w, aw, num_segments=C + 1)
+        return a, sums[:C], cnts[:C]
+    return jax.jit(f)
+
+
+def _blocks(x: np.ndarray, block: int):
+    """Yield (padded fp32 block, weight) pairs of static shape."""
+    R = x.shape[0]
+    for off in range(0, R, block):
+        xb = np.asarray(x[off:off + block], np.float32)
+        n = xb.shape[0]
+        w = np.ones(block, np.float32)
+        if n < block:
+            xb = np.pad(xb, ((0, block - n), (0, 0)))
+            w[n:] = 0.0
+        yield xb, w
+
+
+def kmeans(x, n_clusters: int, *, iters: int = 8, seed: int = 0,
+           block_rows: int = 8192):
+    """Lloyd k-means over (R, D) fp32 rows -> ((C, D) centroids,
+    (R,) int32 assignments to the RETURNED centroids).
+
+    Rows stream through a jitted block step (argmin + segment sums), so
+    peak memory is one (block_rows, C) distance tile, not (R, C).  Empty
+    clusters keep their previous centroid.  Deterministic in (x, seed)."""
+    x = np.asarray(x, np.float32)
+    R, D = x.shape
+    C = int(min(n_clusters, R))
+    assert C > 0
+    rng = np.random.default_rng(seed)
+    cents = x[np.sort(rng.choice(R, size=C, replace=False))].copy()
+    block = int(min(block_rows, _round_up(R, 8)))
+    step = _make_assign(C, D, block)
+    assign = np.zeros(R, np.int32)
+    for it in range(max(1, iters)):
+        sums = np.zeros((C, D), np.float64)
+        cnts = np.zeros(C, np.float64)
+        cj = jnp.asarray(cents)
+        pos = 0
+        for xb, w in _blocks(x, block):
+            a, s, c = step(jnp.asarray(xb), jnp.asarray(w), cj)
+            n = int(w.sum())
+            assign[pos:pos + n] = np.asarray(a)[:n]
+            sums += np.asarray(s, np.float64)
+            cnts += np.asarray(c, np.float64)
+            pos += n
+        if it == iters - 1:
+            break        # assignments already match the final centroids
+        nz = cnts > 0
+        cents[nz] = (sums[nz] / cnts[nz, None]).astype(np.float32)
+    return cents, assign
+
+
+def assign_rows(x, centroids, *, block_rows: int = 8192) -> np.ndarray:
+    """Nearest-centroid assignment pass (no centroid update): the append
+    path and the final build pass share it.  -> (R,) int32."""
+    x = np.asarray(x, np.float32)
+    R, D = x.shape
+    C = centroids.shape[0]
+    block = int(min(block_rows, _round_up(max(R, 1), 8)))
+    step = _make_assign(C, D, block)
+    cj = jnp.asarray(centroids, jnp.float32)
+    out = np.zeros(R, np.int32)
+    pos = 0
+    for xb, w in _blocks(x, block):
+        a, _, _ = step(jnp.asarray(xb), jnp.asarray(w), cj)
+        n = int(w.sum())
+        out[pos:pos + n] = np.asarray(a)[:n]
+        pos += n
+    return out
+
+
+def dequant_rows(qt, start: int, n: int) -> np.ndarray:
+    """Dequantize corpus rows [start, start+n) -> (n, D) fp32 numpy —
+    the embedding space every scorer path sees (building the quantizer on
+    the dequantized table keeps routing consistent with scoring)."""
+    pk = jnp.asarray(np.asarray(qt.packed)[start:start + n])
+    sc = jnp.asarray(np.asarray(qt.scale)[start:start + n], jnp.float32)
+    bs = jnp.asarray(np.asarray(qt.bias)[start:start + n], jnp.float32)
+    return np.asarray(unpack_codes(pk, qt.bits) * sc + bs)
+
+
+def build_ivf(index, n_clusters: int, *, iters: int = 8, seed: int = 0,
+              train_rows: int = 131072, block_rows: int = 8192):
+    """Cluster an :class:`ItemIndex` -> a NEW index with a
+    cluster-contiguous row layout and :class:`IVFData` attached.
+
+    k-means trains on a ``train_rows`` sample (faiss-style — a full-corpus
+    Lloyd pass at 10M rows buys nothing), then one assignment pass covers
+    every row.  The stable permutation (argsort of assignments) preserves
+    original row order within each cluster, so the tie-break contract maps
+    cleanly back through ``row_map``.  Rebuilding an already-IVF index
+    re-clusters from the ORIGINAL row order (folding any appended tail
+    into proper clusters, resetting the staleness counter)."""
+    from repro.quant.ptq import QuantizedTable
+    from repro.retrieval.index import ItemIndex
+
+    n = index.n_items
+    assert 0 < n_clusters
+    qt = index.qt
+    packed = np.asarray(qt.packed)[:n]
+    scale = np.asarray(qt.scale)[:n]
+    bias = np.asarray(qt.bias)[:n]
+    surfaces = (None if index.surfaces is None
+                else np.asarray(index.surfaces)[:n])
+    if index.ivf is not None:      # rebuild: undo the previous permutation
+        back = np.asarray(index.ivf.inv_perm)
+        packed, scale, bias = packed[back], scale[back], bias[back]
+        if surfaces is not None:
+            surfaces = surfaces[back]
+    base_qt = QuantizedTable(packed=jnp.asarray(packed),
+                             scale=jnp.asarray(scale),
+                             bias=jnp.asarray(bias),
+                             bits=qt.bits, dim=qt.dim)
+
+    rng = np.random.default_rng(seed)
+    if n > train_rows:
+        sample = np.sort(rng.choice(n, size=train_rows, replace=False))
+    else:
+        sample = np.arange(n)
+    train = np.concatenate([
+        dequant_rows(base_qt, int(lo), int(hi - lo + 1))[
+            sample[(sample >= lo) & (sample <= hi)] - lo]
+        for lo, hi in _sample_windows(sample, block_rows)]) \
+        if len(sample) else np.zeros((0, qt.dim), np.float32)
+    cents, _ = kmeans(train, n_clusters, iters=iters, seed=seed,
+                      block_rows=block_rows)
+    C = cents.shape[0]
+
+    assign = np.zeros(n, np.int32)
+    for off in range(0, n, block_rows):
+        m = min(block_rows, n - off)
+        assign[off:off + m] = assign_rows(
+            dequant_rows(base_qt, off, m), cents, block_rows=block_rows)
+
+    order = np.argsort(assign, kind="stable").astype(np.int64)
+    counts = np.bincount(assign, minlength=C).astype(np.int64)
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    inv = np.empty(n, np.int64)
+    inv[order] = np.arange(n, dtype=np.int64)
+    new_qt = QuantizedTable(packed=jnp.asarray(packed[order]),
+                            scale=jnp.asarray(scale[order]),
+                            bias=jnp.asarray(bias[order]),
+                            bits=qt.bits, dim=qt.dim)
+    ivf = IVFData(centroids=cents.astype(np.float32), starts=starts,
+                  row_map=order, inv_perm=inv, assignments=assign,
+                  n_clustered=n)
+    return ItemIndex(qt=new_qt, start_id=index.start_id, n_items=n,
+                     surfaces=None if surfaces is None else surfaces[order],
+                     ivf=ivf)
+
+
+def _sample_windows(sample: np.ndarray, block: int):
+    """Group sorted sample rows into <= block-wide dequant windows."""
+    out = []
+    i = 0
+    while i < len(sample):
+        lo = sample[i]
+        j = i
+        while j + 1 < len(sample) and sample[j + 1] - lo < block:
+            j += 1
+        out.append((lo, sample[j]))
+        i = j + 1
+    return out
+
+
+def ivf_append(ivf: IVFData, new_rows: np.ndarray) -> IVFData:
+    """Extend the IVF metadata for rows appended AFTER the build: each new
+    row is assigned to its NEAREST EXISTING centroid (metadata only — no
+    re-cluster, no permutation change), and physically lives in the
+    identity-mapped unclustered tail that the scorers scan exactly.
+    ``appended_unclustered`` grows by len(new_rows); a later
+    :func:`build_ivf` rebuild folds the tail into real clusters."""
+    n_new = int(np.asarray(new_rows).shape[0])
+    n0 = ivf.n_items
+    tail = np.arange(n0, n0 + n_new, dtype=np.int64)
+    return IVFData(
+        centroids=ivf.centroids, starts=ivf.starts,
+        row_map=np.concatenate([ivf.row_map, tail]),
+        inv_perm=np.concatenate([ivf.inv_perm, tail]),
+        assignments=np.concatenate([
+            ivf.assignments,
+            assign_rows(new_rows, ivf.centroids)]).astype(np.int32),
+        n_clustered=ivf.n_clustered)
+
+
+# -- probing: host-side routing + slice tables ----------------------------
+
+class SliceTable:
+    """Per-cluster slice decomposition for one (IVFData, slice_rows):
+    cluster c's permuted row span cut into fixed ``slice_rows`` windows —
+    (offset, valid) pairs the device scorer gathers.  ``spc`` bounds the
+    slices any one cluster contributes, so S = nprobe * spc is a static
+    executor shape."""
+
+    def __init__(self, ivf: IVFData, slice_rows: int):
+        assert slice_rows % 32 == 0, \
+            f"slice_rows={slice_rows} must be a multiple of 32 (packed " \
+            "filter-mask words cover 32 rows)"
+        self.slice_rows = int(slice_rows)
+        offs, vals, ptr = [], [], [0]
+        for c in range(ivf.n_clusters):
+            a, b = int(ivf.starts[c]), int(ivf.starts[c + 1])
+            for o in range(a, b, slice_rows):
+                offs.append(o)
+                vals.append(min(slice_rows, b - o))
+            ptr.append(len(offs))
+        self.off = np.asarray(offs, np.int32)
+        self.val = np.asarray(vals, np.int32)
+        self.ptr = np.asarray(ptr, np.int64)
+        self.total = len(offs)
+        self.spc = int(max(1, (np.diff(self.ptr).max()
+                               if ivf.n_clusters else 1)))
+
+    def slots(self, nprobe: int) -> int:
+        """Static slot count S covering any top-``nprobe`` probe."""
+        return int(min(max(1, nprobe) * self.spc, max(self.total, 1)))
+
+    def gather(self, clusters: np.ndarray, S: int):
+        """(Q, P) probed cluster ids (ascending per query) -> (Q, S)
+        offsets/valids; unused slots are (0, 0) and score nothing."""
+        Q = clusters.shape[0]
+        off = np.zeros((Q, S), np.int32)
+        val = np.zeros((Q, S), np.int32)
+        for q in range(Q):
+            n = 0
+            for c in clusters[q]:
+                lo, hi = int(self.ptr[c]), int(self.ptr[c + 1])
+                m = hi - lo
+                if m == 0:
+                    continue
+                off[q, n:n + m] = self.off[lo:hi]
+                val[q, n:n + m] = self.val[lo:hi]
+                n += m
+            assert n <= S, (n, S)
+        return off, val
+
+
+def ivf_route(centroids: np.ndarray, queries: np.ndarray,
+              nprobe: int) -> np.ndarray:
+    """Top-``nprobe`` clusters per query by the L2 routing score
+    q.c - ||c||^2/2 (argmax == nearest centroid).  Host numpy — the
+    (Q, C) product is microscopic next to the corpus scan.  Ties pick the
+    lower cluster id; the returned ids are sorted ASCENDING per query so
+    gathered slice offsets ascend and the row tie-break is preserved.
+    -> (Q, min(nprobe, C)) int."""
+    q = np.asarray(queries, np.float32)
+    c = np.asarray(centroids, np.float32)
+    s = q @ c.T - 0.5 * np.sum(c * c, axis=1)[None, :]
+    P = int(min(nprobe, c.shape[0]))
+    top = np.argsort(-s, axis=1, kind="stable")[:, :P]
+    return np.sort(top, axis=1)
+
+
+def slice_masks(filters, index, offsets: np.ndarray, valids: np.ndarray,
+                slice_rows: int, *, cache: Optional[dict] = None):
+    """Filter pushdown: resolve per-query filters into packed bitmask
+    windows of the PROBED slices only -> (Q, S, slice_rows/32) int32, or
+    None when every filter is empty.  Rows are memoized per (fingerprint,
+    slice offset) — pass ``cache`` to share the memo across calls (the
+    engine passes its LRU)."""
+    if filters is None or all(f is None or f.is_empty() for f in filters):
+        return None
+    Q, S = offsets.shape
+    W = slice_rows // 32
+    memo = cache if cache is not None else {}
+    out = np.zeros((Q, S, W), np.int32)
+    any_set = False
+    for qi, f in enumerate(filters):
+        if f is None or f.is_empty():
+            continue
+        fp = f.fingerprint()
+        for si in range(S):
+            if valids[qi, si] <= 0:
+                continue
+            key = (fp, "ivf", int(offsets[qi, si]))
+            row = memo.get(key)
+            if row is None:
+                row = pack_bits(excluded_rows(
+                    f, index, int(offsets[qi, si]), slice_rows))
+                memo[key] = row
+            if row.any():
+                out[qi, si] = row
+                any_set = True
+    return out if any_set else None
+
+
+# -- the device scorer core ----------------------------------------------
+
+def ivf_topk(queries, packed, scale, bias, offsets, valids, mask=None, *,
+             k: int, bits: int = 4, slice_rows: int, row_offset=0,
+             merge: str = "bitonic"):
+    """Score the probed slices of a permuted corpus and return their
+    top-k.  Pure jnp, jit-friendly, static in (Q, S, slice_rows, k).
+
+    packed/scale/bias: the PERMUTED corpus, padded by >= slice_rows rows
+      so every gather is in-bounds (``lax.dynamic_slice`` clamping would
+      silently shift rows — the pad makes clamping unreachable).
+    offsets/valids: (Q, S) int32 slice descriptors from
+      :meth:`SliceTable.gather`; offsets ascend per query; ``valid = 0``
+      slots are inert, so one executor serves every probe width <= S.
+    mask: optional (Q, S, slice_rows/32) packed pushdown bitmask.
+    row_offset: traced scalar added to returned rows (sharding).
+
+    Scoring is the same dequant-then-dot formula as ``chunk_topk`` — on
+    probed rows the two paths see identical fp operands.  Selection
+    either streams slices through the shared bitonic merge (default; the
+    kernel's own network, O(k + slice_rows) live values) or flattens to
+    one ``lax.top_k``; both realize (score desc, row asc), bit-identical.
+    Tail slots with no surviving row are ``(-inf, -1)``.
+
+    -> (scores (Q, k) fp32, permuted rows (Q, k) int32, -1 = unfilled).
+    """
+    assert merge in MERGES, merge
+    queries = jnp.asarray(queries, jnp.float32)
+    Q, D = queries.shape
+    S = offsets.shape[1]
+    sr = int(slice_rows)
+    offsets = jnp.asarray(offsets, jnp.int32)
+    valids = jnp.asarray(valids, jnp.int32)
+
+    def one(o):
+        return (jax.lax.dynamic_slice_in_dim(packed, o, sr, 0),
+                jax.lax.dynamic_slice_in_dim(scale, o, sr, 0),
+                jax.lax.dynamic_slice_in_dim(bias, o, sr, 0))
+
+    pk, sc, bs = jax.vmap(jax.vmap(one))(offsets)     # (Q, S, sr, .)
+    deq = (unpack_codes(pk, bits) * sc.astype(jnp.float32)
+           + bs.astype(jnp.float32))                  # (Q, S, sr, D)
+    s = jnp.einsum("qsrd,qd->qsr", deq, queries,
+                   preferred_element_type=jnp.float32)
+    local = jnp.arange(sr, dtype=jnp.int32)
+    rows = offsets[:, :, None] + local[None, None, :]
+    s = jnp.where(local[None, None, :] < valids[:, :, None], s, -jnp.inf)
+    if mask is not None:
+        mwords = jnp.asarray(mask, jnp.int32)         # (Q, S, sr/32)
+        mbits = ((mwords[..., None]
+                  >> jax.lax.broadcasted_iota(jnp.int32, (1, 1, 1, 32), 3))
+                 & 1).reshape(s.shape)
+        s = jnp.where(mbits == 1, -jnp.inf, s)
+
+    if merge == "bitonic":
+        init = (jnp.full((Q, k), -jnp.inf, jnp.float32),
+                jnp.full((Q, k), _SENTINEL_IDX, jnp.int32))
+
+        def body(carry, blk):
+            return bitonic_topk_merge(carry[0], carry[1], blk[0], blk[1],
+                                      k=k), None
+
+        (top_s, top_r), _ = jax.lax.scan(
+            body, init, (jnp.moveaxis(s, 1, 0), jnp.moveaxis(rows, 1, 0)))
+    else:
+        flat_s = s.reshape(Q, S * sr)
+        flat_r = rows.reshape(Q, S * sr)
+        if S * sr < k:               # k > survivors even before masking
+            padw = k - S * sr
+            flat_s = jnp.concatenate(
+                [flat_s, jnp.full((Q, padw), -jnp.inf, jnp.float32)], 1)
+            flat_r = jnp.concatenate(
+                [flat_r, jnp.full((Q, padw), _SENTINEL_IDX, jnp.int32)], 1)
+        top_s, idx = jax.lax.top_k(flat_s, k)
+        top_r = jnp.take_along_axis(flat_r, idx, axis=1)
+    top_r = jnp.where(top_s == -jnp.inf, jnp.int32(-1),
+                      top_r + jnp.asarray(row_offset, jnp.int32))
+    return top_s, top_r
+
+
+def pad_for_slices(qt, slice_rows: int):
+    """Device-resident permuted corpus padded so every slice gather is
+    in-bounds -> (packed, scale (fp16), bias (fp16)) jnp arrays."""
+    pad = slice_rows
+    packed = jnp.pad(jnp.asarray(qt.packed), ((0, pad), (0, 0)))
+    scale = jnp.pad(jnp.asarray(qt.scale, jnp.float16), ((0, pad), (0, 0)))
+    bias = jnp.pad(jnp.asarray(qt.bias, jnp.float16), ((0, pad), (0, 0)))
+    return packed, scale, bias
+
+
+# -- standalone scorer (benchmarks / tests / notebooks) -------------------
+
+class IVFScorer:
+    """IVF top-k against an IVF-built :class:`ItemIndex` — the standalone
+    counterpart of ``CorpusScorer`` for the ANN route (the serving engine
+    wires the same pieces through its warmed executor registry instead).
+
+    ``nprobe`` is the base probe width; with ``recall_floor`` set the
+    probe widens up a doubling ladder of ``widen`` extra levels whenever a
+    query's fill fraction (finite slots / k — the recall proxy) lands
+    below the floor.  Appended-but-unclustered rows are scanned exactly
+    every call.  Returned rows are PERMUTED corpus rows (-1 sentinels for
+    unfilled tails); :meth:`retrieve` maps them to item ids."""
+
+    def __init__(self, index, *, nprobe: int = 8, slice_rows: int = 4096,
+                 widen: int = 2, recall_floor: Optional[float] = None,
+                 merge: str = "bitonic"):
+        if index.ivf is None:
+            raise ValueError("IVFScorer needs an IVF-built index — run "
+                             "retrieval.ivf.build_ivf(index, n_clusters)")
+        assert merge in MERGES, merge
+        self.index = index
+        self.ivf: IVFData = index.ivf
+        self.merge = merge
+        self.recall_floor = recall_floor
+        sr = int(min(slice_rows,
+                     max(32, _round_up(self.ivf.max_cluster_rows(), 32))))
+        self.table = SliceTable(self.ivf, sr)
+        self.slice_rows = sr
+        C = self.ivf.n_clusters
+        base = int(min(max(1, nprobe), C))
+        lvls = sorted({min(base * 2 ** j, C)
+                       for j in range(max(0, widen) + 1)})
+        self.nprobe_levels = lvls
+        self.nprobe = base
+        self.packed, self.scale, self.bias = pad_for_slices(index.qt, sr)
+        self.widened = 0
+        self._jitted = {}
+
+    def _fn(self, k: int, S: int, masked: bool):
+        key = (k, S, masked)
+        fn = self._jitted.get(key)
+        if fn is None:
+            import functools
+            fn = self._jitted[key] = jax.jit(functools.partial(
+                ivf_topk, k=k, bits=self.index.bits,
+                slice_rows=self.slice_rows, merge=self.merge))
+        return fn
+
+    def _probe(self, q: np.ndarray, k: int, nprobe: int, filters):
+        S = self.table.slots(nprobe)
+        clusters = ivf_route(self.ivf.centroids, q, nprobe)
+        off, val = self.table.gather(clusters, S)
+        mask = slice_masks(filters, self.index, off, val, self.slice_rows)
+        fn = self._fn(k, S, mask is not None)
+        args = (jnp.asarray(q), self.packed, self.scale, self.bias,
+                jnp.asarray(off), jnp.asarray(val))
+        if mask is not None:
+            args += (jnp.asarray(mask),)
+        s, r = fn(*args)
+        tel = {"clusters_probed": int(clusters.shape[0] * clusters.shape[1]),
+               "rows_scanned": int(val.sum())}
+        return np.asarray(s), np.asarray(r), tel
+
+    def _tail_topk(self, q: np.ndarray, k: int, filters):
+        """Exact scan of the appended unclustered tail via ``chunk_topk``
+        (the same executor body the engine's tail chunks run)."""
+        nc, n = self.ivf.n_clustered, self.index.n_items
+        rows = n - nc
+        ch = _round_up(rows, 32)
+        pk = jnp.asarray(np.asarray(self.index.qt.packed)[nc:nc + ch])
+        sc = jnp.asarray(np.asarray(self.index.qt.scale)[nc:nc + ch],
+                         jnp.float16)
+        bs = jnp.asarray(np.asarray(self.index.qt.bias)[nc:nc + ch],
+                         jnp.float16)
+        if pk.shape[0] < ch:
+            pad = ch - pk.shape[0]
+            pk = jnp.pad(pk, ((0, pad), (0, 0)))
+            sc = jnp.pad(sc, ((0, pad), (0, 0)))
+            bs = jnp.pad(bs, ((0, pad), (0, 0)))
+        mask = None
+        if filters is not None and any(
+                f is not None and not f.is_empty() for f in filters):
+            mask = jnp.asarray(np.stack(
+                [pack_bits(excluded_rows(f, self.index, nc, ch))
+                 for f in filters]))
+        s, r = chunk_topk(jnp.asarray(q), pk, sc, bs,
+                          jnp.asarray(nc, jnp.int32),
+                          jnp.asarray(rows, jnp.int32),
+                          k=min(k, ch), bits=self.index.bits, mask=mask)
+        return np.asarray(s), np.asarray(r)
+
+    def topk(self, queries, k: int, *, filters=None):
+        """-> (scores (Q, k) fp32, permuted rows (Q, k) int32; tail slots
+        are (-inf, -1)).  ``filters``: one ItemFilter broadcast or a
+        per-query sequence, pushed down into the probed slices."""
+        assert 0 < k <= self.index.n_items
+        q = np.asarray(queries, np.float32)
+        assert q.ndim == 2 and q.shape[1] == self.index.dim
+        filters = (as_filter_list(filters, q.shape[0])
+                   if filters is not None else None)
+        lvl = 0
+        while True:
+            s, r, _ = self._probe(q, k, self.nprobe_levels[lvl], filters)
+            if self.ivf.appended_unclustered:
+                ts, tr = self._tail_topk(q, k, filters)
+                s, r = merge_topk([s, ts], [r, tr], k)
+                r = np.where(s == -np.inf, -1, r)
+            fill = np.min(np.mean(s > -np.inf, axis=1))
+            if (self.recall_floor is None or fill >= self.recall_floor
+                    or lvl + 1 >= len(self.nprobe_levels)):
+                return s, r
+            lvl += 1
+            self.widened += 1
+
+    def retrieve(self, queries, k: int, *, filters=None):
+        """Like :meth:`topk` but rows map to item ids (-1 = unfilled)."""
+        s, r = self.topk(queries, k, filters=filters)
+        return s, self.index.item_ids(r)

@@ -156,7 +156,13 @@ def chunk_topk(queries, packed, scale, bias, base_row, n_valid, *, k: int,
 
 
 def merge_topk(scores, rows, k: int):
-    """Host-side merge of per-shard/per-chunk partial top-ks.
+    """THE host-side merge of partial top-ks — every host merge in the
+    subsystem (engine chunks, sharded partials, the IVF route's
+    probe+tail combine) goes through this one helper; its device-side
+    counterpart is ``kernels.retrieval_topk.bitonic_topk_merge`` (the
+    kernel carry merge and the IVF slice scan).  Two implementations of
+    the (score desc, lower index) order total — one per side of the
+    host/device boundary.
 
     scores/rows: (..., Q, k_part) numpy, candidate groups ordered by
     ascending row range (chunks/shards in index order, each group sorted by
@@ -183,13 +189,14 @@ class CorpusScorer:
 
     def __init__(self, index: ItemIndex, *, mode: str = "fused",
                  chunk_rows: int = 32768, block_rows: int = 32,
-                 kernel_block_rows: int = 512,
+                 kernel_block_rows: int = 512, kernel_merge: str = "bitonic",
                  interpret: Optional[bool] = None):
         assert mode in MODES, f"mode {mode!r} not in {MODES}"
         self.index = index
         self.mode = mode
         self.block_rows = block_rows
         self.kernel_block_rows = kernel_block_rows
+        self.kernel_merge = kernel_merge
         # run the Pallas kernel compiled on TPU, interpreted elsewhere
         self.interpret = (jax.default_backend() != "tpu"
                           if interpret is None else interpret)
@@ -235,7 +242,7 @@ class CorpusScorer:
                 self.index.qt.packed, self.index.qt.scale, self.index.qt.bias,
                 queries, k=k, bits=self.bits,
                 block_rows=self.kernel_block_rows, interpret=self.interpret,
-                mask=mask)
+                mask=mask, merge=self.kernel_merge)
         fn = self._jitted.get(k)
         if fn is None:
             fn = jax.jit(functools.partial(

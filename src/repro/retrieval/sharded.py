@@ -10,6 +10,15 @@ partials are merged on host with the stable lower-index-wins rule.
 Per-device work and memory drop by n_dev; the only cross-device traffic is
 the replicated (Q, D) query block in and (Q, k) partials out — no score
 matrix, no corpus movement.
+
+With ``route="ivf"`` (an IVF-built index — see ``retrieval.ivf``) each
+shard probes only the SHARD-LOCAL portions of the query's top-``nprobe``
+clusters: routing runs once on host against the global centroid table,
+the probed clusters' slices are clipped to each shard's row range (plus
+the appended unclustered tail, which is always visited), and every shard
+runs the same ``ivf_topk`` slice-gather scorer over its clipped slices —
+shards owning none of the probed rows contribute only sentinel slots.
+The host merge is unchanged; unfilled tails come back as (-inf, -1).
 """
 from __future__ import annotations
 
@@ -96,6 +105,123 @@ class ShardedRetriever:
                        check_rep=False)
         return jax.jit(fn)
 
+    # -- IVF route: shard-local cluster probing -----------------------------
+    def _ivf_state(self):
+        """Lazy (SliceTable, slice_rows) for the attached IVF metadata."""
+        if getattr(self, "_ivf_tab", None) is None:
+            from repro.retrieval.ivf import SliceTable
+            ivf = self.index.ivf
+            sr = int(min(4096, max(32, _round_up(
+                max(ivf.max_cluster_rows(), 1), 32))))
+            self._ivf_tab = SliceTable(ivf, sr)
+        return self._ivf_tab
+
+    def _build_ivf(self, k: int, S: int, masked: bool):
+        from repro.retrieval.ivf import ivf_topk
+        rps = self.rows_per_shard
+        tab = self._ivf_state()
+        sr = tab.slice_rows
+        k_local = min(k, rps)
+        bits = self.index.bits
+
+        def local(q, pk, sc, bs, off, val, *m):
+            shard = jax.lax.axis_index("data")
+            # pad the shard block by one slice so every clipped-slice
+            # gather is in-bounds (dynamic_slice clamping would shift rows)
+            pk = jnp.pad(pk, ((0, sr), (0, 0)))
+            sc = jnp.pad(sc, ((0, sr), (0, 0)))
+            bs = jnp.pad(bs, ((0, sr), (0, 0)))
+            s, r = ivf_topk(q, pk, sc, bs, off[0], val[0],
+                            m[0][0] if m else None, k=k_local, bits=bits,
+                            slice_rows=sr, row_offset=shard * rps)
+            return s[None], r[None]
+
+        in_specs = (P(None, None), P("data", None), P("data", None),
+                    P("data", None), P("data", None, None),
+                    P("data", None, None))
+        if masked:
+            in_specs += (P("data", None, None, None),)
+        fn = shard_map(local, mesh=self.mesh, in_specs=in_specs,
+                       out_specs=(P("data", None, None),
+                                  P("data", None, None)),
+                       check_rep=False)
+        return jax.jit(fn)
+
+    def _ivf_probe(self, queries_np, nprobe: int, filters):
+        """Host-side probe planning: global routing, shard-clipped slice
+        descriptors (+ the unclustered tail on its owning shards), and
+        per-shard pushdown masks.
+        -> (off (n_sh, Q, S), val, masks or None, S)."""
+        from repro.retrieval.filters import excluded_rows, pack_bits
+        from repro.retrieval.ivf import ivf_route
+        ivf = self.index.ivf
+        tab = self._ivf_state()
+        sr = tab.slice_rows
+        rps = self.rows_per_shard
+        Q = queries_np.shape[0]
+        clusters = ivf_route(ivf.centroids, queries_np, nprobe)
+        nc, n = ivf.n_clustered, self.index.n_items
+        tail = [(o, min(sr, n - o)) for o in range(nc, n, sr)]
+        S = tab.slots(clusters.shape[1]) + len(tail)
+        off = np.zeros((self.n_shards, Q, S), np.int32)
+        val = np.zeros((self.n_shards, Q, S), np.int32)
+        filts = (as_filter_list(filters, Q)
+                 if filters is not None else [None] * Q)
+        masked = any(f is not None and not f.is_empty() for f in filts)
+        masks = (np.zeros((self.n_shards, Q, S, sr // 32), np.int32)
+                 if masked else None)
+        memo = {}
+        for q in range(Q):
+            # probed cluster slices (ascending) then the unclustered tail
+            # (highest rows) — global row order, so the merge tie-break
+            # contract carries over
+            gslices = []
+            for c in clusters[q]:
+                lo, hi = int(tab.ptr[c]), int(tab.ptr[c + 1])
+                gslices += [(int(tab.off[i]), int(tab.val[i]))
+                            for i in range(lo, hi)]
+            gslices += tail
+            used = np.zeros(self.n_shards, np.int32)
+            for o, v in gslices:
+                s0, s1 = o // rps, (o + v - 1) // rps
+                for sh in range(s0, min(s1, self.n_shards - 1) + 1):
+                    lo = sh * rps
+                    a, b = max(o, lo), min(o + v, lo + rps)
+                    if b <= a:
+                        continue
+                    j = used[sh]
+                    off[sh, q, j] = a - lo
+                    val[sh, q, j] = b - a
+                    if masked and filts[q] is not None:
+                        key = (filts[q].fingerprint(), a)
+                        row = memo.get(key)
+                        if row is None:
+                            row = memo[key] = pack_bits(excluded_rows(
+                                filts[q], self.index, a, sr))
+                        masks[sh, q, j] = row
+                    used[sh] = j + 1
+        return off, val, masks, S
+
+    def _topk_ivf(self, queries, k: int, *, nprobe: int, filters=None):
+        q_np = np.asarray(queries, np.float32)
+        off, val, masks, S = self._ivf_probe(q_np, nprobe, filters)
+        key = ("ivf", k, S, masks is not None)
+        fn = self._jitted.get(key)
+        if fn is None:
+            fn = self._jitted[key] = self._build_ivf(k, S, masks is not None)
+        args = (jnp.asarray(q_np), self.packed, self.scale, self.bias,
+                jnp.asarray(off), jnp.asarray(val))
+        if masks is not None:
+            args += (jnp.asarray(masks),)
+        s, r = fn(*args)
+        s, r = np.asarray(s), np.asarray(r)             # (n_dev, Q, k_l)
+        s, r = merge_topk(list(s), list(r), k)
+        if s.shape[-1] < k:     # tiny shards: k > n_dev * k_local survivors
+            padw = k - s.shape[-1]
+            s = np.pad(s, ((0, 0), (0, padw)), constant_values=-np.inf)
+            r = np.pad(r, ((0, 0), (0, padw)), constant_values=-1)
+        return s, np.where(s == -np.inf, -1, r)
+
     def _shard_masks(self, filters, n_queries: int):
         """-> (n_shards, Q, ceil(rows_per_shard/32)) int32 stacked
         shard-local packed bitmasks, or None when every filter is empty."""
@@ -107,11 +233,24 @@ class ShardedRetriever:
             return None
         return jnp.asarray(np.stack(ms), jnp.int32)
 
-    def topk(self, queries, k: int, *, filters=None):
+    def topk(self, queries, k: int, *, filters=None, route: str = "exact",
+             nprobe: int = 8):
         """-> (scores (Q, k), rows (Q, k)) — identical to the single-device
         scorer, including index tie-breaks (shards are index-ordered) and
-        per-query ``filters`` (a single ItemFilter broadcasts)."""
+        per-query ``filters`` (a single ItemFilter broadcasts).
+
+        ``route="ivf"`` (needs an IVF-built index) probes only the
+        shard-local portions of each query's top-``nprobe`` clusters —
+        identical to the single-device :class:`~repro.retrieval.ivf.
+        IVFScorer` at the same nprobe; unfilled tails are (-inf, -1)."""
         assert 0 < k <= self.index.n_items
+        if route == "ivf":
+            if self.index.ivf is None:
+                raise ValueError('route="ivf" needs an IVF-built index — '
+                                 "run retrieval.ivf.build_ivf first")
+            return self._topk_ivf(queries, k, nprobe=nprobe,
+                                  filters=filters)
+        assert route == "exact", route
         queries = jnp.asarray(queries, jnp.float32)
         masks = (self._shard_masks(filters, queries.shape[0])
                  if filters is not None else None)
@@ -124,7 +263,9 @@ class ShardedRetriever:
         s, r = np.asarray(s), np.asarray(r)             # (n_dev, Q, k)
         return merge_topk(list(s), list(r), k)
 
-    def retrieve(self, queries, k: int, *, filters=None):
+    def retrieve(self, queries, k: int, *, filters=None,
+                 route: str = "exact", nprobe: int = 8):
         """Like :meth:`topk` but maps rows to item ids (numpy)."""
-        scores, rows = self.topk(queries, k, filters=filters)
+        scores, rows = self.topk(queries, k, filters=filters, route=route,
+                                 nprobe=nprobe)
         return scores, self.index.item_ids(rows)

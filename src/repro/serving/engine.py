@@ -316,8 +316,14 @@ class ServingEngine:
         self.index = None                 # retrieval corpus (attach_index)
         self._chunks = None               # fixed-shape device corpus chunks
         self._chunk_size = 0              # rows per chunk (static, mult. 32)
-        self._attach_key = None           # (k, bits, dim, chunk_rows)
+        self._attach_key = None           # (k, bits, dim, chunk_rows, ivf)
         self._zero_masks: Dict[int, jnp.ndarray] = {}   # b_q -> zeros mask
+        self._ivf = None                  # IVF runtime state (attach_index)
+        self._ivf_zero_masks: Dict[tuple, jnp.ndarray] = {}
+        self.ivf_clusters_probed = 0      # cumulative across attaches
+        self.ivf_rows_scanned = 0
+        self.ivf_widened = 0
+        self.ivf_last_fill = 1.0          # recall proxy of the last probe
         # packed per-chunk filter-mask rows, (fingerprint, chunk base) keyed
         self._mask_cache: OrderedDict = OrderedDict()
         self.mask_hits = 0
@@ -403,6 +409,21 @@ class ServingEngine:
                 raise ValueError(
                     f"k={r.k} but the attached index serves "
                     f"k<={self.retrieve_k}; re-attach with a larger k")
+            route = getattr(r, "route", "exact")
+            if route not in ("exact", "ivf"):
+                raise ValueError(f"unknown retrieval route {route!r} "
+                                 "(expected 'exact' or 'ivf')")
+            if route == "ivf" and self._ivf is None:
+                raise ValueError(
+                    "route='ivf' but the attached index has no IVF "
+                    "structure: build it with retrieval.ivf.build_ivf() "
+                    "and re-attach")
+            nprobe = getattr(r, "nprobe", None)
+            if nprobe is not None:
+                if route != "ivf":
+                    raise ValueError("nprobe only applies to route='ivf'")
+                if nprobe < 1:
+                    raise ValueError(f"nprobe={nprobe} must be >= 1")
             if isinstance(r, RetrieveThenRankRequest):
                 if r.k < 1:
                     raise ValueError("two-stage requests need k >= 1 "
@@ -948,7 +969,9 @@ class ServingEngine:
 
     # -- retrieval path: corpus top-k from the cached pooled embedding ------
     def attach_index(self, index, *, k: int = 100,
-                     chunk_rows: int = 65536) -> None:
+                     chunk_rows: int = 65536, ivf_nprobe: int = 8,
+                     ivf_widen: int = 2, ivf_slice_rows: int = 4096,
+                     ivf_recall_floor: Optional[float] = None) -> None:
         """Attach an ``ItemIndex`` as the retrieval corpus.
 
         The corpus is cut into FIXED-SHAPE device chunks so a single jitted
@@ -961,7 +984,20 @@ class ServingEngine:
         simply fill the tail chunk's padding and/or arrive as extra chunk
         operands).  An INCOMPATIBLE re-attach (different k/bits/dim/chunk
         size) invalidates the retrieval executors and, on an already-warmed
-        engine, re-warms them before returning."""
+        engine, re-warms them before returning.
+
+        An IVF-built index (``retrieval.ivf.build_ivf``) additionally
+        enables ``route="ivf"`` on retrieval requests: ``ivf_nprobe`` is
+        the base probe width, widened up a doubling ladder of ``ivf_widen``
+        extra levels — each level a precompiled executor shape — when
+        ``ivf_recall_floor`` demands it (fill fraction = finite slots / k,
+        the recall proxy).  Clusters are visited as fixed ``ivf_slice_rows``
+        slices of the cluster-contiguous layout.  The append story carries
+        over: re-attaching an appended IVF index keeps every warmed
+        executor (clusters — and hence every slice-table shape — are
+        untouched by ``append``; the appended rows live in an unclustered
+        tail scanned EXACTLY through the regular chunk executors and merged
+        with the IVF partial)."""
         if not self.lite:
             raise ValueError("retrieval needs a lite variant (pooled user "
                              f"embedding); got {self.variant!r}")
@@ -971,14 +1007,38 @@ class ServingEngine:
         assert chunk_rows % 32 == 0, \
             f"chunk_rows={chunk_rows} must be a multiple of 32 (one packed " \
             "filter-mask word covers 32 rows)"
+        assert ivf_slice_rows % 32 == 0, \
+            f"ivf_slice_rows={ivf_slice_rows} must be a multiple of 32"
         # a live refresh must not swap corpus state under a flush in
         # progress on the background flusher (or any other) thread
         with self._engine_lock:
-            self._attach_index_locked(index, k, chunk_rows)
+            self._attach_index_locked(index, k, chunk_rows, ivf_nprobe,
+                                      ivf_widen, ivf_slice_rows,
+                                      ivf_recall_floor)
 
-    def _attach_index_locked(self, index, k: int, chunk_rows: int) -> None:
+    def _attach_index_locked(self, index, k: int, chunk_rows: int,
+                             ivf_nprobe: int, ivf_widen: int,
+                             ivf_slice_rows: int,
+                             ivf_recall_floor: Optional[float]) -> None:
         R = index.qt.packed.shape[0]
-        attach_key = (k, index.bits, index.dim, chunk_rows)
+        ivf_sig = None
+        if index.ivf is not None:
+            from repro.retrieval.ivf import SliceTable
+            from repro.retrieval.scorer import _round_up
+            ivf = index.ivf
+            sr = int(min(ivf_slice_rows,
+                         max(32, _round_up(max(ivf.max_cluster_rows(), 1),
+                                           32))))
+            tab = SliceTable(ivf, sr)
+            C = ivf.n_clusters
+            base_p = int(min(max(1, ivf_nprobe), C))
+            levels = sorted({min(base_p * 2 ** j, C)
+                             for j in range(max(0, ivf_widen) + 1)})
+            s_of = {p: tab.slots(p) for p in levels}
+            # the executor-shape signature: appends never change it
+            # (clusters are untouched), so append + re-attach is compatible
+            ivf_sig = (sr, tuple(levels), tuple(s_of[p] for p in levels))
+        attach_key = (k, index.bits, index.dim, chunk_rows, ivf_sig)
         compatible = (self._attach_key == attach_key
                       and self.retrieve_k <= self._chunk_size)
         ch = (self._chunk_size if compatible
@@ -1007,10 +1067,35 @@ class ServingEngine:
              jnp.asarray(min(index.n_items - base, ch), jnp.int32), base)
             for base in range(0, R, ch)]
         self._zero_masks = {}
+        self._ivf_zero_masks = {}
         # cached packed mask rows are chunk-window- and corpus-relative:
         # any (re-)attach invalidates them (start_id / surfaces / chunking
         # may all have changed); hit/miss counters stay cumulative
         self._mask_cache.clear()
+        # IVF runtime state rebuilds on EVERY attach (the index — and its
+        # appended tail — is new even when the executor shapes are not)
+        self._ivf = None
+        if index.ivf is not None:
+            from repro.retrieval.filters import pack_bits
+            from repro.retrieval.ivf import pad_for_slices
+            pk_p, sc_p, bs_p = pad_for_slices(index.qt, sr)
+            nc = ivf.n_clustered
+            tail_chunks = []
+            if ivf.appended_unclustered:
+                for chk in self._chunks:
+                    if chk[5] + ch <= nc:
+                        continue
+                    standing = None
+                    if chk[5] < nc:   # straddling chunk: hide rows the
+                        excl = np.zeros(ch, bool)     # probe already saw
+                        excl[:nc - chk[5]] = True
+                        standing = pack_bits(excl)
+                    tail_chunks.append((chk, standing))
+            self._ivf = {"data": ivf, "tab": tab, "sr": sr,
+                         "levels": levels, "S_of": s_of,
+                         "pk": pk_p, "sc": sc_p, "bs": bs_p,
+                         "floor": ivf_recall_floor,
+                         "tail_chunks": tail_chunks}
         if compatible:          # warmed executors stay valid: same shapes,
             return              # same closed-over (k, bits, ch)
         bits = index.bits
@@ -1027,6 +1112,19 @@ class ServingEngine:
         # executors that closed over the previous index's parameters
         self.registry.invalidate("retrieve")
         self.registry.register("retrieve", retrieve_factory)
+        self.registry.invalidate("ivf")
+        if self._ivf is not None:
+            sr_c = self._ivf["sr"]
+
+            def ivf_factory(key):
+                from repro.retrieval.ivf import ivf_topk
+
+                def fn(queries, packed, scale, bias, off, val, mask):
+                    return ivf_topk(queries, packed, scale, bias, off, val,
+                                    mask, k=k, bits=bits, slice_rows=sr_c)
+                return fn
+
+            self.registry.register("ivf", ivf_factory)
         if self._warmed_up:   # keep the zero-recompile steady-state promise
             self._warm_retrieval()
 
@@ -1039,6 +1137,41 @@ class ServingEngine:
             m = self._zero_masks[b_q] = jnp.zeros(
                 (b_q, self._chunk_size // 32), jnp.int32)
         return m
+
+    def _ivf_zero_mask(self, b_q: int, S: int):
+        """All-zeros slice-pushdown mask — the IVF analogue of
+        :meth:`_zero_mask` (filtered and unfiltered probes share one
+        executor)."""
+        m = self._ivf_zero_masks.get((b_q, S))
+        if m is None:
+            m = self._ivf_zero_masks[(b_q, S)] = jnp.zeros(
+                (b_q, S, self._ivf["sr"] // 32), jnp.int32)
+        return m
+
+    def _ivf_level(self, nprobe: Optional[int]) -> int:
+        """Serve a requested nprobe at the nearest configured level >= it
+        (levels are the precompiled executor shapes); ``None`` = the attach
+        base level."""
+        levels = self._ivf["levels"]
+        if nprobe is None:
+            return levels[0]
+        for p in levels:
+            if p >= nprobe:
+                return p
+        return levels[-1]
+
+    def _warm_ivf(self, b_u: int) -> None:
+        """Warm the IVF probe executors of one query bucket — every nprobe
+        level's slot shape, with inert (valid=0) slot operands."""
+        iv = self._ivf
+        d = self.model.pcfg.id_dim
+        for S in sorted(set(iv["S_of"].values())):
+            self.registry.warm("ivf", (b_u, S),
+                               jnp.zeros((b_u, d), jnp.float32),
+                               iv["pk"], iv["sc"], iv["bs"],
+                               jnp.zeros((b_u, S), jnp.int32),
+                               jnp.zeros((b_u, S), jnp.int32),
+                               self._ivf_zero_mask(b_u, S))
 
     def _warm_retrieval(self):
         """Warm (or re-warm) just the retrieval ladder — called when an
@@ -1058,6 +1191,8 @@ class ServingEngine:
             self.registry.warm("retrieve", (b_u,),
                                jnp.zeros((b_u, d), jnp.float32),
                                *self._chunks[0][:5], self._zero_mask(b_u))
+            if self._ivf is not None:
+                self._warm_ivf(b_u)
 
     def retrieve(self, requests: Sequence[RetrieveRequest]):
         """-> per-request (item_ids (k,), scores (k,)) numpy pairs.  A thin
@@ -1070,12 +1205,15 @@ class ServingEngine:
     def _group_retrieval(self, requests):
         """Shared retrieval planning: validate per-request k, build
         ``ItemFilter``s, and dedupe requests into unique (user key, filter
-        fingerprint) rows.  -> (filts, keys, owners) where ``owners[u]``
-        lists the request indices sharing unique row u."""
+        fingerprint, route) rows.  -> (filts, keys, owners, rconfs) where
+        ``owners[u]`` lists the request indices sharing unique row u and
+        ``rconfs[u]`` is its route conf — ``("exact", None)`` or
+        ``("ivf", effective_nprobe_level)`` (two requests whose nprobes
+        map to the same level share one execution)."""
         if self._chunks is None:
             raise ValueError("no retrieval corpus: call attach_index() first")
         from repro.retrieval.filters import ItemFilter
-        filts = []
+        filts, confs = [], []
         for i, r in enumerate(requests):
             if r.k > self.retrieve_k:
                 raise ValueError(
@@ -1086,17 +1224,49 @@ class ServingEngine:
                 allow_surfaces=(None if r.allow_surfaces is None
                                 else tuple(r.allow_surfaces)))
             filts.append(None if f.is_empty() else f)
+            route = getattr(r, "route", "exact")
+            if route == "ivf":
+                if self._ivf is None:   # flush-time re-check under the lock
+                    raise ValueError(
+                        "route='ivf' but the attached index has no IVF "
+                        "structure (build_ivf + attach_index)")
+                confs.append(("ivf",
+                              self._ivf_level(getattr(r, "nprobe", None))))
+            else:
+                confs.append(("exact", None))
         key_fn = self._key_fn or request_key   # same namespace as ranking
         keys = [key_fn(r) for r in requests]
         uniq: Dict[tuple, int] = {}
-        owners: List[List[int]] = []   # unique (user, filter) -> request idx
+        owners: List[List[int]] = []   # unique row -> request indices
+        rconfs: List[tuple] = []       # unique row -> route conf
         for i, key in enumerate(keys):
             fkey = filts[i].fingerprint() if filts[i] is not None else b""
-            u = uniq.setdefault((key, fkey), len(owners))
+            u = uniq.setdefault((key, fkey, confs[i]), len(owners))
             if u == len(owners):
                 owners.append([])
+                rconfs.append(confs[i])
             owners[u].append(i)
-        return filts, keys, owners
+        return filts, keys, owners, rconfs
+
+    def _route_groups(self, owners, rconfs):
+        """Partition unique retrieval rows into ROUTE-UNIFORM dispatch
+        groups of <= max_unique (one group = one executor family + probe
+        width; mixing routes in a group would need two dispatches anyway).
+        First-seen route order, row order preserved within a route.
+        -> [(rconf, [unique row, ...]), ...]."""
+        by: Dict[tuple, List[int]] = {}
+        route_order = []
+        for u, rc in enumerate(rconfs):
+            if rc not in by:
+                by[rc] = []
+                route_order.append(rc)
+            by[rc].append(u)
+        out = []
+        for rc in route_order:
+            rows = by[rc]
+            for g0 in range(0, len(rows), self.max_unique):
+                out.append((rc, rows[g0:g0 + self.max_unique]))
+        return out
 
     def _retrieve_batch(self, requests: Sequence[RetrieveRequest]):
         """The retrieve lane.
@@ -1111,18 +1281,18 @@ class ServingEngine:
         filters never cost a compile.  Requests from the same user with
         DIFFERENT filters are distinct retrieval groups but still share
         one cached user embedding; when fewer than k items survive a
-        filter, the tail scores are -inf."""
-        filts, keys, owners = self._group_retrieval(requests)
+        filter, the tail scores are -inf.  ``route="ivf"`` rows go through
+        the IVF probe executors instead (groups are route-uniform); their
+        unfilled tails are (-inf, id -1)."""
+        filts, keys, owners, rconfs = self._group_retrieval(requests)
         out: List[Optional[tuple]] = [None] * len(requests)
-        order = list(range(len(owners)))
-        for g0 in range(0, len(order), self.max_unique):
-            group = order[g0:g0 + self.max_unique]
+        for rconf, group in self._route_groups(owners, rconfs):
             emb, tel_extra = self._user_embeddings(
                 [requests[owners[u][0]] for u in group],
                 [keys[owners[u][0]] for u in group])
             scores, rows = self._corpus_topk(
                 emb, len(group), tel_extra,
-                [filts[owners[u][0]] for u in group])
+                [filts[owners[u][0]] for u in group], route=rconf)
             for j, u in enumerate(group):
                 ids = self.index.item_ids(rows[j])
                 for i in owners[u]:
@@ -1203,7 +1373,7 @@ class ServingEngine:
             rows.append(row)
         return np.stack(rows) if any_set else None
 
-    def _dispatch_retrieval(self, emb, n_users, filters=None):
+    def _dispatch_retrieval(self, emb, n_users, filters=None, route=None):
         """Dispatch the bucketed chunk executors over the whole corpus —
         async: returns the per-chunk (scores, rows) device futures without
         waiting for any of them.  ``filters`` (one Optional[ItemFilter]
@@ -1211,7 +1381,11 @@ class ServingEngine:
         bitmask — rows are memoized per filter fingerprint
         (``_chunk_mask_rows``), and chunks no filter touches reuse the
         cached all-zeros mask, so the common case ships no bytes.
-        -> (parts, b_q)."""
+        ``route=("ivf", nprobe_level)`` takes the IVF probe path instead.
+        -> (parts, b_q, rinfo) — rinfo is None on the exact route; on IVF
+        it carries what :meth:`_merge_retrieval` needs to widen."""
+        if route is not None and route[0] == "ivf":
+            return self._dispatch_ivf(emb, n_users, filters, route[1])
         b_q = self.ladder_u.fit(n_users)
         q = jnp.asarray(_pad_rows(emb.astype(np.float32), b_q))
         filtered = filters is not None and any(f is not None for f in filters)
@@ -1226,16 +1400,97 @@ class ServingEngine:
                     mask = jnp.asarray(_pad_rows(m, b_q))
             parts.append(self.registry("retrieve", (b_q,), q, pk, sc, bs,
                                        base, n_valid, mask))
-        return parts, b_q
+        return parts, b_q, None
 
-    def _merge_retrieval(self, parts, n_users):
-        """Retrieval finalize: sync on the per-chunk partials and merge
-        them on host (stable, lower row index wins).
+    def _dispatch_ivf(self, emb, n_users, filters, nprobe):
+        """The IVF probe dispatch: host routing to the nprobe-level nearest
+        clusters, slice gather + filter pushdown, ONE warmed (b_q, S)
+        executor call over the probed slices — plus, when the index carries
+        appended-but-unclustered rows, the regular chunk executors over the
+        tail (standing masks hide the rows the probe already covered), so
+        freshness costs neither recall nor a recompile.  Async like the
+        exact dispatch.  -> (parts, b_q, rinfo)."""
+        from repro.retrieval.ivf import ivf_route, slice_masks
+        iv = self._ivf
+        level = self._ivf_level(nprobe)
+        S = iv["S_of"][level]
+        b_q = self.ladder_u.fit(n_users)
+        q = emb.astype(np.float32)
+        clusters = ivf_route(iv["data"].centroids, q, level)
+        off, val = iv["tab"].gather(clusters, S)
+        filtered = filters is not None and any(f is not None for f in filters)
+        mask = None
+        if filtered:
+            mask = slice_masks(filters, self.index, off, val, iv["sr"],
+                               cache=self._mask_cache)
+            while len(self._mask_cache) > _MASK_CACHE_CAP:
+                self._mask_cache.popitem(last=False)
+        self.ivf_clusters_probed += int(clusters.size)
+        self.ivf_rows_scanned += int(val.sum())
+        qd = jnp.asarray(_pad_rows(q, b_q))
+        md = (self._ivf_zero_mask(b_q, S) if mask is None
+              else jnp.asarray(_pad_rows(mask, b_q)))
+        parts = [self.registry("ivf", (b_q, S), qd, iv["pk"], iv["sc"],
+                               iv["bs"], jnp.asarray(_pad_rows(off, b_q)),
+                               jnp.asarray(_pad_rows(val, b_q)), md)]
+        fps = ([None if f is None or f.is_empty() else f.fingerprint()
+                for f in filters] if filtered else None)
+        nc = iv["data"].n_clustered
+        for chk, standing in iv["tail_chunks"]:
+            pk, sc, bs, base, n_valid, base_host = chk
+            self.ivf_rows_scanned += n_users * max(
+                0, min(base_host + self._chunk_size, self.index.n_items)
+                - max(base_host, nc))
+            rows_m = None
+            if filtered:
+                fm = self._chunk_mask_rows(filters, fps, base_host)
+                if fm is not None:
+                    rows_m = fm if standing is None else fm | standing
+            if rows_m is None and standing is not None:
+                rows_m = np.broadcast_to(standing, (n_users, len(standing)))
+            cmask = (self._zero_mask(b_q) if rows_m is None
+                     else jnp.asarray(_pad_rows(np.ascontiguousarray(rows_m),
+                                                b_q)))
+            parts.append(self.registry("retrieve", (b_q,), qd, pk, sc, bs,
+                                       base, n_valid, cmask))
+        rinfo = {"level": level, "emb": emb, "filters": filters}
+        return parts, b_q, rinfo
+
+    def _merge_retrieval(self, parts, n_users, rinfo=None):
+        """Retrieval finalize: sync on the partials and merge them on host
+        (stable, lower row index wins).  On the IVF route (``rinfo``),
+        this is also where the recall floor acts: if the fill fraction
+        (finite slots / k — the recall proxy) lands below the attach-time
+        floor, the probe re-dispatches at the next nprobe level up the
+        ladder (each a pre-warmed shape) and re-merges — widening costs
+        pipeline overlap, never a compile.  IVF tails normalize to
+        (-inf, -1): an unvisited row has no honest index.
         -> (scores (n_users, k), rows (n_users, k))."""
         from repro.retrieval.scorer import merge_topk
         scores, rows = merge_topk([p[0] for p in parts],
                                   [p[1] for p in parts], self.retrieve_k)
-        return scores[:n_users], rows[:n_users]
+        scores, rows = scores[:n_users], rows[:n_users]
+        if rinfo is not None:
+            iv = self._ivf
+            floor = iv["floor"]
+            while True:
+                fill = (float(np.min(np.mean(scores > -np.inf, axis=1)))
+                        if n_users else 1.0)
+                self.ivf_last_fill = fill
+                li = iv["levels"].index(rinfo["level"])
+                if (floor is None or fill >= floor
+                        or li + 1 >= len(iv["levels"])):
+                    break
+                self.ivf_widened += 1
+                parts, _, rinfo = self._dispatch_ivf(
+                    rinfo["emb"], n_users, rinfo["filters"],
+                    iv["levels"][li + 1])
+                scores, rows = merge_topk([p[0] for p in parts],
+                                          [p[1] for p in parts],
+                                          self.retrieve_k)
+                scores, rows = scores[:n_users], rows[:n_users]
+            rows = np.where(scores == -np.inf, -1, rows)
+        return scores, rows
 
     def _retrieval_stats_entry(self, n_users, b_q, t0, tel_extra, filters):
         entry = {"retrieve_users": n_users, "b_q": b_q,
@@ -1262,14 +1517,20 @@ class ServingEngine:
                       "filtered_users": entry["filtered_users"],
                       **tel_extra})
 
-    def _corpus_topk(self, emb, n_users, tel_extra, filters=None):
+    def _corpus_topk(self, emb, n_users, tel_extra, filters=None,
+                     route=None):
         """Synchronous dispatch + merge over the corpus (the retrieve
         lane's path; the fused two-stage lane drives the two stages
         separately to overlap the merge with ranking).
         -> (scores (n_users, k), rows (n_users, k))."""
         t0 = time.perf_counter()
-        parts, b_q = self._dispatch_retrieval(emb, n_users, filters)
-        scores, rows = self._merge_retrieval(parts, n_users)
+        parts, b_q, rinfo = self._dispatch_retrieval(emb, n_users, filters,
+                                                     route)
+        scores, rows = self._merge_retrieval(parts, n_users, rinfo)
+        tel_extra = dict(tel_extra,
+                         route=(route[0] if route is not None else "exact"))
+        if rinfo is not None:
+            tel_extra["nprobe"] = rinfo["level"]
         self._retrieval_stats_entry(n_users, b_q, t0, tel_extra, filters)
         return scores, rows
 
@@ -1334,10 +1595,8 @@ class ServingEngine:
         Per-flush ``PipelineStats(lane="two_stage")`` lands in
         ``pipeline_stats`` with the retrieval stage broken out
         (``retrieve_ms``)."""
-        filts, keys, owners = self._group_retrieval(requests)
-        order = list(range(len(owners)))
-        groups = [order[g0:g0 + self.max_unique]
-                  for g0 in range(0, len(order), self.max_unique)]
+        filts, keys, owners, rconfs = self._group_retrieval(requests)
+        groups = self._route_groups(owners, rconfs)
         ps = PipelineStats(depth=self.pipeline_depth, lane="two_stage")
         t_all = time.perf_counter()
         probs_parts: List[List[np.ndarray]] = [[] for _ in requests]
@@ -1430,10 +1689,10 @@ class ServingEngine:
             """Retrieval finalize for one group + build/launch its rank
             chunks (host work that overlaps the NEXT group's retrieval
             executors and the previous rank chunk's device time)."""
-            group, parts, b_q, t0g, tel, emb = state
+            group, parts, b_q, t0g, tel, emb, rinfo = state
             rank_busy = infl is not None and not _is_ready(infl["out"])
             t_m = time.perf_counter()
-            scores, rows = self._merge_retrieval(parts, len(group))
+            scores, rows = self._merge_retrieval(parts, len(group), rinfo)
             merge_ms = (time.perf_counter() - t_m) * 1e3
             ps.retrieve_ms += merge_ms
             if rank_busy:
@@ -1472,20 +1731,22 @@ class ServingEngine:
                 launch_rank(cur)
 
         pending = None
-        for group in groups:
+        for rconf, group in groups:
             t0g = time.perf_counter()
             emb, tel = self._user_embeddings(
                 [requests[owners[u][0]] for u in group],
                 [keys[owners[u][0]] for u in group])
             rank_busy = infl is not None and not _is_ready(infl["out"])
             t_d = time.perf_counter()
-            parts, b_q = self._dispatch_retrieval(
-                emb, len(group), [filts[owners[u][0]] for u in group])
+            parts, b_q, rinfo = self._dispatch_retrieval(
+                emb, len(group), [filts[owners[u][0]] for u in group],
+                route=rconf)
             disp_ms = (time.perf_counter() - t_d) * 1e3
             ps.retrieve_ms += disp_ms
             if rank_busy:   # dispatch hidden behind the previous rank chunk
                 ps.overlapped_ms += disp_ms
-            state = (group, parts, b_q, t0g, tel, emb)
+            state = (group, parts, b_q, t0g, tel,
+                     emb, rinfo)
             if self.pipeline_depth >= 2:
                 if pending is not None:
                     absorb(pending)
@@ -1559,6 +1820,19 @@ class ServingEngine:
                                      if self.index is not None else 0),
                     "corpus_chunks": (len(self._chunks)
                                       if self._chunks is not None else 0),
+                    # sub-entries of "retrieval" are NOT pinned by the
+                    # stats-key contract (only the top level is)
+                    "ivf": (None if self._ivf is None else {
+                        "clusters": self._ivf["data"].n_clusters,
+                        "nprobe_levels": list(self._ivf["levels"]),
+                        "slice_rows": self._ivf["sr"],
+                        "clusters_probed": self.ivf_clusters_probed,
+                        "rows_scanned": self.ivf_rows_scanned,
+                        "widened": self.ivf_widened,
+                        "last_fill": self.ivf_last_fill,
+                        "appended_unclustered":
+                            self._ivf["data"].appended_unclustered,
+                    }),
                 },
             }
         return snap
@@ -1670,6 +1944,24 @@ class ServingEngine:
             m.gauge("serving_retrieval_corpus_chunks",
                     "fixed-shape device chunks covering the corpus"
                     ).set(s["retrieval"]["corpus_chunks"])
+        ivf = s["retrieval"].get("ivf")
+        if ivf is not None:
+            m.counter("serving_retrieval_clusters_probed_total",
+                      "IVF clusters probed across all requests"
+                      ).set_total(ivf["clusters_probed"])
+            m.counter("serving_retrieval_rows_scanned_total",
+                      "corpus rows scanned by IVF probes (incl. exact "
+                      "unclustered-tail scans)"
+                      ).set_total(ivf["rows_scanned"])
+            m.counter("serving_retrieval_ivf_widened_total",
+                      "recall-floor nprobe widenings"
+                      ).set_total(ivf["widened"])
+            m.gauge("serving_retrieval_ivf_fill",
+                    "last IVF fill fraction (finite slots / k — the "
+                    "recall proxy)").set(ivf["last_fill"])
+            m.gauge("serving_retrieval_ivf_appended_unclustered",
+                    "rows appended since the last IVF build (staleness)"
+                    ).set(ivf["appended_unclustered"])
 
     # ------------------------------------------------------------------
     def warmup(self, *, seq_len: Optional[int] = None) -> dict:
@@ -1710,6 +2002,8 @@ class ServingEngine:
                 self.registry.warm("retrieve", (b_u,),
                                    jnp.zeros((b_u, d), jnp.float32),
                                    *self._chunks[0][:5], self._zero_mask(b_u))
+                if self._ivf is not None:
+                    self._warm_ivf(b_u)
             for b_c in self.ladder_c.sizes():
                 if self.cache is None:
                     self.registry.warm(

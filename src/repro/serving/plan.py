@@ -51,13 +51,23 @@ class RetrieveRequest:
     executors — excluded items can never appear in the result, and two
     requests from the same user with different filters are planned as
     distinct retrieval groups (the pooled-embedding cache entry is still
-    shared: filters do not enter the ContextCache key)."""
+    shared: filters do not enter the ContextCache key).
+
+    ``route`` selects the scorer machinery: ``"exact"`` scans the whole
+    corpus through the chunk executors; ``"ivf"`` (needs an index built by
+    ``retrieval.ivf.build_ivf``) probes the ``nprobe`` nearest clusters —
+    approximate, with recall loss only from cluster pruning.  ``nprobe``
+    is served at the nearest attach-time level >= the requested value
+    (levels are precompiled executor shapes), ``None`` = the attach
+    default; it is an error outside ``route="ivf"``."""
     seq_ids: np.ndarray          # (L,)
     seq_actions: np.ndarray
     seq_surfaces: np.ndarray
     k: int = 100
     exclude_ids: Optional[np.ndarray] = None
     allow_surfaces: Optional[Tuple[int, ...]] = None
+    route: str = "exact"
+    nprobe: Optional[int] = None
     priority: int = 0
 
 
@@ -80,7 +90,10 @@ class RetrieveThenRankRequest:
     ``attach_features`` provider is used (one of the two must exist).
     Filters behave exactly as on :class:`RetrieveRequest`; when fewer than
     ``k`` items survive, the -inf tail is still ranked (identical to what
-    the sequential retrieve-then-rank path would do)."""
+    the sequential retrieve-then-rank path would do).  ``route`` /
+    ``nprobe`` behave exactly as on :class:`RetrieveRequest`; on the IVF
+    route an unfilled tail slot carries item id -1 (the probe never
+    visited a row for it), and ``cand_feats_fn`` must tolerate it."""
     seq_ids: np.ndarray          # (L,)
     seq_actions: np.ndarray
     seq_surfaces: np.ndarray
@@ -88,6 +101,8 @@ class RetrieveThenRankRequest:
     k: int = 100
     exclude_ids: Optional[np.ndarray] = None
     allow_surfaces: Optional[Tuple[int, ...]] = None
+    route: str = "exact"
+    nprobe: Optional[int] = None
     cand_feats_fn: Optional[Callable] = None
     priority: int = 0
 

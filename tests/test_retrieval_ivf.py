@@ -1,0 +1,587 @@
+"""IVF-ANN retrieval route: coarse quantizer, cluster-contiguous layout,
+slice scoring, the shared bitonic merge, and the engine/sharded wiring.
+
+Parity strategy mirrors tests/test_retrieval.py: LATTICE corpora make all
+fp32 arithmetic exact, so "full probe == the exact oracle bit-for-bit"
+is a meaningful assertion.  The one IVF-specific caveat: the tie-break
+row order is the PERMUTED row space (the physical layout the kernels
+see), so oracles run on the permuted table and ids map back through
+``row_map``.  Merge-helper parity needs no lattice — both merges select
+from the same total order over the same operands, so they agree bitwise
+on arbitrary floats.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.kernels.ref import retrieval_topk_ref
+from repro.kernels.retrieval_topk import (_SENTINEL_IDX, bitonic_topk_merge,
+                                          retrieval_topk)
+from repro.quant import quantize_table
+from repro.retrieval import (CorpusScorer, IndexBuilder, ItemFilter,
+                             ItemIndex, IVFScorer, ShardedRetriever,
+                             build_ivf, filter_masks, ivf_route, ivf_topk,
+                             kmeans)
+from repro.retrieval.ivf import (SliceTable, assign_rows, dequant_rows,
+                                 ivf_append, pad_for_slices, slice_masks)
+from repro.retrieval.scorer import merge_topk
+from repro.serving import ContextCache, RetrieveRequest, ServingEngine
+from repro.serving.plan import request_key
+
+from _hypothesis_stub import HAVE_HYPOTHESIS, given, settings, st
+from test_retrieval import L, _lite_model, lattice_corpus
+
+
+@pytest.fixture(scope="module")
+def lite_model():
+    return _lite_model()
+
+
+def lattice_index(R, D=32, seed=0, start_id=0):
+    qt, q = lattice_corpus(R, D, seed=seed)
+    return ItemIndex(qt=qt, start_id=start_id, n_items=R), np.asarray(q)
+
+
+def permuted_oracle(ividx, q, k, excl=None):
+    """retrieval_topk_ref on the PERMUTED table — the row space the IVF
+    tie-break contract is defined in.  ``excl``: (Q, R) bool, True =
+    excluded (packed here into the oracle's bitmask words)."""
+    mask = None
+    if excl is not None:
+        from repro.retrieval.filters import pack_bits
+        mask = jnp.asarray(np.stack([pack_bits(e) for e in excl]))
+    return retrieval_topk_ref(ividx.qt.packed, ividx.qt.scale,
+                              ividx.qt.bias, jnp.asarray(q), k=k,
+                              bits=ividx.bits, mask=mask)
+
+
+# ---------------------------------------------------------------------------
+# k-means + layout
+# ---------------------------------------------------------------------------
+
+def test_kmeans_assigns_nearest_centroid():
+    rng = np.random.RandomState(0)
+    x = rng.randn(500, 16).astype(np.float32)
+    cents, assign = kmeans(x, 8, iters=5, seed=1, block_rows=128)
+    assert cents.shape == (8, 16) and assign.shape == (500,)
+    d = ((x[:, None, :] - cents[None, :, :]) ** 2).sum(-1)
+    np.testing.assert_array_equal(assign, d.argmin(1))
+    # deterministic in (x, seed); a different seed moves the centroids
+    c2, a2 = kmeans(x, 8, iters=5, seed=1, block_rows=128)
+    np.testing.assert_array_equal(cents, c2)
+    np.testing.assert_array_equal(assign, a2)
+    assert not np.array_equal(cents, kmeans(x, 8, iters=5, seed=2)[0])
+    # assign_rows is the same nearest-centroid pass
+    np.testing.assert_array_equal(assign_rows(x, cents, block_rows=64),
+                                  d.argmin(1))
+
+
+def test_kmeans_more_clusters_than_rows():
+    x = np.eye(5, 8, dtype=np.float32)
+    cents, assign = kmeans(x, 64, iters=3)
+    assert cents.shape[0] == 5          # C clips to R
+    assert len(np.unique(assign)) == 5
+
+
+def test_build_ivf_layout_and_id_mapping():
+    idx, _ = lattice_index(700, seed=4, start_id=30)
+    ividx = build_ivf(idx, 10, seed=0)
+    ivf = ividx.ivf
+    assert ivf.n_clusters == 10 and ivf.n_items == 700
+    assert ivf.n_clustered == 700 and ivf.appended_unclustered == 0
+    # row_map is a permutation, inv_perm its inverse
+    assert np.array_equal(np.sort(ivf.row_map), np.arange(700))
+    np.testing.assert_array_equal(ivf.inv_perm[ivf.row_map], np.arange(700))
+    # clusters are contiguous and the permutation is STABLE within each
+    for c in range(10):
+        seg = ivf.row_map[ivf.starts[c]:ivf.starts[c + 1]]
+        np.testing.assert_array_equal(ivf.assignments[seg], c)
+        assert np.all(np.diff(seg) > 0)
+    assert ivf.starts[0] == 0 and ivf.starts[-1] == 700
+    # the permuted table holds the original rows, rearranged
+    np.testing.assert_array_equal(np.asarray(ividx.qt.packed),
+                                  np.asarray(idx.qt.packed)[ivf.row_map])
+    # centroid of each cluster routes to itself on its own members
+    deq = dequant_rows(ividx.qt, 0, 700)
+    np.testing.assert_array_equal(
+        assign_rows(deq, ivf.centroids), ivf.assignments[ivf.row_map])
+    # id mapping round-trips through the permutation
+    rows = np.array([0, 5, 333, 699])
+    np.testing.assert_array_equal(ividx.id_rows(ividx.item_ids(rows)), rows)
+    assert ividx.item_ids(np.array([-1]))[0] == -1
+    np.testing.assert_array_equal(ividx.id_rows([29, 730]), [-1, -1])
+
+
+def test_ivf_npz_round_trip(tmp_path):
+    idx, q = lattice_index(300, seed=7, start_id=5)
+    ividx = build_ivf(idx, 6, seed=2)
+    p = str(tmp_path / "ivf_index.npz")
+    ividx.save(p)
+    back = ItemIndex.load(p)
+    assert back.ivf is not None
+    for f in ("centroids", "starts", "row_map", "inv_perm", "assignments"):
+        np.testing.assert_array_equal(getattr(back.ivf, f),
+                                      getattr(ividx.ivf, f))
+    assert back.ivf.n_clustered == ividx.ivf.n_clustered
+    s0, r0 = IVFScorer(ividx, nprobe=2).topk(q, 20)
+    s1, r1 = IVFScorer(back, nprobe=2).topk(q, 20)
+    np.testing.assert_array_equal(r0, r1)
+    np.testing.assert_array_equal(s0, s1)
+
+
+# ---------------------------------------------------------------------------
+# full / partial probe vs the exact oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("R,C,k", [(700, 10, 40), (257, 5, 17),
+                                   (64, 3, 64)])
+def test_full_probe_matches_oracle_bitwise(R, C, k):
+    """nprobe == n_clusters visits every clustered row: the ONLY loss in
+    the IVF route is cluster pruning, so full probe must equal the exact
+    scorer on the permuted layout bit-for-bit, both merges."""
+    idx, q = lattice_index(R, seed=R)
+    ividx = build_ivf(idx, C, seed=1)
+    rs, rr = permuted_oracle(ividx, q, k)
+    for merge in ("bitonic", "topk"):
+        s, r = IVFScorer(ividx, nprobe=C, merge=merge).topk(q, k)
+        np.testing.assert_array_equal(r, np.asarray(rr))
+        np.testing.assert_array_equal(s, np.asarray(rs))
+    # CorpusScorer on the same permuted index agrees too (exact route
+    # over an IVF index ignores the clustering entirely)
+    s2, r2 = CorpusScorer(ividx, mode="fused", chunk_rows=128,
+                          block_rows=32).topk(q, k)
+    np.testing.assert_array_equal(np.asarray(r2), np.asarray(rr))
+
+
+def test_partial_probe_equals_restricted_oracle():
+    """A partial probe is EXACT over the visited clusters: masking every
+    unvisited row out of the oracle reproduces the IVF result bitwise —
+    recall loss comes solely from cluster pruning."""
+    idx, q = lattice_index(900, seed=11)
+    ividx = build_ivf(idx, 12, seed=3)
+    ivf = ividx.ivf
+    nprobe, k = 3, 30
+    clusters = ivf_route(ivf.centroids, q, nprobe)
+    assert clusters.shape == (q.shape[0], nprobe)
+    # routing picks the nprobe nearest centroids, ascending cluster id
+    d = ((q[:, None, :] - ivf.centroids[None]) ** 2).sum(-1)
+    for qi in range(q.shape[0]):
+        np.testing.assert_array_equal(
+            np.sort(clusters[qi]), np.sort(np.argpartition(d[qi], nprobe)
+                                           [:nprobe]))
+        assert np.all(np.diff(clusters[qi]) > 0)
+    s, r = IVFScorer(ividx, nprobe=nprobe).topk(q, k)
+    # oracle restricted to the visited clusters, per query
+    excl = np.ones((q.shape[0], 900), bool)
+    for qi in range(q.shape[0]):
+        for c in clusters[qi]:
+            excl[qi, ivf.starts[c]:ivf.starts[c + 1]] = False
+    rs, rr = permuted_oracle(ividx, q, k, excl)
+    rr = np.where(np.asarray(rs) == -np.inf, -1, np.asarray(rr))
+    np.testing.assert_array_equal(r, rr)
+    np.testing.assert_array_equal(s, np.asarray(rs))
+    # ... and is a subset of the unrestricted oracle's scores
+    fs, _ = permuted_oracle(ividx, q, k)
+    assert np.all(s <= np.asarray(fs) + 0)
+
+
+def test_sentinels_k_exceeds_survivors():
+    """k > rows in the visited clusters -> (-inf, -1) tails, ids -1."""
+    idx, q = lattice_index(96, seed=5)
+    ividx = build_ivf(idx, 8, seed=0)
+    sc = IVFScorer(ividx, nprobe=1)
+    k = 64                               # >> any single cluster
+    s, r = sc.topk(q, k)
+    filled = s > -np.inf
+    assert filled.any() and not filled.all()
+    np.testing.assert_array_equal(r[~filled], -1)
+    assert np.all(np.diff(filled.astype(int), axis=1) <= 0)  # fills first
+    _, ids = sc.retrieve(q, k)
+    np.testing.assert_array_equal(ids[~filled], -1)
+    # every visited cluster fully filtered -> all sentinels
+    all_ids = np.arange(96) + ividx.start_id
+    s2, r2 = sc.topk(q[:2], 10, filters=ItemFilter(exclude_ids=all_ids))
+    np.testing.assert_array_equal(s2, -np.inf)
+    np.testing.assert_array_equal(r2, -1)
+
+
+def test_filter_pushdown_matches_masked_oracle():
+    idx, q = lattice_index(600, seed=9, start_id=100)
+    ividx = build_ivf(idx, 8, seed=4)
+    rng = np.random.RandomState(0)
+    filts = [ItemFilter(exclude_ids=100 + rng.choice(600, 250,
+                                                     replace=False))
+             for _ in range(q.shape[0])]
+    C = ividx.ivf.n_clusters
+    s, r = IVFScorer(ividx, nprobe=C).topk(q, 40, filters=filts)
+    mask = filter_masks(filts, ividx)            # permuted row space
+    from repro.retrieval.filters import unpack_bits
+    excl = np.stack([unpack_bits(m, 600) for m in mask])
+    rs, rr = permuted_oracle(ividx, q, 40, excl)
+    rr = np.where(np.asarray(rs) == -np.inf, -1, np.asarray(rr))
+    np.testing.assert_array_equal(r, rr)
+    np.testing.assert_array_equal(s, np.asarray(rs))
+    # excluded ids never surface
+    _, ids = IVFScorer(ividx, nprobe=2).retrieve(q, 40, filters=filts)
+    for qi in range(q.shape[0]):
+        ex = set(np.asarray(filts[qi].exclude_ids).tolist())
+        assert not ex & set(ids[qi][ids[qi] >= 0].tolist())
+
+
+def test_recall_floor_widens_to_oracle():
+    """With a 1.0 floor and a ladder reaching n_clusters, a filter that
+    starves the base probe must widen until the result matches the
+    (masked) exact oracle."""
+    idx, q = lattice_index(400, seed=13)
+    ividx = build_ivf(idx, 8, seed=1)
+    sc = IVFScorer(ividx, nprobe=1, widen=3, recall_floor=1.0)
+    assert sc.nprobe_levels == [1, 2, 4, 8]
+    f = ItemFilter(exclude_ids=np.arange(380))   # only 20 survivors
+    s, r = sc.topk(q, 15, filters=f)
+    assert sc.widened > 0
+    excl = np.zeros(400, bool)
+    excl[ividx.id_rows(np.arange(380))] = True
+    rs, rr = permuted_oracle(ividx, q, 15,
+                             np.broadcast_to(excl, (q.shape[0], 400)))
+    np.testing.assert_array_equal(r, np.asarray(rr))
+    np.testing.assert_array_equal(s, np.asarray(rs))
+
+
+# ---------------------------------------------------------------------------
+# append without re-clustering
+# ---------------------------------------------------------------------------
+
+def test_ivf_append_unclustered_tail():
+    idx, q = lattice_index(500, seed=21)
+    ividx = build_ivf(idx, 6, seed=0)
+    qt2, _ = lattice_corpus(80, 32, seed=99)
+    new = dequant_rows(qt2, 0, 80)
+    grown_ivf = ivf_append(ividx.ivf, new)
+    assert grown_ivf.n_items == 580 and grown_ivf.appended_unclustered == 80
+    assert grown_ivf.n_clustered == 500
+    # clusters untouched; tail is identity-mapped
+    np.testing.assert_array_equal(grown_ivf.starts, ividx.ivf.starts)
+    np.testing.assert_array_equal(grown_ivf.row_map[:500],
+                                  ividx.ivf.row_map)
+    np.testing.assert_array_equal(grown_ivf.row_map[500:],
+                                  np.arange(500, 580))
+    # appended rows get nearest-centroid assignments WITHOUT re-clustering
+    np.testing.assert_array_equal(
+        grown_ivf.assignments[500:],
+        assign_rows(new, ividx.ivf.centroids))
+    np.testing.assert_array_equal(grown_ivf.assignments[:500],
+                                  ividx.ivf.assignments)
+
+
+def test_append_then_retrieve_matches_exact(lite_model):
+    """builder.append on an IVF index: the tail is scanned exactly, so a
+    full probe over the grown index equals the exact scorer on it."""
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=256)
+    ividx = build_ivf(builder.build(0, 400), 6, seed=0)
+    grown = builder.append(ividx, 60)
+    assert grown.ivf.appended_unclustered == 60
+    assert grown.n_items == 460
+    q = builder.item_embeddings(np.arange(400, 460))[:4]
+    sc = IVFScorer(grown, nprobe=grown.ivf.n_clusters)
+    s, ids = sc.retrieve(q, 10)
+    s_ref, ids_ref = CorpusScorer(grown, mode="ref").retrieve(
+        jnp.asarray(q), 10)
+    np.testing.assert_array_equal(ids, np.asarray(ids_ref))
+    np.testing.assert_allclose(s, np.asarray(s_ref), atol=1e-6)
+    # each tail item surfaces for its own embedding (int4 rounding can
+    # cost it rank 1 to a near-duplicate, but never the top-10)
+    assert all(400 + i in ids[i] for i in range(4))
+    # rebuild folds the tail back in
+    rebuilt = build_ivf(grown, 6, seed=0)
+    assert rebuilt.ivf.appended_unclustered == 0
+    assert rebuilt.ivf.n_clustered == 460
+
+
+# ---------------------------------------------------------------------------
+# ONE merge order, two implementations (host + device)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("K,N", [(1, 1), (7, 13), (16, 16), (32, 100),
+                                 (64, 5), (100, 37)])
+def test_bitonic_merge_matches_host_merge(K, N):
+    """bitonic_topk_merge (device) and merge_topk (host) realize the same
+    (score desc, index asc) total order -> bitwise equal top-k on
+    ARBITRARY floats, including duplicates, -inf, and sentinel slots.
+
+    merge_topk's contract wants each partial pre-sorted with ascending
+    row ranges across groups (chunk order), so build operands that way —
+    the bitonic network needs neither, which is the point of the test."""
+    rng = np.random.RandomState(K * 131 + N)
+
+    def grp(scores, lo, hi):
+        idx = np.where(scores == -np.inf, _SENTINEL_IDX,
+                       rng.randint(lo, hi, scores.shape)).astype(np.int32)
+        order = np.lexsort((idx, -scores), axis=-1)
+        return (np.take_along_axis(scores, order, -1).astype(np.float32),
+                np.take_along_axis(idx, order, -1))
+
+    for trial in range(4):
+        cs, ci = grp(rng.choice([-np.inf, -1.5, 0.0, 0.25, 7.5], (3, K)),
+                     0, 50)
+        bs, bi = grp(rng.choice([-np.inf, -1.5, 0.25, 2.0, 7.5], (3, N)),
+                     50, 100)
+        ds, di = bitonic_topk_merge(jnp.asarray(cs),
+                                    jnp.asarray(ci), jnp.asarray(bs),
+                                    jnp.asarray(bi), k=K)
+        hs, hi = merge_topk([cs.astype(np.float32), bs.astype(np.float32)],
+                            [ci, bi], K)
+        hi = np.where(hs == -np.inf, _SENTINEL_IDX, hi)
+        di_n = np.asarray(di)
+        np.testing.assert_array_equal(np.asarray(ds), hs)
+        # compare only slots carrying real entries; both use the same
+        # sentinel for empty slots
+        np.testing.assert_array_equal(np.where(hs == -np.inf,
+                                               _SENTINEL_IDX, di_n), hi)
+
+
+@pytest.mark.parametrize("R,k,block_rows", [(777, 33, 64), (4096, 100, 256)])
+def test_kernel_merge_modes_bit_identical(R, k, block_rows):
+    """Acceptance: the bitonic carry merge replaces the lexicographic
+    lax.sort merge with bit-identical results — exact path..."""
+    qt, q = lattice_corpus(R, 32, seed=R + 1)
+    outs = [retrieval_topk(qt.packed, qt.scale, qt.bias, q, k=k,
+                           block_rows=block_rows, merge=m)
+            for m in ("bitonic", "sort")]
+    np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                  np.asarray(outs[1][0]))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                  np.asarray(outs[1][1]))
+
+
+def test_ivf_merge_modes_bit_identical():
+    """... and IVF path (lax.scan over slices vs flat lax.top_k)."""
+    idx, q = lattice_index(640, seed=31)
+    ividx = build_ivf(idx, 8, seed=2)
+    tab = SliceTable(ividx.ivf, 64)
+    S = tab.slots(3)
+    off, val = tab.gather(ivf_route(ividx.ivf.centroids, q, 3), S)
+    pk, sc, bs = pad_for_slices(ividx.qt, 64)
+    outs = [ivf_topk(jnp.asarray(q), pk, sc, bs, off, val, k=25,
+                     slice_rows=64, merge=m) for m in ("bitonic", "topk")]
+    np.testing.assert_array_equal(np.asarray(outs[0][0]),
+                                  np.asarray(outs[1][0]))
+    np.testing.assert_array_equal(np.asarray(outs[0][1]),
+                                  np.asarray(outs[1][1]))
+
+
+# ---------------------------------------------------------------------------
+# ShardedRetriever IVF route
+# ---------------------------------------------------------------------------
+
+def test_sharded_ivf_matches_scorer():
+    idx, q = lattice_index(800, seed=17)
+    ividx = build_ivf(idx, 10, seed=5)
+    sh = ShardedRetriever(ividx, chunk_rows=256, block_rows=32)
+    for nprobe in (2, 10):
+        s_ref, r_ref = IVFScorer(ividx, nprobe=nprobe).topk(q, 30)
+        s, r = sh.topk(q, 30, route="ivf", nprobe=nprobe)
+        np.testing.assert_array_equal(r, r_ref)
+        np.testing.assert_array_equal(s, s_ref)
+    # filtered
+    f = ItemFilter(exclude_ids=np.arange(0, 300))
+    s_ref, r_ref = IVFScorer(ividx, nprobe=4).topk(q, 30, filters=f)
+    s, r = sh.topk(q, 30, route="ivf", nprobe=4, filters=f)
+    np.testing.assert_array_equal(r, r_ref)
+    # route validation
+    plain, _ = lattice_index(100)
+    with pytest.raises(ValueError, match="ivf"):
+        ShardedRetriever(plain, chunk_rows=64).topk(q, 5, route="ivf")
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine IVF route
+# ---------------------------------------------------------------------------
+
+def _mk_retrieve(seed, k=20, **kw):
+    r = np.random.RandomState(seed)
+    return RetrieveRequest(seq_ids=r.randint(0, 500, L),
+                           seq_actions=r.randint(0, 6, L),
+                           seq_surfaces=r.randint(0, 3, L), k=k, **kw)
+
+
+@pytest.fixture(scope="module")
+def ivf_engine(lite_model):
+    model, params = lite_model
+    builder = IndexBuilder(model, params, batch_size=256)
+    ividx = build_ivf(builder.build(0, 1000), 12, seed=3)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
+                           cache=ContextCache(capacity=64))
+    # base 2 with widen=3 -> levels {2, 4, 8, 12}; 12 == C == full probe
+    engine.attach_index(ividx, k=20, chunk_rows=256, ivf_nprobe=2,
+                        ivf_widen=3)
+    tel = engine.warmup()
+    assert tel["compiles_after_warmup"] == 0
+    return engine, builder, ividx
+
+
+def _engine_emb(engine, req):
+    e, _ = engine._user_embeddings([req], [request_key(req)])
+    return e
+
+
+def test_engine_mixed_stream_zero_recompiles(ivf_engine):
+    """Acceptance: a mixed exact + IVF + filtered stream runs entirely on
+    warmed executors.  Cross-route parity: ids bitwise (scores only to
+    1e-6 — different batch buckets compile different XLA programs whose
+    reductions differ in the last bit on non-lattice data)."""
+    engine, _, ividx = ivf_engine
+    reqs = [_mk_retrieve(1), _mk_retrieve(1, route="ivf"),
+            _mk_retrieve(2, route="ivf", nprobe=5),
+            _mk_retrieve(3, exclude_ids=np.arange(0, 50)),
+            _mk_retrieve(3, route="ivf", exclude_ids=np.arange(0, 50)),
+            _mk_retrieve(4, route="ivf", nprobe=12), _mk_retrieve(4),
+            _mk_retrieve(6, route="ivf")]
+    res = engine.retrieve(reqs)
+    assert engine.registry.compiles_after_warmup == 0, \
+        engine.registry.telemetry()
+    # full probe == exact route on the same flushed embedding
+    np.testing.assert_array_equal(res[5][0], res[6][0])
+    np.testing.assert_allclose(res[5][1], res[6][1], atol=1e-6)
+    # partial probe parity vs the standalone scorer on the SAME embedding
+    sc2 = IVFScorer(ividx, nprobe=2, slice_rows=engine._ivf["sr"])
+    _, ids_ref = sc2.retrieve(_engine_emb(engine, _mk_retrieve(1)), 20)
+    np.testing.assert_array_equal(res[1][0], ids_ref[0])
+    # nprobe=5 serves at the next level up (8)
+    sc8 = IVFScorer(ividx, nprobe=8, slice_rows=engine._ivf["sr"])
+    _, ids_ref = sc8.retrieve(_engine_emb(engine, _mk_retrieve(2)), 20)
+    np.testing.assert_array_equal(res[2][0], ids_ref[0])
+    # filtered pushdown
+    _, ids_ref = sc2.retrieve(
+        _engine_emb(engine, _mk_retrieve(3)), 20,
+        filters=ItemFilter(exclude_ids=np.arange(0, 50)))
+    np.testing.assert_array_equal(res[4][0], ids_ref[0])
+    assert not np.any(np.isin(res[4][0], np.arange(50)) & (res[4][0] >= 0))
+    # obs counters moved
+    st_ivf = engine.stats()["retrieval"]["ivf"]
+    assert st_ivf["clusters_probed"] > 0 and st_ivf["rows_scanned"] > 0
+    assert st_ivf["nprobe_levels"] == [2, 4, 8, 12]
+    text = engine.obs.prometheus_text()
+    assert "repro_serving_retrieval_clusters_probed_total" in text
+    assert "repro_serving_retrieval_rows_scanned_total" in text
+    assert "repro_serving_retrieval_ivf_fill" in text
+
+
+def test_engine_append_reattach_keeps_warm(ivf_engine):
+    """Acceptance (satellite 1): append -> re-attach -> IVF retrieve with
+    ZERO fresh compiles; the unclustered tail is reachable and counted."""
+    engine, builder, ividx = ivf_engine
+    grown = builder.append(ividx, 80)
+    assert grown.ivf.appended_unclustered == 80
+    engine.attach_index(grown, k=20, chunk_rows=256, ivf_nprobe=2,
+                        ivf_widen=3)
+    res = engine.retrieve([_mk_retrieve(7, route="ivf", nprobe=12),
+                           _mk_retrieve(7)])
+    assert engine.registry.compiles_after_warmup == 0, \
+        engine.registry.telemetry()
+    np.testing.assert_array_equal(res[0][0], res[1][0])
+    np.testing.assert_allclose(res[0][1], res[1][1], atol=1e-6)
+    st_ivf = engine.stats()["retrieval"]["ivf"]
+    assert st_ivf["appended_unclustered"] == 80
+    # tail items surface through the IVF route
+    tail_emb = builder.item_embeddings(np.arange(1000, 1080))[:2]
+    _, ids = IVFScorer(grown, nprobe=1).retrieve(tail_emb, 5)
+    assert np.any(ids >= 1000)
+    # restore the module-scoped engine for later tests
+    engine.attach_index(ividx, k=20, chunk_rows=256, ivf_nprobe=2,
+                        ivf_widen=3)
+    assert engine.registry.compiles_after_warmup == 0
+
+
+def test_engine_recall_floor_widens(lite_model):
+    model, params = lite_model
+    ividx = build_ivf(
+        IndexBuilder(model, params, batch_size=256).build(0, 500), 8,
+        seed=0)
+    engine = ServingEngine(model, params, max_unique=2, max_candidates=8,
+                           cache=ContextCache(capacity=16))
+    engine.attach_index(ividx, k=20, chunk_rows=256, ivf_nprobe=1,
+                        ivf_widen=3, ivf_recall_floor=1.0)
+    engine.warmup()
+    res = engine.retrieve([_mk_retrieve(8, route="ivf",
+                                        exclude_ids=np.arange(0, 480))])
+    assert engine.registry.compiles_after_warmup == 0, \
+        engine.registry.telemetry()
+    st_ivf = engine.stats()["retrieval"]["ivf"]
+    assert st_ivf["widened"] > 0
+    ids = res[0][0]
+    assert np.all((ids >= 480) | (ids == -1))
+
+
+def test_engine_route_validation(ivf_engine, lite_model):
+    engine, _, _ = ivf_engine
+    with pytest.raises(ValueError, match="route"):
+        engine.submit(_mk_retrieve(1, route="bogus"))
+    with pytest.raises(ValueError, match="nprobe"):
+        engine.submit(_mk_retrieve(1, nprobe=4))     # exact route
+    with pytest.raises(ValueError, match="nprobe"):
+        engine.submit(_mk_retrieve(1, route="ivf", nprobe=0))
+    # ivf route against a non-IVF index
+    model, params = lite_model
+    plain = IndexBuilder(model, params, batch_size=256).build(0, 200)
+    e2 = ServingEngine(model, params, max_unique=2, max_candidates=8)
+    e2.attach_index(plain, k=8, chunk_rows=256)
+    with pytest.raises(ValueError, match="ivf"):
+        e2.submit(_mk_retrieve(1, k=8, route="ivf"))
+
+
+# ---------------------------------------------------------------------------
+# property-style: random corpora/filters -> IVF subset of the exact oracle
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 6), st.integers(1, 40))
+def test_property_ivf_subset_of_oracle(seed, nprobe, k):
+    """For ANY corpus/filter draw: (a) every id the IVF route returns is
+    in the masked exact oracle's ranking with the identical score,
+    (b) full probe recall@k == 1.0, (c) with recall_floor=1.0 and a
+    ladder reaching n_clusters the widened result matches the oracle."""
+    rng = np.random.RandomState(seed)
+    R = int(rng.randint(60, 400))
+    idx, q = lattice_index(R, seed=seed % 10007)
+    q = q[:3]
+    ividx = build_ivf(idx, int(rng.randint(2, 9)), seed=seed % 97)
+    C = ividx.ivf.n_clusters
+    k = min(k, R)
+    filts = None
+    excl = np.zeros((3, R), bool)
+    if rng.rand() < 0.6:
+        filts = [ItemFilter(exclude_ids=rng.choice(R, rng.randint(1, R),
+                                                   replace=False))
+                 for _ in range(3)]
+        for qi, f in enumerate(filts):
+            excl[qi, ividx.id_rows(np.asarray(f.exclude_ids))] = True
+    rs, rr = permuted_oracle(ividx, q, k, excl)
+    rs, rr = np.asarray(rs), np.asarray(rr)
+    rr = np.where(rs == -np.inf, -1, rr)
+    # (a) subset with identical scores
+    s, r = IVFScorer(ividx, nprobe=min(nprobe, C)).topk(q, k, filters=filts)
+    deq = dequant_rows(ividx.qt, 0, R)
+    for qi in range(3):
+        got = r[qi][r[qi] >= 0]
+        assert not set(got.tolist()) & set(
+            np.flatnonzero(excl[qi]).tolist())
+        exact = deq[got] @ q[qi]
+        np.testing.assert_array_equal(s[qi][r[qi] >= 0], exact)
+    # (b) full probe == oracle
+    s_f, r_f = IVFScorer(ividx, nprobe=C).topk(q, k, filters=filts)
+    np.testing.assert_array_equal(r_f, rr)
+    np.testing.assert_array_equal(s_f, rs)
+    # (c) the recall-floor ladder: widening never hurts (a wider probe's
+    # top-k dominates elementwise), and it halts only once every slot is
+    # filled (fill is the floor's proxy) or the probe reaches ALL
+    # clusters — in which case the result IS the oracle
+    sc_w = IVFScorer(ividx, nprobe=min(nprobe, C), widen=5,
+                     recall_floor=1.0)
+    assert sc_w.nprobe_levels[-1] == C
+    s_w, r_w = sc_w.topk(q, k, filters=filts)
+    assert np.all(s_w >= s)
+    if not np.all(s_w > -np.inf):       # ladder exhausted -> full probe
+        np.testing.assert_array_equal(r_w, rr)
+        np.testing.assert_array_equal(s_w, rs)
