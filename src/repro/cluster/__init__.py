@@ -1,0 +1,56 @@
+"""Cluster serving tier: N engine workers behind one affinity router.
+
+The single-process ``ServingEngine`` tops out at one host's devices and
+one ContextCache; the paper's deployment serves half a billion users.
+This package is the tier above the engine:
+
+  * :mod:`~repro.cluster.membership` — rendezvous (HRW) hashing: a pure,
+    coordination-free ``key -> worker`` map where membership changes
+    move only ~1/N of the key space (cache residency survives joins,
+    leaves, and deaths).
+  * :mod:`~repro.cluster.worker` — :class:`EngineWorker` (in-process
+    thread) and :class:`SubprocessWorker` (spawned child) wrapping one
+    engine each behind a coalescing command queue, with a typed
+    never-hang failure contract (:class:`WorkerLostError`,
+    first-writer-wins :class:`ClusterFuture`).
+  * :mod:`~repro.cluster.fanout` — corpus shards as picklable payloads
+    (:func:`make_shards`) and the worker-side :class:`ShardScorer`
+    running the same exact/IVF executors as the engine, offset into
+    global row space.
+  * :mod:`~repro.cluster.router` — :class:`ClusterRouter`: the
+    ``submit(request) -> future`` front door; rank/generate traffic
+    routes to each user's rendezvous owner, retrieval scatter/gathers
+    across the worker shards and merges with the retrieval stack's
+    lower-index-wins contract — bit-identical to a single engine.
+
+Quickstart (in-process, 2 workers)::
+
+    from repro.cluster import ClusterRouter, EngineWorker, WorkerCore
+    workers = {f"w{i}": EngineWorker(f"w{i}", WorkerCore(make_engine()))
+               for i in range(2)}
+    router = ClusterRouter(workers)
+    router.attach_index(index, k=64)     # cluster-sharded retrieval
+    router.warmup()
+    fut = router.submit(RankRequest(...))     # routed by user affinity
+    probs = fut.result()
+
+``examples/serve_cluster.py`` runs the same flow over subprocess
+workers; ``benchmarks/bench_cluster.py`` measures aggregate scaling,
+affinity hit rate, and drain latency.
+"""
+from repro.cluster.fanout import (ShardScorer, ShardSpec,
+                                  default_slice_rows, make_shards)
+from repro.cluster.membership import (Membership, rendezvous_owner,
+                                      rendezvous_score)
+from repro.cluster.router import ClusterRouter
+from repro.cluster.worker import (ClusterFuture, EngineWorker,
+                                  SubprocessWorker, WorkerCore,
+                                  WorkerLostError)
+
+__all__ = [
+    "ClusterRouter",
+    "EngineWorker", "SubprocessWorker", "WorkerCore", "ClusterFuture",
+    "WorkerLostError",
+    "Membership", "rendezvous_owner", "rendezvous_score",
+    "ShardSpec", "ShardScorer", "make_shards", "default_slice_rows",
+]

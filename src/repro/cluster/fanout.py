@@ -1,0 +1,244 @@
+"""Retrieval fan-out: corpus shards as picklable payloads + the
+worker-side shard scorer.
+
+The cluster generalizes :class:`~repro.retrieval.sharded.ShardedRetriever`
+from one-process ``shard_map`` to scatter/gather across engine workers.
+The split of responsibilities mirrors the mesh retriever exactly:
+
+  * PLANNING stays on the router against the FULL index —
+    :func:`~repro.retrieval.sharded.shard_layout` fixes the contiguous-row
+    geometry, :func:`~repro.retrieval.sharded.shard_filter_masks` resolves
+    per-request filters into shard-local packed bitmasks, and
+    :func:`~repro.retrieval.sharded.plan_ivf_shards` clips probed cluster
+    slices to each shard's row window.  All id mapping (``item_ids``,
+    ``id_rows``) also happens on the router, so a worker never needs the
+    id tables or IVF metadata — just its quantized row block.
+  * SCORING happens on the worker over its (padded) row block:
+    :class:`ShardScorer` runs the same ``fused_topk`` / ``ivf_topk``
+    executors the engine uses, with the shard's ``row_offset`` baked in so
+    partials come back with GLOBAL row indices.
+  * The MERGE is the one host-side contract —
+    :func:`~repro.retrieval.scorer.merge_topk`, stable lower-index-wins,
+    shards in ascending row order — so the cluster result is bit-identical
+    to the single-device scorer (exact) / single-device IVF scorer (ivf).
+
+Shard payloads (:func:`make_shards`) are plain-numpy dataclasses: small
+enough to pickle through a ``multiprocessing`` pipe to subprocess workers,
+self-contained enough that a re-shard after a worker death is just
+``make_shards(index, n_survivors)`` + one ``attach_shard`` per survivor.
+
+Zero-recompile discipline: the scorer ALWAYS passes a pushdown mask
+(all-zeros when the request carries no filters), so filtered and
+unfiltered traffic share one executor per (k, Q-bucket[, S]) — the same
+convention the engine's retrieval executors use.  :meth:`ShardScorer.warm`
+precompiles the ladder; ``compiles`` counts builds so tests can pin
+post-warmup compiles to zero on every worker.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.retrieval.scorer import chunk_topk, merge_topk, _round_up
+from repro.retrieval.sharded import shard_layout
+
+
+def q_bucket(n: int, *, floor: int = 8) -> int:
+    """Next power-of-two query-count bucket (>= ``floor``) — the router
+    pads query blocks to these so every shard executor shape is drawn
+    from a small warmed ladder."""
+    b = floor
+    while b < n:
+        b *= 2
+    return b
+
+
+def default_slice_rows(ivf) -> int:
+    """The IVF slice width the subsystem standardizes on for a given
+    coarse quantizer — same formula as the mesh retriever and the engine,
+    so router plans and worker executors agree."""
+    return int(min(4096, max(32, _round_up(max(ivf.max_cluster_rows(), 1),
+                                           32))))
+
+
+@dataclasses.dataclass
+class ShardSpec:
+    """One worker's slice of the corpus: quantized rows [lo, lo+rows) of
+    the physical (possibly IVF-permuted) layout, zero-padded to the
+    common ``rows_per_shard``.  Plain numpy throughout — picklable for
+    subprocess workers."""
+    shard_id: int
+    n_shards: int
+    lo: int                      # global row offset of this shard
+    rows_per_shard: int
+    n_valid: int                 # real (un-padded) rows in this shard
+    bits: int
+    chunk_rows: int
+    block_rows: int
+    slice_rows: int              # 0 when the index has no IVF build
+    packed: np.ndarray           # (rows_per_shard, W) int32
+    scale: np.ndarray            # (rows_per_shard, 1) fp16
+    bias: np.ndarray             # (rows_per_shard, 1) fp16
+
+
+def make_shards(index, n_shards: int, *, chunk_rows: int = 32768,
+                block_rows: int = 32) -> List[ShardSpec]:
+    """Cut ``index`` into ``n_shards`` contiguous-row payloads with the
+    mesh retriever's geometry (:func:`shard_layout`); shard s owns global
+    rows [s*rps, (s+1)*rps)."""
+    qt = index.qt
+    R = qt.packed.shape[0]
+    cr, rps = shard_layout(R, n_shards, chunk_rows=chunk_rows,
+                           block_rows=block_rows)
+    sr = default_slice_rows(index.ivf) if index.ivf is not None else 0
+    pk = np.asarray(qt.packed)
+    sc = np.asarray(qt.scale, np.float16)
+    bs = np.asarray(qt.bias, np.float16)
+
+    def window(a: np.ndarray, lo: int) -> np.ndarray:
+        w = a[lo:lo + rps]
+        if w.shape[0] < rps:
+            w = np.pad(w, ((0, rps - w.shape[0]),) + ((0, 0),) * (a.ndim - 1))
+        return np.ascontiguousarray(w)
+
+    return [ShardSpec(shard_id=s, n_shards=n_shards, lo=s * rps,
+                      rows_per_shard=rps,
+                      n_valid=int(np.clip(index.n_items - s * rps, 0, rps)),
+                      bits=index.bits, chunk_rows=cr, block_rows=block_rows,
+                      slice_rows=sr, packed=window(pk, s * rps),
+                      scale=window(sc, s * rps), bias=window(bs, s * rps))
+            for s in range(n_shards)]
+
+
+class ShardScorer:
+    """Device-side scorer for one :class:`ShardSpec` — the worker half of
+    the cluster fan-out.  Returns per-shard partial top-ks with GLOBAL
+    row indices; the router merges them with ``merge_topk``."""
+
+    def __init__(self, spec: ShardSpec):
+        self.spec = spec
+        self.packed = jnp.asarray(spec.packed)
+        self.scale = jnp.asarray(spec.scale, jnp.float16)
+        self.bias = jnp.asarray(spec.bias, jnp.float16)
+        # chunked views for the exact route — the same (chunk, base,
+        # n_valid) operand protocol as the engine's retrieve executors,
+        # so shard partials are bitwise what the engine's chunks produce
+        cr = spec.chunk_rows
+        self._chunks = [
+            (self.packed[cb:cb + cr], self.scale[cb:cb + cr],
+             self.bias[cb:cb + cr],
+             jnp.asarray(spec.lo + cb, jnp.int32),
+             jnp.asarray(min(spec.n_valid - cb, cr), jnp.int32), cb)
+            for cb in range(0, spec.rows_per_shard, cr)]
+        self._jitted: Dict[tuple, object] = {}
+        self.compiles = 0
+
+    def k_local(self, k: int) -> int:
+        # a shard can contribute at most its own rows — same clip as the
+        # mesh retriever, keeps the merge exact when k > rows_per_shard
+        return min(int(k), self.spec.rows_per_shard)
+
+    def _get(self, key, build):
+        fn = self._jitted.get(key)
+        if fn is None:
+            self.compiles += 1
+            fn = self._jitted[key] = build()
+        return fn
+
+    # -- exact route --------------------------------------------------------
+    def _build_exact(self, k: int):
+        sp = self.spec
+        kc = min(int(k), sp.chunk_rows)
+
+        def fn(q, pk, sc, bs, base, n_valid, mask):
+            return chunk_topk(q, pk, sc, bs, base, n_valid, k=kc,
+                              bits=sp.bits, mask=mask)
+
+        return jax.jit(fn)
+
+    def exact_topk(self, queries: np.ndarray, k: int,
+                   mask: Optional[np.ndarray]) -> Tuple[np.ndarray,
+                                                        np.ndarray]:
+        """(Q, D) fp32 queries (Q already bucket-padded by the router),
+        optional (Q, rows_per_shard/32) shard-local packed mask ->
+        (scores (Q, k_local), GLOBAL rows (Q, k_local)) numpy.
+
+        Runs the engine's own single-chunk executor (``chunk_topk``) over
+        the shard's chunks and merges host-side — NOT a different fused
+        kernel — because bit-identical scores require the identical
+        contraction: same dequant-dot, same chunk shape, same Q bucket."""
+        Q = queries.shape[0]
+        if mask is None:       # always-mask: one executor either way
+            mask = np.zeros((Q, self.spec.rows_per_shard // 32), np.int32)
+        mask = np.asarray(mask, np.int32)
+        fn = self._get(("exact", int(k), Q),
+                       lambda: self._build_exact(k))
+        q = jnp.asarray(queries, jnp.float32)
+        wpc = self.spec.chunk_rows // 32
+        parts = [fn(q, pk, sc, bs, base, nv,
+                    jnp.asarray(mask[:, cb // 32:cb // 32 + wpc]))
+                 for pk, sc, bs, base, nv, cb in self._chunks]
+        s, r = merge_topk([p[0] for p in parts], [p[1] for p in parts],
+                          self.k_local(k))
+        return np.asarray(s), np.asarray(r)
+
+    # -- IVF route -----------------------------------------------------------
+    def _build_ivf(self, k: int, S: int):
+        from repro.retrieval.ivf import ivf_topk
+        sp = self.spec
+        sr = sp.slice_rows
+
+        def fn(q, off, val, mask):
+            # pad the shard block by one slice so every clipped-slice
+            # gather is in-bounds (same trick as the mesh retriever)
+            pk = jnp.pad(self.packed, ((0, sr), (0, 0)))
+            sc = jnp.pad(self.scale, ((0, sr), (0, 0)))
+            bs = jnp.pad(self.bias, ((0, sr), (0, 0)))
+            return ivf_topk(q, pk, sc, bs, off, val, mask,
+                            k=self.k_local(k), bits=sp.bits, slice_rows=sr,
+                            row_offset=sp.lo)
+
+        return jax.jit(fn)
+
+    def ivf_topk(self, queries: np.ndarray, off: np.ndarray,
+                 val: np.ndarray, mask: Optional[np.ndarray],
+                 k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Shard window of a :func:`plan_ivf_shards` plan: (Q, S)
+        offsets/valids in shard-local rows, optional (Q, S, sr/32) mask ->
+        (scores, GLOBAL rows), each (Q, k_local) numpy."""
+        assert self.spec.slice_rows, "shard built from a non-IVF index"
+        Q, S = off.shape
+        if mask is None:
+            mask = np.zeros((Q, S, self.spec.slice_rows // 32), np.int32)
+        fn = self._get(("ivf", int(k), Q, S),
+                       lambda: self._build_ivf(k, S))
+        s, r = fn(jnp.asarray(queries, jnp.float32),
+                  jnp.asarray(off, jnp.int32), jnp.asarray(val, jnp.int32),
+                  jnp.asarray(mask, jnp.int32))
+        return np.asarray(s), np.asarray(r)
+
+    # -- warmup ---------------------------------------------------------------
+    def warm(self, d_query: int, ks, q_buckets, ivf_slots=()) -> int:
+        """Precompile the (k, Q[, S]) ladder; returns executors built.
+        After this, traffic whose shapes stay on the ladder never
+        compiles — ``self.compiles`` is the audit counter."""
+        before = self.compiles
+        for k in ks:
+            for Q in q_buckets:
+                z = np.zeros((Q, d_query), np.float32)
+                self.exact_topk(z, k, None)
+                for S in ivf_slots:
+                    off = np.zeros((Q, S), np.int32)
+                    self.ivf_topk(z, off, off.copy(), None, k)
+        return self.compiles - before
+
+    def stats(self) -> Dict[str, object]:
+        return {"shard_id": self.spec.shard_id, "lo": self.spec.lo,
+                "rows_per_shard": self.spec.rows_per_shard,
+                "n_valid": self.spec.n_valid, "compiles": self.compiles,
+                "executors": len(self._jitted)}

@@ -1,0 +1,93 @@
+"""Cluster membership: rendezvous (HRW) key routing + the live worker set.
+
+The affinity contract of the cluster tier is a pure function: the owner
+of a user key is ``argmax over workers of hash(worker, key)`` —
+rendezvous / highest-random-weight hashing.  Two properties make it the
+right router for a ContextCache-sharded fleet:
+
+  * STABILITY — when a worker joins or leaves, exactly the keys whose
+    argmax involves that worker move (an expected 1/N of the keyspace on
+    join, the dead worker's 1/N on leave); every other key keeps its
+    owner, so its pooled-embedding / ctx-KV cache entry stays hot.  No
+    ring, no token table, no coordinated state: any router instance with
+    the same live-worker list computes the same owner.
+  * DETERMINISM — the hash is ``blake2b`` over (worker name, key bytes),
+    so owners agree across processes and across restarts (test
+    reproducibility; multi-router deployments route identically).
+
+:class:`Membership` wraps the live set: ordered worker names, alive/dead
+marking, and ``owner(key)`` over the alive subset.  It is intentionally
+tiny — health checking and re-routing policy live in the
+:class:`~repro.cluster.router.ClusterRouter`, which mutates membership
+under its own lock.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Dict, List, Optional, Sequence
+
+
+def rendezvous_score(worker: str, key: bytes) -> int:
+    """64-bit HRW weight of ``key`` on ``worker`` (deterministic across
+    processes — stdlib blake2b, no PYTHONHASHSEED dependence)."""
+    h = hashlib.blake2b(digest_size=8)
+    h.update(worker.encode("utf-8"))
+    h.update(b"\x00")
+    h.update(key)
+    return int.from_bytes(h.digest(), "big")
+
+
+def rendezvous_owner(workers: Sequence[str], key: bytes) -> str:
+    """The HRW owner of ``key`` among ``workers`` (ties — a 2^-64 event —
+    break by name, so the choice is still deterministic)."""
+    assert workers, "no workers to route to"
+    return max(workers, key=lambda w: (rendezvous_score(w, key), w))
+
+
+class Membership:
+    """The router's view of the worker fleet: insertion-ordered names,
+    alive/dead flags, and HRW ownership over the alive subset.  NOT
+    internally locked — the owning router serializes mutations."""
+
+    def __init__(self, names: Sequence[str] = ()):
+        self._alive: Dict[str, bool] = {}
+        for n in names:
+            self.add(n)
+
+    def add(self, name: str) -> None:
+        if name in self._alive:
+            raise ValueError(f"worker {name!r} already a member")
+        self._alive[name] = True
+
+    def mark_dead(self, name: str) -> None:
+        if name not in self._alive:
+            raise KeyError(name)
+        self._alive[name] = False
+
+    def remove(self, name: str) -> None:
+        self._alive.pop(name)
+
+    def alive(self) -> List[str]:
+        return [n for n, ok in self._alive.items() if ok]
+
+    def names(self) -> List[str]:
+        return list(self._alive)
+
+    def is_alive(self, name: str) -> bool:
+        return self._alive.get(name, False)
+
+    def owner(self, key: bytes) -> str:
+        """HRW owner of ``key`` among the ALIVE workers — a dead worker's
+        key range re-routes to the survivors automatically (each of its
+        keys falls to its second-highest-weight worker)."""
+        alive = self.alive()
+        if not alive:
+            raise RuntimeError("no alive workers in the cluster")
+        return rendezvous_owner(alive, key)
+
+    def moved_keys(self, keys: Sequence[bytes],
+                   other: "Membership") -> int:
+        """How many of ``keys`` route differently here vs ``other`` —
+        the rebalance-cost probe the stability tests (and the rebalance
+        policy) use."""
+        return sum(self.owner(k) != other.owner(k) for k in keys)

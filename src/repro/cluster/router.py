@@ -1,0 +1,624 @@
+"""ClusterRouter: the cluster tier's front door — ``submit(request) ->
+future`` over N engine workers.
+
+Routing by lane:
+
+  * rank / generate — the request's user key (the engine's ``key_fn`` or
+    full sequence identity; prompt bytes for generate) picks ONE worker
+    by rendezvous hash (:mod:`repro.cluster.membership`), so repeat
+    users always land on the worker whose ContextCache / ctx-KV slab
+    already holds them.  The worker coalesces adjacent batches into one
+    engine flush.
+  * retrieve / two_stage with a router-attached corpus — scatter/gather:
+    the router dedupes pending requests into unique (user, filter,
+    route) rows exactly like the engine's retrieve lane, fetches pooled
+    user embeddings FROM EACH USER'S OWNER worker (cache affinity is
+    preserved through the fan-out), scatters shard-local top-k calls to
+    every worker's corpus shard, and merges the partials with the same
+    stable lower-index-wins :func:`~repro.retrieval.scorer.merge_topk`
+    the mesh retriever uses — so results are bit-identical to a single
+    engine serving the whole corpus.  Two-stage requests then chain a
+    ``RankRequest`` on the retrieved candidates back to the user's owner
+    (whose cache already holds the pooled embedding), composing a
+    ``TwoStageResult`` identical to the engine's fused lane —
+    ``score_emb`` is row-wise in the candidates, so decomposing the
+    stages across the tier changes nothing numerically.
+  * without a router corpus, retrieve / two_stage route to the owner
+    worker whole (each worker serves a replicated index its builder
+    attached) — the single-engine fused paths, just sharded by user.
+
+Robustness (the ``ShedError`` discipline, one tier up): a worker death
+marks it dead in the membership (its key range falls to the survivors
+by the rendezvous property), re-routes its queued + in-flight requests,
+fails what cannot re-route with the typed
+:class:`~repro.cluster.worker.WorkerLostError`, re-shards the corpus
+across the survivors, and re-warms the new shard executors.  Futures
+never hang.
+"""
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.fanout import default_slice_rows, make_shards
+from repro.cluster.membership import Membership
+from repro.cluster.worker import ClusterFuture, WorkerLostError, _QueueWorker
+from repro.obs import MetricsRegistry, Observability
+from repro.retrieval.scorer import merge_topk
+from repro.retrieval.sharded import (plan_ivf_shards, shard_filter_masks,
+                                     shard_layout)
+from repro.serving.plan import (BucketLadder, GenerateRequest, RankRequest,
+                                RetrieveRequest, RetrieveThenRankRequest,
+                                TwoStageResult, lane_of, request_key)
+
+
+def _user_key(request, key_fn) -> bytes:
+    """The affinity key: the engine cache key for sequence-bearing
+    requests, prompt bytes for generate."""
+    if isinstance(request, GenerateRequest):
+        return np.ascontiguousarray(request.prompts).tobytes()
+    return key_fn(request)
+
+
+class ClusterRouter:
+    """Front door over a named set of cluster workers (any mix of
+    :class:`~repro.cluster.worker.EngineWorker` and
+    :class:`~repro.cluster.worker.SubprocessWorker`).
+
+    Args:
+      workers: ``{name: worker}`` — names are the rendezvous identities;
+        keep them stable across restarts so ownership (and cache
+        residency) is reproducible.
+      key_fn: ``request -> bytes`` affinity key override; MUST match the
+        ``key_fn`` the worker engines were built with, or affinity
+        routing will warm one cache entry while flushes look up another.
+      fanout_unique: unique users per fan-out dispatch group (the
+        scatter batch width — every shard executor is warmed at exactly
+        this query count).
+      obs_enabled: router-side metrics (routed/fan-out/death counters);
+        worker engines carry their own handles, aggregated by
+        :meth:`merged_metrics`.
+
+    ``n_workers`` for a deployment usually comes from the launch mesh:
+    ``mesh.shape["data"]`` (``launch/mesh.py``) is the same axis the
+    one-process retriever shards over.
+    """
+
+    def __init__(self, workers: Dict[str, _QueueWorker], *,
+                 key_fn: Optional[Callable] = None,
+                 fanout_unique: int = 8,
+                 obs: Optional[Observability] = None,
+                 obs_enabled: bool = True):
+        assert workers, "a cluster needs at least one worker"
+        self._workers: Dict[str, _QueueWorker] = dict(workers)
+        self._membership = Membership(list(self._workers))
+        self._key_fn = key_fn or request_key
+        self._cap = int(fanout_unique)
+        # the engine's own query bucketing (pow2 ladder) — groups pad to
+        # fit(len(group)), NOT flat to the cap, because bit-identical
+        # scores need the executor Q the single engine would have used
+        self._ladder = BucketLadder(self._cap, 1)
+        self._lock = threading.RLock()
+        self.obs = obs if obs is not None else Observability(
+            enabled=obs_enabled)
+        m = self.obs.metrics
+        self._m_routed = {ln: m.counter(
+            "cluster_requests_total", "requests routed by the cluster "
+            "router", lane=ln) for ln in ("rank", "retrieve", "two_stage",
+                                          "generate")}
+        self._m_groups = m.counter("cluster_fanout_groups_total",
+                                   "retrieval fan-out dispatch groups")
+        self._m_coalesced = m.counter(
+            "cluster_fanout_coalesced_total",
+            "fan-out requests deduplicated into an existing unique row")
+        self._m_reroutes = m.counter("cluster_reroutes_total",
+                                     "requests re-routed off a dead worker")
+        self._m_deaths = m.counter("cluster_worker_deaths_total",
+                                   "workers lost")
+        self._m_alive = m.gauge("cluster_workers_alive",
+                                "alive workers in the membership")
+        self._m_alive.set(len(self._workers))
+        self._m_fan_ms = m.histogram(
+            "cluster_fanout_latency_ms",
+            "scatter/gather wall time per fan-out group")
+        # -- corpus fan-out state (attach_index) --
+        self._index = None
+        self._retrieve_k = 0
+        self._tab = None            # SliceTable of the attached IVF build
+        self._ivf_levels: List[int] = []
+        self._n_tail = 0
+        self._shard_order: List[str] = []   # worker name per ascending shard
+        self._rows_per_shard = 0
+        # -- fan-out thread --
+        self._fan_cv = threading.Condition()
+        self._fan_items: deque = deque()
+        self._closing = False
+        self._fan_thread = threading.Thread(
+            target=self._fan_loop, daemon=True, name="cluster-fanout")
+        self._fan_thread.start()
+
+    # ======================================================================
+    # public surface
+    # ======================================================================
+    def submit(self, request) -> ClusterFuture:
+        """Enqueue one typed request — the engine's ``submit`` contract,
+        one tier up.  Returns a :class:`ClusterFuture` that resolves to
+        the same payload the owning engine would produce."""
+        lane = lane_of(request)
+        self._m_routed[lane].inc()
+        fut = ClusterFuture()
+        if lane in ("retrieve", "two_stage") and self._index is not None:
+            with self._fan_cv:
+                if self._closing:
+                    fut._set_error(WorkerLostError("<router>", "closed"))
+                    return fut
+                self._fan_items.append((request, fut))
+                self._fan_cv.notify()
+            return fut
+        self._route_to_owner(request, fut)
+        return fut
+
+    def submit_many(self, requests: Sequence) -> List[ClusterFuture]:
+        return [self.submit(r) for r in requests]
+
+    def flush(self, timeout: float = 120.0) -> None:
+        """Wait until the fan-out queue and every worker queue drain."""
+        import time
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            with self._fan_cv:
+                fan_idle = not self._fan_items and not self._fan_busy
+            if fan_idle and all(w.idle() for w in self._alive_workers()
+                                .values()):
+                return
+            time.sleep(0.002)
+        raise TimeoutError("cluster flush did not drain in time")
+
+    def attach_features(self, fn: Callable) -> None:
+        """Candidate-feature fetcher for DECOMPOSED two-stage requests
+        (``ids -> (n, F_c)``): the router builds each rank stage's
+        ``cand_feats`` with it.  Worker engines serving replicated fused
+        two-stage keep their own ``attach_features``."""
+        self._features_fn = fn
+
+    def attach_index(self, index, *, k: int = 100,
+                     chunk_rows: int = 32768, block_rows: int = 32,
+                     ivf_nprobe: int = 8, ivf_widen: int = 2) -> None:
+        """Attach a corpus for CLUSTER-SHARDED retrieval: each alive
+        worker gets one contiguous-row shard
+        (:func:`~repro.cluster.fanout.make_shards`); retrieve/two-stage
+        traffic then fans out instead of routing whole to an owner.  The
+        full index stays router-side for planning (filters, IVF probes)
+        and id mapping; only quantized row blocks ship to workers.  An
+        IVF-built index additionally serves ``route="ivf"`` — requested
+        nprobes round up the same ``ivf_nprobe * 2**j`` level ladder the
+        engine uses, so per-request results match a single engine
+        attach-for-attach."""
+        assert 0 < k <= index.n_items
+        with self._lock:
+            self._index = index
+            self._retrieve_k = int(k)
+            self._chunk_rows, self._block_rows = chunk_rows, block_rows
+            self._tab, self._ivf_levels, self._n_tail = None, [], 0
+            if index.ivf is not None:
+                from repro.retrieval.ivf import SliceTable
+                ivf = index.ivf
+                sr = default_slice_rows(ivf)
+                self._tab = SliceTable(ivf, sr)
+                C = ivf.n_clusters
+                base = int(min(max(1, ivf_nprobe), C))
+                self._ivf_levels = sorted(
+                    {min(base * 2 ** j, C)
+                     for j in range(max(0, ivf_widen) + 1)})
+                self._n_tail = len(range(ivf.n_clustered, index.n_items, sr))
+            self._reshard_locked(warm=False)
+
+    def warmup(self, *, seq_len: Optional[int] = None) -> Dict[str, dict]:
+        """Warm every worker in parallel: the engine's own warmup ladder
+        plus (with a router corpus) the shard executors at the fan-out
+        query width.  -> {worker: engine warmup telemetry}."""
+        with self._lock:
+            futs = {n: w.call_async("warmup", seq_len=seq_len)
+                    for n, w in self._alive_workers().items()}
+        out = {n: f.result() for n, f in futs.items()}
+        self._warm_shards()
+        return out
+
+    def stats(self) -> dict:
+        """Router + per-worker telemetry (worker entries are each
+        engine's pinned ``stats()`` dict plus shard-scorer counters)."""
+        with self._lock:
+            alive = self._alive_workers()
+            snap = {
+                "workers": {n: ("alive" if self._membership.is_alive(n)
+                                else "dead") for n in self._workers},
+                "n_alive": len(alive),
+                "sharded_corpus": self._index is not None,
+                "rows_per_shard": self._rows_per_shard,
+                "routed": {ln: c.get() for ln, c in self._m_routed.items()},
+                "fanout_groups": self._m_groups.get(),
+                "fanout_coalesced": self._m_coalesced.get(),
+                "reroutes": self._m_reroutes.get(),
+                "deaths": self._m_deaths.get(),
+            }
+            futs = {n: w.call_async("stats") for n, w in alive.items()}
+        snap["per_worker"] = {n: f.result() for n, f in futs.items()}
+        return snap
+
+    def merged_metrics(self, namespace: str = "repro") -> MetricsRegistry:
+        """One cluster-wide :class:`MetricsRegistry`: the router's own
+        registry plus every IN-PROCESS worker engine's, each folded in
+        under a ``worker`` label (``MetricsRegistry.merge``).  Subprocess
+        workers export snapshots instead (``obs_snapshot`` RPC) — merge
+        those offline with ``tools/dump_obs.py --merge``."""
+        reg = MetricsRegistry(namespace=namespace)
+        if isinstance(self.obs.metrics, MetricsRegistry):
+            reg.merge(self.obs.metrics, labels={"worker": "router"})
+        with self._lock:
+            cores = [(n, getattr(w, "core", None))
+                     for n, w in self._alive_workers().items()]
+        for n, core in cores:
+            if core is None:        # subprocess: registry lives remotely
+                continue
+            m = core.engine.obs.metrics
+            if isinstance(m, MetricsRegistry):
+                reg.merge(m, labels={"worker": n})
+        return reg
+
+    def check_health(self) -> List[str]:
+        """Probe every member; handle (and return) the ones found dead."""
+        lost = []
+        for n, w in list(self._alive_workers().items()):
+            if not w.healthy():
+                self._on_worker_lost(n, "health check")
+                lost.append(n)
+        return lost
+
+    def add_worker(self, name: str, worker: _QueueWorker) -> None:
+        """Join a worker: it takes over its rendezvous share (~1/N) of
+        the key space; with a router corpus the shards re-cut and
+        re-warm.  Everyone else's keys — and cache entries — stay put."""
+        with self._lock:
+            self._membership.add(name)
+            self._workers[name] = worker
+            self._m_alive.set(len(self._membership.alive()))
+            if self._index is not None:
+                self._reshard_locked(warm=True)
+
+    def remove_worker(self, name: str) -> None:
+        """Graceful leave: stop routing to it, drain its queue, close
+        it, re-shard without it."""
+        with self._lock:
+            self._membership.mark_dead(name)
+            self._m_alive.set(len(self._membership.alive()))
+            w = self._workers[name]
+        w.join_idle()
+        w.close()
+        with self._lock:
+            self._membership.remove(name)
+            del self._workers[name]
+            if self._index is not None and self._membership.alive():
+                self._reshard_locked(warm=True)
+
+    def kill_worker(self, name: str) -> None:
+        """Hard-kill a worker (the drain-test hook): simulate a crash,
+        then run the death path — re-route its pending requests and
+        re-shard."""
+        self._workers[name].kill()
+        self._on_worker_lost(name, "killed")
+
+    def close(self) -> None:
+        with self._fan_cv:
+            self._closing = True
+            self._fan_cv.notify()
+        self._fan_thread.join(30.0)
+        for w in self._workers.values():
+            w.close()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+    # ======================================================================
+    # owner routing
+    # ======================================================================
+    def _alive_workers(self) -> Dict[str, _QueueWorker]:
+        return {n: self._workers[n] for n in self._membership.alive()}
+
+    def owner_of(self, request) -> str:
+        """The worker this request's user key routes to (exposed for
+        affinity tests and traffic shaping)."""
+        return self._membership.owner(_user_key(request, self._key_fn))
+
+    def _route_to_owner(self, request, fut: ClusterFuture,
+                        retried: bool = False) -> None:
+        key = _user_key(request, self._key_fn)
+        for _ in range(len(self._workers) + 1):
+            with self._lock:
+                alive = self._membership.alive()
+                if not alive:
+                    break
+                owner = self._membership.owner(key)
+                w = self._workers[owner]
+            if w.submit_batch([(request, fut)]):
+                return
+            # lost the race with a death: run the death path and retry
+            self._on_worker_lost(owner, "dead at submit")
+            if retried:
+                self._m_reroutes.inc()
+        fut._set_error(WorkerLostError("<cluster>", "no alive workers"))
+
+    # ======================================================================
+    # death path
+    # ======================================================================
+    def _on_worker_lost(self, name: str, reason: str) -> None:
+        """Membership out, pending re-routed, corpus re-cut, shard
+        executors re-warmed.  Idempotent per worker."""
+        with self._lock:
+            if not self._membership.is_alive(name):
+                return
+            self._membership.mark_dead(name)
+            self._m_deaths.inc()
+            self._m_alive.set(len(self._membership.alive()))
+            w = self._workers[name]
+        w.kill(reason)
+        pending = w.take_pending()
+        with self._lock:
+            if self._index is not None and self._membership.alive():
+                self._reshard_locked(warm=True)
+        for r, f in pending:
+            self._m_reroutes.inc()
+            lane = lane_of(r)
+            if lane in ("retrieve", "two_stage") and self._index is not None:
+                with self._fan_cv:
+                    self._fan_items.append((r, f))
+                    self._fan_cv.notify()
+            else:
+                self._route_to_owner(r, f, retried=True)
+
+    def _reshard_locked(self, warm: bool) -> None:
+        """Re-cut the corpus across the alive workers (ascending shard =
+        alive order, so the merge's lower-index-wins tie-break is the
+        global row order) and optionally re-warm the shard executors."""
+        alive = self._membership.alive()
+        specs = make_shards(self._index, len(alive),
+                            chunk_rows=self._chunk_rows,
+                            block_rows=self._block_rows)
+        _, self._rows_per_shard = shard_layout(
+            self._index.qt.packed.shape[0], len(alive),
+            chunk_rows=self._chunk_rows, block_rows=self._block_rows)
+        futs = [self._workers[n].call_async("attach_shard", spec)
+                for n, spec in zip(alive, specs)]
+        for f in futs:
+            f.result()
+        self._shard_order = list(alive)
+        if warm:
+            self._warm_shards()
+
+    def _ivf_slots(self) -> List[int]:
+        return [self._tab.slots(p) + self._n_tail for p in self._ivf_levels]
+
+    def _warm_shards(self) -> None:
+        if self._index is None:
+            return
+        with self._lock:
+            names = list(self._shard_order)
+            futs = [self._workers[n].call_async(
+                        "warm_shard", self._index.dim, [self._retrieve_k],
+                        list(self._ladder.sizes()), self._ivf_slots())
+                    for n in names]
+        for f in futs:
+            try:
+                f.result()
+            except WorkerLostError:
+                pass    # its death path will re-shard + re-warm again
+
+    def _ivf_level(self, nprobe: Optional[int]) -> int:
+        levels = self._ivf_levels
+        if nprobe is None:
+            return levels[0]
+        for p in levels:
+            if p >= nprobe:
+                return p
+        return levels[-1]
+
+    # ======================================================================
+    # retrieval fan-out
+    # ======================================================================
+    _fan_busy = False
+
+    def _fan_loop(self) -> None:
+        while True:
+            with self._fan_cv:
+                while not self._fan_items and not self._closing:
+                    self._fan_cv.wait()
+                if self._closing:
+                    for r, f in self._fan_items:
+                        f._set_error(WorkerLostError("<router>", "closed"))
+                    self._fan_items.clear()
+                    return
+                batch = list(self._fan_items)
+                self._fan_items.clear()
+                self._fan_busy = True
+            try:
+                self._fan_process(batch)
+            finally:
+                with self._fan_cv:
+                    self._fan_busy = False
+
+    def _fan_process(self, batch: List[tuple]) -> None:
+        """Dedupe a drained fan-out batch into unique (user, filter,
+        route) rows — the engine's retrieve-lane grouping, router-side —
+        then dispatch route-uniform groups of <= fanout_unique."""
+        from repro.retrieval.filters import ItemFilter
+        uniq: Dict[tuple, int] = {}
+        rows: List[dict] = []
+        for r, f in batch:
+            filt = ItemFilter(
+                exclude_ids=r.exclude_ids,
+                allow_surfaces=(None if r.allow_surfaces is None
+                                else tuple(r.allow_surfaces)))
+            filt = None if filt.is_empty() else filt
+            route = getattr(r, "route", "exact")
+            conf = (("ivf", self._ivf_level(getattr(r, "nprobe", None)))
+                    if route == "ivf" else ("exact", None))
+            key = self._key_fn(r)
+            fp = filt.fingerprint() if filt is not None else b""
+            u = uniq.setdefault((key, fp, conf), len(rows))
+            if u == len(rows):
+                rows.append({"req": r, "key": key, "filt": filt,
+                             "conf": conf, "members": []})
+            else:
+                self._m_coalesced.inc()
+            rows[u]["members"].append((r, f))
+        by_conf: Dict[tuple, List[int]] = {}
+        order = []
+        for u, row in enumerate(rows):
+            if row["conf"] not in by_conf:
+                by_conf[row["conf"]] = []
+                order.append(row["conf"])
+            by_conf[row["conf"]].append(u)
+        for conf in order:
+            us = by_conf[conf]
+            for g0 in range(0, len(us), self._cap):
+                group = [rows[u] for u in us[g0:g0 + self._cap]]
+                self._fan_group(conf, group)
+
+    def _fan_group(self, conf: tuple, group: List[dict]) -> None:
+        """One scatter/gather: owner-affine encode, per-shard top-k,
+        lower-index-wins merge, resolve.  A worker death inside the
+        group re-shards and retries the group on the survivors."""
+        import time
+        t0 = time.monotonic()
+        self._m_groups.inc()
+        for attempt in range(len(self._workers) + 1):
+            try:
+                self._fan_group_once(conf, group)
+                self._m_fan_ms.record((time.monotonic() - t0) * 1e3)
+                return
+            except WorkerLostError as e:
+                if e.worker in self._workers:
+                    self._on_worker_lost(e.worker, "fan-out")
+                if not self._membership.alive():
+                    break
+        err = WorkerLostError("<cluster>", "no alive workers")
+        for row in group:
+            for _, f in row["members"]:
+                f._set_error(err)
+
+    def _fan_group_once(self, conf: tuple, group: List[dict]) -> None:
+        index, k = self._index, self._retrieve_k
+        cap = self._ladder.fit(len(group))      # the engine's b_q
+        with self._lock:
+            names = list(self._shard_order)
+            workers = dict(self._workers)
+            rps = self._rows_per_shard
+        n_shards = len(names)
+        # -- owner-affine encode (cache residency follows the HRW owner) --
+        by_owner: Dict[str, List[int]] = {}
+        for j, row in enumerate(group):
+            by_owner.setdefault(self._membership.owner(row["key"]),
+                                []).append(j)
+        emb = np.zeros((len(group), index.dim), np.float32)
+        efuts = []
+        for owner, idxs in by_owner.items():
+            w = workers.get(owner)
+            if w is None or not self._membership.is_alive(owner):
+                raise WorkerLostError(owner or "<cluster>", "owner gone")
+            efuts.append((owner, idxs, w.call_async(
+                "encode_users", [group[j]["req"] for j in idxs])))
+        for owner, idxs, f in efuts:
+            e = np.asarray(f.result(), np.float32)
+            for pos, j in enumerate(idxs):
+                emb[j] = e[pos]
+        q = np.zeros((cap, index.dim), np.float32)
+        q[:len(group)] = emb
+        filts = [row["filt"] for row in group]
+        # -- plan + scatter --
+        if conf[0] == "exact":
+            masks = shard_filter_masks(index, filts + [None] *
+                                       (cap - len(group)), cap,
+                                       n_shards, rps)
+            sfuts = [workers[n].call_async(
+                        "shard_topk", "exact", q, k,
+                        mask=None if masks is None else masks[s])
+                     for s, n in enumerate(names)]
+        else:
+            off, val, masks, S = plan_ivf_shards(
+                index, self._tab, emb, conf[1], filts, n_shards, rps)
+            padq = cap - len(group)
+
+            def padQ(a):
+                if a is None or padq == 0:
+                    return a
+                pad = [(0, 0)] * a.ndim
+                pad[1] = (0, padq)
+                return np.pad(a, pad)
+            off, val, masks = padQ(off), padQ(val), padQ(masks)
+            sfuts = [workers[n].call_async(
+                        "shard_topk", "ivf", q, k, off=off[s], val=val[s],
+                        mask=None if masks is None else masks[s])
+                     for s, n in enumerate(names)]
+        parts = [f.result() for f in sfuts]
+        # -- gather + merge (ascending shard = ascending global rows) --
+        scores, rows_m = merge_topk([p[0] for p in parts],
+                                    [p[1] for p in parts], k)
+        scores, rows_m = scores[:len(group)], rows_m[:len(group)]
+        if scores.shape[-1] < k:     # tiny shards: k > sum of k_locals
+            padw = k - scores.shape[-1]
+            scores = np.pad(scores, ((0, 0), (0, padw)),
+                            constant_values=-np.inf)
+            rows_m = np.pad(rows_m, ((0, 0), (0, padw)),
+                            constant_values=-1)
+        if conf[0] == "ivf":         # unvisited rows have no honest index
+            rows_m = np.where(scores == -np.inf, -1, rows_m)
+        # -- resolve --
+        for j, row in enumerate(group):
+            ids_full = index.item_ids(rows_m[j])
+            for r, f in row["members"]:
+                ids, sc = ids_full[:r.k], scores[j, :r.k]
+                if isinstance(r, RetrieveThenRankRequest):
+                    self._chain_rank(r, f, ids, sc)
+                else:
+                    f._set((ids, sc))
+
+    def _chain_rank(self, r: RetrieveThenRankRequest, fut: ClusterFuture,
+                    ids: np.ndarray, retr_scores: np.ndarray) -> None:
+        """Second stage of a decomposed two-stage request: rank the
+        retrieved candidates on the user's owner worker (cache-resident
+        pooled embedding) and compose the ``TwoStageResult``."""
+        feats_fn = r.cand_feats_fn or getattr(self, "_features_fn", None)
+        if feats_fn is None:
+            fut._set_error(ValueError(
+                "two-stage fan-out needs cand_feats_fn on the request or "
+                "router.attach_features()"))
+            return
+        try:
+            feats = np.asarray(feats_fn(ids), np.float32)
+        except Exception as e:       # noqa: BLE001 — typed on the future
+            fut._set_error(e)
+            return
+        rank_req = RankRequest(
+            seq_ids=r.seq_ids, seq_actions=r.seq_actions,
+            seq_surfaces=r.seq_surfaces, cand_ids=np.asarray(ids, np.int64),
+            cand_feats=feats, user_feats=r.user_feats, priority=r.priority)
+        rank_fut = ClusterFuture()
+
+        def compose(rf: ClusterFuture):
+            try:
+                probs = rf.result(timeout=0)
+            except Exception as e:   # noqa: BLE001 — typed passthrough
+                fut._set_error(e)
+                return
+            fut._set(TwoStageResult(item_ids=ids,
+                                    retrieval_scores=retr_scores,
+                                    probs=np.asarray(probs)))
+
+        rank_fut.add_done_callback(compose)
+        self._route_to_owner(rank_req, rank_fut)

@@ -1,0 +1,472 @@
+"""Cluster workers: one ServingEngine per worker, behind a command queue.
+
+Two transports share one contract:
+
+  * :class:`EngineWorker` — in-process: a daemon thread owns a
+    :class:`WorkerCore` (engine + optional shard scorer) and drains a
+    command queue, coalescing adjacent request batches into one engine
+    flush (the cluster-level analogue of the scheduler's own
+    coalescing).
+  * :class:`SubprocessWorker` — same queue machinery, but the core lives
+    in a spawned child process and commands travel a ``multiprocessing``
+    pipe.  The child builds its OWN engine via a top-level picklable
+    factory (models/params/indexes never cross the pipe); requests,
+    shard payloads and numpy results do.
+
+Failure contract (mirrors the scheduler's ``ShedError`` discipline —
+futures NEVER hang): :meth:`kill` marks the worker dead under the queue
+lock, so the loop can never pop another item afterwards, and
+:meth:`take_pending` atomically recovers every queued + in-flight
+(request, future) pair for the router to re-route to survivors.
+Requests are pure, so re-running one elsewhere is safe, and
+:class:`ClusterFuture` resolution is FIRST-WRITER-WINS: a dead worker's
+late-but-valid result and the re-routed result race harmlessly.
+Anything un-re-routable fails with the typed :class:`WorkerLostError`.
+Graceful :meth:`close` drains the queue first (the drain path of the
+kill-one-worker test).
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster.fanout import ShardScorer, ShardSpec
+from repro.serving.scheduler import ShedError
+
+
+class WorkerLostError(RuntimeError):
+    """A worker died (killed, crashed, or closed) with this request
+    un-re-routable — the cluster tier's typed never-hang terminal, the
+    analogue of the scheduler's ``ShedError``."""
+
+    def __init__(self, worker: str, reason: str = "lost"):
+        self.worker = worker
+        self.reason = reason
+        super().__init__(f"worker {worker!r} lost ({reason})")
+
+    def __reduce__(self):   # default exception pickling would drop fields
+        return (WorkerLostError, (self.worker, self.reason))
+
+
+def _dump_exc(exc: BaseException) -> tuple:
+    """Picklable surrogate for an exception crossing the worker pipe —
+    typed errors (ShedError, WorkerLostError) reconstruct exactly."""
+    if isinstance(exc, ShedError):
+        return ("shed", (exc.lane, exc.reason, exc.wait_ms, exc.budget_ms,
+                         exc.priority))
+    if isinstance(exc, WorkerLostError):
+        return ("lost", (exc.worker, exc.reason))
+    return ("generic", (type(exc).__name__, str(exc)))
+
+
+def _load_exc(payload: tuple) -> BaseException:
+    kind, a = payload
+    if kind == "shed":
+        return ShedError(*a)
+    if kind == "lost":
+        return WorkerLostError(*a)
+    name, msg = a
+    return RuntimeError(f"{name}: {msg}")
+
+
+class ClusterFuture:
+    """Future for one cluster-routed request.  Unlike the scheduler's
+    :class:`~repro.serving.scheduler.Future` (exactly-once by assertion),
+    resolution here is FIRST-WRITER-WINS: a re-routed request may be
+    resolved by the new owner while the dead owner's stale error/result
+    trails in — the first set sticks, later sets are dropped."""
+
+    __slots__ = ("_ev", "_value", "_exc", "_cbs", "_lock")
+
+    def __init__(self):
+        self._ev = threading.Event()
+        self._value = None
+        self._exc: Optional[BaseException] = None
+        self._cbs: List[Callable[["ClusterFuture"], None]] = []
+        self._lock = threading.Lock()
+
+    def _resolve(self, value, exc) -> bool:
+        with self._lock:
+            if self._ev.is_set():
+                return False
+            self._value, self._exc = value, exc
+            cbs, self._cbs = self._cbs, []
+            self._ev.set()
+        for cb in cbs:
+            cb(self)
+        return True
+
+    def _set(self, value) -> bool:
+        return self._resolve(value, None)
+
+    def _set_error(self, exc: BaseException) -> bool:
+        return self._resolve(None, exc)
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def add_done_callback(self, cb: Callable[["ClusterFuture"], None]):
+        """Run ``cb(self)`` at resolution (immediately if already done) —
+        the router chains two-stage rank submission onto retrieval
+        completion with this."""
+        with self._lock:
+            if not self._ev.is_set():
+                self._cbs.append(cb)
+                return
+        cb(self)
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._ev.wait(timeout):
+            raise TimeoutError("cluster future not resolved in time")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+
+class WorkerCore:
+    """The worker-resident state: one engine, optionally one corpus
+    shard.  Every method is an RPC endpoint for :class:`SubprocessWorker`
+    (arguments and returns must pickle) and a direct call for
+    :class:`EngineWorker`."""
+
+    def __init__(self, engine):
+        self.engine = engine
+        self.shard: Optional[ShardScorer] = None
+
+    def submit_batch(self, requests: Sequence) -> List[tuple]:
+        """Run a request batch through one engine flush.  Per-request
+        status tuples — ``("ok", payload)`` / ``("err", surrogate)`` —
+        so one shed request doesn't poison its batchmates."""
+        futs = self.engine.submit_many(requests)
+        self.engine.flush()
+        out = []
+        for f in futs:
+            try:
+                out.append(("ok", f.result()))
+            except Exception as e:           # noqa: BLE001 — re-raised typed
+                out.append(("err", _dump_exc(e)))
+        return out
+
+    def encode_users(self, requests: Sequence) -> np.ndarray:
+        return self.engine.encode_users(requests)
+
+    def attach_shard(self, spec: ShardSpec) -> None:
+        self.shard = ShardScorer(spec)
+
+    def shard_topk(self, route: str, queries: np.ndarray, k: int,
+                   off=None, val=None, mask=None) -> Tuple[np.ndarray,
+                                                           np.ndarray]:
+        assert self.shard is not None, "no shard attached"
+        if route == "exact":
+            return self.shard.exact_topk(queries, k, mask)
+        assert route == "ivf", route
+        return self.shard.ivf_topk(queries, off, val, mask, k)
+
+    def warm_shard(self, d_query: int, ks, q_buckets, ivf_slots=()) -> int:
+        assert self.shard is not None, "no shard attached"
+        return self.shard.warm(d_query, ks, q_buckets, ivf_slots)
+
+    def warmup(self, seq_len: Optional[int] = None) -> dict:
+        return self.engine.warmup(seq_len=seq_len)
+
+    def compiles_after_warmup(self) -> int:
+        return int(self.engine.registry.compiles_after_warmup)
+
+    def stats(self) -> dict:
+        return {"engine": self.engine.stats(),
+                "shard": self.shard.stats() if self.shard else None}
+
+    def obs_snapshot(self) -> dict:
+        return self.engine.obs.snapshot()
+
+    def ping(self) -> bool:
+        return True
+
+    def close(self) -> None:
+        self.engine.close()
+
+
+class _QueueWorker:
+    """The shared command-queue half of both worker transports: a daemon
+    thread drains batches (coalescing adjacent ones) and control calls
+    in submission order.  One condition variable guards the deque, the
+    dead flag, and the in-flight handoff — so ``kill`` + ``take_pending``
+    is atomic against the loop and no (request, future) pair can slip
+    between them."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self._cv = threading.Condition()
+        self._items: deque = deque()
+        self._dead = False
+        self._dead_reason = "lost"
+        self._closing = False
+        self._inflight: List[tuple] = []
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=f"cluster-{name}")
+        self._thread.start()
+
+    # transport-specific execution of one coalesced batch / control call
+    def _exec_batch(self, requests: List) -> List[tuple]:
+        raise NotImplementedError
+
+    def _exec_call(self, method: str, args, kwargs):
+        raise NotImplementedError
+
+    def _shutdown_transport(self) -> None:
+        pass
+
+    # -- public surface ------------------------------------------------------
+    def submit_batch(self, pairs: Sequence[Tuple[Any, ClusterFuture]]
+                     ) -> bool:
+        """Enqueue (request, future) pairs; the worker resolves each
+        future from its slot in the coalesced flush.  Returns False —
+        with the futures UNTOUCHED — if the worker is dead or closing, so
+        the caller re-routes instead of failing."""
+        with self._cv:
+            if self._dead or self._closing:
+                return False
+            self._items.append(("batch", list(pairs)))
+            self._cv.notify()
+        return True
+
+    def call_async(self, method: str, *args, **kwargs) -> ClusterFuture:
+        fut = ClusterFuture()
+        with self._cv:
+            if self._dead or self._closing:
+                fut._set_error(WorkerLostError(self.name, self._dead_reason))
+                return fut
+            self._items.append(("call", method, args, kwargs, fut))
+            self._cv.notify()
+        return fut
+
+    def call(self, method: str, *args, **kwargs):
+        return self.call_async(method, *args, **kwargs).result()
+
+    def healthy(self) -> bool:
+        with self._cv:
+            return self._thread.is_alive() and not self._dead
+
+    def idle(self) -> bool:
+        with self._cv:
+            return not self._items and not self._inflight
+
+    def join_idle(self, timeout: float = 60.0) -> bool:
+        """Wait until the queue is drained and nothing is in flight."""
+        import time
+        t0 = time.monotonic()
+        while time.monotonic() - t0 < timeout:
+            if self.idle():
+                return True
+            time.sleep(0.002)
+        return False
+
+    def kill(self, reason: str = "killed") -> None:
+        """Simulated crash: mark dead under the queue lock (the loop can
+        never pop another item) and tear down the transport.  Call
+        :meth:`take_pending` afterwards to recover queued + in-flight
+        requests for re-routing."""
+        with self._cv:
+            if self._dead:
+                return
+            self._dead = True
+            self._dead_reason = reason
+            self._cv.notify()
+        self._shutdown_transport()
+
+    def take_pending(self) -> List[Tuple[Any, ClusterFuture]]:
+        """Atomically drain every un-resolved (request, future) pair off
+        a dead worker: the batch executing at kill time plus everything
+        still queued.  Queued control-call futures fail typed (they bind
+        to this worker's state and cannot re-route)."""
+        out: List[Tuple[Any, ClusterFuture]] = []
+        with self._cv:
+            assert self._dead, "take_pending on a live worker"
+            out.extend((r, f) for r, f in self._inflight if not f.done())
+            self._inflight = []
+            for item in self._items:
+                if item[0] == "batch":
+                    out.extend((r, f) for r, f in item[1] if not f.done())
+                elif item[0] == "call":
+                    item[4]._set_error(
+                        WorkerLostError(self.name, self._dead_reason))
+            self._items.clear()
+        return out
+
+    def close(self, timeout: float = 60.0) -> None:
+        """Graceful drain: finish everything queued, then stop."""
+        with self._cv:
+            if self._dead:
+                return
+            self._closing = True
+            self._items.append(("close",))
+            self._cv.notify()
+        self._thread.join(timeout)
+        with self._cv:
+            self._dead = True
+            self._dead_reason = "closed"
+        self._shutdown_transport()
+
+    # -- the worker loop -----------------------------------------------------
+    def _run(self):
+        while True:
+            with self._cv:
+                while not self._items and not self._dead:
+                    self._cv.wait()
+                if self._dead:
+                    return      # leftovers recovered by take_pending
+                item = self._items.popleft()
+                if item[0] == "batch":
+                    pairs = list(item[1])
+                    while self._items and self._items[0][0] == "batch":
+                        pairs.extend(self._items.popleft()[1])
+                    self._inflight = list(pairs)
+            if item[0] == "close":
+                try:
+                    self._exec_call("close", (), {})
+                except Exception:
+                    pass
+                return
+            if item[0] == "call":
+                _, method, args, kwargs, fut = item
+                try:
+                    fut._set(self._exec_call(method, args, kwargs))
+                except Exception as e:       # noqa: BLE001 — typed on future
+                    with self._cv:
+                        dead = self._dead
+                    fut._set_error(
+                        WorkerLostError(self.name, self._dead_reason)
+                        if dead else e)
+                continue
+            # -- batch ----------------------------------------------------
+            try:
+                statuses = self._exec_batch([r for r, _ in pairs])
+            except Exception as e:           # noqa: BLE001 — typed on futures
+                with self._cv:
+                    dead = self._dead
+                    if not dead:
+                        self._inflight = []
+                if not dead:                 # genuine engine error
+                    for _, f in pairs:
+                        f._set_error(e)
+                # dead: futures stay in _inflight for take_pending
+                continue
+            # a completed flush is valid even if we died mid-way —
+            # first-writer-wins absorbs any race with a re-routed copy
+            for (r, f), (tag, payload) in zip(pairs, statuses):
+                if tag == "ok":
+                    f._set(payload)
+                else:
+                    f._set_error(_load_exc(payload))
+            with self._cv:
+                self._inflight = []
+
+
+class EngineWorker(_QueueWorker):
+    """In-process worker: the core (engine + shard) lives in this process
+    and the queue thread calls it directly."""
+
+    def __init__(self, name: str, core: WorkerCore):
+        self.core = core
+        super().__init__(name)
+
+    def _exec_batch(self, requests):
+        return self.core.submit_batch(requests)
+
+    def _exec_call(self, method, args, kwargs):
+        return getattr(self.core, method)(*args, **kwargs)
+
+
+def _subprocess_main(conn, factory, factory_kwargs):
+    """Child entry point: build the core locally, serve RPCs until EOF.
+    ``factory`` must be a top-level picklable callable -> WorkerCore —
+    engines/params/indexes are built in the child, never shipped."""
+    try:
+        core = factory(**factory_kwargs)
+    except Exception as e:                   # noqa: BLE001 — reported typed
+        conn.send(("fatal", _dump_exc(e)))
+        return
+    conn.send(("ready", None))
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError):
+            return
+        if msg[0] == "__close__":
+            try:
+                core.close()
+            except Exception:
+                pass
+            conn.send(("ok", None))
+            return
+        method, args, kwargs = msg
+        try:
+            conn.send(("ok", getattr(core, method)(*args, **kwargs)))
+        except Exception as e:               # noqa: BLE001 — surrogate typed
+            conn.send(("err", _dump_exc(e)))
+
+
+class SubprocessWorker(_QueueWorker):
+    """Worker whose core runs in a spawned child process.  The parent
+    side keeps the same queue/coalescing machinery; execution is a
+    synchronous RPC over a duplex pipe (one outstanding call — the queue
+    thread is the only caller).  ``kill()`` terminates the child; the
+    resulting pipe EOF surfaces as :class:`WorkerLostError`."""
+
+    def __init__(self, name: str, factory: Callable[..., WorkerCore],
+                 factory_kwargs: Optional[Dict[str, Any]] = None,
+                 start_timeout: float = 300.0):
+        ctx = mp.get_context("spawn")   # never fork a JAX-initialized parent
+        self._conn, child = ctx.Pipe(duplex=True)
+        self._proc = ctx.Process(
+            target=_subprocess_main,
+            args=(child, factory, dict(factory_kwargs or {})),
+            daemon=True, name=f"cluster-{name}")
+        self._proc.start()
+        child.close()
+        if not self._conn.poll(start_timeout):
+            self._proc.terminate()
+            raise TimeoutError(f"worker {name!r} failed to start in "
+                               f"{start_timeout}s")
+        tag, payload = self._conn.recv()
+        if tag == "fatal":
+            raise _load_exc(payload)
+        super().__init__(name)
+
+    def _rpc(self, method, args, kwargs):
+        try:
+            self._conn.send((method, args, kwargs))
+            tag, payload = self._conn.recv()
+        except (EOFError, OSError, BrokenPipeError) as e:
+            raise WorkerLostError(self.name, f"pipe: {type(e).__name__}")
+        if tag == "err":
+            raise _load_exc(payload)
+        return payload
+
+    def _exec_batch(self, requests):
+        return self._rpc("submit_batch", (requests,), {})
+
+    def _exec_call(self, method, args, kwargs):
+        if method == "close":
+            try:
+                self._conn.send(("__close__",))
+                if self._conn.poll(10.0):
+                    self._conn.recv()
+            except (EOFError, OSError, BrokenPipeError):
+                pass
+            self._proc.join(10.0)
+            return None
+        return self._rpc(method, args, kwargs)
+
+    def _shutdown_transport(self):
+        try:
+            self._proc.terminate()
+        except Exception:
+            pass
+
+    def healthy(self) -> bool:
+        return super().healthy() and self._proc.is_alive()

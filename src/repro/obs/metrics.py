@@ -301,6 +301,41 @@ class MetricsRegistry:
         for fn in collectors:        # outside the registry lock on purpose
             fn()
 
+    # -- aggregation --------------------------------------------------------
+    def merge(self, other: "MetricsRegistry", *,
+              labels: Optional[dict] = None) -> "MetricsRegistry":
+        """Fold ``other``'s metrics into this registry — the cluster-tier
+        aggregation path: a fresh registry absorbs each worker's registry
+        under a distinguishing label set (``labels={"worker": name}``),
+        yielding one exposition with per-worker series; merging WITHOUT
+        extra labels sums same-named series instead (the "all workers"
+        rollup).  Counters and gauges add; histograms add bucket counts
+        (identical layouts required — :meth:`Histogram.merge`).  Runs
+        ``other``'s collectors first so externally-owned counters are
+        current.  Export-time aggregation, not a hot path: concurrent
+        recordings into ``self`` during a merge may be folded into the
+        histogram swap.  -> self."""
+        other._collect()
+        items, meta = other._items()
+        extra = {k: str(v) for k, v in (labels or {}).items()}
+        for (name, lk), m in items:
+            typ, help_, params = meta[name]
+            lab = dict(lk)
+            lab.update(extra)
+            if typ == "counter":
+                self.counter(name, help_, **lab).inc(m.get())
+            elif typ == "gauge":
+                self.gauge(name, help_, **lab).inc(m.get())
+            else:
+                h = self.histogram(name, help_, lo=params[0], hi=params[1],
+                                   per_decade=params[2], **lab)
+                folded = h.merge(m)
+                with h._lock:
+                    h.counts = folded.counts
+                    h.count = folded.count
+                    h.sum = folded.sum
+        return self
+
     # -- export -------------------------------------------------------------
     def _items(self):
         with self._lock:

@@ -19,6 +19,14 @@ the appended unclustered tail, which is always visited), and every shard
 runs the same ``ivf_topk`` slice-gather scorer over its clipped slices —
 shards owning none of the probed rows contribute only sentinel slots.
 The host merge is unchanged; unfilled tails come back as (-inf, -1).
+
+The PLANNING half of this module (:func:`shard_layout`,
+:func:`shard_filter_masks`, :func:`plan_ivf_shards`) is deliberately
+shard_map-free: the same host-side plans drive the one-process mesh
+retriever here AND the cluster tier's scatter/gather
+(``repro.cluster.fanout``), where each "shard" is a separate engine
+worker instead of a mesh device — the merge contract (lower index wins,
+shards in row order) is identical on both sides.
 """
 from __future__ import annotations
 
@@ -33,6 +41,89 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.retrieval.filters import as_filter_list, filter_masks
 from repro.retrieval.index import ItemIndex
 from repro.retrieval.scorer import fused_topk, merge_topk, _round_up
+
+
+def shard_layout(n_rows: int, n_shards: int, *, chunk_rows: int = 32768,
+                 block_rows: int = 32):
+    """Contiguous-row shard geometry shared by the mesh retriever and the
+    cluster fan-out: every shard holds the same whole number of scan
+    chunks (the fused scorer's streaming requirement).
+    -> (chunk_rows, rows_per_shard)."""
+    per = _round_up(n_rows, n_shards) // n_shards
+    cr = min(chunk_rows, _round_up(per, block_rows))
+    return cr, _round_up(per, cr)
+
+
+def shard_filter_masks(index: ItemIndex, filters, n_queries: int,
+                       n_shards: int, rows_per_shard: int):
+    """-> (n_shards, Q, ceil(rows_per_shard/32)) int32 stacked shard-local
+    packed bitmasks (numpy), or None when every filter is empty.  Shard s
+    covers rows [s * rows_per_shard, (s+1) * rows_per_shard)."""
+    filters = as_filter_list(filters, n_queries)
+    ms = [filter_masks(filters, index, row_start=s * rows_per_shard,
+                       n_rows=rows_per_shard) for s in range(n_shards)]
+    if ms[0] is None:     # emptiness is a global property of `filters`
+        return None
+    return np.stack([np.asarray(m) for m in ms])
+
+
+def plan_ivf_shards(index: ItemIndex, tab, queries_np, nprobe: int,
+                    filters, n_shards: int, rows_per_shard: int):
+    """Host-side IVF probe planning for row-sharded execution: global
+    centroid routing, per-shard clipped slice descriptors (+ the appended
+    unclustered tail on its owning shards), and per-shard pushdown masks.
+    ``tab`` is the index's :class:`~repro.retrieval.ivf.SliceTable`.
+    -> (off (n_shards, Q, S), val, masks or None, S).  Used by
+    :class:`ShardedRetriever` (one process, shard_map) and by the cluster
+    tier's fan-out (one plan window per engine worker)."""
+    from repro.retrieval.filters import excluded_rows, pack_bits
+    from repro.retrieval.ivf import ivf_route
+    ivf = index.ivf
+    sr = tab.slice_rows
+    rps = rows_per_shard
+    Q = queries_np.shape[0]
+    clusters = ivf_route(ivf.centroids, queries_np, nprobe)
+    nc, n = ivf.n_clustered, index.n_items
+    tail = [(o, min(sr, n - o)) for o in range(nc, n, sr)]
+    S = tab.slots(clusters.shape[1]) + len(tail)
+    off = np.zeros((n_shards, Q, S), np.int32)
+    val = np.zeros((n_shards, Q, S), np.int32)
+    filts = (as_filter_list(filters, Q)
+             if filters is not None else [None] * Q)
+    masked = any(f is not None and not f.is_empty() for f in filts)
+    masks = (np.zeros((n_shards, Q, S, sr // 32), np.int32)
+             if masked else None)
+    memo = {}
+    for q in range(Q):
+        # probed cluster slices (ascending) then the unclustered tail
+        # (highest rows) — global row order, so the merge tie-break
+        # contract carries over
+        gslices = []
+        for c in clusters[q]:
+            lo, hi = int(tab.ptr[c]), int(tab.ptr[c + 1])
+            gslices += [(int(tab.off[i]), int(tab.val[i]))
+                        for i in range(lo, hi)]
+        gslices += tail
+        used = np.zeros(n_shards, np.int32)
+        for o, v in gslices:
+            s0, s1 = o // rps, (o + v - 1) // rps
+            for sh in range(s0, min(s1, n_shards - 1) + 1):
+                lo = sh * rps
+                a, b = max(o, lo), min(o + v, lo + rps)
+                if b <= a:
+                    continue
+                j = used[sh]
+                off[sh, q, j] = a - lo
+                val[sh, q, j] = b - a
+                if masked and filts[q] is not None:
+                    key = (filts[q].fingerprint(), a)
+                    row = memo.get(key)
+                    if row is None:
+                        row = memo[key] = pack_bits(excluded_rows(
+                            filts[q], index, a, sr))
+                    masks[sh, q, j] = row
+                used[sh] = j + 1
+    return off, val, masks, S
 
 
 class ShardedRetriever:
@@ -59,10 +150,8 @@ class ShardedRetriever:
         R = qt.packed.shape[0]
         self.block_rows = block_rows
         # every shard must hold the same whole number of scan chunks
-        self.chunk_rows = min(chunk_rows, _round_up(
-            _round_up(R, self.n_shards) // self.n_shards, block_rows))
-        self.rows_per_shard = _round_up(
-            _round_up(R, self.n_shards) // self.n_shards, self.chunk_rows)
+        self.chunk_rows, self.rows_per_shard = shard_layout(
+            R, self.n_shards, chunk_rows=chunk_rows, block_rows=block_rows)
         pad = self.rows_per_shard * self.n_shards - R
         # committed to the mesh layout once — otherwise every topk() call
         # would reshard (copy) the whole corpus into P("data")
@@ -148,59 +237,12 @@ class ShardedRetriever:
         return jax.jit(fn)
 
     def _ivf_probe(self, queries_np, nprobe: int, filters):
-        """Host-side probe planning: global routing, shard-clipped slice
-        descriptors (+ the unclustered tail on its owning shards), and
-        per-shard pushdown masks.
-        -> (off (n_sh, Q, S), val, masks or None, S)."""
-        from repro.retrieval.filters import excluded_rows, pack_bits
-        from repro.retrieval.ivf import ivf_route
-        ivf = self.index.ivf
-        tab = self._ivf_state()
-        sr = tab.slice_rows
-        rps = self.rows_per_shard
-        Q = queries_np.shape[0]
-        clusters = ivf_route(ivf.centroids, queries_np, nprobe)
-        nc, n = ivf.n_clustered, self.index.n_items
-        tail = [(o, min(sr, n - o)) for o in range(nc, n, sr)]
-        S = tab.slots(clusters.shape[1]) + len(tail)
-        off = np.zeros((self.n_shards, Q, S), np.int32)
-        val = np.zeros((self.n_shards, Q, S), np.int32)
-        filts = (as_filter_list(filters, Q)
-                 if filters is not None else [None] * Q)
-        masked = any(f is not None and not f.is_empty() for f in filts)
-        masks = (np.zeros((self.n_shards, Q, S, sr // 32), np.int32)
-                 if masked else None)
-        memo = {}
-        for q in range(Q):
-            # probed cluster slices (ascending) then the unclustered tail
-            # (highest rows) — global row order, so the merge tie-break
-            # contract carries over
-            gslices = []
-            for c in clusters[q]:
-                lo, hi = int(tab.ptr[c]), int(tab.ptr[c + 1])
-                gslices += [(int(tab.off[i]), int(tab.val[i]))
-                            for i in range(lo, hi)]
-            gslices += tail
-            used = np.zeros(self.n_shards, np.int32)
-            for o, v in gslices:
-                s0, s1 = o // rps, (o + v - 1) // rps
-                for sh in range(s0, min(s1, self.n_shards - 1) + 1):
-                    lo = sh * rps
-                    a, b = max(o, lo), min(o + v, lo + rps)
-                    if b <= a:
-                        continue
-                    j = used[sh]
-                    off[sh, q, j] = a - lo
-                    val[sh, q, j] = b - a
-                    if masked and filts[q] is not None:
-                        key = (filts[q].fingerprint(), a)
-                        row = memo.get(key)
-                        if row is None:
-                            row = memo[key] = pack_bits(excluded_rows(
-                                filts[q], self.index, a, sr))
-                        masks[sh, q, j] = row
-                    used[sh] = j + 1
-        return off, val, masks, S
+        """Host-side probe planning — :func:`plan_ivf_shards` with this
+        retriever's geometry.  -> (off (n_sh, Q, S), val, masks or None,
+        S)."""
+        return plan_ivf_shards(self.index, self._ivf_state(), queries_np,
+                               nprobe, filters, self.n_shards,
+                               self.rows_per_shard)
 
     def _topk_ivf(self, queries, k: int, *, nprobe: int, filters=None):
         q_np = np.asarray(queries, np.float32)
@@ -225,13 +267,9 @@ class ShardedRetriever:
     def _shard_masks(self, filters, n_queries: int):
         """-> (n_shards, Q, ceil(rows_per_shard/32)) int32 stacked
         shard-local packed bitmasks, or None when every filter is empty."""
-        filters = as_filter_list(filters, n_queries)
-        rps = self.rows_per_shard
-        ms = [filter_masks(filters, self.index, row_start=s * rps,
-                           n_rows=rps) for s in range(self.n_shards)]
-        if ms[0] is None:     # emptiness is a global property of `filters`
-            return None
-        return jnp.asarray(np.stack(ms), jnp.int32)
+        ms = shard_filter_masks(self.index, filters, n_queries,
+                                self.n_shards, self.rows_per_shard)
+        return None if ms is None else jnp.asarray(ms, jnp.int32)
 
     def topk(self, queries, k: int, *, filters=None, route: str = "exact",
              nprobe: int = 8):

@@ -1,29 +1,30 @@
-"""Serving subsystem public surface — exactly the typed request types, the
-engine (with its front-door collaborators), and the deprecation shims; a
-test pins ``__all__`` to this list.
+"""Serving subsystem public surface — exactly the typed request types and
+the engine with its front-door collaborators; a test pins ``__all__`` to
+this list.
 
 One front door: build a :class:`ServingEngine`, then ``submit`` typed
 requests — :class:`RankRequest`, :class:`RetrieveRequest`,
 :class:`RetrieveThenRankRequest` (the fused two-stage path, resolving to
 a :class:`TwoStageResult`), :class:`GenerateRequest` — and read each
 :class:`Future`.  ``engine.score`` / ``engine.retrieve`` are batch shims
-over ``submit_many``; ``engine.stats()`` is the telemetry snapshot.
+over ``submit_many``; ``engine.stats()`` is the telemetry snapshot.  For
+serving beyond one process, :mod:`repro.cluster` puts N engines behind an
+affinity-routing ``ClusterRouter`` with the same submit contract.
 
 Internals (``BatchPlan``/``build_plan``, ``BucketLadder``,
 ``ExecutorRegistry``, ``PipelineStats``, ``RequestScheduler``) stay
 importable from their modules (``repro.serving.plan`` etc.) but are not
-part of this package's public surface.  ``MicroBatcher``/``Ticket`` and
-``InferenceRouter``/``UserEmbeddingCache`` are deprecated shims that
-forward to the ``submit_many`` path.  See docs/architecture.md for
-lifecycles and the zero-recompile contract.
+part of this package's public surface.  The PR-1-era ``MicroBatcher`` /
+``InferenceRouter`` deprecation shims are gone — callers use the
+``submit`` front door (or ``RequestScheduler`` directly for a custom
+flush function).  See docs/architecture.md for lifecycles and the
+zero-recompile contract.
 """
 from repro.serving.context_cache import ContextCache
 from repro.serving.engine import ServingEngine
-from repro.serving.microbatch import MicroBatcher, Ticket
 from repro.serving.plan import (GenerateRequest, LanePolicy, RankRequest,
                                 RetrieveRequest, RetrieveThenRankRequest,
                                 TwoStageResult)
-from repro.serving.router import InferenceRouter, UserEmbeddingCache
 from repro.serving.scheduler import Future, ShedError
 
 __all__ = [
@@ -34,6 +35,4 @@ __all__ = [
     "ServingEngine", "ContextCache", "Future",
     # SLO scheduling: per-lane policies + the typed shed error
     "LanePolicy", "ShedError",
-    # deprecated shims
-    "MicroBatcher", "Ticket", "InferenceRouter", "UserEmbeddingCache",
 ]

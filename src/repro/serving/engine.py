@@ -140,9 +140,8 @@ class ServingEngine:
         full sequence identity, ``plan.request_key``).
       max_pending / max_wait_ms: scheduler knobs — ``submit`` auto-flushes
         a lane at ``max_pending`` queued requests; ``max_wait_ms`` starts
-        the background flusher bounding each lane's oldest request's age
-        (the old ``MicroBatcher(max_wait_ms=...)`` behaviour, now
-        engine-owned).
+        the background flusher bounding each lane's oldest request's
+        age.
       lane_policies / isolate_lanes: per-lane SLO policies
         (``{lane: LanePolicy}`` — independent flush thresholds, age
         bounds, ``shed_ms`` latency budgets with the typed ``ShedError``
@@ -394,9 +393,8 @@ class ServingEngine:
         """Fail-fast at submit() time: a request that can be KNOWN to be
         misconfigured must not enter the queue, where its failure would
         poison the whole coalesced flush (every future in a flush shares
-        one fate, as MicroBatcher batches always did — so attach providers
-        before submitting).  Runtime errors a lane discovers later still
-        fail the flush as a unit.
+        one fate — so attach providers before submitting).  Runtime
+        errors a lane discovers later still fail the flush as a unit.
 
         Reads attach state WITHOUT the engine lock — submit must never
         block behind a running flush; the flush-time gates re-check these
@@ -514,7 +512,8 @@ class ServingEngine:
             # fail a misconfigured request BEFORE any lane runs (by the
             # time a late lane noticed, executors for the whole coalesced
             # flush would already be in flight); submit() validates too,
-            # but shim traffic (MicroBatcher) enters here directly
+            # but a custom RequestScheduler over the flush enters here
+            # directly
             for i in lanes["two_stage"]:
                 if requests[i].k < 1:
                     raise ValueError(f"request {i}: two-stage requests "
@@ -1332,6 +1331,30 @@ class ServingEngine:
             miss_rows = enc_rows
         emb = np.stack([values[u] for u in range(len(reqs))])
         return emb, {"encode_misses": len(miss_rows)}
+
+    def encode_users(self, requests: Sequence) -> np.ndarray:
+        """Pooled user embeddings for a request list, synchronously —
+        the cluster tier's encode hook.  Runs the same cache + bucketed
+        ``encode``-executor protocol as the retrieval/scoring paths
+        (misses land in the ContextCache, so later rank/retrieve traffic
+        for the same users hits), in chunks of ``max_unique`` under the
+        engine lock.  Lite variants only (early-fusion variants have no
+        standalone pooled embedding).  -> (len(requests), id_dim) fp32."""
+        if not self.lite:
+            raise ValueError("encode_users needs a lite variant (pooled "
+                             f"user embedding); got {self.variant!r}")
+        reqs = list(requests)
+        key_fn = self._key_fn or request_key
+        keys = [key_fn(r) for r in reqs]
+        if not reqs:
+            return np.zeros((0, self.model.pcfg.id_dim), np.float32)
+        out = []
+        with self._engine_lock:
+            for i in range(0, len(reqs), self.max_unique):
+                emb, _ = self._user_embeddings(reqs[i:i + self.max_unique],
+                                               keys[i:i + self.max_unique])
+                out.append(emb)
+        return np.concatenate(out).astype(np.float32, copy=False)
 
     def _chunk_mask_rows(self, filters, fps, base_host: int):
         """Per-chunk packed mask rows with fingerprint memoization: the

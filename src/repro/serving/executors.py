@@ -23,9 +23,8 @@ class ExecutorRegistry:
     threading them through jit as traced arguments.
 
     Bookkeeping (executor dicts, compile/hit counters) is guarded by an
-    RLock: with a ``MicroBatcher`` background flusher, executions arrive
-    from the flusher thread as well as from callers blocked in
-    ``result()``.  The jitted call itself runs OUTSIDE the lock — jit
+    RLock: with a scheduler background flusher, executions arrive from
+    the flusher thread as well as from callers blocked in ``result()``.  The jitted call itself runs OUTSIDE the lock — jit
     dispatch is thread-safe and holding the lock across device dispatch
     would serialize the very overlap the pipeline exists for.
     """

@@ -1,0 +1,476 @@
+"""Cluster serving tier (this PR's tentpole): N engine workers behind a
+rendezvous-hashing ``ClusterRouter`` with cluster-sharded retrieval
+fan-out.
+
+Acceptance points covered:
+  * rendezvous membership: balanced ownership, join/leave move ONLY the
+    new/dead worker's share of the key space (property-style where
+    hypothesis is available, example-based always);
+  * affinity routing: repeat users land on the worker whose ContextCache
+    already holds them — zero re-encodes on the second wave;
+  * bit-identical per-request results vs a single engine for rank,
+    exact retrieval, IVF retrieval (level ladder parity), and the
+    decomposed two-stage path;
+  * ``compiles_after_warmup == 0`` on every worker engine and a stable
+    shard-scorer compile count across post-warmup mixed traffic;
+  * kill-one-worker drain: every in-flight/queued future resolves (or
+    fails typed) — never hangs — the dead worker's keys re-route, the
+    corpus re-shards across survivors, and post-death traffic still
+    matches the single engine;
+  * ``merged_metrics()``: one registry with per-worker labels — the
+    first real consumer of ``MetricsRegistry.merge``.
+"""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_stub import given, settings, st
+from repro.cluster import (ClusterFuture, ClusterRouter, EngineWorker,
+                           Membership, WorkerCore, WorkerLostError)
+from repro.configs import smoke_config
+from repro.core.dcat import DCAT
+from repro.core.finetune import FinetuneConfig, PinFMRankingModel
+from repro.core.losses import LossConfig
+from repro.core.pretrain import PinFMConfig, PinFMPretrain
+from repro.models.config import get_config
+from repro.retrieval import IndexBuilder, build_ivf
+from repro.serving import (ContextCache, RankRequest, RetrieveRequest,
+                           RetrieveThenRankRequest, ServingEngine,
+                           TwoStageResult)
+
+L = 16
+N_ITEMS = 500
+TOP_K = 8
+CAND_DIM = 32
+
+
+@pytest.fixture(scope="module")
+def lite_model():
+    pcfg = PinFMConfig(rows=512, n_tables=2, sub_dim=8, seq_len=L,
+                       loss=LossConfig(window=4, downstream_len=8,
+                                       n_negatives=0))
+    bb = smoke_config(get_config("pinfm-20b")).replace(n_layers=2,
+                                                       d_model=64, d_ff=128)
+    cfg = FinetuneConfig(variant="lite-last", seq_len=L)
+    model = PinFMRankingModel.__new__(PinFMRankingModel)
+    model.__init__(pcfg, cfg)
+    model.pinfm = PinFMPretrain(pcfg, bb)
+    model.dcat = DCAT(model.pinfm.body, cfg.dcat)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def item_index(lite_model):
+    model, params = lite_model
+    return IndexBuilder(model, params, batch_size=256).build(0, N_ITEMS)
+
+
+@pytest.fixture(scope="module")
+def ivf_index(item_index):
+    return build_ivf(item_index, 10, seed=0)
+
+
+def _feats(ids):
+    return np.stack([np.random.RandomState(int(i) % 4999).randn(CAND_DIM)
+                     for i in np.asarray(ids)]).astype(np.float32)
+
+
+def _user(seed):
+    r = np.random.RandomState(seed)
+    return (r.randint(0, N_ITEMS, L), r.randint(0, 6, L),
+            r.randint(0, 3, L), r.randn(32).astype(np.float32))
+
+
+def _mk_rank(seed, cand_rng, n_cand=3):
+    i, a, s, uf = _user(seed)
+    ids = cand_rng.randint(0, N_ITEMS, n_cand)
+    return RankRequest(seq_ids=i, seq_actions=a, seq_surfaces=s,
+                       cand_ids=ids, cand_feats=_feats(ids), user_feats=uf)
+
+
+def _mk_retrieve(seed, k=TOP_K, exclude=False, route="exact", nprobe=None):
+    i, a, s, _ = _user(seed)
+    return RetrieveRequest(seq_ids=i, seq_actions=a, seq_surfaces=s, k=k,
+                           exclude_ids=np.unique(i) if exclude else None,
+                           route=route, nprobe=nprobe)
+
+
+def _mk_two_stage(seed, k=TOP_K, exclude=False):
+    i, a, s, uf = _user(seed)
+    return RetrieveThenRankRequest(
+        seq_ids=i, seq_actions=a, seq_surfaces=s, user_feats=uf, k=k,
+        exclude_ids=np.unique(i) if exclude else None)
+
+
+def _mk_worker_engine(lite_model):
+    model, params = lite_model
+    return ServingEngine(model, params, max_unique=4, max_candidates=32,
+                         cache=ContextCache(capacity=256))
+
+
+def _mk_cluster(lite_model, n=2, *, index=None, warm=True, fanout_unique=4,
+                worker_cls=EngineWorker, **worker_kw):
+    workers = {f"w{i}": worker_cls(f"w{i}",
+                                   WorkerCore(_mk_worker_engine(lite_model)),
+                                   **worker_kw)
+               for i in range(n)}
+    router = ClusterRouter(workers, fanout_unique=fanout_unique)
+    if index is not None:
+        router.attach_index(index, k=TOP_K, chunk_rows=256, ivf_nprobe=3)
+        router.attach_features(_feats)
+    if warm:
+        router.warmup()
+    return router
+
+
+def _mk_ref_engine(lite_model, index):
+    model, params = lite_model
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=32,
+                           cache=ContextCache(capacity=256))
+    if index is not None:
+        engine.attach_index(index, k=TOP_K, chunk_rows=256, ivf_nprobe=3)
+        engine.attach_features(_feats)
+    return engine
+
+
+@pytest.fixture(scope="module")
+def ref_engine(lite_model, item_index):
+    engine = _mk_ref_engine(lite_model, item_index)
+    yield engine
+    engine.close()
+
+
+@pytest.fixture(scope="module")
+def cluster2(lite_model, item_index):
+    router = _mk_cluster(lite_model, 2, index=item_index)
+    yield router
+    router.close()
+
+
+def _results(router_or_engine, reqs, timeout=180.0):
+    futs = router_or_engine.submit_many(reqs)
+    return [f.result(timeout) if isinstance(f, ClusterFuture)
+            else f.result() for f in futs]
+
+
+# ---------------------------------------------------------------------------
+# rendezvous membership
+# ---------------------------------------------------------------------------
+
+def test_hrw_balance_and_minimal_movement():
+    """Ownership is roughly balanced, and adding a worker moves ~1/N of
+    the keys — all of them TO the new worker."""
+    keys = [f"user-{i}".encode() for i in range(3000)]
+    m3 = Membership(["w0", "w1", "w2"])
+    before = {k: m3.owner(k) for k in keys}
+    counts = {}
+    for o in before.values():
+        counts[o] = counts.get(o, 0) + 1
+    assert set(counts) == {"w0", "w1", "w2"}
+    assert min(counts.values()) > 1000 / 2        # no worker starved
+
+    m4 = Membership(["w0", "w1", "w2", "w3"])
+    after = {k: m4.owner(k) for k in keys}
+    moved = [k for k in keys if before[k] != after[k]]
+    assert all(after[k] == "w3" for k in moved)   # only TO the joiner
+    assert 0.15 < len(moved) / len(keys) < 0.35   # ~1/4
+
+    # leave: only the dead worker's keys move, and its share drains fully
+    m4.mark_dead("w3")
+    again = {k: m4.owner(k) for k in keys}
+    assert all(again[k] == before[k] for k in keys)   # HRW is history-free
+
+
+@given(st.lists(st.integers(min_value=0, max_value=2 ** 40),
+                min_size=1, max_size=300, unique=True),
+       st.integers(min_value=2, max_value=6))
+@settings(max_examples=30, deadline=None)
+def test_hrw_stability_property(seeds, n_workers):
+    """Property: a join moves keys only onto the joiner; a leave moves
+    only the leaver's keys — everyone else's cache affinity survives."""
+    keys = [str(s).encode() for s in seeds]
+    names = [f"n{i}" for i in range(n_workers)]
+    m = Membership(names)
+    base = {k: m.owner(k) for k in keys}
+
+    m.add("joiner")
+    joined = {k: m.owner(k) for k in keys}
+    assert all(joined[k] == base[k] or joined[k] == "joiner" for k in keys)
+
+    m.mark_dead("joiner")
+    assert all(m.owner(k) == base[k] for k in keys)
+
+    m.mark_dead(names[0])
+    dropped = {k: m.owner(k) for k in keys}
+    for k in keys:
+        if base[k] != names[0]:
+            assert dropped[k] == base[k]
+        else:
+            assert dropped[k] != names[0]
+
+
+def test_membership_no_alive_raises():
+    m = Membership(["a"])
+    m.mark_dead("a")
+    with pytest.raises(RuntimeError):
+        m.owner(b"k")
+
+
+# ---------------------------------------------------------------------------
+# futures
+# ---------------------------------------------------------------------------
+
+def test_cluster_future_first_writer_wins():
+    f = ClusterFuture()
+    seen = []
+    f.add_done_callback(lambda fut: seen.append(fut.result(0)))
+    assert f._set(41)
+    assert not f._set(99)                         # late duplicate dropped
+    assert not f._set_error(RuntimeError("stale"))
+    assert f.result(0) == 41 and seen == [41]
+    late = []
+    f.add_done_callback(lambda fut: late.append(fut.result(0)))
+    assert late == [41]                           # immediate when done
+    with pytest.raises(TimeoutError):
+        ClusterFuture().result(0.01)
+
+
+# ---------------------------------------------------------------------------
+# affinity routing + rank parity
+# ---------------------------------------------------------------------------
+
+def _count_encodes(engine):
+    counts = []
+    orig = engine._encode_rows
+
+    def counting(kind, ids, acts, surfs):
+        counts.append(len(ids))
+        return orig(kind, ids, acts, surfs)
+
+    engine._encode_rows = counting
+    return counts
+
+
+def test_rank_parity_and_cache_affinity(cluster2, lite_model):
+    """Cluster rank == single-engine rank bit-for-bit; the second wave of
+    the same users encodes NOTHING (every repeat user landed back on the
+    worker whose cache holds it)."""
+    rng = np.random.RandomState(0)
+    reqs = [_mk_rank(s, rng) for s in range(10)]
+    owners = {cluster2.owner_of(r) for r in reqs}
+    assert owners == {"w0", "w1"}                 # traffic actually splits
+
+    got = _results(cluster2, reqs)
+    rng2 = np.random.RandomState(0)
+    ref = _mk_ref_engine(lite_model, None).score(
+        [_mk_rank(s, rng2) for s in range(10)])
+    for a, b in zip(got, ref):
+        np.testing.assert_array_equal(a, b)
+
+    cluster2.flush()
+    counts = {n: _count_encodes(w.core.engine)
+              for n, w in cluster2._workers.items()}
+    rng3 = np.random.RandomState(0)
+    again = _results(cluster2, [_mk_rank(s, rng3) for s in range(10)])
+    for a, b in zip(again, ref):
+        np.testing.assert_array_equal(a, b)
+    assert all(not c for c in counts.values()), counts   # all cache hits
+
+
+# ---------------------------------------------------------------------------
+# retrieval fan-out parity
+# ---------------------------------------------------------------------------
+
+def test_exact_fanout_matches_single_engine(cluster2, ref_engine):
+    """Scatter/gather over 2 corpus shards == one engine over the whole
+    corpus, bit for bit — including filters, per-request k, and dedup of
+    identical (user, filter) rows."""
+    reqs = ([_mk_retrieve(s) for s in (20, 21, 22, 23, 24)] +
+            [_mk_retrieve(s, exclude=True) for s in (20, 25)] +
+            [_mk_retrieve(26, k=4), _mk_retrieve(20)])   # dup of seed 20
+    got = _results(cluster2, reqs)
+    ref = ref_engine.retrieve(reqs)
+    for (ids_a, sc_a), (ids_b, sc_b) in zip(got, ref):
+        np.testing.assert_array_equal(ids_a, ids_b)
+        np.testing.assert_array_equal(sc_a, sc_b)
+    assert cluster2.stats()["fanout_coalesced"] >= 1
+
+
+def test_ivf_fanout_matches_single_engine(lite_model, ivf_index):
+    """IVF fan-out: the router plans probes on the full index, workers
+    score their shard's slices, and the merged result matches a single
+    engine attach-for-attach across the nprobe level ladder."""
+    router = _mk_cluster(lite_model, 2, index=ivf_index, warm=False)
+    ref = _mk_ref_engine(lite_model, ivf_index)
+    try:
+        reqs = ([_mk_retrieve(s, route="ivf") for s in (30, 31, 32)] +
+                [_mk_retrieve(33, route="ivf", nprobe=5),
+                 _mk_retrieve(34, route="ivf", nprobe=10),
+                 _mk_retrieve(30, route="ivf", exclude=True),
+                 _mk_retrieve(35, route="ivf", k=4)])
+        got = _results(router, reqs)
+        expect = ref.retrieve(reqs)
+        for (ids_a, sc_a), (ids_b, sc_b) in zip(got, expect):
+            np.testing.assert_array_equal(ids_a, ids_b)
+            np.testing.assert_array_equal(sc_a, sc_b)
+    finally:
+        router.close()
+        ref.close()
+
+
+def test_two_stage_decomposed_matches_fused(cluster2, ref_engine):
+    """Decomposed two-stage (fan-out retrieval -> owner-ranked second
+    stage) composes the same TwoStageResult as the engine's fused lane."""
+    reqs = [_mk_two_stage(s) for s in (40, 41)] + \
+           [_mk_two_stage(42, exclude=True)]
+    got = _results(cluster2, reqs)
+    ref = _results(ref_engine, reqs)
+    for a, b in zip(got, ref):
+        assert isinstance(a, TwoStageResult)
+        np.testing.assert_array_equal(a.item_ids, b.item_ids)
+        np.testing.assert_array_equal(a.retrieval_scores,
+                                      b.retrieval_scores)
+        np.testing.assert_array_equal(a.probs, b.probs)
+
+
+def test_zero_compiles_after_warmup(cluster2):
+    """After ``router.warmup()``, mixed post-warmup traffic compiles
+    NOTHING anywhere: every worker engine's pinned counter stays 0 and
+    the shard scorers' compile counts are unchanged."""
+    shard_before = {n: w.core.shard.compiles
+                    for n, w in cluster2._workers.items()}
+    rng = np.random.RandomState(5)
+    reqs = ([_mk_rank(s, rng) for s in (50, 51)] +
+            [_mk_retrieve(52), _mk_retrieve(53, exclude=True),
+             _mk_retrieve(54, k=4), _mk_two_stage(55)])
+    for r in _results(cluster2, reqs):
+        assert r is not None
+    for n, w in cluster2._workers.items():
+        assert w.call("compiles_after_warmup") == 0, n
+        assert w.core.shard.compiles == shard_before[n], n
+
+
+# ---------------------------------------------------------------------------
+# death + drain
+# ---------------------------------------------------------------------------
+
+class _SlowWorker(EngineWorker):
+    """Holds each batch long enough for a kill to land mid-flight."""
+
+    def __init__(self, name, core, delay=0.03):
+        self._delay = delay
+        super().__init__(name, core)
+
+    def _exec_batch(self, requests):
+        time.sleep(self._delay)
+        return super()._exec_batch(requests)
+
+
+def test_kill_one_worker_drains_and_reroutes(lite_model, item_index,
+                                             ref_engine):
+    """The acceptance drain test: kill a worker with work queued and in
+    flight — every future resolves (requests are pure, so re-routing to
+    the survivor is safe; first-writer-wins absorbs the race with any
+    late result), the corpus re-shards onto the survivor, and post-death
+    traffic still matches the single engine."""
+    router = _mk_cluster(lite_model, 2, warm=False, index=item_index,
+                         worker_cls=_SlowWorker)
+    try:
+        rng = np.random.RandomState(3)
+        rank_reqs = [_mk_rank(s, rng) for s in range(10)]
+        ret_reqs = [_mk_retrieve(100 + s) for s in range(4)]
+        futs = router.submit_many(rank_reqs + ret_reqs)
+        victim = router.owner_of(rank_reqs[0])
+        survivor = "w1" if victim == "w0" else "w0"
+        time.sleep(0.01)                          # let batches start
+        router.kill_worker(victim)
+
+        got = [f.result(180.0) for f in futs]     # NEVER hangs
+        ref = (ref_engine.score(rank_reqs) + ref_engine.retrieve(ret_reqs))
+        for a, b in zip(got[:10], ref[:10]):
+            np.testing.assert_array_equal(a, b)
+        for (ids_a, sc_a), (ids_b, sc_b) in zip(got[10:], ref[10:]):
+            np.testing.assert_array_equal(ids_a, ids_b)
+            np.testing.assert_array_equal(sc_a, sc_b)
+
+        snap = router.stats()
+        assert snap["workers"][victim] == "dead"
+        assert snap["n_alive"] == 1 and snap["deaths"] == 1
+        assert not router._workers[victim].healthy()
+        assert router.check_health() == []        # already handled
+
+        # the dead worker's key range fell to the survivor; fresh traffic
+        # (1-shard corpus included) still matches the single engine
+        assert all(router.owner_of(r) == survivor
+                   for r in rank_reqs + ret_reqs)
+        again = _results(router, ret_reqs + rank_reqs[:3])
+        for (ids_a, sc_a), (ids_b, sc_b) in zip(again[:4], ref[10:]):
+            np.testing.assert_array_equal(ids_a, ids_b)
+            np.testing.assert_array_equal(sc_a, sc_b)
+        for a, b in zip(again[4:], ref[:3]):
+            np.testing.assert_array_equal(a, b)
+    finally:
+        router.close()
+
+
+def test_all_workers_dead_fails_typed(lite_model):
+    """With nobody left, submission fails with WorkerLostError — the
+    typed never-hang terminal, not a timeout."""
+    router = _mk_cluster(lite_model, 1, warm=False)
+    try:
+        router.kill_worker("w0")
+        fut = router.submit(_mk_rank(0, np.random.RandomState(0)))
+        with pytest.raises(WorkerLostError):
+            fut.result(10.0)
+    finally:
+        router.close()
+
+
+def test_join_rebalances_and_reshards(lite_model, item_index, ref_engine):
+    """add_worker: the joiner takes over only its rendezvous share, the
+    corpus re-cuts to 3 shards (one possibly short), and retrieval stays
+    bit-identical."""
+    router = _mk_cluster(lite_model, 2, warm=False, index=item_index)
+    try:
+        keys = [f"u{i}".encode() for i in range(200)]
+        before = {k: router._membership.owner(k) for k in keys}
+        router.add_worker(
+            "w2", EngineWorker("w2",
+                               WorkerCore(_mk_worker_engine(lite_model))))
+        after = {k: router._membership.owner(k) for k in keys}
+        moved = [k for k in keys if before[k] != after[k]]
+        assert moved and all(after[k] == "w2" for k in moved)
+        assert len(router._shard_order) == 3
+
+        reqs = [_mk_retrieve(s) for s in (60, 61, 62)] + \
+               [_mk_retrieve(63, exclude=True)]
+        got = _results(router, reqs)
+        ref = ref_engine.retrieve(reqs)
+        for (ids_a, sc_a), (ids_b, sc_b) in zip(got, ref):
+            np.testing.assert_array_equal(ids_a, ids_b)
+            np.testing.assert_array_equal(sc_a, sc_b)
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# merged metrics
+# ---------------------------------------------------------------------------
+
+def test_merged_metrics_per_worker_labels(cluster2):
+    """merged_metrics() folds the router's and every in-process engine's
+    registry into one, each series tagged with its worker."""
+    _results(cluster2, [_mk_retrieve(70), _mk_rank(71,
+                                                   np.random.RandomState(1))])
+    reg = cluster2.merged_metrics()
+    snap = reg.snapshot()
+    for who in ('worker="router"', 'worker="w0"', 'worker="w1"'):
+        assert any(who in k for k in snap), who
+    routed = [k for k in snap if "cluster_requests_total" in k
+              and 'lane="rank"' in k]
+    assert routed and all('worker="router"' in k for k in routed)
+    text = reg.prometheus_text()
+    assert "cluster_requests_total" in text
+    assert 'worker="w0"' in text

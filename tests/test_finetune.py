@@ -1,4 +1,4 @@
-"""Fine-tuning ranking model: variants, cold-start techniques, router."""
+"""Fine-tuning ranking model: variants, cold-start techniques, serving engine."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -116,13 +116,13 @@ def test_hit_at_k():
     assert float(hit_at_k(scores, labels, k=3)) == pytest.approx(0.5)
 
 
-def test_router_matches_direct_scoring(setup):
-    from repro.serving.router import InferenceRouter, RankRequest
+def test_engine_matches_direct_scoring(setup):
+    from repro.serving import RankRequest, ServingEngine
     pcfg, bb = setup
     cfg = FinetuneConfig(variant="graphsage-lt", seq_len=L)
     model = _small_model(pcfg, bb, cfg)
     params = model.init(jax.random.PRNGKey(0))
-    router = InferenceRouter(model, params, max_unique=4, max_candidates=8)
+    engine = ServingEngine(model, params, max_unique=4, max_candidates=8)
     rng = np.random.RandomState(0)
     seq = rng.randint(0, 1000, L)
     reqs = [RankRequest(seq_ids=seq,
@@ -136,24 +136,26 @@ def test_router_matches_direct_scoring(setup):
     # identical sequences -> dedup to 1 unique user
     reqs[1].seq_actions = reqs[0].seq_actions
     reqs[1].seq_surfaces = reqs[0].seq_surfaces
-    out = router.score(reqs)
+    out = engine.score(reqs)
     assert len(out) == 2 and out[0].shape == (3, 3)
-    assert router.stats[-1]["unique_users"] == 1
+    assert engine.call_stats[-1]["unique_users"] == 1
     assert (out[0] >= 0).all() and (out[0] <= 1).all()
 
 
-def test_router_user_embedding_cache(setup):
+def test_engine_user_embedding_cache(setup):
     """Late-fusion serving cache: cached path == uncached path; repeat
     sequences hit the LRU and skip the transformer."""
-    from repro.serving.router import (InferenceRouter, RankRequest,
-                                      UserEmbeddingCache)
+    from repro.serving import ContextCache, RankRequest, ServingEngine
     pcfg, bb = setup
     cfg = FinetuneConfig(variant="lite-last", seq_len=L)
     model = _small_model(pcfg, bb, cfg)
     params = model.init(jax.random.PRNGKey(0))
-    cache = UserEmbeddingCache(capacity=16)
-    router = InferenceRouter(model, params, max_unique=4, max_candidates=8,
-                             user_cache=cache)
+    cache = ContextCache(capacity=16)
+    cached = ServingEngine(
+        model, params, max_unique=4, max_candidates=8, cache=cache,
+        key_fn=lambda r: ContextCache.key(r.seq_ids, r.seq_actions))
+    direct_engine = ServingEngine(model, params, max_unique=4,
+                                  max_candidates=8)
     rng = np.random.RandomState(0)
 
     def mk(seed):
@@ -166,13 +168,13 @@ def test_router_user_embedding_cache(setup):
                            user_feats=r.randn(32).astype(np.float32))
 
     reqs = [mk(1), mk(2)]
-    out1 = router.score_cached(reqs)
+    out1 = cached.score(reqs)
     assert cache.misses == 2 and cache.hits == 0
     # same users again -> pure cache hits, same scores
-    out2 = router.score_cached(reqs)
+    out2 = cached.score(reqs)
     assert cache.hits == 2
     np.testing.assert_allclose(out1[0], out2[0], atol=1e-6)
     # cached path matches the monolithic forward
-    direct = router.score(reqs)
+    direct = direct_engine.score(reqs)
     np.testing.assert_allclose(out1[0], direct[0], atol=1e-4)
     np.testing.assert_allclose(out1[1], direct[1], atol=1e-4)

@@ -442,3 +442,62 @@ def test_engine_obs_export_files(lite_model, item_index, tmp_path):
         capture_output=True, text=True)
     assert r.returncode == 0, r.stderr
     assert "named tracks" in r.stdout and "histogram series" in r.stdout
+
+def test_dump_obs_merge_quantiles_match_histogram_merge(tmp_path):
+    """``dump_obs --merge`` over per-worker snapshot JSONs recomputes
+    histogram quantiles exactly the way ``Histogram.merge`` + ``quantile``
+    would — including an overflow rank reporting the top bound (a sample
+    sits in the top-bound bucket, so the layout's top bound is observed)
+    — and sums counters into an unlabelled aggregate series next to the
+    ``worker=``-labelled per-input series."""
+    import os
+    import subprocess
+    import sys
+    waves = {"w0": ((1.0, 2.0, 5.0, 40.0, 100.0, 5000.0), 3),
+             "w1": ((3.0, 3.0, 8.0, 70.0, 9999.0), 4)}
+    hists, paths = {}, []
+    for worker, (vals, n_reqs) in waves.items():
+        reg = MetricsRegistry()
+        h = reg.histogram("serving_lat_ms", lo=1.0, hi=100.0, per_decade=2,
+                          lane="rank")
+        hists[worker] = h
+        for v in vals:
+            h.record(v)
+        reg.counter("serving_requests_total").inc(n_reqs)
+        p = tmp_path / f"{worker}.json"
+        p.write_text(json.dumps(reg.snapshot()))
+        paths.append(str(p))
+    merged = hists["w0"].merge(hists["w1"])
+    tool = os.path.join(os.path.dirname(__file__), "..", "tools",
+                        "dump_obs.py")
+    out = str(tmp_path / "all.prom")
+    r = subprocess.run([sys.executable, tool, "--merge", *paths, "-o", out],
+                       capture_output=True, text=True)
+    assert r.returncode == 0, r.stderr
+    samples = {}
+    for line in open(out):
+        if line.strip() and not line.startswith("#"):
+            key, value = line.rsplit(" ", 1)
+            samples[key] = float(value)
+    # aggregate histogram == Histogram.merge, quantiles and all; the p99
+    # rank lands in the overflow bucket on both sides (-> top bound)
+    base = 'repro_serving_lat_ms'
+    assert samples[f'{base}_count{{lane="rank"}}'] == merged.count
+    assert samples[f'{base}_sum{{lane="rank"}}'] == pytest.approx(merged.sum)
+    assert samples[f'{base}_p50{{lane="rank"}}'] == merged.quantile(0.5)
+    assert samples[f'{base}_p99{{lane="rank"}}'] == merged.quantile(0.99)
+    assert merged.quantile(0.99) == merged.bounds[-1]       # overflow rank
+    # per-worker series keep each input's own distribution
+    for worker, h in hists.items():
+        lk = f'{{lane="rank",worker="{worker}"}}'
+        assert samples[f'{base}_count{lk}'] == h.count
+        assert samples[f'{base}_p50{lk}'] == h.quantile(0.5)
+    # counters: aggregate sums, per-worker series carry their own totals
+    assert samples["repro_serving_requests_total"] == 7
+    assert samples['repro_serving_requests_total{worker="w0"}'] == 3
+    assert samples['repro_serving_requests_total{worker="w1"}'] == 4
+    # the exposition round-trips through the tool's own validator
+    r2 = subprocess.run([sys.executable, tool, out],
+                        capture_output=True, text=True)
+    assert r2.returncode == 0, r2.stderr
+    assert "histogram series" in r2.stdout

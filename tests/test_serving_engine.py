@@ -1,5 +1,5 @@
 """Serving engine (paper §4.3): batch planner, shape buckets, executor
-registry, context-KV cache, micro-batcher.
+registry, context-KV cache, request scheduler.
 
 Covers the acceptance points of the engine refactor:
   * vectorized Ψ/first_of in the planner == the naive per-unique argmax
@@ -10,8 +10,8 @@ Covers the acceptance points of the engine refactor:
   * zero fresh compiles on a mixed-shape request stream after warmup();
   * depth-2 pipelined score == pipeline_depth=1 BIT-FOR-BIT, with the
     pack memo / rotated-KV layout riding the same contract;
-  * MicroBatcher under concurrency: 8-thread submit hammer, background
-    flusher, and the result() double-flush race.
+  * RequestScheduler under concurrency: 8-thread submit hammer,
+    background flusher, and the result() double-flush race.
 """
 import threading
 import time
@@ -29,11 +29,20 @@ from repro.core.pretrain import PinFMConfig, PinFMPretrain
 from repro.models.config import get_config
 from repro.serving.context_cache import ContextCache
 from repro.serving.engine import ServingEngine
-from repro.serving.microbatch import MicroBatcher
 from repro.serving.plan import (BucketLadder, RankRequest, build_plan,
                                 split_requests)
+from repro.serving.scheduler import RequestScheduler
 
 L = 16
+
+
+def _mk_scheduler(engine, **kw):
+    """A RequestScheduler over an engine's mixed-workload flush — the
+    machinery ``engine.submit`` owns, driven directly.  Falls back to
+    ``score`` for stand-ins that only implement it."""
+    flush_fn = getattr(engine, "_flush_requests", None) or engine.score
+    kw.setdefault("max_candidates", engine.max_candidates)
+    return RequestScheduler(flush_fn, **kw)
 
 
 def _make_model(variant, **fkw):
@@ -459,10 +468,10 @@ def test_uncached_engine_warmup_covers_rank_executors(early_model):
 
 
 # ---------------------------------------------------------------------------
-# micro-batcher
+# request scheduler, driven directly over the engine flush
 # ---------------------------------------------------------------------------
 
-def test_microbatcher_coalesces(early_model):
+def test_scheduler_coalesces(early_model):
     model, params = early_model
     engine = ServingEngine(model, params, max_unique=4, max_candidates=16,
                            cache=ContextCache(16))
@@ -470,7 +479,7 @@ def test_microbatcher_coalesces(early_model):
     reqs = [_mk_request(s, rng) for s in (1, 2, 1, 3)]
     ref = ServingEngine(model, params, max_unique=4, max_candidates=16,
                         cache=ContextCache(16)).score(reqs)
-    mb = MicroBatcher(engine, max_requests=4)
+    mb = _mk_scheduler(engine, max_requests=4)
     tickets = [mb.submit(r) for r in reqs]
     assert all(t.done() for t in tickets)                # auto-flushed at 4
     assert mb.flushes == 1 and mb.coalesced == 4
@@ -483,12 +492,12 @@ def test_microbatcher_coalesces(early_model):
     assert mb.flushes == 2
 
 
-def test_microbatcher_propagates_engine_errors(early_model):
+def test_scheduler_propagates_engine_errors(early_model):
     """A failing engine.score must fail the tickets, not orphan them (a
     caller blocked in result() would hang forever)."""
     model, params = early_model
     engine = ServingEngine(model, params, max_unique=4, max_candidates=16)
-    mb = MicroBatcher(engine, max_requests=8)
+    mb = _mk_scheduler(engine, max_requests=8)
     rng = np.random.RandomState(13)
     t = mb.submit(_mk_request(1, rng, graphsage=False))  # variant needs gs
     with pytest.raises(ValueError, match="graphsage"):
@@ -535,7 +544,7 @@ def test_ticket_result_no_redundant_flush_while_in_flight():
     after it)."""
     gate = threading.Event()
     eng = _FakeEngine(gate=gate)
-    mb = MicroBatcher(eng, max_requests=64)
+    mb = _mk_scheduler(eng, max_requests=64)
     t1 = mb.submit(_tiny_request(1, 101))
     flusher = threading.Thread(target=mb.flush)
     flusher.start()                    # picks t1 up, blocks inside score()
@@ -564,13 +573,13 @@ def test_ticket_result_no_redundant_flush_while_in_flight():
     assert eng.calls == 2 and mb.flushes == 2
 
 
-def test_microbatcher_threaded_submit_hammer():
+def test_scheduler_threaded_submit_hammer():
     """8 threads hammer submit(); every ticket must resolve exactly once
     with ITS OWN request's result (no cross-wiring under concurrent
     flushes), and per-thread submission order is preserved in the
     tickets each thread holds."""
     eng = _FakeEngine(delay=0.001)
-    mb = MicroBatcher(eng, max_requests=8)
+    mb = _mk_scheduler(eng, max_requests=8)
     n_threads, per_thread = 8, 25
     results = [None] * n_threads
     errors = []
@@ -611,7 +620,7 @@ def test_background_flusher_resolves_without_result(early_model):
     reqs = [_mk_request(s, rng) for s in (1, 2)]
     ref = ServingEngine(model, params, max_unique=4,
                         max_candidates=16).score(reqs)
-    with MicroBatcher(engine, max_requests=32, max_wait_ms=5.0) as mb:
+    with _mk_scheduler(engine, max_requests=32, max_wait_ms=5.0) as mb:
         tickets = [mb.submit(r) for r in reqs]
         assert all(t._done.wait(30.0) for t in tickets)   # no manual flush
         for t, r in zip(tickets, ref):
@@ -632,7 +641,7 @@ def test_background_flusher_survives_engine_errors():
             return super().score(requests)
 
     eng = _Flaky()
-    with MicroBatcher(eng, max_requests=64, max_wait_ms=2.0) as mb:
+    with _mk_scheduler(eng, max_requests=64, max_wait_ms=2.0) as mb:
         bad = mb.submit(_tiny_request(1, 7))
         assert bad._done.wait(30.0)
         with pytest.raises(RuntimeError, match="boom"):

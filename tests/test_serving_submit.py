@@ -1,7 +1,6 @@
 """The unified async serving API (this PR's tentpole): one ``submit()``
 front door, mixed-workload flushes with a shared encode pass, the fused
-retrieve->rank lane, the read-atomic ``engine.stats()`` snapshot, and the
-deprecation shims.
+retrieve->rank lane, and the read-atomic ``engine.stats()`` snapshot.
 
 Acceptance points covered:
   * ``RetrieveThenRankRequest`` via ``submit()`` == sequential
@@ -11,8 +10,8 @@ Acceptance points covered:
     overlapping users encodes each unique user exactly once and matches
     the per-lane sequential paths;
   * ``score()``/``retrieve()`` are bit-identical shims over
-    ``submit_many``; ``MicroBatcher``/``InferenceRouter`` forward with a
-    one-time DeprecationWarning;
+    ``submit_many``; a ``RequestScheduler`` driven directly over the
+    engine flush matches them too;
   * ``repro.serving.__all__`` is pinned;
   * concurrent ``submit`` + ``stats()`` readers never observe torn or
     negative counters.
@@ -126,15 +125,14 @@ def _count_encodes(engine):
 # ---------------------------------------------------------------------------
 
 def test_public_surface_pinned():
-    """The serving package exports exactly the typed requests, the engine
-    (+ front-door collaborators), and the deprecation shims."""
+    """The serving package exports exactly the typed requests and the
+    engine (+ front-door collaborators) — the PR-1-era shims are gone."""
     import repro.serving as serving
     assert serving.__all__ == [
         "RankRequest", "RetrieveRequest", "RetrieveThenRankRequest",
         "GenerateRequest", "TwoStageResult",
         "ServingEngine", "ContextCache", "Future",
         "LanePolicy", "ShedError",
-        "MicroBatcher", "Ticket", "InferenceRouter", "UserEmbeddingCache",
     ]
     for name in serving.__all__:
         assert getattr(serving, name) is not None
@@ -146,7 +144,8 @@ def test_unknown_request_type_rejected(lite_model, item_index):
     engine = _mk_engine(lite_model, item_index, warm=False, attach=False)
     with pytest.raises(TypeError, match="not a serving request type"):
         engine.submit(object())
-    # shim traffic (MicroBatcher bypasses submit) fails at the flush gate
+    # traffic that bypasses submit (a custom scheduler driving the flush
+    # directly) fails at the flush gate instead
     with pytest.raises(TypeError, match="not a serving request type"):
         engine._flush_requests([object()])
 
@@ -466,55 +465,30 @@ def test_stats_snapshot_concurrent_submits(lite_model, item_index):
 
 
 # ---------------------------------------------------------------------------
-# deprecation shims
+# RequestScheduler driven directly over the engine flush
 # ---------------------------------------------------------------------------
 
-def test_microbatcher_shim_warns_and_matches(lite_model, item_index):
-    """MicroBatcher forwards to the engine's mixed-workload flush (the
-    submit_many path): identical results, one DeprecationWarning."""
-    import repro.serving.microbatch as mb_mod
-    from repro.serving import _deprecation
+def test_direct_scheduler_matches_batch_shims(lite_model, item_index):
+    """A RequestScheduler wired straight to ``engine._flush_requests``
+    (the machinery ``submit`` owns, minus the front door) produces
+    bit-identical results for rank AND retrieval traffic — the coverage
+    the retired MicroBatcher shim test used to pin."""
+    from repro.serving.scheduler import RequestScheduler
     rng = np.random.RandomState(5)
     reqs = [_mk_rank(s, rng) for s in (1, 2, 1, 3)]
-    ref = _mk_engine(lite_model, item_index, warm=False, attach=False) \
-        .score(reqs)
-    engine = _mk_engine(lite_model, item_index, warm=False, attach=False)
-    _deprecation._warned.discard("microbatch")
-    with pytest.warns(DeprecationWarning, match="engine.submit"):
-        mb = mb_mod.MicroBatcher(engine, max_requests=64)
-    tickets = [mb.submit(r) for r in reqs]
-    mb.flush()
-    for t, r in zip(tickets, ref):
-        np.testing.assert_array_equal(t.result(), r)
-    assert mb.flushes == 1 and mb.coalesced == 4
-    # warning fires once per process, not per construction
-    import warnings as _warnings
-    with _warnings.catch_warnings(record=True) as record:
-        _warnings.simplefilter("always")
-        mb_mod.MicroBatcher(engine, max_requests=64)
-    assert not any(issubclass(w.category, DeprecationWarning)
-                   for w in record)
-    # a MicroBatcher can even carry retrieval traffic now (typed lanes)
-    engine.attach_index(
-        IndexBuilder(*lite_model, batch_size=256).build(0, N_ITEMS),
-        k=TOP_K, chunk_rows=256)
-    ids, scores = mb.submit(_mk_retrieve(1)).result()
-    assert len(ids) == TOP_K
-
-
-def test_inference_router_shim_warns_and_matches(lite_model, item_index):
-    import repro.serving.router as router_mod
-    from repro.serving import _deprecation
-    model, params = lite_model
-    rng = np.random.RandomState(6)
-    reqs = [_mk_rank(s, rng) for s in (1, 2, 1)]
-    ref = _mk_engine(lite_model, item_index, warm=False, attach=False) \
-        .score(reqs)
-    _deprecation._warned.discard("router")
-    with pytest.warns(DeprecationWarning, match="submit"):
-        router = router_mod.InferenceRouter(model, params, max_unique=4,
-                                            max_candidates=32)
-    out = router.score(reqs)
-    for a, b in zip(out, ref):
-        np.testing.assert_array_equal(a, b)
-    assert router.stats[-1]["unique_users"] == 2
+    ref_engine = _mk_engine(lite_model, item_index, warm=False)
+    ref = ref_engine.score(reqs)
+    engine = _mk_engine(lite_model, item_index, warm=False)
+    sched = RequestScheduler(engine._flush_requests, max_requests=64,
+                             max_candidates=engine.max_candidates)
+    futures = [sched.submit(r) for r in reqs]
+    sched.flush()
+    for f, r in zip(futures, ref):
+        np.testing.assert_array_equal(f.result(), r)
+    assert sched.flushes == 1 and sched.coalesced == 4
+    # retrieval rides the same typed-lane flush
+    ids_ref, scores_ref = ref_engine.retrieve([_mk_retrieve(1)])[0]
+    ids, scores = sched.submit(_mk_retrieve(1)).result()
+    np.testing.assert_array_equal(ids, ids_ref)
+    np.testing.assert_array_equal(scores, scores_ref)
+    sched.close()

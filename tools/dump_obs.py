@@ -11,16 +11,32 @@ files (``engine.obs.export_prometheus``), sniffing the format per file:
     histogram label set with count / p50 / p99 (read from the exported
     ``_p50``/``_p99`` gauges).
 
+With ``--merge``, the inputs are instead per-worker metrics SNAPSHOT
+JSON files (``MetricsRegistry.snapshot()`` / a cluster worker's
+``obs_snapshot``) and the tool emits ONE Prometheus text exposition on
+stdout (``-o FILE`` also writes it): every input's series re-labelled
+with ``worker="<file stem>"`` plus an unlabelled aggregate series per
+metric (counters/gauges sum; histogram bucket counts add, quantiles
+recomputed exactly from the merged buckets the way
+``repro.obs.metrics.Histogram`` computes them — the pXX is the upper
+bound of the bucket holding rank ``ceil(q*count)``, and a rank landing
+in the overflow bucket reports the top observed bound).
+
 Exits non-zero when a file is malformed — a trace that is not loadable
 trace-event JSON (missing ``traceEvents``, events missing ph/ts, a
-complete event missing dur) or a metrics file with an unparseable
-sample line — so CI can gate on "the exporters produce artifacts the
-tools can actually consume":
+complete event missing dur), a metrics file with an unparseable
+sample line, or a ``--merge`` snapshot that is not a flat
+name->scalar|histogram-dict mapping — so CI can gate on "the exporters
+produce artifacts the tools can actually consume":
 
     python examples/serve_two_stage.py --smoke --trace-out /tmp/t.json
     python tools/dump_obs.py /tmp/t.json /tmp/t.json.prom
+    python tools/dump_obs.py --merge /tmp/w0.json /tmp/w1.json -o /tmp/all.prom
 """
 import json
+import math
+import os
+import re
 import sys
 from collections import defaultdict
 
@@ -112,10 +128,173 @@ def dump_prometheus(path: str, text: str) -> None:
               f"p99={parts.get('_p99', 'n/a')}")
 
 
+# ---------------------------------------------------------------------------
+# --merge: per-worker snapshot JSONs -> one labelled + aggregated exposition
+# ---------------------------------------------------------------------------
+
+_LABEL_RE = re.compile(r'(\w+)="([^"]*)"')
+
+
+def _parse_series_key(path: str, key: str):
+    """``name{k="v",...}`` -> (name, ((k, v), ...)) — the snapshot key
+    format ``MetricsRegistry.snapshot`` writes."""
+    name, brace, rest = key.partition("{")
+    if not name or any(c in name for c in "{} \t"):
+        fail(f"{path}: bad series key {key!r}")
+    if not brace:
+        return name, ()
+    if not rest.endswith("}"):
+        fail(f"{path}: bad series key {key!r}")
+    return name, tuple(_LABEL_RE.findall(rest[:-1]))
+
+
+def _fmt_labels(labels) -> str:
+    if not labels:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in labels) + "}"
+
+
+class _MergedHist:
+    """Histogram folded from snapshot bucket dicts — per-bound counts
+    over the union of observed bounds, plus the overflow remainder."""
+
+    def __init__(self):
+        self.per_bound = defaultdict(int)   # float bound -> bucket count
+        self.overflow = 0
+        self.count = 0
+        self.sum = 0.0
+
+    def add(self, path: str, snap: dict) -> None:
+        try:
+            count, total = int(snap["count"]), float(snap["sum"])
+            buckets = snap["buckets"]
+            bounds = [(float(le), int(cum)) for le, cum in buckets.items()]
+        except (KeyError, TypeError, ValueError):
+            fail(f"{path}: bad histogram snapshot {snap!r}")
+        bounds.sort()
+        prev = 0
+        for b, cum in bounds:
+            if cum < prev:
+                fail(f"{path}: non-cumulative histogram buckets {snap!r}")
+            self.per_bound[b] += cum - prev
+            prev = cum
+        if count < prev:
+            fail(f"{path}: histogram count {count} < bucket total {prev}")
+        self.overflow += count - prev
+        self.count += count
+        self.sum += total
+
+    def quantile(self, q: float) -> float:
+        """Exactly ``Histogram.quantile`` over the merged buckets: the
+        inclusive upper bound of the bucket holding rank ceil(q*count);
+        an overflow rank reports the top observed bound."""
+        if self.count == 0:
+            return float("nan")
+        rank = max(1, math.ceil(q * self.count))
+        bounds = sorted(self.per_bound)
+        cum = 0
+        for b in bounds:
+            cum += self.per_bound[b]
+            if cum >= rank:
+                return b
+        return bounds[-1] if bounds else float("nan")
+
+    def emit(self, full: str, labels, lines) -> None:
+        ls = _fmt_labels(labels)
+        cum = 0
+        for b in sorted(self.per_bound):
+            c = self.per_bound[b]
+            cum += c
+            if c:
+                lines.append(f"{full}_bucket"
+                             f"{_fmt_labels(labels + (('le', repr(b)),))} "
+                             f"{cum}")
+        lines.append(f"{full}_bucket{_fmt_labels(labels + (('le', '+Inf'),))} "
+                     f"{self.count}")
+        lines.append(f"{full}_sum{ls} {repr(self.sum)}")
+        lines.append(f"{full}_count{ls} {self.count}")
+        if self.count:
+            lines.append(f"{full}_p50{ls} {repr(float(self.quantile(0.5)))}")
+            lines.append(f"{full}_p99{ls} {repr(float(self.quantile(0.99)))}")
+
+
+def merge_snapshots(paths):
+    """-> Prometheus text: each input's series labelled
+    ``worker="<stem>"`` + one aggregate (unlabelled) series per metric."""
+    series = {}          # (name, labels) -> scalar | _MergedHist
+    order = []
+    kinds = {}           # name -> "histogram" | "untyped"
+
+    def slot(name, labels, is_hist):
+        key = (name, labels)
+        if key not in series:
+            series[key] = _MergedHist() if is_hist else 0
+            order.append(key)
+        return key
+
+    for path in paths:
+        try:
+            with open(path) as f:
+                doc = json.load(f)
+        except OSError as e:
+            fail(f"{path}: {e}")
+        except json.JSONDecodeError as e:
+            fail(f"{path}: invalid JSON: {e}")
+        if not isinstance(doc, dict):
+            fail(f"{path}: snapshot is not an object")
+        worker = os.path.splitext(os.path.basename(path))[0]
+        for key, value in doc.items():
+            name, labels = _parse_series_key(path, key)
+            is_hist = isinstance(value, dict)
+            if not is_hist and not isinstance(value, (int, float)):
+                fail(f"{path}: {key!r}: value is neither scalar nor "
+                     f"histogram dict: {value!r}")
+            if kinds.setdefault(name, "histogram" if is_hist
+                                else "untyped") != (
+                    "histogram" if is_hist else "untyped"):
+                fail(f"{path}: {name!r} is a histogram in one snapshot "
+                     "and a scalar in another")
+            for lab in (labels + (("worker", worker),), labels):
+                k = slot(name, lab, is_hist)
+                if is_hist:
+                    series[k].add(path, value)
+                else:
+                    series[k] += value
+    lines = []
+    for name in sorted({n for n, _ in order}):
+        lines.append(f"# TYPE {name} {kinds[name]}")
+        for key in order:
+            if key[0] != name:
+                continue
+            m = series[key]
+            if isinstance(m, _MergedHist):
+                m.emit(name, key[1], lines)
+            else:
+                lines.append(f"{name}{_fmt_labels(key[1])} "
+                             f"{m if isinstance(m, int) else repr(float(m))}")
+    return "\n".join(lines) + ("\n" if lines else "")
+
+
 def main(argv):
     if not argv:
         print(__doc__)
         return 2
+    if argv[0] == "--merge":
+        rest, out = argv[1:], None
+        if "-o" in rest:
+            i = rest.index("-o")
+            if i + 1 >= len(rest):
+                fail("-o needs a path")
+            out = rest[i + 1]
+            rest = rest[:i] + rest[i + 2:]
+        if not rest:
+            fail("--merge needs at least one snapshot JSON")
+        text = merge_snapshots(rest)
+        if out is not None:
+            with open(out, "w") as f:
+                f.write(text)
+        sys.stdout.write(text)
+        return 0
     for path in argv:
         try:
             with open(path) as f:
