@@ -55,6 +55,12 @@ from repro.serving.plan import (BucketLadder, GenerateRequest, RankRequest,
                                 TwoStageResult, lane_of, request_key)
 
 
+class _ReshardRetry(Exception):
+    """Internal: a concurrent reshard (join/leave/death) invalidated a
+    fan-out group's shard-layout snapshot mid-scatter — retry the group
+    against the new layout.  Never escapes the router."""
+
+
 def _user_key(request, key_fn) -> bytes:
     """The affinity key: the engine cache key for sequence-bearing
     requests, prompt bytes for generate."""
@@ -132,6 +138,9 @@ class ClusterRouter:
         self._n_tail = 0
         self._shard_order: List[str] = []   # worker name per ascending shard
         self._rows_per_shard = 0
+        self._shard_gen = 0     # bumped by every reshard; fan-out groups
+        # snapshot it and retry if it moved mid-scatter (a join/leave
+        # would otherwise silently truncate an unfiltered exact top-k)
         # -- fan-out thread --
         self._fan_cv = threading.Condition()
         self._fan_items: deque = deque()
@@ -245,7 +254,15 @@ class ClusterRouter:
                 "deaths": self._m_deaths.get(),
             }
             futs = {n: w.call_async("stats") for n, w in alive.items()}
-        snap["per_worker"] = {n: f.result() for n, f in futs.items()}
+        per = {}
+        for n, f in futs.items():
+            try:
+                per[n] = f.result()
+            except WorkerLostError as e:
+                # died between the snapshot and the reply — telemetry for
+                # the survivors must stay available during a death window
+                per[n] = {"error": str(e)}
+        snap["per_worker"] = per
         return snap
 
     def merged_metrics(self, namespace: str = "repro") -> MetricsRegistry:
@@ -339,6 +356,7 @@ class ClusterRouter:
     def _route_to_owner(self, request, fut: ClusterFuture,
                         retried: bool = False) -> None:
         key = _user_key(request, self._key_fn)
+        rerouted = retried      # True once any death forced a re-route
         for _ in range(len(self._workers) + 1):
             with self._lock:
                 alive = self._membership.alive()
@@ -347,11 +365,12 @@ class ClusterRouter:
                 owner = self._membership.owner(key)
                 w = self._workers[owner]
             if w.submit_batch([(request, fut)]):
-                return
+                if rerouted:    # counted at the successful re-submit, so
+                    self._m_reroutes.inc()   # fresh submits that lose the
+                return          # death race are counted too
             # lost the race with a death: run the death path and retry
             self._on_worker_lost(owner, "dead at submit")
-            if retried:
-                self._m_reroutes.inc()
+            rerouted = True
         fut._set_error(WorkerLostError("<cluster>", "no alive workers"))
 
     # ======================================================================
@@ -373,19 +392,20 @@ class ClusterRouter:
             if self._index is not None and self._membership.alive():
                 self._reshard_locked(warm=True)
         for r, f in pending:
-            self._m_reroutes.inc()
             lane = lane_of(r)
             if lane in ("retrieve", "two_stage") and self._index is not None:
+                self._m_reroutes.inc()
                 with self._fan_cv:
                     self._fan_items.append((r, f))
                     self._fan_cv.notify()
-            else:
+            else:   # _route_to_owner counts the re-route on re-submit
                 self._route_to_owner(r, f, retried=True)
 
     def _reshard_locked(self, warm: bool) -> None:
         """Re-cut the corpus across the alive workers (ascending shard =
         alive order, so the merge's lower-index-wins tie-break is the
         global row order) and optionally re-warm the shard executors."""
+        self._shard_gen += 1
         alive = self._membership.alive()
         specs = make_shards(self._index, len(alive),
                             chunk_rows=self._chunk_rows,
@@ -448,6 +468,12 @@ class ClusterRouter:
                 self._fan_busy = True
             try:
                 self._fan_process(batch)
+            except Exception as e:   # noqa: BLE001 — the loop must survive
+                # anything escaping the batch machinery resolves the whole
+                # batch typed (first-writer-wins drops already-set futures)
+                # so the daemon keeps draining and futures never hang
+                for _, f in batch:
+                    f._set_error(e)
             finally:
                 with self._fan_cv:
                     self._fan_busy = False
@@ -460,16 +486,20 @@ class ClusterRouter:
         uniq: Dict[tuple, int] = {}
         rows: List[dict] = []
         for r, f in batch:
-            filt = ItemFilter(
-                exclude_ids=r.exclude_ids,
-                allow_surfaces=(None if r.allow_surfaces is None
-                                else tuple(r.allow_surfaces)))
-            filt = None if filt.is_empty() else filt
-            route = getattr(r, "route", "exact")
-            conf = (("ivf", self._ivf_level(getattr(r, "nprobe", None)))
-                    if route == "ivf" else ("exact", None))
-            key = self._key_fn(r)
-            fp = filt.fingerprint() if filt is not None else b""
+            try:
+                filt = ItemFilter(
+                    exclude_ids=r.exclude_ids,
+                    allow_surfaces=(None if r.allow_surfaces is None
+                                    else tuple(r.allow_surfaces)))
+                filt = None if filt.is_empty() else filt
+                route = getattr(r, "route", "exact")
+                conf = (("ivf", self._ivf_level(getattr(r, "nprobe", None)))
+                        if route == "ivf" else ("exact", None))
+                key = self._key_fn(r)
+                fp = filt.fingerprint() if filt is not None else b""
+            except Exception as e:   # noqa: BLE001 — malformed request:
+                f._set_error(e)      # fail it alone, keep its batchmates
+                continue
             u = uniq.setdefault((key, fp, conf), len(rows))
             if u == len(rows):
                 rows.append({"req": r, "key": key, "filt": filt,
@@ -493,21 +523,35 @@ class ClusterRouter:
     def _fan_group(self, conf: tuple, group: List[dict]) -> None:
         """One scatter/gather: owner-affine encode, per-shard top-k,
         lower-index-wins merge, resolve.  A worker death inside the
-        group re-shards and retries the group on the survivors."""
+        group re-shards and retries the group on the survivors; a
+        concurrent join/leave reshard retries against the new layout;
+        any other error resolves the group's futures typed — no
+        exception may escape to the fan-out thread."""
         import time
         t0 = time.monotonic()
         self._m_groups.inc()
-        for attempt in range(len(self._workers) + 1):
+        err: Optional[BaseException] = None
+        deaths = reshards = 0
+        while deaths <= len(self._workers) and reshards <= 16:
             try:
                 self._fan_group_once(conf, group)
                 self._m_fan_ms.record((time.monotonic() - t0) * 1e3)
                 return
+            except _ReshardRetry:
+                reshards += 1       # operator-rate events; 16 is generous
             except WorkerLostError as e:
+                deaths += 1
+                err = e
                 if e.worker in self._workers:
                     self._on_worker_lost(e.worker, "fan-out")
                 if not self._membership.alive():
+                    err = WorkerLostError("<cluster>", "no alive workers")
                     break
-        err = WorkerLostError("<cluster>", "no alive workers")
+            except Exception as e:   # noqa: BLE001 — typed on the futures
+                err = e              # genuine error (bad request, engine
+                break                # bug): fail the group, keep the loop
+        if err is None:
+            err = WorkerLostError("<cluster>", "fan-out retries exhausted")
         for row in group:
             for _, f in row["members"]:
                 f._set_error(err)
@@ -519,6 +563,7 @@ class ClusterRouter:
             names = list(self._shard_order)
             workers = dict(self._workers)
             rps = self._rows_per_shard
+            gen = self._shard_gen
         n_shards = len(names)
         # -- owner-affine encode (cache residency follows the HRW owner) --
         by_owner: Dict[str, List[int]] = {}
@@ -565,7 +610,25 @@ class ClusterRouter:
                         "shard_topk", "ivf", q, k, off=off[s], val=val[s],
                         mask=None if masks is None else masks[s])
                      for s, n in enumerate(names)]
-        parts = [f.result() for f in sfuts]
+        try:
+            parts = [f.result() for f in sfuts]
+        except WorkerLostError:
+            raise
+        except Exception:
+            # a reshard racing the scatter can surface as a shard-side
+            # error (e.g. filter-mask width vs the re-cut shard) — if the
+            # layout moved under us, that is retryable, not terminal
+            with self._lock:
+                if self._shard_gen != gen:
+                    raise _ReshardRetry() from None
+            raise
+        with self._lock:
+            if self._shard_gen != gen:
+                # the layout changed mid-scatter: workers may have scored
+                # re-cut shards against our old snapshot (an unfiltered
+                # exact route would return a silently incomplete top-k) —
+                # discard the partials and retry on the new layout
+                raise _ReshardRetry()
         # -- gather + merge (ascending shard = ascending global rows) --
         scores, rows_m = merge_topk([p[0] for p in parts],
                                     [p[1] for p in parts], k)

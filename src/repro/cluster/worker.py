@@ -298,7 +298,11 @@ class _QueueWorker:
         return out
 
     def close(self, timeout: float = 60.0) -> None:
-        """Graceful drain: finish everything queued, then stop."""
+        """Graceful drain: finish everything queued, then stop.  If the
+        drain does not finish within ``timeout``, everything still
+        queued or in flight resolves with a typed
+        :class:`WorkerLostError` — callers blocked in ``result()`` with
+        no timeout must never hang on a close."""
         with self._cv:
             if self._dead:
                 return
@@ -306,10 +310,25 @@ class _QueueWorker:
             self._items.append(("close",))
             self._cv.notify()
         self._thread.join(timeout)
+        stranded: List[ClusterFuture] = []
         with self._cv:
             self._dead = True
-            self._dead_reason = "closed"
+            self._dead_reason = ("close timeout" if self._thread.is_alive()
+                                 else "closed")
+            # on a clean drain both are empty; on a timeout this is the
+            # take_pending sweep, resolved typed instead of re-routed
+            # (the caller is tearing the worker down, not re-balancing)
+            stranded.extend(f for _, f in self._inflight if not f.done())
+            self._inflight = []
+            for item in self._items:
+                if item[0] == "batch":
+                    stranded.extend(f for _, f in item[1] if not f.done())
+                elif item[0] == "call":
+                    stranded.append(item[4])
+            self._items.clear()
         self._shutdown_transport()
+        for f in stranded:      # outside the lock: callbacks may re-enter
+            f._set_error(WorkerLostError(self.name, self._dead_reason))
 
     # -- the worker loop -----------------------------------------------------
     def _run(self):

@@ -398,6 +398,7 @@ def test_kill_one_worker_drains_and_reroutes(lite_model, item_index,
         snap = router.stats()
         assert snap["workers"][victim] == "dead"
         assert snap["n_alive"] == 1 and snap["deaths"] == 1
+        assert snap["reroutes"] >= 1    # the victim's pending were counted
         assert not router._workers[victim].healthy()
         assert router.check_health() == []        # already handled
 
@@ -451,6 +452,115 @@ def test_join_rebalances_and_reshards(lite_model, item_index, ref_engine):
         for (ids_a, sc_a), (ids_b, sc_b) in zip(got, ref):
             np.testing.assert_array_equal(ids_a, ids_b)
             np.testing.assert_array_equal(sc_a, sc_b)
+    finally:
+        router.close()
+
+
+# ---------------------------------------------------------------------------
+# robustness regressions: the futures-never-hang contract under errors
+# ---------------------------------------------------------------------------
+
+def test_fanout_thread_survives_generic_error(lite_model, item_index,
+                                              ref_engine):
+    """A non-WorkerLostError escaping a fan-out group (here: the owner's
+    encode_users raising) resolves that group's futures typed and leaves
+    the fan-out daemon alive — later retrieval traffic still works
+    instead of hanging forever."""
+    router = _mk_cluster(lite_model, 1, warm=False, index=item_index)
+    try:
+        core = router._workers["w0"].core
+        orig = core.encode_users
+
+        def boom(requests):
+            raise ValueError("encode exploded")
+        core.encode_users = boom
+        fut = router.submit(_mk_retrieve(90))
+        with pytest.raises(ValueError, match="encode exploded"):
+            fut.result(60.0)                  # typed, not a hang
+        core.encode_users = orig
+        got = _results(router, [_mk_retrieve(91)])   # thread survived
+        (ids_b, sc_b), = ref_engine.retrieve([_mk_retrieve(91)])
+        np.testing.assert_array_equal(got[0][0], ids_b)
+        np.testing.assert_array_equal(got[0][1], sc_b)
+    finally:
+        router.close()
+
+
+def test_reshard_mid_scatter_discards_and_retries(lite_model, item_index,
+                                                  ref_engine):
+    """A shard-generation bump between the scatter snapshot and the
+    merge invalidates the partials: the group retries on the fresh
+    layout instead of returning a silently incomplete top-k."""
+    router = _mk_cluster(lite_model, 2, warm=False, index=item_index)
+    try:
+        w = router._workers["w0"]
+        orig_call = w.call_async
+        state = {"bumped": False}
+
+        def bumping(method, *a, **k):
+            if method == "shard_topk" and not state["bumped"]:
+                state["bumped"] = True
+                with router._lock:          # what a concurrent join does
+                    router._shard_gen += 1
+            return orig_call(method, *a, **k)
+        w.call_async = bumping
+        attempts = []
+        orig_once = router._fan_group_once
+
+        def counting(conf, group):
+            attempts.append(1)
+            return orig_once(conf, group)
+        router._fan_group_once = counting
+        reqs = [_mk_retrieve(s) for s in (92, 93)]
+        got = _results(router, reqs)
+        ref = ref_engine.retrieve(reqs)
+        for (ids_a, sc_a), (ids_b, sc_b) in zip(got, ref):
+            np.testing.assert_array_equal(ids_a, ids_b)
+            np.testing.assert_array_equal(sc_a, sc_b)
+        assert len(attempts) == 2           # first discarded, second clean
+    finally:
+        router.close()
+
+
+def test_close_timeout_resolves_stranded_futures(lite_model):
+    """close() whose graceful drain times out resolves every queued +
+    in-flight future with the typed WorkerLostError — a caller blocked
+    in result() with no timeout must not hang on teardown."""
+    core = WorkerCore(_mk_worker_engine(lite_model))
+    w = _SlowWorker("w0", core, delay=1.5)
+    rng = np.random.RandomState(7)
+    futs = [ClusterFuture() for _ in range(3)]
+    assert w.submit_batch([(_mk_rank(s, rng), f)
+                           for s, f in enumerate(futs)])
+    time.sleep(0.05)                        # let the batch start
+    t0 = time.monotonic()
+    w.close(timeout=0.1)
+    for f in futs:
+        with pytest.raises(WorkerLostError, match="close timeout"):
+            f.result(30.0)
+    assert time.monotonic() - t0 < 10.0
+    core.engine.close()
+
+
+def test_stats_survives_mid_snapshot_death(lite_model):
+    """A worker dying between the stats() snapshot and its reply yields
+    an error entry for that worker, not an exception — telemetry stays
+    available exactly during a death window."""
+    router = _mk_cluster(lite_model, 2, warm=False)
+    try:
+        w = router._workers["w1"]
+        orig = w.call_async
+
+        def dying(method, *a, **k):
+            if method == "stats":           # simulate death-after-snapshot
+                fut = ClusterFuture()
+                fut._set_error(WorkerLostError("w1", "death window"))
+                return fut
+            return orig(method, *a, **k)
+        w.call_async = dying
+        snap = router.stats()
+        assert "error" in snap["per_worker"]["w1"]
+        assert "engine" in snap["per_worker"]["w0"]
     finally:
         router.close()
 
